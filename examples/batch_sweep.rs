@@ -1,0 +1,46 @@
+//! Fig. 9 scenario explorer: how the HALO/CENT vs AttAcc trade-off moves
+//! with batch size, and where the crossover lands (paper: around 64).
+//!
+//!     cargo run --release --example batch_sweep
+
+use halo::config::HwConfig;
+use halo::mapping::MappingKind;
+use halo::model::LlmConfig;
+use halo::sim::{simulate_e2e, Scenario};
+use halo::util::fmt_seconds;
+
+fn main() {
+    let hw = HwConfig::paper();
+    let m = LlmConfig::llama2_7b();
+    println!("LLaMA-2 7B, L_in=128, L_out=2048 (the paper's Fig. 9 setup)\n");
+    println!(
+        "{:>6} {:>14} {:>14} {:>14} {:>12}",
+        "batch", "HALO1 e2e", "CENT e2e", "AttAcc1 e2e", "AttAcc1/HALO1"
+    );
+    let mut crossover = None;
+    for b in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+        let sc = Scenario { l_in: 128, l_out: 2048, batch: b };
+        let halo = simulate_e2e(&m, &hw, MappingKind::Halo1, &sc).e2e_latency();
+        let cent = simulate_e2e(&m, &hw, MappingKind::Cent, &sc).e2e_latency();
+        let att = simulate_e2e(&m, &hw, MappingKind::AttAcc1, &sc).e2e_latency();
+        println!(
+            "{:>6} {:>14} {:>14} {:>14} {:>11.2}x",
+            b,
+            fmt_seconds(halo),
+            fmt_seconds(cent),
+            fmt_seconds(att),
+            att / halo
+        );
+        if att < halo && crossover.is_none() {
+            crossover = Some(b);
+        }
+    }
+    match crossover {
+        Some(b) => println!(
+            "\nAttAcc1 overtakes the phase-aware mapping at batch {b} \
+             (paper observes the flip at 64): batching amortizes its decode \
+             weight streaming, while per-sequence KV attention keeps scaling."
+        ),
+        None => println!("\nno crossover in the swept range"),
+    }
+}

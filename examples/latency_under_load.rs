@@ -1,0 +1,51 @@
+//! Interactive-serving study: latency distributions under Poisson load.
+//!
+//! The paper motivates HALO with latency-sensitive applications but
+//! evaluates isolated requests; this example replays arrival traces
+//! against the analytical device model with the coordinator's slot-based
+//! batching policy, showing how far each mapping can be pushed before
+//! TTFT/e2e percentiles blow up.
+//!
+//!     cargo run --release --example latency_under_load
+
+use halo::config::HwConfig;
+use halo::mapping::MappingKind;
+use halo::model::LlmConfig;
+use halo::sim::queueing::{poisson_trace, replay_trace};
+use halo::util::fmt_seconds;
+
+fn main() {
+    let hw = HwConfig::paper();
+    let m = LlmConfig::llama2_7b();
+    const SLOTS: usize = 4;
+    const N: usize = 120;
+
+    println!(
+        "LLaMA-2 7B, {SLOTS} decode slots, {N} requests, prompts 128-2048 tokens, 64 output tokens\n"
+    );
+    for mapping in [MappingKind::Halo1, MappingKind::Cent, MappingKind::AttAcc1] {
+        println!("== {} ==", mapping.name());
+        println!(
+            "{:>10} {:>12} {:>12} {:>12} {:>12} {:>10}",
+            "load req/s", "TTFT p50", "TTFT p99", "e2e p50", "e2e p99", "served/s"
+        );
+        for rate in [0.5, 2.0, 8.0, 32.0] {
+            let trace = poisson_trace(42, N, rate, (128, 2048), 64);
+            let r = replay_trace(&m, &hw, mapping, SLOTS, &trace);
+            println!(
+                "{:>10.1} {:>12} {:>12} {:>12} {:>12} {:>10.2}",
+                rate,
+                fmt_seconds(r.ttft_p50()),
+                fmt_seconds(r.ttft_p99()),
+                fmt_seconds(r.e2e_p50()),
+                fmt_seconds(r.e2e_p99()),
+                r.throughput_rps()
+            );
+        }
+        println!();
+    }
+    println!(
+        "reading: HALO1 sustains interactive TTFT far deeper into the load curve;\n\
+         CENT saturates earlier on prefill (CiD GEMM), AttAcc1 on decode (CiM GEMV)."
+    );
+}

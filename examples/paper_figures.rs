@@ -1,0 +1,21 @@
+//! Regenerate every figure of the paper's evaluation section as CSV (under
+//! out/figures) and print the headline geomean comparison.
+//!
+//!     cargo run --release --example paper_figures
+
+use std::path::Path;
+
+use halo::config::HwConfig;
+use halo::report;
+
+fn main() -> anyhow::Result<()> {
+    let hw = HwConfig::paper();
+    let out = Path::new("out/figures");
+    for t in report::all_figures(&hw) {
+        t.write_csv(out)?;
+        println!("wrote {}/{}.csv  ({} rows) — {}", out.display(), t.name, t.rows.len(), t.title);
+    }
+    println!();
+    println!("{}", report::headline_summary(&hw).to_markdown());
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: simulate HALO's phase-aware mapping on LLaMA-2 7B and
+//! compare it against the paper's baselines on one scenario.
+//!
+//!     cargo run --release --example quickstart
+
+use halo::config::HwConfig;
+use halo::mapping::MappingKind;
+use halo::model::LlmConfig;
+use halo::sim::{simulate_e2e, Scenario};
+use halo::util::{fmt_joules, fmt_seconds};
+
+fn main() {
+    let hw = HwConfig::paper();
+    let llm = LlmConfig::llama2_7b();
+    let sc = Scenario { l_in: 2048, l_out: 512, batch: 1 };
+
+    println!(
+        "HALO quickstart — {} ({:.2}B params), L_in={}, L_out={}, batch={}\n",
+        llm.name,
+        llm.n_params() as f64 / 1e9,
+        sc.l_in,
+        sc.l_out,
+        sc.batch
+    );
+    println!(
+        "{:<10} {:>12} {:>12} {:>12} {:>12}",
+        "mapping", "TTFT", "TPOT", "e2e time", "e2e energy"
+    );
+    let mut rows: Vec<(MappingKind, f64)> = Vec::new();
+    for mk in [
+        MappingKind::Halo1,
+        MappingKind::Halo2,
+        MappingKind::Cent,
+        MappingKind::AttAcc1,
+        MappingKind::AttAcc2,
+        MappingKind::HaloSa,
+    ] {
+        let r = simulate_e2e(&llm, &hw, mk, &sc);
+        println!(
+            "{:<10} {:>12} {:>12} {:>12} {:>12}",
+            mk.name(),
+            fmt_seconds(r.ttft()),
+            fmt_seconds(r.tpot()),
+            fmt_seconds(r.e2e_latency()),
+            fmt_joules(r.e2e_energy())
+        );
+        rows.push((mk, r.e2e_latency()));
+    }
+    let halo = rows[0].1;
+    println!("\nspeedups of HALO1 at this scenario:");
+    for (mk, t) in &rows[2..] {
+        println!("  vs {:<8} {:.2}x", mk.name(), t / halo);
+    }
+}

@@ -1,0 +1,202 @@
+"""AOT compile path: lower the L2 model + L1 kernels to HLO text artifacts.
+
+Python runs ONCE (``make artifacts``); the Rust coordinator then loads the
+HLO text through the PJRT C API and Python never appears on the request
+path.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+  * ``<entry>.hlo.txt``     — one per entry point (prefill, decode steps,
+    kernel microbenches)
+  * ``weights.bin``         — flat little-endian f32 parameter image
+  * ``manifest.json``       — parameter table (name/shape/offset), entry
+    point signatures, model config, and test-vector index
+  * ``testvec/*.bin``       — input/output vectors for Rust integration
+    tests (computed with the same jitted functions that were lowered)
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.cid_gemv import cid_gemv
+from .kernels.cim_matmul import cim_matmul
+from .kernels.ref import HALO1_SPEC
+
+DTYPE_MAP = {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32", np.dtype(np.int8): "i8"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(arrs) -> list[dict]:
+    out = []
+    for a in arrs:
+        a = np.asarray(a)
+        out.append({"shape": list(a.shape), "dtype": DTYPE_MAP[a.dtype]})
+    return out
+
+
+class ArtifactWriter:
+    def __init__(self, outdir: pathlib.Path):
+        self.outdir = outdir
+        self.vec_dir = outdir / "testvec"
+        self.outdir.mkdir(parents=True, exist_ok=True)
+        self.vec_dir.mkdir(parents=True, exist_ok=True)
+        self.entries: dict[str, dict] = {}
+
+    def add_entry(self, name: str, fn, example_inputs, *, n_params: int = 0,
+                  testvec: bool = True):
+        """Lower ``fn`` at the example inputs, dump HLO text and vectors.
+
+        ``n_params``: how many leading inputs are model parameters (not
+        re-exported as test vectors; the Rust side feeds ``weights.bin``).
+        """
+        jitted = jax.jit(fn)
+        lowered = jitted.lower(*example_inputs)
+        text = to_hlo_text(lowered)
+        hlo_path = self.outdir / f"{name}.hlo.txt"
+        hlo_path.write_text(text)
+
+        outputs = jitted(*example_inputs)
+        if not isinstance(outputs, tuple):
+            outputs = (outputs,)
+
+        vec_inputs = example_inputs[n_params:]
+        entry = {
+            "hlo": hlo_path.name,
+            "n_params": n_params,
+            "inputs": _sig(example_inputs),
+            "outputs": _sig(outputs),
+        }
+        if testvec:
+            in_files, out_files = [], []
+            for i, a in enumerate(vec_inputs):
+                f = f"{name}.in{i}.bin"
+                np.asarray(a).tofile(self.vec_dir / f)
+                in_files.append(f)
+            for i, a in enumerate(outputs):
+                f = f"{name}.out{i}.bin"
+                np.asarray(a).tofile(self.vec_dir / f)
+                out_files.append(f)
+            entry["testvec"] = {"inputs": in_files, "outputs": out_files}
+        self.entries[name] = entry
+        print(f"  {name}: {len(text) / 1e6:.2f} MB HLO, "
+              f"{len(example_inputs)} inputs, {len(outputs)} outputs")
+        return outputs
+
+
+def export_weights(outdir: pathlib.Path, cfg, params) -> list[dict]:
+    table, offset = [], 0
+    with open(outdir / "weights.bin", "wb") as f:
+        for (name, shape), arr in zip(M.param_specs(cfg), params):
+            a = np.asarray(arr, dtype=np.float32)
+            assert tuple(a.shape) == tuple(shape), (name, a.shape, shape)
+            f.write(a.tobytes())
+            table.append(
+                {"name": name, "shape": list(shape), "offset": offset, "nelems": int(a.size)}
+            )
+            offset += a.size * 4
+    return table
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefill-lens", type=int, nargs="+", default=[16, 64])
+    ap.add_argument("--decode-batches", type=int, nargs="+", default=[1, 4])
+    args = ap.parse_args()
+    outdir = pathlib.Path(args.outdir)
+
+    cfg = M.TinyLlamaConfig()
+    params = M.init_params(cfg, args.seed)
+    n_p = len(params)
+    w = ArtifactWriter(outdir)
+    rng = np.random.default_rng(args.seed)
+
+    print(f"[aot] tiny-llama: {sum(int(np.prod(s)) for _, s in M.param_specs(cfg))} params")
+    param_table = export_weights(outdir, cfg, params)
+
+    # --- model entry points (phase-aware: prefill=CiM, decode=CiD) --------
+    # Two prefill variants per length: the calibrated-ADC CiM path (the
+    # realistic serving path; validated with a loose tolerance because ADC
+    # code rounding amplifies cross-XLA-version reduction-order noise) and
+    # an ideal-ADC path (integer-exact, byte-stable across XLA versions;
+    # the strict Rust-side validation target).
+    cfg_ideal = dataclasses.replace(cfg, cim_spec=M.IDEAL_SPEC)
+    prefill_outs = {}
+    for L in args.prefill_lens:
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab, (1, L), dtype=np.int32))
+        outs = w.add_entry(
+            f"prefill_b1_s{L}",
+            lambda *a: M.prefill(list(a[:n_p]), a[n_p], cfg),
+            (*params, tokens),
+            n_params=n_p,
+        )
+        w.add_entry(
+            f"prefill_ideal_b1_s{L}",
+            lambda *a: M.prefill(list(a[:n_p]), a[n_p], cfg_ideal),
+            (*params, tokens),
+            n_params=n_p,
+        )
+        prefill_outs[L] = (tokens, outs)
+
+    for B in args.decode_batches:
+        # seed the decode test vector from a real prefill state
+        L0 = args.prefill_lens[0]
+        tokens, (lg, kc1, vc1) = prefill_outs[L0]
+        kc = jnp.broadcast_to(kc1, (cfg.n_layers, B, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim))
+        vc = jnp.broadcast_to(vc1, kc.shape)
+        token = jnp.asarray(rng.integers(0, cfg.vocab, (B,), dtype=np.int32))
+        pos = jnp.full((B,), L0, jnp.int32)
+        w.add_entry(
+            f"decode_b{B}",
+            lambda *a: M.decode_step(list(a[:n_p]), a[n_p], a[n_p + 1], a[n_p + 2], a[n_p + 3], cfg),
+            (*params, token, pos, kc, vc),
+            n_params=n_p,
+        )
+
+    # --- kernel microbench artifacts (for Rust runtime tests/benches) -----
+    x8 = jnp.asarray(rng.integers(-128, 128, (64, 256), dtype=np.int8))
+    w8 = jnp.asarray(rng.integers(-128, 128, (256, 128), dtype=np.int8))
+    w.add_entry("cim_gemm_64x256x128", lambda x, ww: (cim_matmul(x, ww, HALO1_SPEC),), (x8, w8))
+
+    xg = jnp.asarray(rng.integers(-128, 128, (4, 256), dtype=np.int8))
+    wg = jnp.asarray(rng.integers(-128, 128, (256, 512), dtype=np.int8))
+    w.add_entry("cid_gemv_4x256x512", lambda x, ww: (cid_gemv(x, ww),), (xg, wg))
+
+    manifest = {
+        "config": {
+            k: (dataclasses.asdict(v) if dataclasses.is_dataclass(v) else v)
+            for k, v in dataclasses.asdict(cfg).items()
+        },
+        "seed": args.seed,
+        "params": param_table,
+        "entries": w.entries,
+    }
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"[aot] wrote {outdir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1 kernels: functional models of HALO's two compute substrates.
+
+* :mod:`.cim_matmul` — analog CiM crossbar GEMM (Pallas, bit-sliced /
+  bit-streamed / ADC-quantized).
+* :mod:`.cid_gemv`   — digital CiD bank-level GEMV (Pallas, exact int8).
+* :mod:`.ref`        — pure-jnp oracles for both, plus the quantization
+  helpers shared by the L2 model.
+"""
+
+from .ref import CimSpec, HALO1_SPEC, HALO2_SPEC, XBAR_ROWS  # noqa: F401
+from .cim_matmul import cim_linear, cim_matmul, cim_matmul_codes  # noqa: F401
+from .cid_gemv import cid_gemv, cid_linear  # noqa: F401

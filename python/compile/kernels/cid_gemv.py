@@ -1,0 +1,91 @@
+"""Pallas kernel: functional model of the HALO CiD bank-level GEMV unit.
+
+The CiD units (Fig. 3b) are digital: 32 parallel 8-bit multipliers per
+bank read 32 weight bytes per column access, multiply against a broadcast
+input held in the 4 KB double-buffered local SRAM, and reduce through an
+in-bank adder tree — i.e. an *exact* int8 x int8 -> int32 dot product.
+
+The kernel therefore computes an exact integer GEMV/GEMM; its BlockSpec
+mirrors the bank-level blocking (a 128-row contraction block is four
+32-lane column accesses). Numerics match :func:`ref.cid_gemv_ref`
+bit-exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import quantize_sym_i8
+
+# One contraction block: 4 column accesses x 32 multiplier lanes.
+BLOCK_K = 128
+
+
+def _cid_block_kernel(x_ref, w_ref, o_ref):
+    """Exact int8 MAC block with int32 accumulation (in-bank adder tree)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    o_ref[...] += jax.lax.dot_general(
+        x,
+        w,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _block_dim(size: int, pref: int) -> int:
+    return pref if size >= pref else size
+
+
+def cid_gemv(
+    x_i8: jnp.ndarray,
+    w_i8: jnp.ndarray,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+) -> jnp.ndarray:
+    """Exact int8 GEMV/GEMM (M, K) x (K, N) -> int32 (M, N)."""
+    m, k = x_i8.shape
+    k2, n = w_i8.shape
+    assert k == k2, (k, k2)
+
+    tm = _block_dim(m, block_m)
+    tn = _block_dim(n, block_n)
+    tk = _block_dim(k, BLOCK_K)
+    m_pad, n_pad, k_pad = (-m) % tm, (-n) % tn, (-k) % tk
+    # Zero padding is exact for the digital path.
+    if m_pad or k_pad:
+        x_i8 = jnp.pad(x_i8, ((0, m_pad), (0, k_pad)))
+    if n_pad or k_pad:
+        w_i8 = jnp.pad(w_i8, ((0, k_pad), (0, n_pad)))
+    mp, np_, kp = m + m_pad, n + n_pad, k + k_pad
+
+    out = pl.pallas_call(
+        _cid_block_kernel,
+        grid=(mp // tm, np_ // tn, kp // tk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,  # CPU PJRT
+    )(x_i8, w_i8)
+    return out[:m, :n]
+
+
+def cid_linear(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Float ``x @ w`` through the exact digital CiD int8 path."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    qx, sx = quantize_sym_i8(x2)
+    qw, sw = quantize_sym_i8(w)
+    y = cid_gemv(qx, qw).astype(jnp.float32)
+    return (y * (sx * sw)).reshape(*lead, w.shape[-1])

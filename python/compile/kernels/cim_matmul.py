@@ -1,0 +1,202 @@
+"""Pallas kernel: functional model of the HALO analog CiM crossbar GEMM.
+
+This is the L1 compute hot-spot. The kernel reproduces, inside one Pallas
+block, exactly what the paper's 8T-SRAM analog macro does (Section II /
+Fig. 3c):
+
+  * the weight operand is stored bit-sliced: ``slice_bits`` (2) bits per
+    cell, so an 8-bit weight spans ``num_slices`` (4) crossbars;
+  * the input operand is bit-streamed: 1 bit per cycle over ``input_bits``
+    (8) cycles, applied to the wordlines;
+  * each (input-bit, weight-slice) pair produces an analog partial sum per
+    bitline, digitized by a 7-bit SAR ADC — modeled as round-to-nearest
+    quantization onto the ADC's code grid with saturation;
+  * wordline throttling: HALO1 activates all 128 rows at once, HALO2 only
+    64 at a time (two phases, double the ADC conversions, finer ADC grid —
+    the accuracy/latency trade-off of Table II);
+  * shift-and-add recombines (bit, slice, phase) codes into the result.
+
+BlockSpec tiles the GEMM into crossbar-shaped 128-row blocks: the grid's
+K dimension walks one 128-row crossbar load per step, mirroring the
+GB -> (IB, WB) double-buffered fills of the COMET pipeline (HBM<->VMEM
+schedule on a real TPU).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets a
+2.5D ASIC, not a GPU — so there is no warp/shared-memory idiom to port.
+What we keep is the *dataflow*: weight-stationary 128x128 tiles, bit-serial
+activation streaming, and per-tile quantized accumulation.
+
+Kernels run with ``interpret=True`` (CPU PJRT); see DESIGN.md for the
+real-TPU perf estimate methodology.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import XBAR_ROWS, CimSpec, HALO1_SPEC, HALO2_SPEC, pad_k, quantize_sym_i8
+
+
+def _cim_block_kernel(x_ref, w_ref, o_ref, *, spec: CimSpec):
+    """One (TM, 128) x (128, TN) crossbar-load worth of bit-serial GEMM.
+
+    Accumulates int32 shift-and-add codes into ``o_ref`` across the K grid
+    dimension (the grid walks K innermost, so accumulation is sequential).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    tm = x_ref.shape[0]
+    tn = w_ref.shape[1]
+    nbits = spec.input_bits
+    nsl = spec.num_slices
+    nph = spec.phases_per_block
+    wl = spec.wordlines
+
+    # Unsigned cell domain (0..255): offset corrections happen digitally in
+    # the wrapper, exactly as the macro's peripheral logic does.
+    x_u = x_ref[...].astype(jnp.int32) + 128  # (TM, 128)
+    w_u = w_ref[...].astype(jnp.int32) + 128  # (128, TN)
+
+    bits = jnp.arange(nbits, dtype=jnp.int32)
+    sl = jnp.arange(nsl, dtype=jnp.int32)
+
+    # Input bit-planes (nbits, TM, nph, wl) and weight slice-planes
+    # (nsl, nph, wl, TN): the nph axis is the wordline-throttling phase.
+    x_planes = ((x_u[None, :, :] >> bits[:, None, None]) & 1).astype(jnp.float32)
+    x_planes = x_planes.reshape(nbits, tm, nph, wl)
+    w_planes = (
+        (w_u[None, :, :] >> (spec.slice_bits * sl)[:, None, None]) & spec.slice_max
+    ).astype(jnp.float32)
+    w_planes = w_planes.reshape(nsl, nph, wl, tn)
+
+    # Analog accumulation: one 'crossbar read' per (bit, slice, phase).
+    partial = jnp.einsum("bmpw,spwn->bspmn", x_planes, w_planes)
+
+    # Shift-and-add recombination: weight 2^(input_bit + slice_bits*slice).
+    saa = (1 << bits)[:, None, None, None, None] * (
+        1 << (spec.slice_bits * sl)[None, :, None, None, None]
+    )
+
+    if spec.ideal:
+        codes = partial.astype(jnp.int32)
+        o_ref[...] += jnp.sum(codes * saa, axis=(0, 1, 2), dtype=jnp.int32)
+    elif spec.adc_mode == "full":
+        delta = jnp.float32(spec.adc_delta)
+        q = jnp.round(partial / delta)
+        codes = jnp.clip(q, 0, spec.adc_levels).astype(jnp.int32)
+        o_ref[...] += jnp.sum(codes * saa, axis=(0, 1, 2), dtype=jnp.int32)
+    else:
+        # Adaptive-SNR calibrated ADC (macro ref [1]): per-(slice, phase,
+        # column) range centered on the expected partial sum for
+        # Bernoulli(rho) input bits, +/- NSIGMA sigma wide.
+        assert spec.adc_mode == "calibrated", spec.adc_mode
+        rho, nsigma = 0.5, 4.0
+        half = 1 << (spec.adc_bits - 1)
+        center = rho * jnp.sum(w_planes, axis=2)  # (S, P, TN)
+        sigma = jnp.sqrt(rho * (1 - rho) * jnp.sum(w_planes * w_planes, axis=2))
+        delta = jnp.maximum(2.0 * nsigma * sigma / (2 * half), 1e-6)
+        c = center[None, :, :, None, :]  # (1,S,P,1,TN)
+        d = delta[None, :, :, None, :]
+        q = jnp.clip(jnp.round((partial - c) / d), -half, half - 1)
+        val = c + q * d
+        o_ref[...] += jnp.sum(val * saa.astype(jnp.float32), axis=(0, 1, 2))
+
+
+def _block_dim(size: int, pref: int) -> int:
+    return pref if size >= pref else size
+
+
+def cim_matmul_codes(
+    x_i8: jnp.ndarray,
+    w_i8: jnp.ndarray,
+    spec: CimSpec = HALO1_SPEC,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+) -> jnp.ndarray:
+    """Unsigned-domain crossbar codes via the Pallas kernel.
+
+    x_i8 (M, K) int8, w_i8 (K, N) int8; K must already be a multiple of 128
+    (use :func:`ref.pad_k`). M and N are padded here as needed. Matches
+    :func:`ref.cim_matmul_codes_ref` bit-exactly.
+    """
+    m, k = x_i8.shape
+    k2, n = w_i8.shape
+    assert k == k2 and k % XBAR_ROWS == 0, (k, k2)
+
+    tm = _block_dim(m, block_m)
+    tn = _block_dim(n, block_n)
+    m_pad = (-m) % tm
+    n_pad = (-n) % tn
+    # -128 pads are zero in the unsigned domain: they contribute nothing to
+    # any bit/slice plane, so padded rows/cols carry no ADC noise either.
+    if m_pad:
+        x_i8 = jnp.pad(x_i8, ((0, m_pad), (0, 0)), constant_values=-128)
+    if n_pad:
+        w_i8 = jnp.pad(w_i8, ((0, 0), (0, n_pad)), constant_values=-128)
+    mp, np_ = m + m_pad, n + n_pad
+
+    grid = (mp // tm, np_ // tn, k // XBAR_ROWS)
+    acc_dtype = jnp.float32 if (not spec.ideal and spec.adc_mode == "calibrated") else jnp.int32
+    out = pl.pallas_call(
+        functools.partial(_cim_block_kernel, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, XBAR_ROWS), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((XBAR_ROWS, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), acc_dtype),
+        interpret=True,  # CPU PJRT; Mosaic lowering is TPU-only
+    )(x_i8, w_i8)
+    return out[:m, :n]
+
+
+def cim_matmul(
+    x_i8: jnp.ndarray, w_i8: jnp.ndarray, spec: CimSpec = HALO1_SPEC
+) -> jnp.ndarray:
+    """Signed CiM matmul X @ W (float result of the analog pipeline).
+
+    Applies the digital offset corrections around the unsigned-domain
+    Pallas kernel; pads K internally.
+    """
+    k_real = x_i8.shape[1]
+    xq, wq, _ = pad_k(x_i8, w_i8)
+    codes = cim_matmul_codes(xq, wq, spec)
+    # "calibrated" accumulates real-valued ADC estimates; "full" integer
+    # codes on a uniform grid of pitch adc_delta; "ideal" exact partials.
+    if spec.ideal or spec.adc_mode == "calibrated":
+        delta = 1.0
+    else:
+        delta = spec.adc_delta
+    # Corrections use the *unpadded* operands: pad value -128 maps to 0 in
+    # the unsigned domain, so padded rows/cols contribute nothing to the
+    # kernel's codes, and the identity
+    #   X@W = X_u@W_u - 128*rowsum(X_u) - 128*colsum(W_u) + 128^2*K
+    # holds with K = the real contraction length.
+    xu_rowsum = jnp.sum(x_i8.astype(jnp.int32) + 128, axis=1, keepdims=True)
+    wu_colsum = jnp.sum(w_i8.astype(jnp.int32) + 128, axis=0, keepdims=True)
+    y_u = codes.astype(jnp.float32) * jnp.float32(delta)
+    return y_u - 128.0 * xu_rowsum - 128.0 * wu_colsum + 128.0 * 128.0 * k_real
+
+
+def cim_linear(
+    x: jnp.ndarray, w: jnp.ndarray, spec: CimSpec = HALO1_SPEC
+) -> jnp.ndarray:
+    """Float ``x @ w`` through the analog CiM path (fake-quantized int8).
+
+    ``x`` may have any number of leading batch dims; the last dim contracts.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    qx, sx = quantize_sym_i8(x2)
+    qw, sw = quantize_sym_i8(w)
+    y = cim_matmul(qx, qw, spec)
+    return (y * (sx * sw)).reshape(*lead, w.shape[-1])

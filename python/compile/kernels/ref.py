@@ -1,0 +1,286 @@
+"""Pure-jnp correctness oracles for the HALO functional kernels.
+
+These implement the *hardware math spec* of the two compute substrates:
+
+* ``cim_matmul_ref``  — the analog CiM crossbar: weights bit-sliced at
+  2 bits/cell across crossbars, inputs bit-streamed 1 bit/cycle, partial
+  sums digitized by a 7-bit SAR ADC per column group, shift-and-add
+  recombination, and digital offset corrections (weights/inputs are mapped
+  to the unsigned domain before slicing, as in typical CiM macros).
+* ``cid_gemv_ref``    — the CiD bank-level unit: exact int8 multiplies with
+  exact integer accumulation in the in-bank reduction tree.
+
+The Pallas kernels in ``cim_matmul.py`` / ``cid_gemv.py`` must match these
+*exactly* (integer code equality), because both follow the same spec; this
+module is deliberately written in plain vectorized jnp, without Pallas, so
+the two implementations are independent.
+
+The fake-quantized float wrappers (``cim_linear_ref`` / ``cid_linear_ref``)
+are what the L2 model uses conceptually: per-tensor symmetric int8
+quantization around the integer kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+# Crossbar geometry fixed by the paper (Table I): 128x128 arrays.
+XBAR_ROWS = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class CimSpec:
+    """Configuration of the analog CiM functional model.
+
+    Mirrors Table I / Section IV-A of the paper:
+      * ``input_bits``  — bit-serial input stream length (8-bit activations).
+      * ``slice_bits``  — weight bits stored per cell (2 b/cell => an 8-bit
+        weight spans 4 crossbars).
+      * ``weight_bits`` — total weight precision (8).
+      * ``adc_bits``    — SAR ADC resolution (7).
+      * ``wordlines``   — rows activated simultaneously: 128 for HALO1 /
+        AttAcc1, 64 for HALO2 / AttAcc2 (less analog error, 2x ADC reads).
+      * ``adc_mode``    — ``"full"``: ADC spans the worst-case partial-sum
+        range [0, wordlines*slice_max] (classic ISAAC-style sizing);
+        ``"calibrated"``: the adaptive-SNR scheme of the paper's CiM macro
+        reference [1] (Ali et al., CICC'23) — per-column ADC range
+        calibrated to the expected partial-sum distribution (mean
+        rho*colsum(w_slice), +/-4 sigma with sigma from Bernoulli(rho)
+        input-bit statistics), trading rare clips for a much finer grid.
+      * ``ideal``       — bypass ADC quantization (infinite-precision ADC);
+        used to isolate quantization error in tests.
+    """
+
+    input_bits: int = 8
+    slice_bits: int = 2
+    weight_bits: int = 8
+    adc_bits: int = 7
+    wordlines: int = 128
+    adc_mode: str = "full"
+    ideal: bool = False
+
+    @property
+    def num_slices(self) -> int:
+        assert self.weight_bits % self.slice_bits == 0
+        return self.weight_bits // self.slice_bits
+
+    @property
+    def slice_max(self) -> int:
+        return (1 << self.slice_bits) - 1
+
+    @property
+    def adc_levels(self) -> int:
+        return (1 << self.adc_bits) - 1
+
+    @property
+    def phases_per_block(self) -> int:
+        """Wordline activation phases needed to cover one 128-row block."""
+        assert XBAR_ROWS % self.wordlines == 0
+        return XBAR_ROWS // self.wordlines
+
+    @property
+    def adc_delta(self) -> float:
+        """ADC quantization step: full range of one analog accumulation
+        (``wordlines`` rows, each contributing at most ``slice_max``) mapped
+        onto ``adc_levels`` codes."""
+        return (self.wordlines * self.slice_max) / self.adc_levels
+
+
+HALO1_SPEC = CimSpec(wordlines=128)
+HALO2_SPEC = CimSpec(wordlines=64)
+# Adaptive-SNR configuration used for the functional L2 model: calibrated
+# per-column ADC ranges as in the macro the paper builds on [1].
+MODEL_SPEC = CimSpec(wordlines=128, adc_mode="calibrated")
+
+# Input-bit density the calibrated ADC ranges are trimmed for.
+_CAL_RHO = 0.5
+# Calibrated range half-width in sigmas of the expected partial-sum
+# distribution; +/-4 sigma keeps clipping rare for near-Bernoulli bits.
+_CAL_NSIGMA = 4.0
+
+
+def _to_unsigned(a_i8: jnp.ndarray) -> jnp.ndarray:
+    """Map signed int8 values into the unsigned [0, 255] cell domain."""
+    return a_i8.astype(jnp.int32) + 128
+
+
+def adc_quantize(p: jnp.ndarray, spec: CimSpec) -> jnp.ndarray:
+    """Digitize an analog partial sum ``p`` (in MAC units) to ADC codes.
+
+    Returns integer codes in [0, adc_levels]; the caller scales by
+    ``spec.adc_delta``. In ``ideal`` mode the 'code' is the exact partial
+    sum (delta == 1 semantics handled by the caller).
+    """
+    if spec.ideal:
+        return p.astype(jnp.int32)
+    delta = spec.adc_delta
+    q = jnp.round(p.astype(jnp.float32) / delta)
+    return jnp.clip(q, 0, spec.adc_levels).astype(jnp.int32)
+
+
+def cim_matmul_codes_ref(
+    x_i8: jnp.ndarray, w_i8: jnp.ndarray, spec: CimSpec = HALO1_SPEC
+) -> jnp.ndarray:
+    """Unsigned-domain crossbar accumulation, returned as integer codes.
+
+    x_i8: (M, K) int8, w_i8: (K, N) int8; K must be a multiple of 128
+    (one crossbar row-block per 128 rows — callers pad).
+
+    Returns int32 codes such that
+      X_u @ W_u ~= codes * spec.adc_delta      (== codes exactly when ideal)
+    where X_u = x+128, W_u = w+128.
+    """
+    m, k = x_i8.shape
+    k2, n = w_i8.shape
+    assert k == k2 and k % XBAR_ROWS == 0, (k, k2)
+    assert spec.ideal or spec.adc_mode == "full", "codes are full-mode only"
+    x_u = _to_unsigned(x_i8)  # (M, K) in [0, 255]
+    w_u = _to_unsigned(w_i8)  # (K, N) in [0, 255]
+
+    bits = jnp.arange(spec.input_bits, dtype=jnp.int32)
+    slices = jnp.arange(spec.num_slices, dtype=jnp.int32)
+    # (B, M, K) binary input planes and (S, K, N) weight slice planes.
+    x_planes = (x_u[None, :, :] >> bits[:, None, None]) & 1
+    w_planes = (w_u[None, :, :] >> (spec.slice_bits * slices[:, None, None])) & spec.slice_max
+
+    # shift-and-add weights for recombining (bit, slice) partials
+    weight = (1 << bits)[:, None, None, None] * (
+        1 << (spec.slice_bits * slices)[None, :, None, None]
+    )
+
+    total = jnp.zeros((m, n), dtype=jnp.int32)
+    n_blocks = k // XBAR_ROWS
+    phase_rows = spec.wordlines
+    for blk in range(n_blocks):
+        lo = blk * XBAR_ROWS
+        for ph in range(spec.phases_per_block):
+            rlo = lo + ph * phase_rows
+            xs = x_planes[:, :, rlo : rlo + phase_rows].astype(jnp.float32)
+            ws = w_planes[:, rlo : rlo + phase_rows, :].astype(jnp.float32)
+            # analog accumulation: one dot per (input bit, weight slice)
+            p = jnp.einsum("bmk,skn->bsmn", xs, ws)
+            codes = adc_quantize(p, spec)
+            total = total + jnp.sum(codes * weight, axis=(0, 1), dtype=jnp.int32)
+    return total
+
+
+def cim_matmul_unsigned_ref(
+    x_i8: jnp.ndarray, w_i8: jnp.ndarray, spec: CimSpec = HALO1_SPEC
+) -> jnp.ndarray:
+    """Float estimate of X_u @ W_u through the ADC pipeline (any mode)."""
+    if spec.ideal or spec.adc_mode == "full":
+        codes = cim_matmul_codes_ref(x_i8, w_i8, spec)
+        delta = 1.0 if spec.ideal else spec.adc_delta
+        return codes.astype(jnp.float32) * jnp.float32(delta)
+
+    assert spec.adc_mode == "calibrated", spec.adc_mode
+    m, k = x_i8.shape
+    _, n = w_i8.shape
+    assert k % XBAR_ROWS == 0
+    x_u = _to_unsigned(x_i8)
+    w_u = _to_unsigned(w_i8)
+    bits = jnp.arange(spec.input_bits, dtype=jnp.int32)
+    slices = jnp.arange(spec.num_slices, dtype=jnp.int32)
+    x_planes = (x_u[None, :, :] >> bits[:, None, None]) & 1
+    w_planes = (w_u[None, :, :] >> (spec.slice_bits * slices[:, None, None])) & spec.slice_max
+    saa = (
+        (1 << bits)[:, None, None, None]
+        * (1 << (spec.slice_bits * slices))[None, :, None, None]
+    ).astype(jnp.float32)
+    half = 1 << (spec.adc_bits - 1)
+
+    total = jnp.zeros((m, n), dtype=jnp.float32)
+    for blk in range(k // XBAR_ROWS):
+        lo = blk * XBAR_ROWS
+        for ph in range(spec.phases_per_block):
+            rlo = lo + ph * spec.wordlines
+            xs = x_planes[:, :, rlo : rlo + spec.wordlines].astype(jnp.float32)
+            ws = w_planes[:, rlo : rlo + spec.wordlines, :].astype(jnp.float32)
+            p = jnp.einsum("bmk,skn->bsmn", xs, ws)
+            # per-(slice, column) calibrated range: mean rho*colsum(w),
+            # half-width NSIGMA * sqrt(rho(1-rho) * colsum(w^2))
+            center = _CAL_RHO * jnp.sum(ws, axis=1)[:, None, :]  # (S,1,N)
+            sigma = jnp.sqrt(_CAL_RHO * (1 - _CAL_RHO) * jnp.sum(ws * ws, axis=1))
+            delta = jnp.maximum(2.0 * _CAL_NSIGMA * sigma / (2 * half), 1e-6)
+            delta = delta[:, None, :]  # (S,1,N)
+            q = jnp.clip(jnp.round((p - center[None]) / delta[None]), -half, half - 1)
+            val = center[None] + q * delta[None]
+            total = total + jnp.sum(val * saa, axis=(0, 1))
+    return total
+
+
+def cim_matmul_ref(
+    x_i8: jnp.ndarray, w_i8: jnp.ndarray, spec: CimSpec = HALO1_SPEC
+) -> jnp.ndarray:
+    """Full signed CiM matmul (float result of the analog pipeline).
+
+    Y = X @ W computed as the ADC estimate of X_u @ W_u minus exact digital
+    offset corrections:
+      X@W = X_u@W_u - 128*rowsum(X_u) - 128*colsum(W_u) + 128^2*K
+    (rowsum/colsum corrections are exact digital ops in the hardware).
+    """
+    k = x_i8.shape[1]
+    y_u = cim_matmul_unsigned_ref(x_i8, w_i8, spec)
+    xu_rowsum = jnp.sum(_to_unsigned(x_i8), axis=1, keepdims=True)  # (M,1)
+    wu_colsum = jnp.sum(_to_unsigned(w_i8), axis=0, keepdims=True)  # (1,N)
+    return y_u - 128.0 * xu_rowsum - 128.0 * wu_colsum + 128.0 * 128.0 * k
+
+
+def cid_gemv_ref(x_i8: jnp.ndarray, w_i8: jnp.ndarray) -> jnp.ndarray:
+    """Exact int8 GEMV/GEMM of the CiD bank units (int32 accumulate)."""
+    return jnp.matmul(
+        x_i8.astype(jnp.int32),
+        w_i8.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fake-quantized float wrappers (what the L2 model math looks like).
+# ---------------------------------------------------------------------------
+
+
+def quantize_sym_i8(a: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(a)), 1e-8)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(a / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def pad_k(x_i8: jnp.ndarray, w_i8: jnp.ndarray):
+    """Pad the contraction dim to a multiple of the crossbar height.
+
+    Padding uses value -128 (unsigned-domain 0), which contributes *zero*
+    to every bit/slice plane — so it adds no ADC noise — and a known exact
+    constant 128*128*n_pad to the signed product, subtracted by callers.
+    """
+    k = x_i8.shape[1]
+    k_pad = (-k) % XBAR_ROWS
+    if k_pad == 0:
+        return x_i8, w_i8, 0
+    xp = jnp.pad(x_i8, ((0, 0), (0, k_pad)), constant_values=-128)
+    wp = jnp.pad(w_i8, ((0, k_pad), (0, 0)), constant_values=-128)
+    return xp, wp, k_pad
+
+
+def cim_linear_ref(
+    x: jnp.ndarray, w: jnp.ndarray, spec: CimSpec = HALO1_SPEC
+) -> jnp.ndarray:
+    """Float x @ w through the analog CiM path (fake-quantized)."""
+    qx, sx = quantize_sym_i8(x)
+    qw, sw = quantize_sym_i8(w)
+    qxp, qwp, k_pad = pad_k(qx, qw)
+    y = cim_matmul_ref(qxp, qwp, spec)
+    y = y - 128.0 * 128.0 * k_pad  # remove the exact padding constant
+    return y * (sx * sw)
+
+
+def cid_linear_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Float x @ w through the exact digital CiD int8 path."""
+    qx, sx = quantize_sym_i8(x)
+    qw, sw = quantize_sym_i8(w)
+    y = cid_gemv_ref(qx, qw).astype(jnp.float32)
+    return y * (sx * sw)

@@ -1,0 +1,280 @@
+"""L2: LLaMA-style transformer whose GEMMs run through the L1 HALO kernels.
+
+This is the *functional plane* of the reproduction (DESIGN.md §2): a small
+LLaMA-architecture model (RMSNorm, RoPE, GQA, SwiGLU) whose weight matmuls
+are routed phase-aware exactly like HALO1 maps them:
+
+  * prefill   -> :func:`kernels.cim_linear`  (analog CiM: bit-sliced,
+                 bit-streamed, ADC-quantized Pallas kernel)
+  * decode    -> :func:`kernels.cid_linear`  (digital CiD: exact int8
+                 Pallas kernel)
+  * attention score/value products and all non-GEMM ops stay in f32 —
+    they run on the CiD units / logic-die vector units, which are digital.
+
+Everything here is build-time only: ``aot.py`` lowers ``prefill`` and
+``decode_step`` to HLO text once; the Rust coordinator replays them through
+PJRT with Python out of the loop.
+
+Parameters are a *flat list* of arrays (``param_specs`` fixes the order) so
+that the lowered HLO's parameter order is self-evident for the Rust side.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cid_gemv
+from .kernels.cid_gemv import cid_linear
+from .kernels.cim_matmul import cim_linear
+from .kernels.ref import CimSpec, MODEL_SPEC
+
+IDEAL_SPEC = CimSpec(ideal=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyLlamaConfig:
+    """A ~6M-parameter LLaMA-architecture model (GQA like Qwen3).
+
+    Small enough that the bit-serial CiM kernel (32 planes per matmul)
+    stays tractable on the CPU PJRT backend, large enough to exercise every
+    structural feature of the paper's workloads: multi-head attention with
+    grouped KV heads, RoPE, SwiGLU FFN, KV caching, prefill/decode split.
+    """
+
+    vocab: int = 4096
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 64
+    d_ff: int = 768
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+    # GEMM path per phase: "cim" (analog kernel), "cid" (exact int8 kernel)
+    # or "f32" (plain jnp; the no-hardware reference).
+    prefill_mode: str = "cim"
+    decode_mode: str = "cid"
+    cim_spec: CimSpec = MODEL_SPEC
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+def param_specs(cfg: TinyLlamaConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list — the HLO parameter order contract."""
+    specs: list[tuple[str, tuple[int, ...]]] = [("embed", (cfg.vocab, cfg.d_model))]
+    for l in range(cfg.n_layers):
+        specs += [
+            (f"l{l}.wq", (cfg.d_model, cfg.q_dim)),
+            (f"l{l}.wk", (cfg.d_model, cfg.kv_dim)),
+            (f"l{l}.wv", (cfg.d_model, cfg.kv_dim)),
+            (f"l{l}.wo", (cfg.q_dim, cfg.d_model)),
+            (f"l{l}.w_gate", (cfg.d_model, cfg.d_ff)),
+            (f"l{l}.w_up", (cfg.d_model, cfg.d_ff)),
+            (f"l{l}.w_down", (cfg.d_ff, cfg.d_model)),
+            (f"l{l}.g_attn", (cfg.d_model,)),
+            (f"l{l}.g_ffn", (cfg.d_model,)),
+        ]
+    specs += [("g_final", (cfg.d_model,)), ("w_lm", (cfg.d_model, cfg.vocab))]
+    return specs
+
+
+def init_params(cfg: TinyLlamaConfig, seed: int = 0) -> list[jnp.ndarray]:
+    """Deterministic scaled-gaussian init (shared with the Rust side via
+    the exported ``weights.bin``)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".g_attn", ".g_ffn")) or name == "g_final":
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) == 2 else shape[-1]
+            std = 1.0 / math.sqrt(fan_in)
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+class _P:
+    """Name-addressed view over the flat parameter list."""
+
+    def __init__(self, cfg: TinyLlamaConfig, params):
+        names = [n for n, _ in param_specs(cfg)]
+        assert len(names) == len(params), (len(names), len(params))
+        self._d = dict(zip(names, params))
+
+    def __getitem__(self, k):
+        return self._d[k]
+
+
+def _linear(x, w, mode: str, spec: CimSpec):
+    if mode == "cim":
+        return cim_linear(x, w, spec)
+    if mode == "cid":
+        return cid_linear(x, w)
+    assert mode == "f32", mode
+    return x @ w
+
+
+def rms_norm(x, g, eps: float):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def rope_angles(cfg: TinyLlamaConfig, positions):
+    """positions (...,) int32 -> cos/sin of shape (..., head_dim/2)."""
+    half = cfg.head_dim // 2
+    inv_freq = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., n_heads, head_dim); cos/sin broadcastable (..., 1, hd/2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention_prefill(q, k, v, cfg: TinyLlamaConfig):
+    """q (B,L,H,hd), k/v (B,L,KV,hd) -> (B,L,H*hd); causal."""
+    b, l, h, hd = q.shape
+    rep = cfg.n_heads // cfg.n_kv_heads
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("blhd,bmhd->bhlm", q, k) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhlm,bmhd->blhd", att, v)
+    return out.reshape(b, l, h * hd)
+
+
+def _attention_decode(q, k_cache, v_cache, pos, cfg: TinyLlamaConfig):
+    """q (B,H,hd); k/v_cache (B,S,KV,hd); pos (B,) current positions.
+
+    Attends to cache slots 0..pos inclusive (the current token's K/V has
+    already been written at index pos).
+    """
+    b, h, hd = q.shape
+    s = k_cache.shape[1]
+    rep = cfg.n_heads // cfg.n_kv_heads
+    k = jnp.repeat(k_cache, rep, axis=2)  # (B,S,H,hd)
+    v = jnp.repeat(v_cache, rep, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", q, k) / math.sqrt(hd)
+    valid = jnp.arange(s)[None, :] <= pos[:, None]  # (B,S)
+    scores = jnp.where(valid[:, None, :], scores, -jnp.inf)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", att, v)
+    return out.reshape(b, h * hd)
+
+
+def _block_prefill(x, p: _P, l: int, cfg: TinyLlamaConfig, mode: str):
+    """One decoder block over (B,L,D); returns (x', k, v)."""
+    b, L, d = x.shape
+    h = rms_norm(x, p[f"l{l}.g_attn"], cfg.rms_eps)
+    q = _linear(h, p[f"l{l}.wq"], mode, cfg.cim_spec).reshape(b, L, cfg.n_heads, cfg.head_dim)
+    k = _linear(h, p[f"l{l}.wk"], mode, cfg.cim_spec).reshape(b, L, cfg.n_kv_heads, cfg.head_dim)
+    v = _linear(h, p[f"l{l}.wv"], mode, cfg.cim_spec).reshape(b, L, cfg.n_kv_heads, cfg.head_dim)
+    cos, sin = rope_angles(cfg, jnp.arange(L))
+    cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    att = _attention_prefill(q, k, v, cfg)
+    x = x + _linear(att, p[f"l{l}.wo"], mode, cfg.cim_spec)
+    hf = rms_norm(x, p[f"l{l}.g_ffn"], cfg.rms_eps)
+    gate = _linear(hf, p[f"l{l}.w_gate"], mode, cfg.cim_spec)
+    up = _linear(hf, p[f"l{l}.w_up"], mode, cfg.cim_spec)
+    x = x + _linear(jax.nn.silu(gate) * up, p[f"l{l}.w_down"], mode, cfg.cim_spec)
+    return x, k, v
+
+
+def prefill(params, tokens, cfg: TinyLlamaConfig):
+    """Process a full prompt. tokens (B, L) int32.
+
+    Returns (logits (B, L, vocab), k_cache, v_cache) with caches of shape
+    (n_layers, B, max_seq, n_kv_heads, head_dim), filled at positions
+    [0, L) and zero elsewhere.
+    """
+    p = _P(cfg, params)
+    mode = cfg.prefill_mode
+    b, L = tokens.shape
+    x = p["embed"][tokens]  # (B, L, D)
+    k_cache = jnp.zeros(
+        (cfg.n_layers, b, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim), jnp.float32
+    )
+    v_cache = jnp.zeros_like(k_cache)
+    for l in range(cfg.n_layers):
+        x, k, v = _block_prefill(x, p, l, cfg, mode)
+        k_cache = k_cache.at[l, :, :L].set(k)
+        v_cache = v_cache.at[l, :, :L].set(v)
+    x = rms_norm(x, p["g_final"], cfg.rms_eps)
+    logits = _linear(x, p["w_lm"], mode, cfg.cim_spec)
+    return logits, k_cache, v_cache
+
+
+def decode_step(params, token, pos, k_cache, v_cache, cfg: TinyLlamaConfig):
+    """One autoregressive step for a batch of independent slots.
+
+    token (B,) int32 — current input token per slot;
+    pos   (B,) int32 — its position (0-based) per slot; the new K/V are
+    written at ``pos`` and attention sees slots [0, pos].
+
+    Returns (logits (B, vocab), k_cache', v_cache').
+    """
+    p = _P(cfg, params)
+    mode = cfg.decode_mode
+    b = token.shape[0]
+    x = p["embed"][token]  # (B, D)
+    cos, sin = rope_angles(cfg, pos)  # (B, hd/2)
+    cos, sin = cos[:, None, :], sin[:, None, :]
+    for l in range(cfg.n_layers):
+        h = rms_norm(x, p[f"l{l}.g_attn"], cfg.rms_eps)
+        q = _linear(h, p[f"l{l}.wq"], mode, cfg.cim_spec).reshape(b, cfg.n_heads, cfg.head_dim)
+        k = _linear(h, p[f"l{l}.wk"], mode, cfg.cim_spec).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+        v = _linear(h, p[f"l{l}.wv"], mode, cfg.cim_spec).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+        # scatter the new K/V at each slot's own position
+        upd = jax.vmap(lambda c, kv, pp: jax.lax.dynamic_update_slice(c, kv[None], (pp, 0, 0)))
+        k_cache = k_cache.at[l].set(upd(k_cache[l], k, pos))
+        v_cache = v_cache.at[l].set(upd(v_cache[l], v, pos))
+        att = _attention_decode(q, k_cache[l], v_cache[l], pos, cfg)
+        x = x + _linear(att, p[f"l{l}.wo"], mode, cfg.cim_spec)
+        hf = rms_norm(x, p[f"l{l}.g_ffn"], cfg.rms_eps)
+        gate = _linear(hf, p[f"l{l}.w_gate"], mode, cfg.cim_spec)
+        up = _linear(hf, p[f"l{l}.w_up"], mode, cfg.cim_spec)
+        x = x + _linear(jax.nn.silu(gate) * up, p[f"l{l}.w_down"], mode, cfg.cim_spec)
+    x = rms_norm(x, p["g_final"], cfg.rms_eps)
+    logits = _linear(x, p["w_lm"], mode, cfg.cim_spec)
+    return logits, k_cache, v_cache
+
+
+def reference_config(cfg: TinyLlamaConfig) -> TinyLlamaConfig:
+    """The same model with all GEMMs in plain f32 (no hardware model)."""
+    return dataclasses.replace(cfg, prefill_mode="f32", decode_mode="f32")
+
+
+def generate(params, prompt, cfg: TinyLlamaConfig, n_new: int):
+    """Greedy generation helper (python-side reference for the Rust loop).
+
+    prompt (B, L) int32. Returns (B, n_new) int32 generated ids.
+    """
+    logits, kc, vc = prefill(params, prompt, cfg)
+    b, L = prompt.shape
+    last = jnp.argmax(logits[:, L - 1, :], axis=-1).astype(jnp.int32)
+    outs = [last]
+    pos = jnp.full((b,), L, jnp.int32)
+    for _ in range(n_new - 1):
+        lg, kc, vc = decode_step(params, outs[-1], pos, kc, vc, cfg)
+        outs.append(jnp.argmax(lg, axis=-1).astype(jnp.int32))
+        pos = pos + 1
+    return jnp.stack(outs, axis=1)

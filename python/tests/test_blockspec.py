@@ -1,0 +1,53 @@
+"""BlockSpec tiling sweeps: the kernels must be invariant to the grid
+decomposition (block sizes change the HBM<->VMEM schedule, never the
+numbers)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.cid_gemv import cid_gemv
+from compile.kernels.cim_matmul import cim_matmul_codes
+
+RNG = np.random.default_rng(2024)
+
+blocks = st.sampled_from([16, 32, 64, 128])
+
+
+@settings(max_examples=10, deadline=None)
+@given(bm=blocks, bn=blocks)
+def test_cid_gemv_block_invariance(bm, bn):
+    x = RNG.integers(-128, 128, (48, 200), dtype=np.int8)
+    w = RNG.integers(-128, 128, (200, 96), dtype=np.int8)
+    got = np.asarray(cid_gemv(jnp.asarray(x), jnp.asarray(w), block_m=bm, block_n=bn))
+    np.testing.assert_array_equal(got.astype(np.int64), x.astype(np.int64) @ w.astype(np.int64))
+
+
+@settings(max_examples=8, deadline=None)
+@given(bm=blocks, bn=blocks)
+def test_cim_codes_block_invariance(bm, bn):
+    """ADC codes are computed per 128-row crossbar block regardless of the
+    M/N tiling, so any block decomposition gives identical codes."""
+    x = RNG.integers(-128, 128, (40, 256), dtype=np.int8)
+    w = RNG.integers(-128, 128, (256, 72), dtype=np.int8)
+    base = np.asarray(
+        cim_matmul_codes(jnp.asarray(x), jnp.asarray(w), ref.HALO1_SPEC, block_m=128, block_n=128)
+    )
+    got = np.asarray(
+        cim_matmul_codes(jnp.asarray(x), jnp.asarray(w), ref.HALO1_SPEC, block_m=bm, block_n=bn)
+    )
+    np.testing.assert_array_equal(got, base)
+
+
+def test_single_row_and_column_edges():
+    """Degenerate GEMV shapes (M=1, N=1) through both kernels."""
+    x = RNG.integers(-128, 128, (1, 128), dtype=np.int8)
+    w = RNG.integers(-128, 128, (128, 1), dtype=np.int8)
+    exact = x.astype(np.int64) @ w.astype(np.int64)
+    got_cid = np.asarray(cid_gemv(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(got_cid.astype(np.int64), exact)
+    got_cim = np.asarray(
+        ref.cim_matmul_ref(jnp.asarray(x), jnp.asarray(w), ref.CimSpec(ideal=True))
+    )
+    np.testing.assert_array_equal(got_cim.astype(np.int64), exact)

@@ -1,0 +1,219 @@
+"""Kernel-vs-oracle tests: the CORE correctness signal of the L1 layer.
+
+The Pallas kernels must match the pure-jnp refs bit-exactly in the integer
+modes and to float-association tolerance in calibrated mode; hypothesis
+sweeps shapes and specs.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.cim_matmul import cim_matmul, cim_matmul_codes, cim_linear
+from compile.kernels.cid_gemv import cid_gemv, cid_linear
+
+RNG = np.random.default_rng(1234)
+
+
+def rand_i8(m, k):
+    return RNG.integers(-128, 128, (m, k), dtype=np.int8)
+
+
+def exact_i64(x, w):
+    return x.astype(np.int64) @ w.astype(np.int64)
+
+
+dims = st.integers(min_value=1, max_value=64)
+kdims = st.sampled_from([1, 3, 64, 100, 128, 200, 256, 300])
+wl = st.sampled_from([128, 64, 32])
+
+
+# ---------------------------------------------------------------------- CiD
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=kdims, n=dims)
+def test_cid_gemv_exact(m, k, n):
+    """CiD kernel is an exact int8 x int8 -> int32 GEMM for any shape."""
+    x, w = rand_i8(m, k), rand_i8(k, n)
+    got = np.asarray(cid_gemv(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(got.astype(np.int64), exact_i64(x, w))
+
+
+def test_cid_gemv_matches_ref():
+    x, w = rand_i8(17, 300), rand_i8(300, 65)
+    got = np.asarray(cid_gemv(jnp.asarray(x), jnp.asarray(w)))
+    want = np.asarray(ref.cid_gemv_ref(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_cid_gemv_extremes():
+    """Saturated operands accumulate correctly (int32 headroom)."""
+    x = np.full((2, 256), -128, np.int8)
+    w = np.full((256, 2), 127, np.int8)
+    got = np.asarray(cid_gemv(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(got.astype(np.int64), exact_i64(x, w))
+
+
+# ---------------------------------------------------------------------- CiM
+
+
+@settings(max_examples=12, deadline=None)
+@given(m=st.integers(1, 16), nblk=st.integers(1, 2), n=st.integers(1, 32), w_lines=wl)
+def test_cim_codes_kernel_matches_ref(m, nblk, n, w_lines):
+    """Full-mode ADC codes from the Pallas kernel == oracle, bit-exact."""
+    k = 128 * nblk
+    x, w = rand_i8(m, k), rand_i8(k, n)
+    spec = ref.CimSpec(wordlines=w_lines)
+    got = np.asarray(cim_matmul_codes(jnp.asarray(x), jnp.asarray(w), spec))
+    want = np.asarray(ref.cim_matmul_codes_ref(jnp.asarray(x), jnp.asarray(w), spec))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=12, deadline=None)
+@given(m=st.integers(1, 16), k=kdims, n=st.integers(1, 32))
+def test_cim_ideal_is_exact(m, k, n):
+    """With an ideal ADC the whole bit-slice pipeline is exact, including
+    the unsigned-domain offset corrections and -128 padding."""
+    x, w = rand_i8(m, k), rand_i8(k, n)
+    got = np.asarray(cim_matmul(jnp.asarray(x), jnp.asarray(w), ref.CimSpec(ideal=True)))
+    np.testing.assert_array_equal(got.astype(np.int64), exact_i64(x, w))
+
+
+@settings(max_examples=8, deadline=None)
+@given(w_lines=st.sampled_from([128, 64]), mode=st.sampled_from(["full", "calibrated"]))
+def test_cim_kernel_matches_ref_all_modes(w_lines, mode):
+    x, w = rand_i8(5, 256), rand_i8(256, 9)
+    spec = ref.CimSpec(wordlines=w_lines, adc_mode=mode)
+    got = np.asarray(cim_matmul(jnp.asarray(x), jnp.asarray(w), spec))
+    want = np.asarray(ref.cim_matmul_ref(jnp.asarray(x), jnp.asarray(w), spec))
+    # full mode: identical integer codes -> identical floats. calibrated:
+    # same math, different reduction order -> one-code tolerance.
+    tol = 0 if mode == "full" else 2.0
+    assert np.max(np.abs(got - want)) <= tol
+
+
+def test_cim_full_mode_noise_is_bounded():
+    """ADC quantization noise in MAC units is bounded by the shift-add
+    amplification of half a code step per (bit, slice, phase)."""
+    x, w = rand_i8(8, 128), rand_i8(128, 16)
+    spec = ref.HALO1_SPEC
+    got = np.asarray(cim_matmul(jnp.asarray(x), jnp.asarray(w), spec))
+    exact = exact_i64(x, w)
+    # worst case: delta/2 per conversion, amplified by sum(2^(b+2s)) = 21675
+    bound = (spec.adc_delta / 2) * 21675 + 1
+    assert np.max(np.abs(got - exact)) <= bound
+
+
+def test_wordline_throttling_reduces_error():
+    """Paper Table II / §V-C: fewer active wordlines -> finer ADC grid ->
+    lower quantization error (the HALO2 accuracy argument)."""
+    x, w = rand_i8(32, 512), rand_i8(512, 32)
+    exact = exact_i64(x, w)
+    errs = {}
+    for w_lines in (128, 64, 32):
+        spec = ref.CimSpec(wordlines=w_lines)
+        y = np.asarray(cim_matmul(jnp.asarray(x), jnp.asarray(w), spec))
+        errs[w_lines] = np.abs(y - exact).mean()
+    assert errs[64] < errs[128]
+    assert errs[32] < errs[64]
+
+
+def test_calibrated_beats_full_range():
+    """The adaptive-SNR calibrated ADC [1] outperforms worst-case sizing."""
+    xf = RNG.normal(size=(16, 256)).astype(np.float32)
+    wf = RNG.normal(size=(256, 32)).astype(np.float32)
+    yt = xf @ wf
+    err = {}
+    for mode in ("full", "calibrated"):
+        y = np.asarray(cim_linear(jnp.asarray(xf), jnp.asarray(wf), ref.CimSpec(adc_mode=mode)))
+        err[mode] = np.abs(y - yt).mean()
+    assert err["calibrated"] < 0.5 * err["full"]
+
+
+@settings(max_examples=6, deadline=None)
+@given(k=st.sampled_from([100, 128, 200]))
+def test_cim_padding_adds_no_noise(k):
+    """-128 (unsigned zero) padding must not change the result at all:
+    compare a K-multiple-of-128 matmul against the same data embedded in a
+    padded call."""
+    x, w = rand_i8(4, k), rand_i8(k, 8)
+    spec = ref.HALO1_SPEC
+    y = np.asarray(cim_matmul(jnp.asarray(x), jnp.asarray(w), spec))
+    # manually pre-pad to the next multiple and compare
+    kp = (-k) % 128
+    xp = np.pad(x, ((0, 0), (0, kp)), constant_values=-128)
+    wp = np.pad(w, ((0, kp), (0, 0)), constant_values=-128)
+    yp = np.asarray(cim_matmul(jnp.asarray(xp), jnp.asarray(wp), spec))
+    # the padded call's exact constant 128*128*kp is part of its true
+    # product; remove it to compare
+    np.testing.assert_allclose(yp - 128.0 * 128.0 * kp, y, atol=1e-3)
+
+
+# ------------------------------------------------------------ quantization
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_quantize_sym_roundtrip(seed):
+    r = np.random.default_rng(seed)
+    a = r.normal(size=(32,)).astype(np.float32) * r.uniform(0.01, 100)
+    q, s = ref.quantize_sym_i8(jnp.asarray(a))
+    back = np.asarray(q, np.float32) * float(s)
+    assert np.abs(back - a).max() <= float(s) * 0.5 + 1e-6
+    assert np.asarray(q).min() >= -127 and np.asarray(q).max() <= 127
+
+
+def test_quantize_zero_tensor():
+    q, s = ref.quantize_sym_i8(jnp.zeros((8,)))
+    assert np.all(np.asarray(q) == 0) and float(s) > 0
+
+
+# ----------------------------------------------------------------- linears
+
+
+@settings(max_examples=8, deadline=None)
+@given(m=st.integers(1, 8), k=st.sampled_from([32, 100, 256]), n=st.integers(1, 16))
+def test_cid_linear_close_to_f32(m, k, n):
+    xf = RNG.normal(size=(m, k)).astype(np.float32)
+    wf = RNG.normal(size=(k, n)).astype(np.float32)
+    y = np.asarray(cid_linear(jnp.asarray(xf), jnp.asarray(wf)))
+    yt = xf @ wf
+    # int8 fake-quant error only
+    denom = np.abs(yt).mean() + 1e-6
+    assert np.abs(y - yt).mean() / denom < 0.05
+
+
+def test_cim_linear_batch_dims():
+    """Leading batch dims are flattened and restored."""
+    xf = RNG.normal(size=(2, 3, 64)).astype(np.float32)
+    wf = RNG.normal(size=(64, 16)).astype(np.float32)
+    y = np.asarray(cim_linear(jnp.asarray(xf), jnp.asarray(wf), ref.CimSpec(ideal=True)))
+    assert y.shape == (2, 3, 16)
+    y2 = np.asarray(cim_linear(jnp.asarray(xf.reshape(6, 64)), jnp.asarray(wf), ref.CimSpec(ideal=True)))
+    np.testing.assert_allclose(y.reshape(6, 16), y2, rtol=1e-6)
+
+
+# ------------------------------------------------------------------- spec
+
+
+def test_spec_properties():
+    s = ref.HALO1_SPEC
+    assert s.num_slices == 4 and s.slice_max == 3 and s.adc_levels == 127
+    assert s.phases_per_block == 1
+    s2 = ref.HALO2_SPEC
+    assert s2.phases_per_block == 2
+    assert s2.adc_delta == pytest.approx(s.adc_delta / 2)
+
+
+def test_adc_quantize_grid_and_clip():
+    s = ref.HALO1_SPEC
+    # on-grid values are preserved
+    p = jnp.asarray([0.0, s.adc_delta * 10, s.adc_delta * 127])
+    q = np.asarray(ref.adc_quantize(p, s))
+    np.testing.assert_array_equal(q, [0, 10, 127])
+    # above-range saturates
+    q2 = np.asarray(ref.adc_quantize(jnp.asarray([1e6]), s))
+    assert q2[0] == 127

@@ -1,0 +1,186 @@
+"""L2 model tests: structure, prefill/decode consistency, CiM-noise impact."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+CFG = M.TinyLlamaConfig(n_layers=2, max_seq=64)  # small: tests stay fast
+CFG_F32 = M.reference_config(CFG)
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+def toks(b, l):
+    return jnp.asarray(RNG.integers(0, CFG.vocab, (b, l), dtype=np.int32))
+
+
+# ------------------------------------------------------------------ shapes
+
+
+def test_param_specs_order_and_count():
+    specs = M.param_specs(CFG)
+    names = [n for n, _ in specs]
+    assert names[0] == "embed" and names[-1] == "w_lm" and names[-2] == "g_final"
+    assert len(names) == 1 + 9 * CFG.n_layers + 2
+    # per-layer block layout is stable (the Rust weights.bin contract)
+    assert names[1:10] == [
+        "l0.wq", "l0.wk", "l0.wv", "l0.wo",
+        "l0.w_gate", "l0.w_up", "l0.w_down", "l0.g_attn", "l0.g_ffn",
+    ]
+
+
+def test_prefill_shapes(params):
+    logits, kc, vc = M.prefill(params, toks(1, 8), CFG_F32)
+    assert logits.shape == (1, 8, CFG.vocab)
+    assert kc.shape == (CFG.n_layers, 1, CFG.max_seq, CFG.n_kv_heads, CFG.head_dim)
+    assert vc.shape == kc.shape
+    # cache is zero beyond the prompt
+    assert float(jnp.abs(kc[:, :, 8:]).max()) == 0.0
+
+
+def test_decode_shapes(params):
+    b = 3
+    kc = jnp.zeros((CFG.n_layers, b, CFG.max_seq, CFG.n_kv_heads, CFG.head_dim))
+    vc = jnp.zeros_like(kc)
+    lg, kc2, vc2 = M.decode_step(
+        params, toks(b, 1)[:, 0], jnp.zeros((b,), jnp.int32), kc, vc, CFG_F32
+    )
+    assert lg.shape == (b, CFG.vocab)
+    assert kc2.shape == kc.shape
+
+
+# ------------------------------------------------- prefill/decode agreement
+
+
+def test_decode_matches_prefill_f32(params):
+    """Token-by-token decode reproduces the prefill logits and KV cache."""
+    t = toks(1, 12)
+    lf, kf, vf = M.prefill(params, t, CFG_F32)
+    kc = jnp.zeros_like(kf)
+    vc = jnp.zeros_like(vf)
+    logits = []
+    for i in range(12):
+        lg, kc, vc = M.decode_step(
+            params, t[:, i], jnp.asarray([i], jnp.int32), kc, vc, CFG_F32
+        )
+        logits.append(lg)
+    dec = jnp.stack(logits, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(lf), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(kc), np.asarray(kf), atol=2e-4)
+
+
+def test_decode_slots_are_independent(params):
+    """Batched decode == each slot decoded alone (continuous batching
+    correctness; slots must not leak into each other)."""
+    b = 3
+    kc = jnp.asarray(RNG.normal(size=(CFG.n_layers, b, CFG.max_seq, CFG.n_kv_heads, CFG.head_dim)).astype(np.float32))
+    vc = jnp.asarray(RNG.normal(size=kc.shape).astype(np.float32))
+    tok = toks(b, 1)[:, 0]
+    pos = jnp.asarray([5, 9, 2], jnp.int32)
+    lg, kc2, vc2 = M.decode_step(params, tok, pos, kc, vc, CFG_F32)
+    for s in range(b):
+        lg1, kc1, vc1 = M.decode_step(
+            params, tok[s : s + 1], pos[s : s + 1],
+            kc[:, s : s + 1], vc[:, s : s + 1], CFG_F32,
+        )
+        np.testing.assert_allclose(np.asarray(lg[s]), np.asarray(lg1[0]), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(kc2[:, s]), np.asarray(kc1[:, 0]), atol=1e-5)
+
+
+def test_decode_writes_kv_at_pos(params):
+    b = 2
+    kc = jnp.zeros((CFG.n_layers, b, CFG.max_seq, CFG.n_kv_heads, CFG.head_dim))
+    vc = jnp.zeros_like(kc)
+    pos = jnp.asarray([4, 7], jnp.int32)
+    _, kc2, _ = M.decode_step(params, toks(b, 1)[:, 0], pos, kc, vc, CFG_F32)
+    for s, p in enumerate([4, 7]):
+        assert float(jnp.abs(kc2[:, s, p]).max()) > 0
+        mask = jnp.ones(CFG.max_seq, bool).at[p].set(False)
+        assert float(jnp.abs(kc2[:, s, mask]).max()) == 0.0
+
+
+# ------------------------------------------------------------ numeric units
+
+
+def test_rms_norm_unit_variance():
+    x = jnp.asarray(RNG.normal(size=(4, 64)).astype(np.float32)) * 13.0
+    y = M.rms_norm(x, jnp.ones((64,)), 1e-6)
+    np.testing.assert_allclose(np.asarray(jnp.mean(y * y, -1)), 1.0, rtol=1e-3)
+
+
+def test_rope_preserves_norm_and_zero_pos_identity():
+    cfg = CFG
+    x = jnp.asarray(RNG.normal(size=(2, 5, cfg.n_heads, cfg.head_dim)).astype(np.float32))
+    cos, sin = M.rope_angles(cfg, jnp.arange(5))
+    y = M.apply_rope(x, cos[None, :, None, :], sin[None, :, None, :])
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-5,
+    )
+    cos0, sin0 = M.rope_angles(cfg, jnp.zeros((1,), jnp.int32))
+    y0 = M.apply_rope(x[:, :1], cos0[None, :, None, :], sin0[None, :, None, :])
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(x[:, :1]), atol=1e-6)
+
+
+def test_rope_relative_shift_property():
+    """RoPE dot products depend only on relative position."""
+    cfg = CFG
+    q = jnp.asarray(RNG.normal(size=(1, 1, 1, cfg.head_dim)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(1, 1, 1, cfg.head_dim)).astype(np.float32))
+
+    def dot_at(pq, pk):
+        cq, sq = M.rope_angles(cfg, jnp.asarray([pq]))
+        ck, sk = M.rope_angles(cfg, jnp.asarray([pk]))
+        qq = M.apply_rope(q, cq[None, :, None, :], sq[None, :, None, :])
+        kk = M.apply_rope(k, ck[None, :, None, :], sk[None, :, None, :])
+        return float(jnp.sum(qq * kk))
+
+    assert dot_at(3, 1) == pytest.approx(dot_at(10, 8), rel=1e-4)
+
+
+# ----------------------------------------------------------- CiM-noise path
+
+
+def test_cim_prefill_close_to_f32(params):
+    """The analog-CiM prefill path (calibrated ADC) tracks the f32 model:
+    hidden-state cosine stays high and top-1 next-token mostly agrees."""
+    t = toks(1, 8)
+    lc, _, _ = M.prefill(params, t, CFG)  # CiM path
+    lf, _, _ = M.prefill(params, t, CFG_F32)
+    a = np.asarray(lc[0, -1]).ravel()
+    b = np.asarray(lf[0, -1]).ravel()
+    cos = float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-9))
+    assert cos > 0.8, f"CiM prefill diverged from f32: cos={cos}"
+
+
+def test_decode_cid_close_to_f32(params):
+    """The decode path is digital (CiD, exact int8): much tighter match."""
+    b = 1
+    kc = jnp.asarray(RNG.normal(size=(CFG.n_layers, b, CFG.max_seq, CFG.n_kv_heads, CFG.head_dim)).astype(np.float32)) * 0.1
+    vc = jnp.asarray(RNG.normal(size=kc.shape).astype(np.float32)) * 0.1
+    tok = toks(b, 1)[:, 0]
+    pos = jnp.asarray([3], jnp.int32)
+    lg_cid, _, _ = M.decode_step(params, tok, pos, kc, vc, CFG)
+    lg_f32, _, _ = M.decode_step(params, tok, pos, kc, vc, CFG_F32)
+    a, c = np.asarray(lg_cid).ravel(), np.asarray(lg_f32).ravel()
+    cos = float(a @ c / (np.linalg.norm(a) * np.linalg.norm(c) + 1e-9))
+    assert cos > 0.99
+
+
+def test_generate_runs_and_is_deterministic(params):
+    t = toks(1, 4)
+    g1 = np.asarray(M.generate(params, t, CFG_F32, 3))
+    g2 = np.asarray(M.generate(params, t, CFG_F32, 3))
+    assert g1.shape == (1, 3)
+    np.testing.assert_array_equal(g1, g2)
+    assert g1.min() >= 0 and g1.max() < CFG.vocab

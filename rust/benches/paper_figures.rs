@@ -1,0 +1,45 @@
+//! `cargo bench` target: one end-to-end benchmark per paper table/figure.
+//!
+//! Each benchmark runs the complete generation pipeline for that figure
+//! (workload construction -> mapping -> analytical simulation -> table),
+//! so the numbers double as a performance budget for the simulator itself
+//! (EXPERIMENTS.md §Perf targets the full Fig. 7 grid in well under a
+//! second).
+
+use halo::config::HwConfig;
+use halo::report;
+use halo::util::bench::{bb, BenchSuite};
+
+fn main() {
+    let hw = HwConfig::paper();
+    let mut s = BenchSuite::new("paper_figures");
+
+    s.bench("fig1_roofline", || {
+        bb(report::fig1_roofline(&hw));
+    });
+    s.bench("fig4_breakdown", || {
+        bb(report::fig4_breakdown(&hw));
+    });
+    s.bench("fig5_6_cid_vs_cim_sweep", || {
+        bb(report::fig56_cid_vs_cim(&hw));
+    });
+    s.bench("fig7_e2e_time_grid", || {
+        bb(report::fig78_e2e(&hw, false));
+    });
+    s.bench("fig8_e2e_energy_grid", || {
+        bb(report::fig78_e2e(&hw, true));
+    });
+    s.bench("fig9_batch_sweep", || {
+        bb(report::fig9_batch_sweep(&hw));
+    });
+    s.bench("fig10_cim_vs_sa", || {
+        bb(report::fig10_cim_vs_sa(&hw));
+    });
+    s.bench("headline_summary_all_claims", || {
+        bb(report::headline_summary(&hw));
+    });
+    s.bench("all_figures_full_reproduction", || {
+        bb(report::all_figures(&hw));
+    });
+    s.finish();
+}

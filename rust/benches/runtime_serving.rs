@@ -1,0 +1,67 @@
+//! Functional-plane benchmarks: PJRT execute latency for the prefill and
+//! batched decode entries, and the whole serving loop. Skipped when
+//! `make artifacts` has not been run.
+
+use std::path::Path;
+use std::time::Duration;
+
+use halo::coordinator::{InferenceEngine, Request, Server};
+use halo::util::bench::{bb, BenchSuite};
+use halo::util::Rng;
+
+fn main() {
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("runtime_serving: skipped (run `make artifacts` first)");
+        return;
+    }
+    let mut s = BenchSuite::new("runtime_serving").with_target_time(Duration::from_secs(5));
+
+    // decode-step latency == functional TPOT at batch 4
+    let mut engine = InferenceEngine::load(&artifacts, 4).expect("engine");
+    let vocab = engine.vocab;
+    engine.prefill_into_slot(0, 1, &[5, 17, 99, 3], 1 << 20).unwrap();
+    engine.prefill_into_slot(1, 2, &[1, 2, 3, 4, 5, 6], 1 << 20).unwrap();
+    let mut cur = vec![7i32; 4];
+    s.bench_throughput("decode_step_batch4_2active", 2.0, || {
+        let next = engine.decode_step(&cur).unwrap();
+        cur = next;
+        // keep positions bounded: the slots were given a huge budget and
+        // max_seq wraps long before the bench ends, so re-arm when needed
+        if engine.kv.active_slots().len() < 2 {
+            engine.kv.release(0);
+            engine.kv.release(1);
+            engine.prefill_into_slot(0, 1, &[5, 17, 99, 3], 1 << 20).unwrap();
+            engine.prefill_into_slot(1, 2, &[1, 2, 3, 4, 5, 6], 1 << 20).unwrap();
+        }
+        bb(&cur);
+    });
+
+    // prefill latency == functional TTFT (s16 and s64 ladder rungs)
+    let mut engine2 = InferenceEngine::load(&artifacts, 4).expect("engine");
+    s.bench("prefill_s16_ttft", || {
+        let out = engine2.prefill_into_slot(2, 9, &[1, 2, 3, 4, 5, 6, 7, 8], 4).unwrap();
+        engine2.kv.release(2);
+        bb(out);
+    });
+    let long: Vec<i32> = (0..40).collect();
+    s.bench("prefill_s64_ttft", || {
+        let out = engine2.prefill_into_slot(2, 9, &long, 4).unwrap();
+        engine2.kv.release(2);
+        bb(out);
+    });
+
+    // whole serving loop: 6 requests through 4 slots
+    let mut rng = Rng::new(5);
+    let prompts: Vec<Vec<i32>> = (0..6)
+        .map(|_| (0..rng.range(4, 12)).map(|_| rng.below(vocab as u64) as i32).collect())
+        .collect();
+    let mut server = Server::new(InferenceEngine::load(&artifacts, 4).expect("engine"));
+    s.bench_throughput("serve_6_requests_8_tokens", 48.0, || {
+        for (i, p) in prompts.iter().enumerate() {
+            server.submit(Request::new(i as u64, p.clone(), 8));
+        }
+        bb(server.run_to_completion().unwrap());
+    });
+    s.finish();
+}

@@ -1,0 +1,58 @@
+//! Microbenchmarks of the simulator hot path (the L3 perf-pass targets):
+//! graph construction, per-op costing, and single-scenario e2e simulation.
+
+use halo::arch::cim::CimEngine;
+use halo::arch::{cid::CidEngine, MatmulEngine};
+use halo::config::HwConfig;
+use halo::mapping::MappingKind;
+use halo::model::{build_decode_graph, build_prefill_graph, LlmConfig};
+use halo::sim::{simulate_e2e, simulate_graph, EngineSet, Scenario};
+use halo::util::bench::{bb, BenchSuite};
+
+fn main() {
+    let hw = HwConfig::paper();
+    let m = LlmConfig::llama2_7b();
+    let q = LlmConfig::qwen3_8b();
+    let mut s = BenchSuite::new("sim_hotpath");
+
+    s.bench("build_prefill_graph_llama_2048", || {
+        bb(build_prefill_graph(&m, 2048, 1));
+    });
+    s.bench("build_decode_graph_llama_2048", || {
+        bb(build_decode_graph(&m, 2048, 1));
+    });
+
+    let cid = CidEngine::new(&hw);
+    let cim = CimEngine::new(&hw);
+    let g = build_prefill_graph(&m, 2048, 1);
+    s.bench_throughput("cost_all_ops_cid", g.ops.len() as f64, || {
+        for op in g.matmul_ops() {
+            bb(cid.matmul_cost(op));
+        }
+    });
+    s.bench_throughput("cost_all_ops_cim", g.ops.len() as f64, || {
+        for op in g.matmul_ops() {
+            bb(cim.matmul_cost(op));
+        }
+    });
+
+    let engines = EngineSet::new(&hw, MappingKind::Halo1);
+    s.bench("simulate_graph_prefill_halo1", || {
+        bb(simulate_graph(&g, &engines, MappingKind::Halo1));
+    });
+
+    let sc = Scenario { l_in: 2048, l_out: 512, batch: 1 };
+    s.bench("simulate_e2e_llama_halo1", || {
+        bb(simulate_e2e(&m, &hw, MappingKind::Halo1, &sc));
+    });
+    s.bench("simulate_e2e_qwen_attacc1", || {
+        bb(simulate_e2e(&q, &hw, MappingKind::AttAcc1, &sc));
+    });
+    // the whole Table-II comparison at one grid point
+    s.bench_throughput("simulate_all_table2_mappings", 5.0, || {
+        for mk in MappingKind::table2() {
+            bb(simulate_e2e(&m, &hw, *mk, &sc));
+        }
+    });
+    s.finish();
+}

@@ -1,0 +1,106 @@
+//! Logic-die non-GEMM units (Fig. 3d): 512-wide vector unit, dedicated
+//! exponent units for softmax, and a RISC-V scalar core for div/sqrt.
+//!
+//! Non-GEMM ops are a small fraction of the FLOPs (paper §IV-A) but sit on
+//! the critical path between GEMM stages; the model charges vector-lane
+//! time, exponent-unit time, scalar time, and the activation streaming
+//! through the logic-die datapath, taking the max (the units pipeline
+//! against the stream).
+
+use super::OpCost;
+use crate::config::HwConfig;
+use crate::model::Op;
+
+#[derive(Debug, Clone)]
+pub struct LogicDieEngine {
+    hw: HwConfig,
+}
+
+impl LogicDieEngine {
+    pub fn new(hw: &HwConfig) -> Self {
+        LogicDieEngine { hw: hw.clone() }
+    }
+
+    pub fn non_gemm_cost(&self, op: &Op) -> OpCost {
+        let lg = &self.hw.logic;
+        let count = op.count as f64;
+        let elems = op.elems as f64 * count;
+        let exps = op.exp_elems as f64 * count;
+        let scalars = op.scalar_elems as f64 * count;
+        let bytes = op.stream_bytes as f64 * count;
+
+        let t_vec = elems / (lg.vector_width as f64 * lg.freq);
+        let t_exp = exps / lg.exp_per_s;
+        let t_scalar = scalars / lg.scalar_ops_per_s;
+        let t_stream = bytes / lg.die_bw;
+        let latency = t_vec.max(t_exp).max(t_scalar).max(t_stream);
+
+        let e_compute = elems * lg.e_vec_op + exps * lg.e_exp_op + scalars * 10.0 * lg.e_vec_op;
+        let e_dram = bytes * self.hw.hbm.e_bank_read;
+
+        OpCost {
+            latency,
+            energy: e_compute + e_dram,
+            t_compute: t_vec.max(t_exp).max(t_scalar),
+            t_memory: t_stream,
+            t_write: 0.0,
+            e_dram,
+            e_compute,
+            e_buffer: 0.0,
+            e_write: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{build_decode_graph, build_prefill_graph, LlmConfig, Op, OpKind};
+
+    fn engine() -> LogicDieEngine {
+        LogicDieEngine::new(&HwConfig::paper())
+    }
+
+    #[test]
+    fn softmax_is_exp_bound() {
+        let e = engine();
+        // exp-heavy softmax: equal exp and vector elems; exp is the
+        // slower unit (256 G/s vs 512 lanes at 1 GHz)
+        let op = Op::non_gemm(OpKind::Softmax, 1_000_000, 1).with_exp(1_000_000);
+        let c = e.non_gemm_cost(&op);
+        let lg = &HwConfig::paper().logic;
+        assert!((c.latency - 1.0e6 / lg.exp_per_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nongemm_is_small_fraction_of_decode() {
+        // paper §IV-A: non-GEMM ops don't need bank-level parallelism
+        let e = engine();
+        let m = LlmConfig::llama2_7b();
+        let g = build_decode_graph(&m, 2048, 1);
+        let t: f64 = g.non_gemm_ops().map(|o| e.non_gemm_cost(o).latency).sum();
+        // well under the ~0.4 ms CiD weight stream
+        assert!(t < 0.2e-3, "non-GEMM {t}");
+    }
+
+    #[test]
+    fn prefill_nongemm_positive_energy() {
+        let e = engine();
+        let m = LlmConfig::qwen3_8b();
+        let g = build_prefill_graph(&m, 1024, 1);
+        for op in g.non_gemm_ops() {
+            let c = e.non_gemm_cost(op);
+            assert!(c.latency > 0.0 || op.elems == 0, "{:?}", op.kind);
+            assert!(c.energy > 0.0);
+        }
+    }
+
+    #[test]
+    fn scalar_ops_can_dominate() {
+        let e = engine();
+        let op = Op::non_gemm(OpKind::RmsNorm, 10, 1).with_scalar(1_000_000);
+        let c = e.non_gemm_cost(&op);
+        let lg = &HwConfig::paper().logic;
+        assert!((c.latency - 1.0e6 / lg.scalar_ops_per_s).abs() < 1e-12);
+    }
+}

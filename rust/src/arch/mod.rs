@@ -1,0 +1,116 @@
+//! Architecture cost models: per-operation latency/energy on each compute
+//! substrate (CiD banks, analog CiM, digital systolic arrays, logic-die
+//! vector units).
+//!
+//! Each engine implements [`MatmulEngine::matmul_cost`] returning an
+//! [`OpCost`] with a component breakdown; the sim engine picks the engine
+//! per op according to the active mapping (Table II) and aggregates.
+
+pub mod cid;
+pub mod cim;
+pub mod logicdie;
+pub mod systolic;
+
+use crate::model::Op;
+
+/// Which substrate executes an operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineSel {
+    /// Bank-level compute-in-DRAM units.
+    Cid,
+    /// Analog compute-in-memory chiplet.
+    Cim,
+    /// Digital systolic-array chiplet (HALO-SA ablation).
+    Systolic,
+    /// Logic-die vector/exponent/scalar units.
+    LogicDie,
+}
+
+impl EngineSel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineSel::Cid => "cid",
+            EngineSel::Cim => "cim",
+            EngineSel::Systolic => "systolic",
+            EngineSel::LogicDie => "logic",
+        }
+    }
+}
+
+/// Latency/energy of one operation, with the latency decomposed into the
+/// pipeline components that bound it (components overlap; `latency` is the
+/// pipelined total, not their sum).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpCost {
+    /// Pipelined wall-clock latency, s.
+    pub latency: f64,
+    /// Total energy, J.
+    pub energy: f64,
+    /// Time the compute units are the bottleneck (serial sum of
+    /// compute-bound rounds), s.
+    pub t_compute: f64,
+    /// Time DRAM/interconnect streaming is the bottleneck, s.
+    pub t_memory: f64,
+    /// Time crossbar (or SA) weight writes are the bottleneck, s.
+    pub t_write: f64,
+    /// Energy sub-components, J.
+    pub e_dram: f64,
+    pub e_compute: f64,
+    pub e_buffer: f64,
+    pub e_write: f64,
+}
+
+impl OpCost {
+    pub fn add(&mut self, o: &OpCost) {
+        self.latency += o.latency;
+        self.energy += o.energy;
+        self.t_compute += o.t_compute;
+        self.t_memory += o.t_memory;
+        self.t_write += o.t_write;
+        self.e_dram += o.e_dram;
+        self.e_compute += o.e_compute;
+        self.e_buffer += o.e_buffer;
+        self.e_write += o.e_write;
+    }
+
+    pub fn scaled(&self, f: f64) -> OpCost {
+        OpCost {
+            latency: self.latency * f,
+            energy: self.energy * f,
+            t_compute: self.t_compute * f,
+            t_memory: self.t_memory * f,
+            t_write: self.t_write * f,
+            e_dram: self.e_dram * f,
+            e_compute: self.e_compute * f,
+            e_buffer: self.e_buffer * f,
+            e_write: self.e_write * f,
+        }
+    }
+}
+
+/// A substrate that can execute matrix products.
+pub trait MatmulEngine {
+    /// Cost of executing `op` (all `count` instances).
+    fn matmul_cost(&self, op: &Op) -> OpCost;
+    /// Peak MAC/s (roofline ceiling).
+    fn peak_macs(&self) -> f64;
+    /// Effective stationary-operand streaming bandwidth, B/s (roofline
+    /// slope for the memory-bound region).
+    fn stream_bw(&self) -> f64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opcost_add_and_scale() {
+        let a = OpCost { latency: 1.0, energy: 2.0, t_compute: 0.5, ..Default::default() };
+        let mut b = a;
+        b.add(&a);
+        assert_eq!(b.latency, 2.0);
+        assert_eq!(b.energy, 4.0);
+        let c = a.scaled(3.0);
+        assert_eq!(c.t_compute, 1.5);
+    }
+}

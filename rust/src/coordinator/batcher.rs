@@ -1,0 +1,112 @@
+//! Admission queue and continuous-batching policy.
+//!
+//! Pure logic (no PJRT): decides which queued request is admitted into
+//! which free slot each scheduling round. Tested exhaustively here and
+//! driven by the [`super::server`] loop.
+
+use std::collections::VecDeque;
+
+use super::request::Request;
+
+/// FIFO admission with slot-granular continuous batching.
+#[derive(Debug, Default)]
+pub struct Batcher {
+    queue: VecDeque<Request>,
+    admitted: u64,
+    completed: u64,
+}
+
+impl Batcher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn submit(&mut self, r: Request) {
+        self.queue.push_back(r);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Pop the next request if a slot is free and the request fits the
+    /// engine's limits; oversized requests are rejected to `rejects`.
+    pub fn admit(
+        &mut self,
+        free_slot: Option<usize>,
+        max_prompt: usize,
+        rejects: &mut Vec<Request>,
+    ) -> Option<(usize, Request)> {
+        let slot = free_slot?;
+        while let Some(r) = self.queue.pop_front() {
+            if r.prompt.len() > max_prompt {
+                rejects.push(r);
+                continue;
+            }
+            self.admitted += 1;
+            return Some((slot, r));
+        }
+        None
+    }
+
+    pub fn complete(&mut self) {
+        self.completed += 1;
+    }
+
+    pub fn stats(&self) -> (u64, u64, usize) {
+        (self.admitted, self.completed, self.queue.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, len: usize) -> Request {
+        Request::new(id, vec![1; len], 4)
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut b = Batcher::new();
+        b.submit(req(1, 4));
+        b.submit(req(2, 4));
+        let mut rej = Vec::new();
+        let (s, r) = b.admit(Some(0), 64, &mut rej).unwrap();
+        assert_eq!((s, r.id), (0, 1));
+        let (_, r2) = b.admit(Some(1), 64, &mut rej).unwrap();
+        assert_eq!(r2.id, 2);
+        assert!(rej.is_empty());
+    }
+
+    #[test]
+    fn no_slot_no_admission() {
+        let mut b = Batcher::new();
+        b.submit(req(1, 4));
+        let mut rej = Vec::new();
+        assert!(b.admit(None, 64, &mut rej).is_none());
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn oversized_requests_rejected_not_stuck() {
+        let mut b = Batcher::new();
+        b.submit(req(1, 100)); // too long
+        b.submit(req(2, 8));
+        let mut rej = Vec::new();
+        let (_, r) = b.admit(Some(0), 64, &mut rej).unwrap();
+        assert_eq!(r.id, 2);
+        assert_eq!(rej.len(), 1);
+        assert_eq!(rej[0].id, 1);
+    }
+
+    #[test]
+    fn stats_track_lifecycle() {
+        let mut b = Batcher::new();
+        b.submit(req(1, 4));
+        let mut rej = Vec::new();
+        b.admit(Some(0), 64, &mut rej);
+        b.complete();
+        assert_eq!(b.stats(), (1, 1, 0));
+    }
+}

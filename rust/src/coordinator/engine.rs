@@ -1,0 +1,192 @@
+//! InferenceEngine: phase-aware execution of the AOT artifacts.
+//!
+//! Prefill requests run the `prefill_b1_s{L}` executable whose GEMMs were
+//! lowered through the analog-CiM Pallas kernel; decode steps run the
+//! `decode_b{B}` executable (exact-int8 CiD kernel path) over the batched
+//! KV cache. This is the functional twin of the paper's phase-aware
+//! mapping (Table II, HALO1).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::kv_cache::KvCache;
+use crate::runtime::{Executable, HostTensor, Runtime};
+
+/// Result of a prefill: the first generated token and the prompt length.
+#[derive(Debug, Clone)]
+pub struct PrefillOutcome {
+    pub first_token: i32,
+    pub prompt_len: usize,
+    pub wall: std::time::Duration,
+}
+
+pub struct InferenceEngine {
+    pub rt: Runtime,
+    /// (padded length, executable), ascending by length.
+    prefills: Vec<(usize, Executable)>,
+    decode: Executable,
+    pub kv: KvCache,
+    /// Device-resident KV buffers, valid when no host-side slot mutation
+    /// happened since the last decode step. Decode steps chain K'/V'
+    /// buffers directly, so the multi-MB caches never cross the host
+    /// boundary inside a generation burst (EXPERIMENTS.md §Perf).
+    kv_dev: Option<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+    pub vocab: usize,
+    /// Wall-clock spent inside PJRT execute (perf accounting).
+    pub execute_time: std::time::Duration,
+    pub steps: u64,
+}
+
+impl InferenceEngine {
+    /// Load artifacts and compile the prefill ladder + the batched decode
+    /// entry. `slots` must match a `decode_b{slots}` artifact.
+    ///
+    /// Prefill prefers the ideal-ADC entries (deterministic across XLA
+    /// versions); pass `noisy_prefill=true` via [`Self::load_with_mode`]
+    /// to serve through the calibrated analog-noise path instead.
+    pub fn load(artifacts: &Path, slots: usize) -> Result<Self> {
+        Self::load_with_mode(artifacts, slots, false)
+    }
+
+    pub fn load_with_mode(artifacts: &Path, slots: usize, noisy_prefill: bool) -> Result<Self> {
+        let rt = Runtime::load(artifacts)?;
+        let n_layers = rt.manifest.config_usize("n_layers")?;
+        let max_seq = rt.manifest.config_usize("max_seq")?;
+        let kv_heads = rt.manifest.config_usize("n_kv_heads")?;
+        let head_dim = rt.manifest.config_usize("head_dim")?;
+        let vocab = rt.manifest.config_usize("vocab")?;
+
+        let prefix = if noisy_prefill { "prefill_b1_s" } else { "prefill_ideal_b1_s" };
+        let mut prefills = Vec::new();
+        for (name, _) in rt.manifest.entries.iter() {
+            if let Some(len) = name.strip_prefix(prefix).and_then(|s| s.parse().ok()) {
+                prefills.push((len, rt.compile(name)?));
+            }
+        }
+        if prefills.is_empty() && !noisy_prefill {
+            // older artifact sets may only carry the calibrated entries
+            for (name, _) in rt.manifest.entries.iter() {
+                if let Some(len) = name.strip_prefix("prefill_b1_s").and_then(|s| s.parse().ok()) {
+                    prefills.push((len, rt.compile(name)?));
+                }
+            }
+        }
+        prefills.sort_by_key(|(l, _)| *l);
+        if prefills.is_empty() {
+            bail!("no prefill entries in manifest");
+        }
+        let decode = rt.compile(&format!("decode_b{slots}"))?;
+        let kv = KvCache::new(n_layers, slots, max_seq, kv_heads, head_dim);
+        Ok(InferenceEngine {
+            rt,
+            prefills,
+            decode,
+            kv,
+            kv_dev: None,
+            vocab,
+            execute_time: Default::default(),
+            steps: 0,
+        })
+    }
+
+    pub fn slots(&self) -> usize {
+        self.kv.slots
+    }
+
+    pub fn max_prompt(&self) -> usize {
+        self.prefills.last().map(|(l, _)| *l).unwrap_or(0)
+    }
+
+    /// Pull the device-resident KV state back to the host (needed before
+    /// any host-side slot mutation, i.e. prefill installs).
+    fn sync_kv_to_host(&mut self) -> Result<()> {
+        if let Some((kb, vb)) = self.kv_dev.take() {
+            self.kv.k = self.decode.download_output(&kb, 1)?;
+            self.kv.v = self.decode.download_output(&vb, 2)?;
+        }
+        Ok(())
+    }
+
+    /// Run prefill for a prompt and install its KV into `slot`.
+    pub fn prefill_into_slot(
+        &mut self,
+        slot: usize,
+        request: u64,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> Result<PrefillOutcome> {
+        self.sync_kv_to_host()?;
+        let plen = prompt.len();
+        let (padded, exe) = self
+            .prefills
+            .iter()
+            .find(|(l, _)| *l >= plen)
+            .ok_or_else(|| anyhow!("prompt of {plen} exceeds longest prefill ({})", self.max_prompt()))?;
+
+        // right-pad: padded positions are causally after the prompt, so
+        // their K/V never get attended (decode positions start at plen)
+        let mut toks = prompt.to_vec();
+        toks.resize(*padded, 0);
+        let t0 = Instant::now();
+        let outs = exe.run(&[HostTensor::i32(toks, &[1, *padded])])?;
+        let wall = t0.elapsed();
+        self.execute_time += wall;
+
+        let [logits, k1, v1]: &[HostTensor; 3] = outs
+            .as_slice()
+            .try_into()
+            .map_err(|_| anyhow!("prefill returned {} outputs", outs.len()))?;
+        // logits (1, padded, vocab): greedy over the last *real* position
+        let lv = logits.as_f32()?;
+        let row = &lv[(plen - 1) * self.vocab..plen * self.vocab];
+        let first = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap();
+
+        // the prefill itself produced the first generated token, so the
+        // decode budget is one less than the request's max_new
+        self.kv.claim(slot, request, plen, max_new.saturating_sub(1).max(1))?;
+        self.kv.load_prefill(slot, k1, v1)?;
+        Ok(PrefillOutcome { first_token: first, prompt_len: plen, wall })
+    }
+
+    /// One batched decode step: feed each active slot's current token,
+    /// update the KV cache, return per-slot greedy next tokens.
+    ///
+    /// The KV caches stay device-resident between steps: only the token
+    /// and position vectors go up and only the logits come down.
+    pub fn decode_step(&mut self, current_tokens: &[i32]) -> Result<Vec<i32>> {
+        let b = self.slots();
+        let (toks, pos) = self.kv.step_inputs(current_tokens);
+        let t0 = Instant::now();
+        let tok_t = HostTensor::i32(toks, &[b]);
+        let pos_t = HostTensor::i32(pos, &[b]);
+
+        // upload the KV state only when a host mutation invalidated it
+        let (kb, vb) = match self.kv_dev.take() {
+            Some(bufs) => bufs,
+            None => (self.kv.k.to_device(&self.rt.client)?, self.kv.v.to_device(&self.rt.client)?),
+        };
+        let mut bufs = self.decode.run_buffers(&[&tok_t, &pos_t], &[&kb, &vb])?;
+        if bufs.len() != 3 {
+            bail!("decode: expected 3 untupled outputs, got {} (unpatched xla?)", bufs.len());
+        }
+        let vb_new = bufs.pop().unwrap();
+        let kb_new = bufs.pop().unwrap();
+        let logits = self.decode.download_output(&bufs[0], 0)?;
+        self.kv_dev = Some((kb_new, vb_new));
+        self.execute_time += t0.elapsed();
+        self.steps += 1;
+
+        let next = logits.argmax_rows()?.into_iter().map(|i| i as i32).collect();
+        Ok(next)
+    }
+}
+
+// engine integration tests (need artifacts + PJRT) live in
+// rust/tests/serving_integration.rs

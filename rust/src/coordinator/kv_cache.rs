@@ -1,0 +1,216 @@
+//! Batched KV-cache state and slot bookkeeping.
+//!
+//! The decode executable is compiled for a fixed batch of `slots`; each
+//! slot holds one in-flight sequence's KV cache at a fixed index of the
+//! (n_layers, B, max_seq, n_kv_heads, head_dim) tensors. The coordinator
+//! copies a finished prefill's (B=1) cache into a free slot and recycles
+//! slots as sequences complete (continuous batching, vLLM-style but
+//! slot-granular).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{Dtype, HostTensor, TensorSpec};
+
+/// Per-slot sequence state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Slot {
+    Free,
+    /// Active sequence: request id and the position the *next* token will
+    /// be written to (== current sequence length).
+    Active { request: u64, pos: usize, generated: usize, budget: usize },
+}
+
+/// Batched KV tensors plus slot table.
+#[derive(Debug)]
+pub struct KvCache {
+    pub n_layers: usize,
+    pub slots: usize,
+    pub max_seq: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub k: HostTensor,
+    pub v: HostTensor,
+    table: Vec<Slot>,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, slots: usize, max_seq: usize, kv_heads: usize, head_dim: usize) -> Self {
+        let spec = TensorSpec {
+            shape: vec![n_layers, slots, max_seq, kv_heads, head_dim],
+            dtype: Dtype::F32,
+        };
+        KvCache {
+            n_layers,
+            slots,
+            max_seq,
+            kv_heads,
+            head_dim,
+            k: HostTensor::zeros(spec.clone()),
+            v: HostTensor::zeros(spec),
+            table: vec![Slot::Free; slots],
+        }
+    }
+
+    pub fn slot(&self, i: usize) -> Slot {
+        self.table[i]
+    }
+
+    pub fn free_slot(&self) -> Option<usize> {
+        self.table.iter().position(|s| matches!(s, Slot::Free))
+    }
+
+    pub fn active_slots(&self) -> Vec<usize> {
+        (0..self.slots).filter(|i| matches!(self.table[*i], Slot::Active { .. })).collect()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active_slots().is_empty()
+    }
+
+    /// Claim a slot for a request whose prefill produced `pos` cached
+    /// positions; `budget` = max new tokens.
+    pub fn claim(&mut self, i: usize, request: u64, pos: usize, budget: usize) -> Result<()> {
+        if !matches!(self.table[i], Slot::Free) {
+            bail!("slot {i} is busy");
+        }
+        if pos >= self.max_seq {
+            bail!("prompt length {pos} >= max_seq {}", self.max_seq);
+        }
+        self.table[i] = Slot::Active { request, pos, generated: 0, budget };
+        Ok(())
+    }
+
+    pub fn release(&mut self, i: usize) {
+        self.table[i] = Slot::Free;
+    }
+
+    /// Advance an active slot by one generated token. Returns true when
+    /// the slot is finished (budget exhausted or context full).
+    pub fn advance(&mut self, i: usize) -> bool {
+        match &mut self.table[i] {
+            Slot::Active { pos, generated, budget, .. } => {
+                *pos += 1;
+                *generated += 1;
+                *generated >= *budget || *pos + 1 >= self.max_seq
+            }
+            Slot::Free => panic!("advance on free slot {i}"),
+        }
+    }
+
+    /// Copy a single-sequence prefill cache (n_layers, 1, S, H, D) into
+    /// slot `i` of the batched tensors.
+    pub fn load_prefill(&mut self, i: usize, k1: &HostTensor, v1: &HostTensor) -> Result<()> {
+        let expect = vec![self.n_layers, 1, self.max_seq, self.kv_heads, self.head_dim];
+        if k1.spec.shape != expect || v1.spec.shape != expect {
+            bail!("prefill KV shape {:?}, expected {:?}", k1.spec.shape, expect);
+        }
+        let per_seq = self.max_seq * self.kv_heads * self.head_dim;
+        let batch_layer = self.slots * per_seq;
+        for (dst, src) in [(&mut self.k, k1), (&mut self.v, v1)] {
+            let s = src.as_f32()?.to_vec();
+            let d = dst.as_f32_mut()?;
+            for l in 0..self.n_layers {
+                let doff = l * batch_layer + i * per_seq;
+                let soff = l * per_seq;
+                d[doff..doff + per_seq].copy_from_slice(&s[soff..soff + per_seq]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Gather (token, pos) vectors for one decode step. Inactive slots get
+    /// token 0 at position 0 (their writes are garbage by construction and
+    /// are overwritten by the next prefill claiming the slot).
+    pub fn step_inputs(&self, next_tokens: &[i32]) -> (Vec<i32>, Vec<i32>) {
+        assert_eq!(next_tokens.len(), self.slots);
+        let mut toks = vec![0i32; self.slots];
+        let mut pos = vec![0i32; self.slots];
+        for i in 0..self.slots {
+            if let Slot::Active { pos: p, .. } = self.table[i] {
+                toks[i] = next_tokens[i];
+                pos[i] = p as i32;
+            }
+        }
+        (toks, pos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache() -> KvCache {
+        KvCache::new(2, 4, 16, 2, 8)
+    }
+
+    #[test]
+    fn claim_release_cycle() {
+        let mut c = cache();
+        assert_eq!(c.free_slot(), Some(0));
+        c.claim(0, 77, 5, 3).unwrap();
+        assert!(matches!(c.slot(0), Slot::Active { request: 77, pos: 5, .. }));
+        assert_eq!(c.free_slot(), Some(1));
+        assert!(c.claim(0, 78, 1, 1).is_err(), "double claim");
+        c.release(0);
+        assert_eq!(c.free_slot(), Some(0));
+    }
+
+    #[test]
+    fn advance_finishes_on_budget() {
+        let mut c = cache();
+        c.claim(1, 9, 4, 2).unwrap();
+        assert!(!c.advance(1));
+        assert!(c.advance(1)); // budget 2 reached
+    }
+
+    #[test]
+    fn advance_finishes_on_context_limit() {
+        let mut c = cache();
+        c.claim(2, 9, 13, 100).unwrap();
+        assert!(!c.advance(2)); // pos 14
+        assert!(c.advance(2)); // pos 15 == max_seq-1 -> full
+    }
+
+    #[test]
+    fn claim_rejects_overlong_prompt() {
+        let mut c = cache();
+        assert!(c.claim(0, 1, 16, 4).is_err());
+    }
+
+    #[test]
+    fn load_prefill_targets_one_slot() {
+        let mut c = cache();
+        let spec = TensorSpec { shape: vec![2, 1, 16, 2, 8], dtype: Dtype::F32 };
+        let mut k1 = HostTensor::zeros(spec.clone());
+        k1.as_f32_mut().unwrap().iter_mut().for_each(|x| *x = 7.0);
+        let v1 = HostTensor::zeros(spec);
+        c.load_prefill(2, &k1, &v1).unwrap();
+        let per_seq = 16 * 2 * 8;
+        let k = c.k.as_f32().unwrap();
+        // slot 2 of layer 0 and 1 is 7.0, slots 0,1,3 untouched
+        for l in 0..2 {
+            let base = l * 4 * per_seq;
+            assert!(k[base + 2 * per_seq..base + 3 * per_seq].iter().all(|x| *x == 7.0));
+            assert!(k[base..base + 2 * per_seq].iter().all(|x| *x == 0.0));
+            assert!(k[base + 3 * per_seq..base + 4 * per_seq].iter().all(|x| *x == 0.0));
+        }
+    }
+
+    #[test]
+    fn step_inputs_mask_inactive() {
+        let mut c = cache();
+        c.claim(1, 5, 9, 4).unwrap();
+        let (toks, pos) = c.step_inputs(&[11, 22, 33, 44]);
+        assert_eq!(toks, vec![0, 22, 0, 0]);
+        assert_eq!(pos, vec![0, 9, 0, 0]);
+    }
+
+    #[test]
+    fn active_slots_listing() {
+        let mut c = cache();
+        assert!(c.is_idle());
+        c.claim(0, 1, 2, 2).unwrap();
+        c.claim(3, 2, 2, 2).unwrap();
+        assert_eq!(c.active_slots(), vec![0, 3]);
+    }
+}

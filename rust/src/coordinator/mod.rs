@@ -1,0 +1,25 @@
+//! L3 coordinator: the serving stack around the PJRT runtime.
+//!
+//! Mirrors the paper's phase-aware execution at the *system* level: a new
+//! request runs the **prefill** executable (whose GEMMs were lowered
+//! through the analog-CiM Pallas kernel) once, then joins the slot-based
+//! continuous **decode** batch (exact-int8 CiD kernel path). Python is not
+//! involved; the token loop is pure Rust + PJRT.
+//!
+//! * [`request`]  — request/response types and per-request metrics.
+//! * [`kv_cache`] — batched KV-cache state and slot bookkeeping.
+//! * [`engine`]   — `InferenceEngine`: prefill + batched decode steps.
+//! * [`batcher`]  — admission queue and continuous-batching policy.
+//! * [`server`]   — thread-based request loop with latency metrics.
+
+pub mod batcher;
+pub mod engine;
+pub mod kv_cache;
+pub mod request;
+pub mod server;
+
+pub use batcher::Batcher;
+pub use engine::InferenceEngine;
+pub use kv_cache::KvCache;
+pub use request::{Request, Response};
+pub use server::Server;

@@ -1,0 +1,62 @@
+//! Request/response types for the serving coordinator.
+
+use std::time::Duration;
+
+/// A generation request (token ids in, token ids out; tokenization is out
+/// of scope for the functional plane).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(max_new_tokens > 0);
+        Request { id, prompt, max_new_tokens }
+    }
+}
+
+/// A completed generation with its latency metrics.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Time to first token (prefill wall-clock).
+    pub ttft: Duration,
+    /// Mean time per subsequent output token.
+    pub tpot: Duration,
+    /// Total wall-clock from admission to completion.
+    pub total: Duration,
+}
+
+impl Response {
+    pub fn tokens_per_second(&self) -> f64 {
+        self.tokens.len() as f64 / self.total.as_secs_f64().max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_throughput() {
+        let r = Response {
+            id: 1,
+            tokens: vec![1, 2, 3, 4],
+            ttft: Duration::from_millis(10),
+            tpot: Duration::from_millis(5),
+            total: Duration::from_millis(200),
+        };
+        assert!((r.tokens_per_second() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_prompt_rejected() {
+        Request::new(1, vec![], 4);
+    }
+}

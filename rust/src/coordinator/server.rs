@@ -1,0 +1,189 @@
+//! Serving loop: continuous batching over the inference engine.
+//!
+//! [`Server::run_to_completion`] is the synchronous driver used by the
+//! examples, benches and tests: it admits queued requests into free slots
+//! (running their prefill), steps the batched decode until all sequences
+//! finish, and reports per-request TTFT/TPOT plus aggregate throughput.
+//! [`Server::spawn`] wraps the same loop in a worker thread behind mpsc
+//! channels for interactive use.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::Batcher;
+use super::engine::InferenceEngine;
+use super::kv_cache::Slot;
+use super::request::{Request, Response};
+
+#[derive(Debug, Clone, Default)]
+struct InFlight {
+    request: u64,
+    tokens: Vec<i32>,
+    admitted_at: Option<Instant>,
+    ttft: Duration,
+    decode_started: Option<Instant>,
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub requests: usize,
+    pub decode_steps: u64,
+    pub wall: Duration,
+    pub execute_time: Duration,
+    pub generated_tokens: usize,
+}
+
+impl ServerStats {
+    pub fn tokens_per_second(&self) -> f64 {
+        self.generated_tokens as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// Fraction of wall time spent inside PJRT execute (coordinator
+    /// overhead = 1 - this).
+    pub fn execute_fraction(&self) -> f64 {
+        self.execute_time.as_secs_f64() / self.wall.as_secs_f64().max(1e-12)
+    }
+}
+
+pub struct Server {
+    engine: InferenceEngine,
+    batcher: Batcher,
+}
+
+impl Server {
+    pub fn new(engine: InferenceEngine) -> Self {
+        Server { engine, batcher: Batcher::new() }
+    }
+
+    pub fn submit(&mut self, r: Request) {
+        self.batcher.submit(r);
+    }
+
+    /// Drive the continuous-batching loop until queue and slots drain.
+    pub fn run_to_completion(&mut self) -> Result<(Vec<Response>, ServerStats)> {
+        let slots = self.engine.slots();
+        let mut inflight: Vec<InFlight> = vec![InFlight::default(); slots];
+        let mut current: Vec<i32> = vec![0; slots];
+        let mut done = Vec::new();
+        let mut rejects = Vec::new();
+        let t0 = Instant::now();
+        let exec0 = self.engine.execute_time;
+        let mut steps = 0u64;
+
+        loop {
+            // admission: fill every free slot (prefill phase)
+            while let Some((slot, req)) =
+                self.batcher.admit(self.engine.kv.free_slot(), self.engine.max_prompt(), &mut rejects)
+            {
+                let admitted_at = Instant::now();
+                let out =
+                    self.engine.prefill_into_slot(slot, req.id, &req.prompt, req.max_new_tokens)?;
+                inflight[slot] = InFlight {
+                    request: req.id,
+                    tokens: vec![out.first_token],
+                    admitted_at: Some(admitted_at),
+                    ttft: out.wall,
+                    decode_started: Some(Instant::now()),
+                };
+                current[slot] = out.first_token;
+                // a request may be satisfied by the prefill alone
+                if req.max_new_tokens == 1 {
+                    // pos still advances conceptually; release immediately
+                    self.finish(slot, &mut inflight, &mut done);
+                }
+            }
+
+            if self.engine.kv.is_idle() {
+                break;
+            }
+
+            // one batched decode step (CiD path)
+            let next = self.engine.decode_step(&current)?;
+            steps += 1;
+            let finished: Vec<usize> = self
+                .engine
+                .kv
+                .active_slots()
+                .into_iter()
+                .filter(|&s| {
+                    inflight[s].tokens.push(next[s]);
+                    current[s] = next[s];
+                    self.engine.kv.advance(s)
+                })
+                .collect();
+            for s in finished {
+                self.finish(s, &mut inflight, &mut done);
+            }
+        }
+
+        let wall = t0.elapsed();
+        let stats = ServerStats {
+            requests: done.len(),
+            decode_steps: steps,
+            wall,
+            execute_time: self.engine.execute_time - exec0,
+            generated_tokens: done.iter().map(|r: &Response| r.tokens.len()).sum(),
+        };
+        Ok((done, stats))
+    }
+
+    fn finish(&mut self, slot: usize, inflight: &mut [InFlight], done: &mut Vec<Response>) {
+        debug_assert!(matches!(self.engine.kv.slot(slot), Slot::Active { .. } | Slot::Free));
+        let fl = std::mem::take(&mut inflight[slot]);
+        let total = fl.admitted_at.map(|t| t.elapsed()).unwrap_or_default();
+        let n_decode = fl.tokens.len().saturating_sub(1).max(1);
+        let decode_wall = fl.decode_started.map(|t| t.elapsed()).unwrap_or_default();
+        done.push(Response {
+            id: fl.request,
+            tokens: fl.tokens,
+            ttft: fl.ttft,
+            tpot: decode_wall / n_decode as u32,
+            total,
+        });
+        self.engine.kv.release(slot);
+        self.batcher.complete();
+    }
+
+    /// Spawn a server on a worker thread (PJRT handles are not `Send`, so
+    /// the engine is constructed inside the worker from the artifacts
+    /// path). Returns a submit channel and a response receiver; closing
+    /// the submit channel drains and stops the worker.
+    pub fn spawn(
+        artifacts: std::path::PathBuf,
+        slots: usize,
+    ) -> (mpsc::Sender<Request>, mpsc::Receiver<Response>, thread::JoinHandle<Result<ServerStats>>) {
+        let (tx_req, rx_req) = mpsc::channel::<Request>();
+        let (tx_resp, rx_resp) = mpsc::channel::<Response>();
+        let handle = thread::spawn(move || -> Result<ServerStats> {
+            let mut this = Server::new(InferenceEngine::load(&artifacts, slots)?);
+            let mut total = ServerStats::default();
+            // batch-at-a-time: collect whatever is queued, run it, repeat
+            loop {
+                match rx_req.recv() {
+                    Ok(first) => {
+                        this.submit(first);
+                        while let Ok(more) = rx_req.try_recv() {
+                            this.submit(more);
+                        }
+                        let (responses, stats) = this.run_to_completion()?;
+                        total.requests += stats.requests;
+                        total.decode_steps += stats.decode_steps;
+                        total.wall += stats.wall;
+                        total.execute_time += stats.execute_time;
+                        total.generated_tokens += stats.generated_tokens;
+                        for r in responses {
+                            let _ = tx_resp.send(r);
+                        }
+                    }
+                    Err(_) => break, // channel closed: shut down
+                }
+            }
+            Ok(total)
+        });
+        (tx_req, rx_resp, handle)
+    }
+}

@@ -1,0 +1,43 @@
+//! # HALO — Memory-Centric Heterogeneous Accelerator for Low-Batch LLM Inference
+//!
+//! Full reproduction of *HALO: Memory-Centric Heterogeneous Accelerator with
+//! 2.5D Integration for Low-Batch LLM Inference* (Negi & Roy, cs.AR 2025).
+//!
+//! The crate has two planes (see `DESIGN.md`):
+//!
+//! * **Analytical plane** — the paper's contribution: latency/energy models
+//!   of the CiD (compute-in-DRAM) and analog CiM substrates ([`arch`]), the
+//!   LLM operator-graph workload model ([`model`]), the phase-aware mapping
+//!   engine ([`mapping`]), the simulation engine ([`sim`]) and the harness
+//!   that regenerates every figure in the paper's evaluation ([`report`]).
+//!
+//! * **Functional plane** — an AOT-compiled tiny LLaMA-style model whose
+//!   GEMMs run through Pallas kernels that model the CiM/CiD numerics
+//!   (bit-sliced, bit-streamed, ADC-quantized). The Rust side loads the
+//!   lowered HLO through PJRT ([`runtime`]) and serves real token-generation
+//!   requests with a phase-aware dispatcher ([`coordinator`]); Python is
+//!   never on the request path.
+//!
+//! Quickstart:
+//! ```no_run
+//! use halo::config::HwConfig;
+//! use halo::mapping::MappingKind;
+//! use halo::model::LlmConfig;
+//! use halo::sim::{simulate_e2e, Scenario};
+//!
+//! let hw = HwConfig::paper();
+//! let llm = LlmConfig::llama2_7b();
+//! let sc = Scenario { l_in: 2048, l_out: 128, batch: 1 };
+//! let res = simulate_e2e(&llm, &hw, MappingKind::Halo1, &sc);
+//! println!("TTFT {:.3} ms, TPOT {:.3} ms", res.ttft() * 1e3, res.tpot() * 1e3);
+//! ```
+
+pub mod arch;
+pub mod config;
+pub mod coordinator;
+pub mod mapping;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,243 @@
+//! `halo` CLI: the leader entrypoint.
+//!
+//! Subcommands:
+//!   simulate  — analytical simulation of one scenario under one mapping
+//!   report    — regenerate the paper's figures/tables (CSV + markdown)
+//!   roofline  — print the Fig. 1 roofline points
+//!   serve     — functional serving demo over the AOT artifacts (PJRT)
+//!   validate  — replay the python test vectors through the Rust runtime
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use halo::config::HwConfig;
+use halo::coordinator::{InferenceEngine, Request, Server};
+use halo::mapping::MappingKind;
+use halo::model::LlmConfig;
+use halo::report;
+use halo::runtime::Runtime;
+use halo::sim::{simulate_e2e, Scenario};
+use halo::util::{fmt_joules, fmt_seconds, Rng};
+
+const USAGE: &str = "\
+halo — memory-centric heterogeneous accelerator for low-batch LLM inference
+
+USAGE:
+  halo simulate [--model llama2-7b|qwen3-8b] [--mapping HALO1|HALO2|CENT|AttAcc1|AttAcc2|FullCiD|FullCiM|HALO-SA]
+                [--lin N] [--lout N] [--batch N]
+  halo report   [--all | --fig 1|4|5|7|8|9|10 | --headline] [--out DIR]
+  halo roofline [--lin N] [--batch N]
+  halo serve    [--artifacts DIR] [--requests N] [--max-new N] [--slots N]
+  halo validate [--artifacts DIR]
+";
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(k) = args[i].strip_prefix("--") {
+            let v = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            m.insert(k.to_string(), v);
+        }
+        i += 1;
+    }
+    m
+}
+
+fn flag_usize(f: &HashMap<String, String>, k: &str, default: usize) -> usize {
+    f.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+
+    match cmd {
+        "simulate" => cmd_simulate(&flags),
+        "report" => cmd_report(&flags),
+        "roofline" => cmd_roofline(&flags),
+        "serve" => cmd_serve(&flags),
+        "validate" => cmd_validate(&flags),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_simulate(f: &HashMap<String, String>) -> Result<()> {
+    let hw = HwConfig::paper();
+    let model = f.get("model").map(String::as_str).unwrap_or("llama2-7b");
+    let llm = LlmConfig::by_name(model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let mapping = f
+        .get("mapping")
+        .map(|m| MappingKind::by_name(m).ok_or_else(|| anyhow!("unknown mapping {m}")))
+        .transpose()?
+        .unwrap_or(MappingKind::Halo1);
+    let sc = Scenario {
+        l_in: flag_usize(f, "lin", 2048),
+        l_out: flag_usize(f, "lout", 128),
+        batch: flag_usize(f, "batch", 1),
+    };
+    let r = simulate_e2e(&llm, &hw, mapping, &sc);
+    println!("model    : {} ({:.2}B params)", llm.name, llm.n_params() as f64 / 1e9);
+    println!("mapping  : {}  (CiM wordlines: {})", mapping.name(), mapping.wordlines());
+    println!("scenario : L_in={} L_out={} batch={}", sc.l_in, sc.l_out, sc.batch);
+    println!("TTFT     : {}", fmt_seconds(r.ttft()));
+    println!("TPOT     : {}", fmt_seconds(r.tpot()));
+    println!("e2e time : {}", fmt_seconds(r.e2e_latency()));
+    println!("e2e energy: {}", fmt_joules(r.e2e_energy()));
+    println!("prefill  : {} / {}", fmt_seconds(r.prefill.latency), fmt_joules(r.prefill.energy));
+    println!(
+        "decode   : {}/token, {} total",
+        fmt_seconds(r.tpot()),
+        fmt_seconds(r.decode_latency())
+    );
+    println!("\nprefill engines:");
+    for (eng, c) in &r.prefill.by_engine {
+        println!("  {eng:>8}: {} ({})", fmt_seconds(c.latency), fmt_joules(c.energy));
+    }
+    println!("decode-step engines:");
+    for (eng, c) in &r.decode_step.by_engine {
+        println!("  {eng:>8}: {} ({})", fmt_seconds(c.latency), fmt_joules(c.energy));
+    }
+    Ok(())
+}
+
+fn cmd_report(f: &HashMap<String, String>) -> Result<()> {
+    let hw = HwConfig::paper();
+    let out = f.get("out").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("out/figures"));
+    let tables = if f.contains_key("headline") {
+        vec![report::headline_summary(&hw)]
+    } else if let Some(fig) = f.get("fig") {
+        match fig.as_str() {
+            "1" => vec![report::fig1_roofline(&hw)],
+            "4" => vec![report::fig4_breakdown(&hw)],
+            "5" | "6" => vec![report::fig56_cid_vs_cim(&hw)],
+            "7" => vec![report::fig78_e2e(&hw, false)],
+            "8" => vec![report::fig78_e2e(&hw, true)],
+            "9" => vec![report::fig9_batch_sweep(&hw)],
+            "10" => vec![report::fig10_cim_vs_sa(&hw)],
+            other => bail!("unknown figure {other}"),
+        }
+    } else {
+        report::all_figures(&hw)
+    };
+    for t in &tables {
+        t.write_csv(&out)?;
+        println!("{}", t.to_markdown());
+    }
+    println!("CSV written to {}", out.display());
+    Ok(())
+}
+
+fn cmd_roofline(f: &HashMap<String, String>) -> Result<()> {
+    let hw = HwConfig::paper();
+    let _ = f;
+    let t = report::fig1_roofline(&hw);
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
+    let dir = f.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+    let n_req = flag_usize(f, "requests", 8);
+    let max_new = flag_usize(f, "max-new", 24);
+    let slots = flag_usize(f, "slots", 4);
+
+    let engine = InferenceEngine::load(Path::new(dir), slots)?;
+    println!(
+        "loaded artifacts from {dir} (platform {}, {} slots, max prompt {})",
+        engine.rt.platform(),
+        engine.slots(),
+        engine.max_prompt()
+    );
+    let vocab = engine.vocab;
+    let mut server = Server::new(engine);
+    let mut rng = Rng::new(42);
+    for id in 0..n_req {
+        let plen = rng.range(4, 15) as usize;
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab as u64) as i32).collect();
+        server.submit(Request::new(id as u64, prompt, max_new));
+    }
+    let (responses, stats) = server.run_to_completion()?;
+    for r in &responses {
+        println!(
+            "req {:>3}: {:>3} tokens  ttft {}  tpot {}  [{:?}...]",
+            r.id,
+            r.tokens.len(),
+            fmt_seconds(r.ttft.as_secs_f64()),
+            fmt_seconds(r.tpot.as_secs_f64()),
+            &r.tokens[..r.tokens.len().min(6)]
+        );
+    }
+    println!(
+        "\n{} requests, {} decode steps, {} tokens in {} -> {:.1} tok/s (PJRT fraction {:.1}%)",
+        stats.requests,
+        stats.decode_steps,
+        stats.generated_tokens,
+        fmt_seconds(stats.wall.as_secs_f64()),
+        stats.tokens_per_second(),
+        stats.execute_fraction() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_validate(f: &HashMap<String, String>) -> Result<()> {
+    let dir = f.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+    let rt = Runtime::load(Path::new(dir))?;
+    println!("platform: {}", rt.platform());
+    let mut failures = 0;
+    let names: Vec<String> = rt.manifest.entries.keys().cloned().collect();
+    for name in names {
+        let spec = rt.manifest.entry(&name)?.clone();
+        if spec.testvec_inputs.is_empty() {
+            continue;
+        }
+        let exe = rt.compile(&name)?;
+        let inputs = spec
+            .testvec_inputs
+            .iter()
+            .zip(&spec.inputs[spec.n_params..])
+            .map(|(file, s)| rt.manifest.load_testvec(file, s))
+            .collect::<Result<Vec<_>>>()?;
+        let outs = exe.run(&inputs)?;
+        let mut worst_rel: f64 = 0.0;
+        for ((got, file), spec_o) in outs.iter().zip(&spec.testvec_outputs).zip(&spec.outputs) {
+            let want = rt.manifest.load_testvec(file, spec_o)?;
+            let rel = got.max_abs_diff(&want)? / want.max_abs()?.max(1e-9);
+            worst_rel = worst_rel.max(rel);
+        }
+        // Calibrated-ADC prefill entries are chaotic across XLA versions:
+        // per-matmul analog ADC noise (~13% relative, see EXPERIMENTS.md
+        // §Functional) compounds over layers, so a single flipped code
+        // yields a different — equally valid — noise realization. They are
+        // reported (finiteness-checked) but not diff-asserted; the
+        // ideal-ADC twins and every integer-path entry must match tightly.
+        let calibrated = name.starts_with("prefill_b1_");
+        let finite = outs.iter().all(|t| t.as_f32().map(|v| v.iter().all(|x| x.is_finite())).unwrap_or(true));
+        let ok = if calibrated { finite } else { worst_rel < 1e-4 };
+        println!(
+            "{:>24}: max rel diff = {:.3e}  {}",
+            name,
+            worst_rel,
+            if !ok { "FAIL" } else if calibrated { "OK (noise realization; finite)" } else { "OK" }
+        );
+        if !ok {
+            failures += 1;
+        }
+    }
+    if failures > 0 {
+        bail!("{failures} entry points failed validation");
+    }
+    println!("all entry points validated against python test vectors");
+    Ok(())
+}

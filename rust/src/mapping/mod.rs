@@ -1,0 +1,201 @@
+//! Mapping strategies (Table II): which substrate runs each operation in
+//! each phase. This is the paper's system-level contribution — the
+//! phase-aware mapping — plus every baseline it is compared against.
+
+use crate::arch::EngineSel;
+use crate::model::{Op, OpClass, Phase};
+
+/// The mapping configurations of Table II plus the §V-B extremes and the
+/// §V-D systolic ablation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MappingKind {
+    /// Everything on the CiD accelerator, both phases (CENT [12]).
+    Cent,
+    /// Prefill on CiM (128 wordlines); decode: attention on CiD, all other
+    /// ops on the accelerator die (AttAcc [21]).
+    AttAcc1,
+    /// AttAcc with 64 active wordlines.
+    AttAcc2,
+    /// Phase-aware (ours): prefill on CiM (128 wl), decode on CiD.
+    Halo1,
+    /// Phase-aware with 64 active wordlines.
+    Halo2,
+    /// §V-B extreme: everything on CiD (same routing as CENT; kept
+    /// distinct for reporting).
+    FullCid,
+    /// §V-B extreme: everything on the analog CiM die.
+    FullCim,
+    /// §V-D ablation: HALO with the analog CiM replaced by iso-area
+    /// digital systolic arrays (NeuPIM-style).
+    HaloSa,
+}
+
+impl MappingKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MappingKind::Cent => "CENT",
+            MappingKind::AttAcc1 => "AttAcc1",
+            MappingKind::AttAcc2 => "AttAcc2",
+            MappingKind::Halo1 => "HALO1",
+            MappingKind::Halo2 => "HALO2",
+            MappingKind::FullCid => "Fully-CiD",
+            MappingKind::FullCim => "Fully-CiM",
+            MappingKind::HaloSa => "HALO-SA",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Self> {
+        let norm: String = s.to_ascii_lowercase().chars().filter(|c| *c != '-').collect();
+        match norm.as_str() {
+            "cent" => Some(Self::Cent),
+            "attacc1" => Some(Self::AttAcc1),
+            "attacc2" => Some(Self::AttAcc2),
+            "halo1" => Some(Self::Halo1),
+            "halo2" => Some(Self::Halo2),
+            "fullcid" | "fullycid" | "cid" => Some(Self::FullCid),
+            "fullcim" | "fullycim" | "cim" => Some(Self::FullCim),
+            "halosa" | "sa" => Some(Self::HaloSa),
+            _ => None,
+        }
+    }
+
+    /// All Table II mappings compared in Figs. 7-8.
+    pub fn table2() -> &'static [MappingKind] {
+        &[
+            MappingKind::AttAcc1,
+            MappingKind::AttAcc2,
+            MappingKind::Cent,
+            MappingKind::Halo1,
+            MappingKind::Halo2,
+        ]
+    }
+
+    /// Active wordlines for the CiM config under this mapping.
+    pub fn wordlines(&self) -> usize {
+        match self {
+            MappingKind::AttAcc2 | MappingKind::Halo2 => 64,
+            _ => 128,
+        }
+    }
+
+    /// Route one operation. Non-GEMM ops always go to the logic-die
+    /// vector/exponent/scalar units (paper §IV-B).
+    pub fn assign(&self, op: &Op, phase: Phase) -> EngineSel {
+        if !op.is_matmul() {
+            return EngineSel::LogicDie;
+        }
+        match self {
+            MappingKind::Cent | MappingKind::FullCid => EngineSel::Cid,
+            MappingKind::FullCim => EngineSel::Cim,
+            MappingKind::Halo1 | MappingKind::Halo2 => match phase {
+                Phase::Prefill => EngineSel::Cim,
+                Phase::Decode => EngineSel::Cid,
+            },
+            MappingKind::HaloSa => match phase {
+                Phase::Prefill => EngineSel::Systolic,
+                Phase::Decode => EngineSel::Cid,
+            },
+            MappingKind::AttAcc1 | MappingKind::AttAcc2 => match phase {
+                Phase::Prefill => EngineSel::Cim,
+                Phase::Decode => {
+                    if op.class == OpClass::Attention {
+                        EngineSel::Cid
+                    } else {
+                        EngineSel::Cim
+                    }
+                }
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{build_decode_graph, build_prefill_graph, LlmConfig};
+
+    fn weight_op() -> Op {
+        use crate::model::{OpKind, Operand};
+        Op::matmul(OpKind::FfnUp, OpClass::Gemv, Operand::StaticWeight, 1, 4096, 4096, 1)
+    }
+
+    fn attn_op() -> Op {
+        use crate::model::{OpKind, Operand};
+        Op::matmul(OpKind::AttnScore, OpClass::Attention, Operand::Dynamic, 1, 128, 2048, 32)
+    }
+
+    #[test]
+    fn table2_routing_rules() {
+        // CENT: everything CiD
+        assert_eq!(MappingKind::Cent.assign(&weight_op(), Phase::Prefill), EngineSel::Cid);
+        assert_eq!(MappingKind::Cent.assign(&attn_op(), Phase::Decode), EngineSel::Cid);
+        // HALO: phase split
+        assert_eq!(MappingKind::Halo1.assign(&weight_op(), Phase::Prefill), EngineSel::Cim);
+        assert_eq!(MappingKind::Halo1.assign(&weight_op(), Phase::Decode), EngineSel::Cid);
+        assert_eq!(MappingKind::Halo1.assign(&attn_op(), Phase::Decode), EngineSel::Cid);
+        // AttAcc: decode attention only on CiD
+        assert_eq!(MappingKind::AttAcc1.assign(&attn_op(), Phase::Decode), EngineSel::Cid);
+        assert_eq!(MappingKind::AttAcc1.assign(&weight_op(), Phase::Decode), EngineSel::Cim);
+        assert_eq!(MappingKind::AttAcc1.assign(&weight_op(), Phase::Prefill), EngineSel::Cim);
+        // HALO-SA: systolic prefill
+        assert_eq!(MappingKind::HaloSa.assign(&weight_op(), Phase::Prefill), EngineSel::Systolic);
+        assert_eq!(MappingKind::HaloSa.assign(&weight_op(), Phase::Decode), EngineSel::Cid);
+    }
+
+    #[test]
+    fn wordline_configs() {
+        assert_eq!(MappingKind::Halo1.wordlines(), 128);
+        assert_eq!(MappingKind::Halo2.wordlines(), 64);
+        assert_eq!(MappingKind::AttAcc2.wordlines(), 64);
+        assert_eq!(MappingKind::Cent.wordlines(), 128);
+    }
+
+    #[test]
+    fn nongemm_always_logic_die() {
+        let m = LlmConfig::llama2_7b();
+        let graphs = [build_prefill_graph(&m, 128, 1), build_decode_graph(&m, 128, 1)];
+        for mk in [
+            MappingKind::Cent,
+            MappingKind::Halo1,
+            MappingKind::AttAcc1,
+            MappingKind::FullCim,
+            MappingKind::HaloSa,
+        ] {
+            for g in &graphs {
+                for op in g.non_gemm_ops() {
+                    assert_eq!(mk.assign(op, g.phase), EngineSel::LogicDie);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_op_gets_exactly_one_engine() {
+        // total-coverage invariant: assign() is total over all graphs
+        let m = LlmConfig::qwen3_8b();
+        for g in [build_prefill_graph(&m, 512, 2), build_decode_graph(&m, 512, 2)] {
+            for mk in [
+                MappingKind::Cent,
+                MappingKind::AttAcc1,
+                MappingKind::AttAcc2,
+                MappingKind::Halo1,
+                MappingKind::Halo2,
+                MappingKind::FullCid,
+                MappingKind::FullCim,
+                MappingKind::HaloSa,
+            ] {
+                for op in &g.ops {
+                    let _ = mk.assign(op, g.phase); // must not panic
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for mk in [MappingKind::Cent, MappingKind::Halo1, MappingKind::HaloSa] {
+            assert_eq!(MappingKind::by_name(mk.name()), Some(mk));
+        }
+        assert!(MappingKind::by_name("gpu").is_none());
+    }
+}

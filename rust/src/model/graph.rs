@@ -1,0 +1,390 @@
+//! Operator-graph builder: (model, phase, context, batch) -> costed ops.
+//!
+//! The graphs mirror Fig. 2 of the paper: a decoder block is LayerNorm ->
+//! QKV -> RoPE -> attention (score, softmax, value) -> projection ->
+//! residual -> LayerNorm -> SwiGLU FFN -> residual, followed by a final
+//! norm + LM head. Per-layer/per-head replication is collapsed into the
+//! op's `count` (costs are identical across uniform layers).
+
+use super::ops::{Op, OpClass, OpKind, Operand};
+use super::{LlmConfig, Phase};
+
+/// A phase's worth of operations plus scenario metadata.
+#[derive(Debug, Clone)]
+pub struct OpGraph {
+    pub phase: Phase,
+    pub batch: usize,
+    /// Prefill: prompt length. Decode: context length at this step.
+    pub seq: usize,
+    pub ops: Vec<Op>,
+}
+
+impl OpGraph {
+    pub fn total_flops(&self) -> u64 {
+        self.ops.iter().map(|o| o.flops()).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.ops.iter().map(|o| o.macs()).sum()
+    }
+
+    pub fn matmul_ops(&self) -> impl Iterator<Item = &Op> {
+        self.ops.iter().filter(|o| o.is_matmul())
+    }
+
+    pub fn non_gemm_ops(&self) -> impl Iterator<Item = &Op> {
+        self.ops.iter().filter(|o| !o.is_matmul())
+    }
+
+    /// Weight bytes streamed if every static stationary operand is read
+    /// once (the minimum possible weight traffic).
+    pub fn static_weight_bytes(&self, dtype_bytes: usize) -> u64 {
+        self.ops
+            .iter()
+            .filter(|o| o.operand == Operand::StaticWeight)
+            .map(|o| o.stationary_bytes(dtype_bytes))
+            .sum()
+    }
+}
+
+/// Build the prefill graph: process `l_in` prompt tokens for `batch`
+/// sequences (GEMM-dominated, Fig. 2a).
+pub fn build_prefill_graph(m: &LlmConfig, l_in: usize, batch: usize) -> OpGraph {
+    assert!(l_in > 0 && batch > 0);
+    let nl = m.n_layers;
+    let bl = batch * l_in;
+    let mut ops = Vec::new();
+
+    ops.push(
+        Op::non_gemm(OpKind::Embedding, (bl * m.d_model) as u64, 1)
+            .with_stream_bytes((bl * m.d_model * m.dtype_bytes) as u64),
+    );
+
+    // attention half
+    ops.push(
+        Op::non_gemm(OpKind::RmsNorm, (bl * m.d_model * 5) as u64, nl).with_scalar(bl as u64),
+    );
+    ops.push(Op::matmul(
+        OpKind::QkvProj,
+        OpClass::Gemm,
+        Operand::StaticWeight,
+        bl,
+        m.d_model,
+        m.q_dim() + 2 * m.kv_dim(),
+        nl,
+    ));
+    ops.push(Op::non_gemm(OpKind::Rope, (bl * (m.q_dim() + m.kv_dim()) * 3) as u64, nl));
+    // KV cache write-out (bank-level DRAM writes)
+    ops.push(
+        Op::non_gemm(OpKind::KvAppend, 0, nl)
+            .with_stream_bytes((bl * 2 * m.kv_dim() * m.kv_bytes) as u64),
+    );
+    // attention scores / values: one op per KV head (GQA: the group's
+    // `g` query heads share the KV stream, so they batch into the moving
+    // operand instead of replicating the stationary one). Causal masking
+    // halves the useful work; hardware still executes block-aligned
+    // tiles, modeled as a 0.55 occupancy factor on L.
+    let l_eff = (l_in as f64 * 0.55).ceil() as usize;
+    let g = m.n_heads / m.n_kv_heads;
+    ops.push(Op::matmul(
+        OpKind::AttnScore,
+        OpClass::Attention,
+        Operand::Dynamic,
+        l_in * g,
+        m.head_dim,
+        l_eff,
+        batch * m.n_kv_heads * nl,
+    ));
+    ops.push(
+        Op::non_gemm(OpKind::Softmax, (batch * m.n_heads * l_in * l_eff * 3) as u64, nl)
+            .with_exp((batch * m.n_heads * l_in * l_eff) as u64),
+    );
+    ops.push(Op::matmul(
+        OpKind::AttnValue,
+        OpClass::Attention,
+        Operand::Dynamic,
+        l_in * g,
+        l_eff,
+        m.head_dim,
+        batch * m.n_kv_heads * nl,
+    ));
+    ops.push(Op::matmul(
+        OpKind::OutProj,
+        OpClass::Gemm,
+        Operand::StaticWeight,
+        bl,
+        m.q_dim(),
+        m.d_model,
+        nl,
+    ));
+    ops.push(Op::non_gemm(OpKind::Residual, (bl * m.d_model) as u64, 2 * nl));
+
+    // FFN half (SwiGLU)
+    ops.push(
+        Op::non_gemm(OpKind::RmsNorm, (bl * m.d_model * 5) as u64, nl).with_scalar(bl as u64),
+    );
+    ops.push(Op::matmul(
+        OpKind::FfnGate,
+        OpClass::Gemm,
+        Operand::StaticWeight,
+        bl,
+        m.d_model,
+        m.d_ff,
+        nl,
+    ));
+    ops.push(Op::matmul(
+        OpKind::FfnUp,
+        OpClass::Gemm,
+        Operand::StaticWeight,
+        bl,
+        m.d_model,
+        m.d_ff,
+        nl,
+    ));
+    ops.push(
+        Op::non_gemm(OpKind::Activation, (bl * m.d_ff * 4) as u64, nl)
+            .with_exp((bl * m.d_ff) as u64),
+    );
+    ops.push(Op::matmul(
+        OpKind::FfnDown,
+        OpClass::Gemm,
+        Operand::StaticWeight,
+        bl,
+        m.d_ff,
+        m.d_model,
+        nl,
+    ));
+
+    // final norm + LM head for the *last* position only (TTFT definition:
+    // time to the first generated token)
+    ops.push(
+        Op::non_gemm(OpKind::RmsNorm, (batch * m.d_model * 5) as u64, 1)
+            .with_scalar(batch as u64),
+    );
+    ops.push(Op::matmul(
+        OpKind::LmHead,
+        OpClass::Gemm,
+        Operand::StaticWeight,
+        batch,
+        m.d_model,
+        m.vocab,
+        1,
+    ));
+
+    OpGraph { phase: Phase::Prefill, batch, seq: l_in, ops }
+}
+
+/// Build one decode step at context length `l_ctx` (GEMV-dominated,
+/// Fig. 2b). Each of the `batch` sequences has its own KV cache.
+pub fn build_decode_graph(m: &LlmConfig, l_ctx: usize, batch: usize) -> OpGraph {
+    assert!(l_ctx > 0 && batch > 0);
+    let nl = m.n_layers;
+    let b = batch;
+    let mut ops = Vec::new();
+
+    ops.push(
+        Op::non_gemm(OpKind::Embedding, (b * m.d_model) as u64, 1)
+            .with_stream_bytes((b * m.d_model * m.dtype_bytes) as u64),
+    );
+    ops.push(Op::non_gemm(OpKind::RmsNorm, (b * m.d_model * 5) as u64, nl).with_scalar(b as u64));
+    // weight GEMVs: one row per sequence; batched sequences share the
+    // weight stream (the CiD model decides how much reuse the 4 KB input
+    // buffer actually allows)
+    ops.push(Op::matmul(
+        OpKind::QkvProj,
+        OpClass::Gemv,
+        Operand::StaticWeight,
+        b,
+        m.d_model,
+        m.q_dim() + 2 * m.kv_dim(),
+        nl,
+    ));
+    ops.push(Op::non_gemm(OpKind::Rope, (b * (m.q_dim() + m.kv_dim()) * 3) as u64, nl));
+    ops.push(
+        Op::non_gemm(OpKind::KvAppend, 0, nl)
+            .with_stream_bytes((b * 2 * m.kv_dim() * m.kv_bytes) as u64),
+    );
+    // attention against the per-sequence KV cache: a dynamic stationary
+    // operand of l_ctx rows, shared by each GQA group's `g` query heads
+    let g = m.n_heads / m.n_kv_heads;
+    ops.push(Op::matmul(
+        OpKind::AttnScore,
+        OpClass::Attention,
+        Operand::Dynamic,
+        g,
+        m.head_dim,
+        l_ctx,
+        b * m.n_kv_heads * nl,
+    ));
+    ops.push(
+        Op::non_gemm(OpKind::Softmax, (b * m.n_heads * l_ctx * 3) as u64, nl)
+            .with_exp((b * m.n_heads * l_ctx) as u64),
+    );
+    ops.push(Op::matmul(
+        OpKind::AttnValue,
+        OpClass::Attention,
+        Operand::Dynamic,
+        g,
+        l_ctx,
+        m.head_dim,
+        b * m.n_kv_heads * nl,
+    ));
+    ops.push(Op::matmul(
+        OpKind::OutProj,
+        OpClass::Gemv,
+        Operand::StaticWeight,
+        b,
+        m.q_dim(),
+        m.d_model,
+        nl,
+    ));
+    ops.push(Op::non_gemm(OpKind::Residual, (b * m.d_model) as u64, 2 * nl));
+    ops.push(Op::non_gemm(OpKind::RmsNorm, (b * m.d_model * 5) as u64, nl).with_scalar(b as u64));
+    ops.push(Op::matmul(
+        OpKind::FfnGate,
+        OpClass::Gemv,
+        Operand::StaticWeight,
+        b,
+        m.d_model,
+        m.d_ff,
+        nl,
+    ));
+    ops.push(Op::matmul(
+        OpKind::FfnUp,
+        OpClass::Gemv,
+        Operand::StaticWeight,
+        b,
+        m.d_model,
+        m.d_ff,
+        nl,
+    ));
+    ops.push(
+        Op::non_gemm(OpKind::Activation, (b * m.d_ff * 4) as u64, nl)
+            .with_exp((b * m.d_ff) as u64),
+    );
+    ops.push(Op::matmul(
+        OpKind::FfnDown,
+        OpClass::Gemv,
+        Operand::StaticWeight,
+        b,
+        m.d_ff,
+        m.d_model,
+        nl,
+    ));
+    ops.push(
+        Op::non_gemm(OpKind::RmsNorm, (b * m.d_model * 5) as u64, 1).with_scalar(b as u64),
+    );
+    ops.push(Op::matmul(
+        OpKind::LmHead,
+        OpClass::Gemv,
+        Operand::StaticWeight,
+        b,
+        m.d_model,
+        m.vocab,
+        1,
+    ));
+
+    OpGraph { phase: Phase::Decode, batch, seq: l_ctx, ops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_flops_match_first_principles() {
+        let m = LlmConfig::llama2_7b();
+        let g = build_prefill_graph(&m, 512, 1);
+        // ~2 * n_params * L (weight matmuls dominate at modest L)
+        let expect = 2.0 * m.n_params() as f64 * 512.0;
+        let got = g.total_flops() as f64;
+        assert!(got > 0.8 * expect && got < 1.4 * expect, "got {got:e} expect {expect:e}");
+    }
+
+    #[test]
+    fn decode_flops_match_first_principles() {
+        let m = LlmConfig::llama2_7b();
+        let g = build_decode_graph(&m, 2048, 1);
+        let expect = 2.0 * m.n_params() as f64;
+        let got = g.total_flops() as f64;
+        assert!(got > 0.8 * expect && got < 1.4 * expect, "got {got:e} expect {expect:e}");
+    }
+
+    #[test]
+    fn prefill_is_gemm_decode_is_gemv() {
+        let m = LlmConfig::llama2_7b();
+        let p = build_prefill_graph(&m, 512, 1);
+        let d = build_decode_graph(&m, 512, 1);
+        assert!(p.matmul_ops().all(|o| o.class != OpClass::Gemv));
+        assert!(d
+            .matmul_ops()
+            .filter(|o| o.operand == Operand::StaticWeight)
+            .all(|o| o.class == OpClass::Gemv));
+    }
+
+    #[test]
+    fn attention_is_dynamic_operand() {
+        let m = LlmConfig::qwen3_8b();
+        for g in [build_prefill_graph(&m, 256, 1), build_decode_graph(&m, 256, 1)] {
+            for o in g.matmul_ops() {
+                let is_attn = matches!(o.kind, OpKind::AttnScore | OpKind::AttnValue);
+                assert_eq!(is_attn, (o.operand == Operand::Dynamic), "{:?}", o.kind);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_attention_scales_with_context() {
+        let m = LlmConfig::llama2_7b();
+        let short = build_decode_graph(&m, 128, 1);
+        let long = build_decode_graph(&m, 4096, 1);
+        let attn = |g: &OpGraph| -> u64 {
+            g.ops.iter().filter(|o| o.kind == OpKind::AttnScore).map(|o| o.macs()).sum()
+        };
+        assert_eq!(attn(&long), 32 * attn(&short));
+    }
+
+    #[test]
+    fn batch_scales_weight_gemv_m_not_count() {
+        let m = LlmConfig::llama2_7b();
+        let b1 = build_decode_graph(&m, 512, 1);
+        let b8 = build_decode_graph(&m, 512, 8);
+        let ffn1 = b1.ops.iter().find(|o| o.kind == OpKind::FfnUp).unwrap();
+        let ffn8 = b8.ops.iter().find(|o| o.kind == OpKind::FfnUp).unwrap();
+        assert_eq!(ffn1.m, 1);
+        assert_eq!(ffn8.m, 8);
+        assert_eq!(ffn1.count, ffn8.count);
+        // attention replicates per sequence instead (separate KV caches)
+        let at1 = b1.ops.iter().find(|o| o.kind == OpKind::AttnScore).unwrap();
+        let at8 = b8.ops.iter().find(|o| o.kind == OpKind::AttnScore).unwrap();
+        assert_eq!(at8.count, 8 * at1.count);
+    }
+
+    #[test]
+    fn static_weight_bytes_close_to_model_size() {
+        let m = LlmConfig::llama2_7b();
+        let g = build_decode_graph(&m, 128, 1);
+        let wb = g.static_weight_bytes(m.dtype_bytes) as f64;
+        // everything except the input embedding table is streamed
+        let expect = m.weight_bytes() as f64 - (m.vocab * m.d_model) as f64;
+        assert!((wb / expect - 1.0).abs() < 0.02, "wb {wb:e} expect {expect:e}");
+    }
+
+    #[test]
+    fn gqa_shrinks_kv_ops() {
+        let q = LlmConfig::qwen3_8b();
+        let g = build_decode_graph(&q, 1024, 1);
+        let qkv = g.ops.iter().find(|o| o.kind == OpKind::QkvProj).unwrap();
+        assert_eq!(qkv.n, q.q_dim() + 2 * q.kv_dim());
+        assert!(qkv.n < 3 * q.q_dim());
+    }
+
+    #[test]
+    fn nonzero_nongemm_everywhere() {
+        let m = LlmConfig::llama2_7b();
+        for g in [build_prefill_graph(&m, 64, 2), build_decode_graph(&m, 64, 2)] {
+            assert!(g.non_gemm_ops().count() >= 6);
+            assert!(g.non_gemm_ops().all(|o| o.flops() > 0 || o.stream_bytes > 0));
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! LLM workload model: model configurations and the operator-graph builder
+//! that turns (model, phase, context lengths, batch) into the exact set of
+//! GEMM / GEMV / non-GEMM operations the paper's simulator costs.
+
+pub mod graph;
+pub mod ops;
+
+pub use graph::{build_decode_graph, build_prefill_graph, OpGraph};
+pub use ops::{Op, OpClass, OpKind, Operand};
+
+/// Transformer model configuration (decoder-only, LLaMA-style).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LlmConfig {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    /// KV heads (grouped-query attention; == n_heads for MHA).
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    /// FFN inner dimension (SwiGLU: three projections).
+    pub d_ff: usize,
+    pub vocab: usize,
+    /// Weight/activation precision in bytes (int8 on HALO).
+    pub dtype_bytes: usize,
+    /// KV-cache element size in bytes.
+    pub kv_bytes: usize,
+}
+
+impl LlmConfig {
+    /// LLaMA-2 7B [27]: 32 layers, d=4096, 32 heads (MHA), FFN 11008.
+    pub fn llama2_7b() -> Self {
+        LlmConfig {
+            name: "llama2-7b",
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 32,
+            head_dim: 128,
+            d_ff: 11008,
+            vocab: 32000,
+            dtype_bytes: 1,
+            kv_bytes: 1,
+        }
+    }
+
+    /// Qwen3 8B [34]: 36 layers, d=4096, 32 Q heads / 8 KV heads (GQA),
+    /// FFN 12288, large vocabulary.
+    pub fn qwen3_8b() -> Self {
+        LlmConfig {
+            name: "qwen3-8b",
+            n_layers: 36,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            d_ff: 12288,
+            vocab: 151936,
+            dtype_bytes: 1,
+            kv_bytes: 1,
+        }
+    }
+
+    /// The functional-plane tiny model (mirrors python TinyLlamaConfig).
+    pub fn tiny() -> Self {
+        LlmConfig {
+            name: "tiny-llama",
+            n_layers: 4,
+            d_model: 256,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 64,
+            d_ff: 768,
+            vocab: 4096,
+            dtype_bytes: 1,
+            kv_bytes: 1,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "llama2-7b" | "llama" => Some(Self::llama2_7b()),
+            "qwen3-8b" | "qwen" => Some(Self::qwen3_8b()),
+            "tiny" | "tiny-llama" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// Total weight parameters (attention + FFN + embedding/LM head).
+    pub fn n_params(&self) -> u64 {
+        let attn = self.d_model * (self.q_dim() + 2 * self.kv_dim()) + self.q_dim() * self.d_model;
+        let ffn = 3 * self.d_model * self.d_ff;
+        let per_layer = (attn + ffn) as u64;
+        per_layer * self.n_layers as u64 + 2 * (self.vocab * self.d_model) as u64
+    }
+
+    /// Weight footprint in bytes at the configured precision.
+    pub fn weight_bytes(&self) -> u64 {
+        self.n_params() * self.dtype_bytes as u64
+    }
+
+    /// KV-cache bytes per token per sequence (K and V, all layers).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (2 * self.n_layers * self.kv_dim() * self.kv_bytes) as u64
+    }
+}
+
+/// Inference phase (the paper's central dichotomy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama2_7b_param_count() {
+        let m = LlmConfig::llama2_7b();
+        // ~6.7e9 parameters (embedding + 32 layers)
+        let p = m.n_params() as f64;
+        assert!(p > 6.4e9 && p < 7.1e9, "{p:e}");
+        assert_eq!(m.q_dim(), 4096);
+        assert_eq!(m.kv_dim(), 4096);
+    }
+
+    #[test]
+    fn qwen3_8b_param_count_and_gqa() {
+        let m = LlmConfig::qwen3_8b();
+        let p = m.n_params() as f64;
+        assert!(p > 7.5e9 && p < 9.5e9, "{p:e}");
+        assert_eq!(m.kv_dim(), 1024); // 8 KV heads x 128
+        assert!(m.kv_bytes_per_token() < LlmConfig::llama2_7b().kv_bytes_per_token());
+    }
+
+    #[test]
+    fn kv_bytes_per_token() {
+        let m = LlmConfig::llama2_7b();
+        // 2 * 32 layers * 4096 * 1 B = 256 KiB/token at int8
+        assert_eq!(m.kv_bytes_per_token(), 2 * 32 * 4096);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(LlmConfig::by_name("llama2-7b").unwrap().name, "llama2-7b");
+        assert_eq!(LlmConfig::by_name("qwen").unwrap().name, "qwen3-8b");
+        assert!(LlmConfig::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn model_fits_hbm() {
+        let hw = crate::config::HwConfig::paper();
+        for m in [LlmConfig::llama2_7b(), LlmConfig::qwen3_8b()] {
+            assert!(m.weight_bytes() < hw.hbm.total_capacity());
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! Operation descriptors: the unit of work the analytical simulator costs.
+//!
+//! Every LLM sub-operation is either a matrix product (GEMM/GEMV, with a
+//! *stationary* operand that may be a static weight or a dynamic tensor
+//! like the KV cache) or a non-GEMM vector/scalar op (LayerNorm, softmax,
+//! RoPE, activations, ...). The distinction between static and dynamic
+//! stationary operands matters enormously on CiM (dynamic operands force
+//! crossbar rewrites — why AttAcc keeps attention on CiD).
+
+/// Whether the stationary (weight-side) operand of a matmul is a static
+/// model weight or a dynamically produced tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Operand {
+    /// Static model weights: persistently resident in DRAM; streamed into
+    /// CiM crossbars with reuse across calls within one pass.
+    StaticWeight,
+    /// Dynamic tensor (KV cache, attention probabilities): produced at
+    /// runtime; on CiM it must be written into crossbars on every use.
+    Dynamic,
+}
+
+/// Broad operation classes used by the mapping rules and Fig. 4 breakdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    /// Matrix-matrix multiply against static weights (M > 1).
+    Gemm,
+    /// Matrix-vector multiply against static weights (M == 1 per seq).
+    Gemv,
+    /// Attention score/value products (dynamic stationary operand).
+    Attention,
+    /// Element-wise / reduction ops on the logic die.
+    NonGemm,
+}
+
+/// The specific operation kind (for breakdowns and reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    QkvProj,
+    OutProj,
+    FfnGate,
+    FfnUp,
+    FfnDown,
+    LmHead,
+    AttnScore,
+    AttnValue,
+    RmsNorm,
+    Softmax,
+    Rope,
+    Residual,
+    Activation,
+    Embedding,
+    KvAppend,
+}
+
+impl OpKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::QkvProj => "qkv_proj",
+            OpKind::OutProj => "out_proj",
+            OpKind::FfnGate => "ffn_gate",
+            OpKind::FfnUp => "ffn_up",
+            OpKind::FfnDown => "ffn_down",
+            OpKind::LmHead => "lm_head",
+            OpKind::AttnScore => "attn_score",
+            OpKind::AttnValue => "attn_value",
+            OpKind::RmsNorm => "rms_norm",
+            OpKind::Softmax => "softmax",
+            OpKind::Rope => "rope",
+            OpKind::Residual => "residual",
+            OpKind::Activation => "activation",
+            OpKind::Embedding => "embedding",
+            OpKind::KvAppend => "kv_append",
+        }
+    }
+}
+
+/// One costed operation.
+///
+/// Matmul ops represent `X (M x K) @ W (K x N)`, repeated `count` times
+/// (e.g. per attention head, per layer) — `count` multiplies both work and
+/// traffic. Non-GEMM ops use `elems` (vector lanes touched) and
+/// `exp_elems`/`scalar_elems` for the dedicated units.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Op {
+    pub kind: OpKind,
+    pub class: OpClass,
+    pub operand: Operand,
+    /// Matmul dims (0 for non-GEMM).
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Replication factor (heads x layers collapsed where uniform).
+    pub count: usize,
+    /// Non-GEMM element counts.
+    pub elems: u64,
+    pub exp_elems: u64,
+    pub scalar_elems: u64,
+    /// Bytes moved for non-GEMM ops (activation streaming).
+    pub stream_bytes: u64,
+}
+
+impl Op {
+    pub fn matmul(
+        kind: OpKind,
+        class: OpClass,
+        operand: Operand,
+        m: usize,
+        k: usize,
+        n: usize,
+        count: usize,
+    ) -> Self {
+        debug_assert!(m > 0 && k > 0 && n > 0 && count > 0);
+        Op {
+            kind,
+            class,
+            operand,
+            m,
+            k,
+            n,
+            count,
+            elems: 0,
+            exp_elems: 0,
+            scalar_elems: 0,
+            stream_bytes: 0,
+        }
+    }
+
+    pub fn non_gemm(kind: OpKind, elems: u64, count: usize) -> Self {
+        Op {
+            kind,
+            class: OpClass::NonGemm,
+            operand: Operand::Dynamic,
+            m: 0,
+            k: 0,
+            n: 0,
+            count,
+            elems,
+            exp_elems: 0,
+            scalar_elems: 0,
+            stream_bytes: elems * 2, // touch in + out at ~1 B each (int8/fp8 mix)
+        }
+    }
+
+    pub fn with_exp(mut self, exp_elems: u64) -> Self {
+        self.exp_elems = exp_elems;
+        self
+    }
+
+    pub fn with_scalar(mut self, scalar_elems: u64) -> Self {
+        self.scalar_elems = scalar_elems;
+        self
+    }
+
+    pub fn with_stream_bytes(mut self, bytes: u64) -> Self {
+        self.stream_bytes = bytes;
+        self
+    }
+
+    pub fn is_matmul(&self) -> bool {
+        self.class != OpClass::NonGemm
+    }
+
+    /// Multiply-accumulates for one instance.
+    pub fn macs_each(&self) -> u64 {
+        (self.m as u64) * (self.k as u64) * (self.n as u64)
+    }
+
+    /// Total MACs including replication.
+    pub fn macs(&self) -> u64 {
+        self.macs_each() * self.count as u64
+    }
+
+    /// FLOPs (2 per MAC) or vector-op count for non-GEMM.
+    pub fn flops(&self) -> u64 {
+        if self.is_matmul() {
+            2 * self.macs()
+        } else {
+            self.elems * self.count as u64
+        }
+    }
+
+    /// Stationary-operand bytes for one instance (the K x N tensor).
+    pub fn stationary_bytes_each(&self, dtype_bytes: usize) -> u64 {
+        (self.k as u64) * (self.n as u64) * dtype_bytes as u64
+    }
+
+    /// Total stationary bytes including replication.
+    pub fn stationary_bytes(&self, dtype_bytes: usize) -> u64 {
+        self.stationary_bytes_each(dtype_bytes) * self.count as u64
+    }
+
+    /// Moving-operand (input) bytes per instance.
+    pub fn input_bytes_each(&self, dtype_bytes: usize) -> u64 {
+        (self.m as u64) * (self.k as u64) * dtype_bytes as u64
+    }
+
+    /// Output bytes per instance (accumulators materialize at 4 B before
+    /// requantization).
+    pub fn output_bytes_each(&self) -> u64 {
+        (self.m as u64) * (self.n as u64)
+    }
+
+    /// Total bytes touched (roofline denominator).
+    pub fn total_bytes(&self, dtype_bytes: usize) -> u64 {
+        if self.is_matmul() {
+            (self.stationary_bytes_each(dtype_bytes)
+                + self.input_bytes_each(dtype_bytes)
+                + self.output_bytes_each())
+                * self.count as u64
+        } else {
+            self.stream_bytes * self.count as u64
+        }
+    }
+
+    /// Arithmetic intensity, FLOP / byte.
+    pub fn arithmetic_intensity(&self, dtype_bytes: usize) -> f64 {
+        self.flops() as f64 / self.total_bytes(dtype_bytes).max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gemm() -> Op {
+        Op::matmul(OpKind::FfnUp, OpClass::Gemm, Operand::StaticWeight, 512, 4096, 11008, 32)
+    }
+
+    #[test]
+    fn macs_and_flops() {
+        let op = gemm();
+        assert_eq!(op.macs_each(), 512 * 4096 * 11008);
+        assert_eq!(op.macs(), op.macs_each() * 32);
+        assert_eq!(op.flops(), 2 * op.macs());
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let op = gemm();
+        assert_eq!(op.stationary_bytes_each(1), 4096 * 11008);
+        assert_eq!(op.input_bytes_each(1), 512 * 4096);
+        assert_eq!(op.output_bytes_each(), 512 * 11008);
+    }
+
+    #[test]
+    fn intensity_grows_with_m() {
+        let mk = |m| Op::matmul(OpKind::FfnUp, OpClass::Gemm, Operand::StaticWeight, m, 4096, 4096, 1);
+        let a1 = mk(1).arithmetic_intensity(1);
+        let a512 = mk(512).arithmetic_intensity(1);
+        assert!(a1 < 2.5, "GEMV AI ~1-2: {a1}");
+        assert!(a512 > 100.0, "prefill GEMM AI: {a512}");
+    }
+
+    #[test]
+    fn non_gemm_defaults() {
+        let op = Op::non_gemm(OpKind::RmsNorm, 4096 * 5, 32).with_scalar(32);
+        assert!(!op.is_matmul());
+        assert_eq!(op.flops(), 4096 * 5 * 32);
+        assert_eq!(op.scalar_elems, 32);
+        assert!(op.total_bytes(1) > 0);
+    }
+}

@@ -1,0 +1,430 @@
+//! Figure/table harness: regenerates every figure of the paper's
+//! evaluation (Figs. 1, 4, 5, 6, 7, 8, 9, 10) and the headline geomean
+//! claims, as CSV + markdown.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use crate::arch::cim::CimEngine;
+use crate::config::HwConfig;
+use crate::mapping::MappingKind;
+use crate::model::{build_decode_graph, build_prefill_graph, LlmConfig, Phase};
+use crate::sim::roofline::{roofline_points, Roofline};
+use crate::sim::{simulate_e2e, simulate_phase, Scenario};
+use crate::util::geomean;
+
+/// A generated table (one per figure panel).
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub name: String,
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(name: &str, title: &str, headers: &[&str]) -> Self {
+        Table {
+            name: name.to_string(),
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity in {}", self.name);
+        self.rows.push(cells);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{}", self.headers.join(","));
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", r.join(","));
+        }
+        s
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let hdrs: Vec<&str> = self.headers.iter().map(|s| s.as_str()).collect();
+        format!("### {}\n\n{}", self.title, crate::util::markdown_table(&hdrs, &self.rows))
+    }
+
+    pub fn write_csv(&self, dir: &Path) -> std::io::Result<()> {
+        fs::create_dir_all(dir)?;
+        fs::write(dir.join(format!("{}.csv", self.name)), self.to_csv())
+    }
+
+    /// Numeric column accessor (for tests/benches).
+    pub fn col_f64(&self, header: &str) -> Vec<f64> {
+        let idx = self.headers.iter().position(|h| h == header).expect("header");
+        self.rows.iter().filter_map(|r| r[idx].parse().ok()).collect()
+    }
+}
+
+fn f(v: f64) -> String {
+    format!("{v:.6e}")
+}
+
+/// The (L_in, L_out) grid of Figs. 7/8/10 (paper: 128 up to 10K tokens).
+pub fn context_grid() -> Vec<(usize, usize)> {
+    let mut g = Vec::new();
+    for l_in in [128usize, 512, 2048, 4096, 8192] {
+        for l_out in [128usize, 512, 2048] {
+            g.push((l_in, l_out));
+        }
+    }
+    g
+}
+
+/// The L_in sweep of Figs. 5/6.
+pub fn lin_sweep() -> Vec<usize> {
+    vec![128, 512, 1024, 2048, 4096, 8192]
+}
+
+// ---------------------------------------------------------------- figures
+
+/// Fig. 1: roofline of the CiM accelerator, prefill (BS=1, L=512) vs
+/// decode (BS=1 and BS=16) GEMMs of LLaMA-2 7B.
+pub fn fig1_roofline(hw: &HwConfig) -> Table {
+    let m = LlmConfig::llama2_7b();
+    let rf = Roofline::of(&CimEngine::new(hw));
+    let mut t = Table::new(
+        "fig1_roofline",
+        "Fig.1 — CiM roofline: LLaMA-2 7B GEMMs, prefill (L_in=512) vs decode",
+        &["phase", "batch", "op", "M", "K", "N", "intensity_flop_per_byte", "attainable_flops", "compute_bound", "ridge", "peak_flops"],
+    );
+    let mut push = |phase: &str, batch: usize, graph| {
+        for p in roofline_points(&graph, &rf, 1) {
+            t.row(vec![
+                phase.into(),
+                batch.to_string(),
+                p.kind.into(),
+                p.m.to_string(),
+                p.k.to_string(),
+                p.n.to_string(),
+                f(p.intensity),
+                f(p.attainable_flops),
+                p.compute_bound.to_string(),
+                f(rf.ridge()),
+                f(rf.peak_flops),
+            ]);
+        }
+    };
+    push("prefill", 1, build_prefill_graph(&m, 512, 1));
+    push("decode", 1, build_decode_graph(&m, 512, 1));
+    push("decode", 16, build_decode_graph(&m, 512, 16));
+    t
+}
+
+/// Fig. 4: execution-time breakdown by operation class on the CiM
+/// accelerator (L_in=2048, L_out=128, BS=1).
+pub fn fig4_breakdown(hw: &HwConfig) -> Table {
+    let m = LlmConfig::llama2_7b();
+    let mut t = Table::new(
+        "fig4_breakdown",
+        "Fig.4 — execution-time breakdown on the CiM accelerator (LLaMA-2 7B, L_in=2048, L_out=128)",
+        &["phase", "op", "latency_s", "share", "t_compute", "t_memory", "t_write"],
+    );
+    for (phase, seq) in [(Phase::Prefill, 2048usize), (Phase::Decode, 2048 + 64)] {
+        let r = simulate_phase(&m, hw, MappingKind::FullCim, phase, seq, 1);
+        for (kind, c) in &r.by_kind {
+            t.row(vec![
+                phase.name().into(),
+                (*kind).into(),
+                f(c.latency),
+                f(c.latency / r.latency),
+                f(c.t_compute),
+                f(c.t_memory),
+                f(c.t_write),
+            ]);
+        }
+    }
+    t
+}
+
+/// Figs. 5 & 6: fully-CiD vs fully-CiM, TTFT/TPOT and phase energies.
+pub fn fig56_cid_vs_cim(hw: &HwConfig) -> Table {
+    let m = LlmConfig::llama2_7b();
+    let mut t = Table::new(
+        "fig56_cid_vs_cim",
+        "Fig.5/6 — fully-CiD vs fully-CiM: TTFT, prefill energy, TPOT, decode energy/token (LLaMA-2 7B)",
+        &["l_in", "ttft_cid_s", "ttft_cim_s", "prefill_e_cid_j", "prefill_e_cim_j", "tpot_cid_s", "tpot_cim_s", "decode_e_cid_j", "decode_e_cim_j"],
+    );
+    for l_in in lin_sweep() {
+        let pre_cid = simulate_phase(&m, hw, MappingKind::FullCid, Phase::Prefill, l_in, 1);
+        let pre_cim = simulate_phase(&m, hw, MappingKind::FullCim, Phase::Prefill, l_in, 1);
+        let ctx = l_in + 64;
+        let dec_cid = simulate_phase(&m, hw, MappingKind::FullCid, Phase::Decode, ctx, 1);
+        let dec_cim = simulate_phase(&m, hw, MappingKind::FullCim, Phase::Decode, ctx, 1);
+        t.row(vec![
+            l_in.to_string(),
+            f(pre_cid.latency),
+            f(pre_cim.latency),
+            f(pre_cid.energy),
+            f(pre_cim.energy),
+            f(dec_cid.latency),
+            f(dec_cim.latency),
+            f(dec_cid.energy),
+            f(dec_cim.energy),
+        ]);
+    }
+    t
+}
+
+/// Figs. 7 (time) and 8 (energy): all Table II mappings over the context
+/// grid, both models, normalized per config to the slowest baseline.
+pub fn fig78_e2e(hw: &HwConfig, energy: bool) -> Table {
+    let (name, title) = if energy {
+        ("fig8_e2e_energy", "Fig.8 — e2e energy distribution and totals (normalized per config)")
+    } else {
+        ("fig7_e2e_time", "Fig.7 — e2e time distribution and totals (normalized per config)")
+    };
+    let mut t = Table::new(
+        name,
+        title,
+        &["model", "l_in", "l_out", "mapping", "prefill", "decode", "total", "normalized"],
+    );
+    for m in [LlmConfig::llama2_7b(), LlmConfig::qwen3_8b()] {
+        for (l_in, l_out) in context_grid() {
+            let sc = Scenario { l_in, l_out, batch: 1 };
+            let runs: Vec<_> = MappingKind::table2()
+                .iter()
+                .map(|mk| (*mk, simulate_e2e(&m, hw, *mk, &sc)))
+                .collect();
+            let value = |r: &crate::sim::RunResult| -> (f64, f64) {
+                if energy {
+                    (r.prefill.energy, r.decode_energy())
+                } else {
+                    (r.ttft(), r.decode_latency())
+                }
+            };
+            let worst = runs
+                .iter()
+                .map(|(_, r)| {
+                    let (p, d) = value(r);
+                    p + d
+                })
+                .fold(0.0f64, f64::max);
+            for (mk, r) in &runs {
+                let (p, d) = value(r);
+                t.row(vec![
+                    m.name.into(),
+                    l_in.to_string(),
+                    l_out.to_string(),
+                    mk.name().into(),
+                    f(p),
+                    f(d),
+                    f(p + d),
+                    f((p + d) / worst),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Fig. 9: batch-size sweep at L_in=128, L_out=2048 (LLaMA-2 7B).
+pub fn fig9_batch_sweep(hw: &HwConfig) -> Table {
+    let m = LlmConfig::llama2_7b();
+    let mut t = Table::new(
+        "fig9_batch_sweep",
+        "Fig.9 — e2e time vs batch size (LLaMA-2 7B, L_in=128, L_out=2048)",
+        &["batch", "mapping", "e2e_s", "ttft_s", "tpot_s"],
+    );
+    for b in [1usize, 2, 4, 8, 16, 32, 64] {
+        for mk in [MappingKind::Halo1, MappingKind::Halo2, MappingKind::Cent, MappingKind::AttAcc1, MappingKind::AttAcc2] {
+            let r = simulate_e2e(&m, hw, mk, &Scenario { l_in: 128, l_out: 2048, batch: b });
+            t.row(vec![
+                b.to_string(),
+                mk.name().into(),
+                f(r.e2e_latency()),
+                f(r.ttft()),
+                f(r.tpot()),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 10: HALO with analog CiM (wl 128/64) vs iso-area systolic arrays.
+pub fn fig10_cim_vs_sa(hw: &HwConfig) -> Table {
+    let m = LlmConfig::llama2_7b();
+    let mut t = Table::new(
+        "fig10_cim_vs_sa",
+        "Fig.10 — HALO-CiM1/2 vs HALO-SA, normalized e2e time (LLaMA-2 7B)",
+        &["l_in", "l_out", "mapping", "e2e_s", "normalized_to_sa"],
+    );
+    for (l_in, l_out) in context_grid() {
+        let sc = Scenario { l_in, l_out, batch: 1 };
+        let sa = simulate_e2e(&m, hw, MappingKind::HaloSa, &sc).e2e_latency();
+        for mk in [MappingKind::Halo1, MappingKind::Halo2, MappingKind::HaloSa] {
+            let e = simulate_e2e(&m, hw, mk, &sc).e2e_latency();
+            let label = match mk {
+                MappingKind::Halo1 => "HALO-CiM1",
+                MappingKind::Halo2 => "HALO-CiM2",
+                _ => "HALO-SA",
+            };
+            t.row(vec![l_in.to_string(), l_out.to_string(), label.into(), f(e), f(e / sa)]);
+        }
+    }
+    t
+}
+
+/// Headline geomean claims (paper abstract + §V-B/C/D), paper value vs ours.
+pub fn headline_summary(hw: &HwConfig) -> Table {
+    let m = LlmConfig::llama2_7b();
+    let q = LlmConfig::qwen3_8b();
+    let mut t = Table::new(
+        "headline",
+        "Headline geomean ratios: paper vs this reproduction",
+        &["claim", "paper", "ours"],
+    );
+
+    // Fig.5/6 geomeans
+    let mut ttft_r = Vec::new();
+    let mut pre_e_r = Vec::new();
+    let mut tpot_r = Vec::new();
+    let mut dec_e_r = Vec::new();
+    for l_in in lin_sweep() {
+        let pc = simulate_phase(&m, hw, MappingKind::FullCid, Phase::Prefill, l_in, 1);
+        let pm = simulate_phase(&m, hw, MappingKind::FullCim, Phase::Prefill, l_in, 1);
+        ttft_r.push(pc.latency / pm.latency);
+        pre_e_r.push(pc.energy / pm.energy);
+        let dc = simulate_phase(&m, hw, MappingKind::FullCid, Phase::Decode, l_in + 64, 1);
+        let dm = simulate_phase(&m, hw, MappingKind::FullCim, Phase::Decode, l_in + 64, 1);
+        tpot_r.push(dm.latency / dc.latency);
+        dec_e_r.push(dm.energy / dc.energy);
+    }
+    t.row(vec!["TTFT: fully-CiM over fully-CiD".into(), "6x".into(), format!("{:.2}x", geomean(&ttft_r))]);
+    t.row(vec!["Prefill energy: CiM under CiD".into(), "2.6x".into(), format!("{:.2}x", geomean(&pre_e_r))]);
+    t.row(vec!["TPOT: fully-CiD over fully-CiM".into(), "39x".into(), format!("{:.2}x", geomean(&tpot_r))]);
+    t.row(vec!["Decode energy: CiD under CiM".into(), "3.9x".into(), format!("{:.2}x", geomean(&dec_e_r))]);
+
+    // e2e & phase geomeans over both models and the grid
+    let mut e2e_vs_att = Vec::new();
+    let mut e2e_vs_cent = Vec::new();
+    let mut pre_vs_cent = Vec::new();
+    let mut dec_vs_att = Vec::new();
+    let mut e_vs_att = Vec::new();
+    let mut e_vs_cent = Vec::new();
+    let mut h2_slow = Vec::new();
+    for model in [&m, &q] {
+        for (l_in, l_out) in context_grid() {
+            let sc = Scenario { l_in, l_out, batch: 1 };
+            let halo = simulate_e2e(model, hw, MappingKind::Halo1, &sc);
+            let halo2 = simulate_e2e(model, hw, MappingKind::Halo2, &sc);
+            let cent = simulate_e2e(model, hw, MappingKind::Cent, &sc);
+            let att = simulate_e2e(model, hw, MappingKind::AttAcc1, &sc);
+            e2e_vs_att.push(att.e2e_latency() / halo.e2e_latency());
+            e2e_vs_cent.push(cent.e2e_latency() / halo.e2e_latency());
+            pre_vs_cent.push(cent.ttft() / halo.ttft());
+            dec_vs_att.push(att.tpot() / halo.tpot());
+            e_vs_att.push(att.e2e_energy() / halo.e2e_energy());
+            e_vs_cent.push(cent.e2e_energy() / halo.e2e_energy());
+            h2_slow.push(halo2.e2e_latency() / halo.e2e_latency());
+        }
+    }
+    t.row(vec!["E2E speedup vs AttAcc1".into(), "18x".into(), format!("{:.2}x", geomean(&e2e_vs_att))]);
+    t.row(vec!["E2E speedup vs CENT".into(), "2.4x".into(), format!("{:.2}x", geomean(&e2e_vs_cent))]);
+    t.row(vec!["Prefill speedup vs CENT".into(), "6.54x".into(), format!("{:.2}x", geomean(&pre_vs_cent))]);
+    t.row(vec!["Decode speedup vs AttAcc1".into(), "34x".into(), format!("{:.2}x", geomean(&dec_vs_att))]);
+    t.row(vec!["Energy vs AttAcc1".into(), "2x".into(), format!("{:.2}x", geomean(&e_vs_att))]);
+    t.row(vec!["Energy vs CENT".into(), "1.8x".into(), format!("{:.2}x", geomean(&e_vs_cent))]);
+    t.row(vec!["HALO2 slowdown vs HALO1".into(), "1.1x".into(), format!("{:.2}x", geomean(&h2_slow))]);
+
+    // Fig.10 geomean
+    let mut cim1_vs_sa = Vec::new();
+    let mut cim2_vs_sa = Vec::new();
+    for (l_in, l_out) in context_grid() {
+        let sc = Scenario { l_in, l_out, batch: 1 };
+        let sa = simulate_e2e(&m, hw, MappingKind::HaloSa, &sc).e2e_latency();
+        cim1_vs_sa.push(sa / simulate_e2e(&m, hw, MappingKind::Halo1, &sc).e2e_latency());
+        cim2_vs_sa.push(sa / simulate_e2e(&m, hw, MappingKind::Halo2, &sc).e2e_latency());
+    }
+    t.row(vec!["HALO-CiM1 speedup vs HALO-SA".into(), "1.3x".into(), format!("{:.2}x", geomean(&cim1_vs_sa))]);
+    t.row(vec!["HALO-CiM2 speedup vs HALO-SA".into(), "1.2x".into(), format!("{:.2}x", geomean(&cim2_vs_sa))]);
+    t
+}
+
+/// Generate every figure table.
+pub fn all_figures(hw: &HwConfig) -> Vec<Table> {
+    vec![
+        fig1_roofline(hw),
+        fig4_breakdown(hw),
+        fig56_cid_vs_cim(hw),
+        fig78_e2e(hw, false),
+        fig78_e2e(hw, true),
+        fig9_batch_sweep(hw),
+        fig10_cim_vs_sa(hw),
+        headline_summary(hw),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw() -> HwConfig {
+        HwConfig::paper()
+    }
+
+    #[test]
+    fn fig1_has_all_series() {
+        let t = fig1_roofline(&hw());
+        assert!(t.rows.iter().any(|r| r[0] == "prefill"));
+        assert!(t.rows.iter().any(|r| r[0] == "decode" && r[1] == "16"));
+        assert!(t.rows.len() > 15);
+    }
+
+    #[test]
+    fn fig56_ratios_consistent() {
+        let t = fig56_cid_vs_cim(&hw());
+        let cid = t.col_f64("ttft_cid_s");
+        let cim = t.col_f64("ttft_cim_s");
+        assert!(cid.iter().zip(&cim).all(|(a, b)| a > b), "CiM wins prefill everywhere");
+        let tc = t.col_f64("tpot_cid_s");
+        let tm = t.col_f64("tpot_cim_s");
+        assert!(tc.iter().zip(&tm).all(|(a, b)| a < b), "CiD wins decode everywhere");
+    }
+
+    #[test]
+    fn fig7_normalization_bounded() {
+        let t = fig78_e2e(&hw(), false);
+        let norm = t.col_f64("normalized");
+        assert!(norm.iter().all(|v| *v > 0.0 && *v <= 1.0 + 1e-9));
+        // 2 models x 15 grid points x 5 mappings
+        assert_eq!(t.rows.len(), 2 * 15 * 5);
+        // every config has exactly one mapping at 1.0 (the slowest)
+        let ones = norm.iter().filter(|v| (**v - 1.0).abs() < 1e-9).count();
+        assert_eq!(ones, 2 * 15);
+    }
+
+    #[test]
+    fn fig9_has_expected_batches() {
+        let t = fig9_batch_sweep(&hw());
+        assert_eq!(t.rows.len(), 7 * 5);
+    }
+
+    #[test]
+    fn headline_table_covers_all_claims() {
+        let t = headline_summary(&hw());
+        assert_eq!(t.rows.len(), 13);
+        // every 'ours' cell parses as a positive ratio
+        for r in &t.rows {
+            let v: f64 = r[2].trim_end_matches('x').parse().unwrap();
+            assert!(v > 0.0, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn csv_and_markdown_render() {
+        let t = fig9_batch_sweep(&hw());
+        let csv = t.to_csv();
+        assert!(csv.lines().count() == t.rows.len() + 1);
+        let md = t.to_markdown();
+        assert!(md.contains("| batch |") || md.contains("| batch|") || md.contains("batch"));
+    }
+}

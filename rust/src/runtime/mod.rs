@@ -1,0 +1,386 @@
+//! PJRT runtime: loads the AOT artifacts (`make artifacts`) and executes
+//! them on the CPU PJRT client. Python never runs here — the HLO text was
+//! lowered once at build time.
+//!
+//! * [`Manifest`] — parses `artifacts/manifest.json` (parameter table,
+//!   entry-point signatures, test vectors).
+//! * [`Weights`] — memory-maps `weights.bin` into per-parameter literals.
+//! * [`Runtime`] — compiles entry HLOs (`HloModuleProto::from_text_file`
+//!   -> `XlaComputation` -> `PjRtLoadedExecutable`) and runs them, with
+//!   model weights uploaded to device buffers **once** and reused across
+//!   steps (the request-path hot loop only moves tokens, positions and the
+//!   KV cache).
+
+pub mod tensor;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+pub use tensor::{Dtype, HostTensor, TensorSpec};
+
+/// One entry point's signature from the manifest.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub hlo_file: String,
+    /// Leading inputs that are model parameters (fed from weights.bin).
+    pub n_params: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Test-vector files (non-param inputs, then outputs).
+    pub testvec_inputs: Vec<String>,
+    pub testvec_outputs: Vec<String>,
+}
+
+/// One model parameter's slice of weights.bin.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nelems: usize,
+}
+
+/// Parsed artifacts manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub params: Vec<ParamSpec>,
+    pub entries: BTreeMap<String, EntrySpec>,
+    /// Tiny-model config values (vocab, n_layers, max_seq, ...).
+    pub config: BTreeMap<String, f64>,
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    let shape = j.get("shape").and_then(|s| s.as_usize_vec()).ok_or_else(|| anyhow!("shape"))?;
+    let dtype = match j.get("dtype").and_then(|d| d.as_str()) {
+        Some("f32") => Dtype::F32,
+        Some("i32") => Dtype::I32,
+        Some("i8") => Dtype::I8,
+        other => bail!("unsupported dtype {other:?}"),
+    };
+    Ok(TensorSpec { shape, dtype })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+
+        let mut params = Vec::new();
+        for p in j.get("params").and_then(|p| p.as_arr()).ok_or_else(|| anyhow!("params"))? {
+            params.push(ParamSpec {
+                name: p.get("name").and_then(|x| x.as_str()).unwrap_or_default().to_string(),
+                shape: p.get("shape").and_then(|x| x.as_usize_vec()).ok_or_else(|| anyhow!("param shape"))?,
+                offset: p.get("offset").and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("offset"))?,
+                nelems: p.get("nelems").and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("nelems"))?,
+            });
+        }
+
+        let mut entries = BTreeMap::new();
+        for (name, e) in j.get("entries").and_then(|e| e.as_obj()).ok_or_else(|| anyhow!("entries"))? {
+            let inputs = e
+                .get("inputs")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow!("inputs"))?
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow!("outputs"))?
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let (ti, to) = match e.get("testvec") {
+                Some(tv) => (
+                    tv.get("inputs")
+                        .and_then(|x| x.as_arr())
+                        .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                        .unwrap_or_default(),
+                    tv.get("outputs")
+                        .and_then(|x| x.as_arr())
+                        .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                        .unwrap_or_default(),
+                ),
+                None => (Vec::new(), Vec::new()),
+            };
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    name: name.clone(),
+                    hlo_file: e.get("hlo").and_then(|x| x.as_str()).ok_or_else(|| anyhow!("hlo"))?.to_string(),
+                    n_params: e.get("n_params").and_then(|x| x.as_usize()).unwrap_or(0),
+                    inputs,
+                    outputs,
+                    testvec_inputs: ti,
+                    testvec_outputs: to,
+                },
+            );
+        }
+
+        let mut config = BTreeMap::new();
+        if let Some(c) = j.get("config").and_then(|c| c.as_obj()) {
+            for (k, v) in c {
+                if let Some(n) = v.as_f64() {
+                    config.insert(k.clone(), n);
+                }
+            }
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), params, entries, config })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries.get(name).ok_or_else(|| anyhow!("no entry point '{name}' in manifest"))
+    }
+
+    pub fn config_usize(&self, key: &str) -> Result<usize> {
+        self.config.get(key).map(|v| *v as usize).ok_or_else(|| anyhow!("no config key {key}"))
+    }
+
+    /// Load a test-vector file into a host tensor.
+    pub fn load_testvec(&self, file: &str, spec: &TensorSpec) -> Result<HostTensor> {
+        let bytes = std::fs::read(self.dir.join("testvec").join(file))?;
+        HostTensor::from_bytes(&bytes, spec.clone())
+    }
+}
+
+/// Model weights loaded from weights.bin as per-parameter host tensors.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub tensors: Vec<HostTensor>,
+}
+
+impl Weights {
+    pub fn load(manifest: &Manifest) -> Result<Weights> {
+        let blob = std::fs::read(manifest.dir.join("weights.bin"))
+            .context("reading weights.bin (run `make artifacts`)")?;
+        let mut tensors = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let start = p.offset;
+            let end = start + p.nelems * 4;
+            if end > blob.len() {
+                bail!("weights.bin too short for {}", p.name);
+            }
+            tensors.push(HostTensor::from_bytes(
+                &blob[start..end],
+                TensorSpec { shape: p.shape.clone(), dtype: Dtype::F32 },
+            )?);
+        }
+        Ok(Weights { tensors })
+    }
+}
+
+/// A compiled entry point.
+pub struct Executable {
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Device-resident parameter buffers (uploaded once).
+    param_bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl Executable {
+    /// Run with the given non-parameter inputs; parameters are the
+    /// device-resident buffers. Returns host tensors per output.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.run_ref(&inputs.iter().collect::<Vec<_>>())
+    }
+
+    /// Like [`Self::run`] but borrows the inputs (the decode hot loop
+    /// passes the multi-MB KV tensors without cloning them).
+    pub fn run_ref(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let want = self.spec.inputs.len() - self.spec.n_params;
+        if inputs.len() != want {
+            bail!("{}: expected {} inputs, got {}", self.spec.name, want, inputs.len());
+        }
+        let client = self.exe.client();
+        let mut args: Vec<&xla::PjRtBuffer> = self.param_bufs.iter().collect();
+        let in_bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .zip(&self.spec.inputs[self.spec.n_params..])
+            .map(|(t, spec)| {
+                if t.spec != *spec {
+                    bail!("{}: input spec mismatch {:?} vs {:?}", self.spec.name, t.spec, spec)
+                } else {
+                    t.to_device(client)
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+        args.extend(in_bufs.iter());
+
+        let out = self.exe.execute_b(&args)?;
+        self.collect_outputs(out)
+    }
+
+    /// Run with host inputs plus trailing *device-resident* buffers,
+    /// returning raw output buffers (no host copies). The serving engine
+    /// uses this to keep the KV cache on device across decode steps.
+    ///
+    /// Requires the untupled-output PJRT patch (third_party/xla); falls
+    /// back is the caller's job if a single tuple buffer comes back.
+    pub fn run_buffers(
+        &self,
+        host_inputs: &[&HostTensor],
+        trailing: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let want = self.spec.inputs.len() - self.spec.n_params;
+        if host_inputs.len() + trailing.len() != want {
+            bail!(
+                "{}: expected {} inputs, got {}+{}",
+                self.spec.name,
+                want,
+                host_inputs.len(),
+                trailing.len()
+            );
+        }
+        let client = self.exe.client();
+        let mut args: Vec<&xla::PjRtBuffer> = self.param_bufs.iter().collect();
+        let in_bufs: Vec<xla::PjRtBuffer> = host_inputs
+            .iter()
+            .map(|t| t.to_device(client))
+            .collect::<Result<Vec<_>>>()?;
+        args.extend(in_bufs.iter());
+        args.extend(trailing.iter().copied());
+        let out = self.exe.execute_b(&args)?;
+        out.into_iter().next().ok_or_else(|| anyhow!("no replica output"))
+    }
+
+    /// Download one output buffer to the host, checked against the
+    /// entry's i-th output signature.
+    pub fn download_output(&self, buf: &xla::PjRtBuffer, i: usize) -> Result<HostTensor> {
+        let lit = buf.to_literal_sync()?;
+        HostTensor::from_literal(&lit, self.spec.outputs[i].clone())
+    }
+
+    fn collect_outputs(&self, out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
+        let bufs = out.into_iter().next().ok_or_else(|| anyhow!("no replica output"))?;
+        let n_out = self.spec.outputs.len();
+        // the AOT path lowers with return_tuple=True, so the single output
+        // buffer is a tuple even for one-output entries; decompose via the
+        // literal's shape (PJRT may or may not have untupled).
+        let mut literals = Vec::new();
+        for b in &bufs {
+            let lit = b.to_literal_sync()?;
+            if lit.shape()?.is_tuple() {
+                literals.extend(lit.to_tuple()?);
+            } else {
+                literals.push(lit);
+            }
+        }
+        if literals.len() != n_out {
+            bail!("{}: {} output literals, expected {n_out}", self.spec.name, literals.len());
+        }
+        literals
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(l, spec)| HostTensor::from_literal(l, spec.clone()))
+            .collect()
+    }
+}
+
+/// The PJRT runtime: client + compiled entry points + resident weights.
+pub struct Runtime {
+    pub manifest: Manifest,
+    pub client: xla::PjRtClient,
+    weights: Weights,
+}
+
+impl Runtime {
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let weights = Weights::load(&manifest)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { manifest, client, weights })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an entry point and upload its parameter buffers.
+    pub fn compile(&self, entry: &str) -> Result<Executable> {
+        let spec = self.manifest.entry(entry)?.clone();
+        let path = self.manifest.dir.join(&spec.hlo_file);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+
+        if spec.n_params > self.weights.tensors.len() {
+            bail!("{entry}: n_params {} > weights {}", spec.n_params, self.weights.tensors.len());
+        }
+        let param_bufs = self.weights.tensors[..spec.n_params]
+            .iter()
+            .map(|t| t.to_device(&self.client))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Executable { spec, exe, param_bufs })
+    }
+
+    pub fn weights(&self) -> &Weights {
+        &self.weights
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Pure manifest-parsing tests (no artifacts needed); the end-to-end
+    // PJRT tests live in rust/tests/runtime_integration.rs and skip when
+    // artifacts are absent.
+
+    fn sample_manifest() -> &'static str {
+        r#"{
+          "config": {"vocab": 4096, "n_layers": 4},
+          "seed": 0,
+          "params": [
+            {"name": "embed", "shape": [8, 4], "offset": 0, "nelems": 32}
+          ],
+          "entries": {
+            "decode_b1": {
+              "hlo": "decode_b1.hlo.txt",
+              "n_params": 1,
+              "inputs": [{"shape": [8,4], "dtype": "f32"}, {"shape": [1], "dtype": "i32"}],
+              "outputs": [{"shape": [1, 4096], "dtype": "f32"}],
+              "testvec": {"inputs": ["decode_b1.in0.bin"], "outputs": ["decode_b1.out0.bin"]}
+            }
+          }
+        }"#
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join("halo_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.params.len(), 1);
+        assert_eq!(m.params[0].shape, vec![8, 4]);
+        let e = m.entry("decode_b1").unwrap();
+        assert_eq!(e.n_params, 1);
+        assert_eq!(e.inputs[1].dtype, Dtype::I32);
+        assert_eq!(e.outputs[0].shape, vec![1, 4096]);
+        assert_eq!(e.testvec_inputs, vec!["decode_b1.in0.bin"]);
+        assert_eq!(m.config_usize("vocab").unwrap(), 4096);
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn weights_length_checked() {
+        let dir = std::env::temp_dir().join("halo_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+        // too short: 10 floats instead of 32
+        std::fs::write(dir.join("weights.bin"), vec![0u8; 40]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(Weights::load(&m).is_err());
+        std::fs::write(dir.join("weights.bin"), vec![0u8; 128]).unwrap();
+        let w = Weights::load(&m).unwrap();
+        assert_eq!(w.tensors[0].spec.shape, vec![8, 4]);
+    }
+}

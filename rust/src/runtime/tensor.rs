@@ -1,0 +1,251 @@
+//! Host-side tensors and conversion to/from PJRT literals/buffers.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Element types used by the artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    I8,
+}
+
+impl Dtype {
+    pub fn size(&self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::I8 => 1,
+        }
+    }
+}
+
+/// Shape + dtype signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn nelems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.nelems() * self.dtype.size()
+    }
+}
+
+/// A host tensor backed by typed storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I8(Vec<i8>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub spec: TensorSpec,
+    pub data: Storage,
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor {
+            spec: TensorSpec { shape: shape.to_vec(), dtype: Dtype::F32 },
+            data: Storage::F32(data),
+        }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor {
+            spec: TensorSpec { shape: shape.to_vec(), dtype: Dtype::I32 },
+            data: Storage::I32(data),
+        }
+    }
+
+    pub fn i8(data: Vec<i8>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor {
+            spec: TensorSpec { shape: shape.to_vec(), dtype: Dtype::I8 },
+            data: Storage::I8(data),
+        }
+    }
+
+    pub fn zeros(spec: TensorSpec) -> Self {
+        let n = spec.nelems();
+        let data = match spec.dtype {
+            Dtype::F32 => Storage::F32(vec![0.0; n]),
+            Dtype::I32 => Storage::I32(vec![0; n]),
+            Dtype::I8 => Storage::I8(vec![0; n]),
+        };
+        HostTensor { spec, data }
+    }
+
+    /// Parse little-endian raw bytes (the .bin testvec/weights format).
+    pub fn from_bytes(bytes: &[u8], spec: TensorSpec) -> Result<Self> {
+        if bytes.len() != spec.nbytes() {
+            bail!("byte length {} != spec {} ({:?})", bytes.len(), spec.nbytes(), spec);
+        }
+        let data = match spec.dtype {
+            Dtype::F32 => Storage::F32(
+                bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            Dtype::I32 => Storage::I32(
+                bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            Dtype::I8 => Storage::I8(bytes.iter().map(|b| *b as i8).collect()),
+        };
+        Ok(HostTensor { spec, data })
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Storage::F32(v) => Ok(v),
+            _ => Err(anyhow!("not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Storage::I32(v) => Ok(v),
+            _ => Err(anyhow!("not i32")),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match &self.data {
+            Storage::I8(v) => Ok(v),
+            _ => Err(anyhow!("not i8")),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Storage::F32(v) => Ok(v),
+            _ => Err(anyhow!("not f32")),
+        }
+    }
+
+    /// Upload to a device buffer.
+    pub fn to_device(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        let b = match &self.data {
+            Storage::F32(v) => client.buffer_from_host_buffer(v, &self.spec.shape, None)?,
+            Storage::I32(v) => client.buffer_from_host_buffer(v, &self.spec.shape, None)?,
+            Storage::I8(v) => client.buffer_from_host_buffer(v, &self.spec.shape, None)?,
+        };
+        Ok(b)
+    }
+
+    /// Download from a literal, checking the element count.
+    pub fn from_literal(lit: &xla::Literal, spec: TensorSpec) -> Result<Self> {
+        if lit.element_count() != spec.nelems() {
+            bail!("literal has {} elements, spec {:?}", lit.element_count(), spec);
+        }
+        let data = match spec.dtype {
+            Dtype::F32 => Storage::F32(lit.to_vec::<f32>()?),
+            Dtype::I32 => Storage::I32(lit.to_vec::<i32>()?),
+            Dtype::I8 => Storage::I8(lit.to_vec::<i8>()?),
+        };
+        Ok(HostTensor { spec, data })
+    }
+
+    /// Max |a - b| against another tensor (for test-vector checks).
+    pub fn max_abs_diff(&self, other: &HostTensor) -> Result<f64> {
+        match (&self.data, &other.data) {
+            (Storage::F32(a), Storage::F32(b)) if a.len() == b.len() => {
+                Ok(a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).fold(0.0, f64::max))
+            }
+            (Storage::I32(a), Storage::I32(b)) if a.len() == b.len() => {
+                Ok(a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).fold(0.0, f64::max))
+            }
+            (Storage::I8(a), Storage::I8(b)) if a.len() == b.len() => {
+                Ok(a.iter().zip(b).map(|(x, y)| (*x as i32 - *y as i32).abs() as f64).fold(0.0, f64::max))
+            }
+            _ => Err(anyhow!("tensor mismatch: {:?} vs {:?}", self.spec, other.spec)),
+        }
+    }
+
+    /// Max |value| over the tensor.
+    pub fn max_abs(&self) -> Result<f64> {
+        Ok(match &self.data {
+            Storage::F32(v) => v.iter().map(|x| x.abs() as f64).fold(0.0, f64::max),
+            Storage::I32(v) => v.iter().map(|x| x.abs() as f64).fold(0.0, f64::max),
+            Storage::I8(v) => v.iter().map(|x| (*x as i32).abs() as f64).fold(0.0, f64::max),
+        })
+    }
+
+    /// Row argmax for a (rows, cols) f32 tensor (greedy sampling).
+    pub fn argmax_rows(&self) -> Result<Vec<usize>> {
+        let v = self.as_f32()?;
+        if self.spec.shape.len() != 2 {
+            bail!("argmax_rows needs 2-D, got {:?}", self.spec.shape);
+        }
+        let (rows, cols) = (self.spec.shape[0], self.spec.shape[1]);
+        Ok((0..rows)
+            .map(|r| {
+                let row = &v[r * cols..(r + 1) * cols];
+                row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_sizes() {
+        let s = TensorSpec { shape: vec![2, 3, 4], dtype: Dtype::F32 };
+        assert_eq!(s.nelems(), 24);
+        assert_eq!(s.nbytes(), 96);
+        assert_eq!(TensorSpec { shape: vec![5], dtype: Dtype::I8 }.nbytes(), 5);
+    }
+
+    #[test]
+    fn from_bytes_roundtrip_f32() {
+        let vals = [1.5f32, -2.25, 0.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let t = HostTensor::from_bytes(&bytes, TensorSpec { shape: vec![3], dtype: Dtype::F32 })
+            .unwrap();
+        assert_eq!(t.as_f32().unwrap(), &vals);
+    }
+
+    #[test]
+    fn from_bytes_checks_length() {
+        assert!(HostTensor::from_bytes(&[0u8; 5], TensorSpec { shape: vec![3], dtype: Dtype::F32 })
+            .is_err());
+    }
+
+    #[test]
+    fn i8_bytes_are_signed() {
+        let t = HostTensor::from_bytes(&[0xff, 0x7f], TensorSpec { shape: vec![2], dtype: Dtype::I8 })
+            .unwrap();
+        assert_eq!(t.as_i8().unwrap(), &[-1i8, 127]);
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let t = HostTensor::f32(vec![0.0, 3.0, 1.0, 9.0, -1.0, 2.0], &[2, 3]);
+        assert_eq!(t.argmax_rows().unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = HostTensor::f32(vec![1.0, 2.0], &[2]);
+        let b = HostTensor::f32(vec![1.5, 2.0], &[2]);
+        assert!((a.max_abs_diff(&b).unwrap() - 0.5).abs() < 1e-12);
+        let c = HostTensor::i32(vec![1, 2], &[2]);
+        assert!(a.max_abs_diff(&c).is_err());
+    }
+
+    #[test]
+    fn zeros_shapes() {
+        let t = HostTensor::zeros(TensorSpec { shape: vec![4, 2], dtype: Dtype::I32 });
+        assert_eq!(t.as_i32().unwrap(), &[0; 8]);
+    }
+}

@@ -1,0 +1,363 @@
+//! Simulation engine: walks an operator graph, costs each op on the
+//! engine chosen by the mapping, and aggregates phase and end-to-end
+//! latency/energy with per-kind and per-component breakdowns.
+//!
+//! Decode steps are costed at the mid-generation context length
+//! (`l_in + l_out/2`); every decode cost component is affine in the
+//! context length (attention GEMVs and softmax scale linearly, everything
+//! else is constant), so the midpoint equals the exact per-step average.
+
+pub mod queueing;
+pub mod roofline;
+
+use std::collections::BTreeMap;
+
+use crate::arch::cid::CidEngine;
+use crate::arch::cim::CimEngine;
+use crate::arch::logicdie::LogicDieEngine;
+use crate::arch::systolic::SystolicEngine;
+use crate::arch::{EngineSel, MatmulEngine, OpCost};
+use crate::config::HwConfig;
+use crate::mapping::MappingKind;
+use crate::model::{build_decode_graph, build_prefill_graph, LlmConfig, OpGraph, OpKind, Phase};
+
+/// One evaluation point: input/output context lengths and batch size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Scenario {
+    pub l_in: usize,
+    pub l_out: usize,
+    pub batch: usize,
+}
+
+impl Scenario {
+    pub fn label(&self) -> String {
+        format!("({}, {})", self.l_in, self.l_out)
+    }
+}
+
+/// Aggregated result of one phase (prefill, or one decode step).
+#[derive(Debug, Clone, Default)]
+pub struct PhaseResult {
+    pub latency: f64,
+    pub energy: f64,
+    /// Per-op-kind cost.
+    pub by_kind: BTreeMap<&'static str, OpCost>,
+    /// Per-engine cost.
+    pub by_engine: BTreeMap<&'static str, OpCost>,
+    /// Latency components across all ops (compute vs memory vs writes).
+    pub total: OpCost,
+}
+
+impl PhaseResult {
+    fn absorb(&mut self, kind: OpKind, engine: EngineSel, cost: OpCost) {
+        self.latency += cost.latency;
+        self.energy += cost.energy;
+        self.by_kind.entry(kind.name()).or_default().add(&cost);
+        self.by_engine.entry(engine.name()).or_default().add(&cost);
+        self.total.add(&cost);
+    }
+
+    /// Fraction of phase latency attributed to DRAM/interconnect
+    /// streaming (Fig. 4's "memory access" share).
+    pub fn memory_fraction(&self) -> f64 {
+        self.total.t_memory / self.latency.max(1e-30)
+    }
+
+    pub fn compute_fraction(&self) -> f64 {
+        self.total.t_compute / self.latency.max(1e-30)
+    }
+}
+
+/// End-to-end result: prefill + `l_out` decode steps.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub mapping: MappingKind,
+    pub scenario: Scenario,
+    pub prefill: PhaseResult,
+    /// Cost of the *average* decode step (mid-generation context).
+    pub decode_step: PhaseResult,
+}
+
+impl RunResult {
+    /// Time-to-first-token.
+    pub fn ttft(&self) -> f64 {
+        self.prefill.latency
+    }
+
+    /// Time-per-output-token (average step).
+    pub fn tpot(&self) -> f64 {
+        self.decode_step.latency
+    }
+
+    pub fn decode_latency(&self) -> f64 {
+        self.tpot() * self.scenario.l_out as f64
+    }
+
+    pub fn e2e_latency(&self) -> f64 {
+        self.ttft() + self.decode_latency()
+    }
+
+    pub fn decode_energy(&self) -> f64 {
+        self.decode_step.energy * self.scenario.l_out as f64
+    }
+
+    pub fn e2e_energy(&self) -> f64 {
+        self.prefill.energy + self.decode_energy()
+    }
+}
+
+/// Engines instantiated for one (hw, mapping) pair. The mapping fixes the
+/// CiM wordline count (Table II).
+pub struct EngineSet {
+    pub cid: CidEngine,
+    pub cim: CimEngine,
+    pub systolic: SystolicEngine,
+    pub logic: LogicDieEngine,
+}
+
+impl EngineSet {
+    pub fn new(hw: &HwConfig, mapping: MappingKind) -> Self {
+        let mut hw = hw.clone();
+        hw.cim = hw.cim.clone().with_wordlines(mapping.wordlines());
+        EngineSet {
+            cid: CidEngine::new(&hw),
+            cim: CimEngine::new(&hw),
+            systolic: SystolicEngine::new(&hw),
+            logic: LogicDieEngine::new(&hw),
+        }
+    }
+
+    pub fn cost(&self, op: &crate::model::Op, engine: EngineSel) -> OpCost {
+        match engine {
+            EngineSel::Cid => self.cid.matmul_cost(op),
+            EngineSel::Cim => self.cim.matmul_cost(op),
+            EngineSel::Systolic => self.systolic.matmul_cost(op),
+            EngineSel::LogicDie => self.logic.non_gemm_cost(op),
+        }
+    }
+}
+
+/// Cost a whole graph under a mapping.
+pub fn simulate_graph(graph: &OpGraph, engines: &EngineSet, mapping: MappingKind) -> PhaseResult {
+    let mut res = PhaseResult::default();
+    for op in &graph.ops {
+        let sel = mapping.assign(op, graph.phase);
+        let cost = engines.cost(op, sel);
+        res.absorb(op.kind, sel, cost);
+    }
+    res
+}
+
+/// Simulate one phase from scratch (convenience).
+pub fn simulate_phase(
+    llm: &LlmConfig,
+    hw: &HwConfig,
+    mapping: MappingKind,
+    phase: Phase,
+    seq: usize,
+    batch: usize,
+) -> PhaseResult {
+    let engines = EngineSet::new(hw, mapping);
+    let graph = match phase {
+        Phase::Prefill => build_prefill_graph(llm, seq, batch),
+        Phase::Decode => build_decode_graph(llm, seq, batch),
+    };
+    simulate_graph(&graph, &engines, mapping)
+}
+
+/// Full end-to-end simulation of a scenario under a mapping.
+pub fn simulate_e2e(
+    llm: &LlmConfig,
+    hw: &HwConfig,
+    mapping: MappingKind,
+    sc: &Scenario,
+) -> RunResult {
+    let engines = EngineSet::new(hw, mapping);
+    let prefill = simulate_graph(&build_prefill_graph(llm, sc.l_in, sc.batch), &engines, mapping);
+    // average decode step: mid-generation context (affine costs => exact)
+    let mid_ctx = sc.l_in + sc.l_out / 2;
+    let decode_step =
+        simulate_graph(&build_decode_graph(llm, mid_ctx.max(1), sc.batch), &engines, mapping);
+    RunResult { mapping, scenario: *sc, prefill, decode_step }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::geomean;
+
+    fn hw() -> HwConfig {
+        HwConfig::paper()
+    }
+
+    fn llama() -> LlmConfig {
+        LlmConfig::llama2_7b()
+    }
+
+    const L_INS: [usize; 5] = [128, 512, 2048, 4096, 8192];
+
+    #[test]
+    fn fig5_band_cim_wins_prefill() {
+        // paper §V-B: fully-CiM prefill ~6x faster, ~2.6x less energy
+        let m = llama();
+        let mut speed = Vec::new();
+        let mut energy = Vec::new();
+        for l_in in L_INS {
+            let cid = simulate_phase(&m, &hw(), MappingKind::FullCid, Phase::Prefill, l_in, 1);
+            let cim = simulate_phase(&m, &hw(), MappingKind::FullCim, Phase::Prefill, l_in, 1);
+            speed.push(cid.latency / cim.latency);
+            energy.push(cid.energy / cim.energy);
+        }
+        let gs = geomean(&speed);
+        let ge = geomean(&energy);
+        assert!(gs > 3.0 && gs < 12.0, "TTFT speedup geomean {gs} (paper: 6x)");
+        assert!(ge > 1.5 && ge < 5.0, "prefill energy ratio geomean {ge} (paper: 2.6x)");
+    }
+
+    #[test]
+    fn fig6_band_cid_wins_decode() {
+        // paper §V-B: fully-CiD decode ~39x faster, ~3.9x less energy
+        let m = llama();
+        let mut speed = Vec::new();
+        let mut energy = Vec::new();
+        for l_in in L_INS {
+            let ctx = l_in + 64;
+            let cid = simulate_phase(&m, &hw(), MappingKind::FullCid, Phase::Decode, ctx, 1);
+            let cim = simulate_phase(&m, &hw(), MappingKind::FullCim, Phase::Decode, ctx, 1);
+            speed.push(cim.latency / cid.latency);
+            energy.push(cim.energy / cid.energy);
+        }
+        let gs = geomean(&speed);
+        let ge = geomean(&energy);
+        assert!(gs > 15.0 && gs < 80.0, "TPOT speedup geomean {gs} (paper: 39x)");
+        assert!(ge > 2.0 && ge < 8.0, "decode energy ratio geomean {ge} (paper: 3.9x)");
+    }
+
+    #[test]
+    fn decode_midpoint_is_exact_average() {
+        // decode cost must be affine in context length for the midpoint
+        // shortcut to hold
+        let m = llama();
+        let e = EngineSet::new(&hw(), MappingKind::Halo1);
+        let at = |ctx: usize| {
+            simulate_graph(&build_decode_graph(&m, ctx, 1), &e, MappingKind::Halo1).latency
+        };
+        let avg_exact = (at(1000) + at(2000)) / 2.0;
+        let mid = at(1500);
+        assert!((mid / avg_exact - 1.0).abs() < 1e-6, "{mid} vs {avg_exact}");
+    }
+
+    #[test]
+    fn halo_beats_cent_with_growing_lin() {
+        let m = llama();
+        let gap = |l_in: usize| {
+            let sc = Scenario { l_in, l_out: 512, batch: 1 };
+            let cent = simulate_e2e(&m, &hw(), MappingKind::Cent, &sc);
+            let halo = simulate_e2e(&m, &hw(), MappingKind::Halo1, &sc);
+            cent.e2e_latency() / halo.e2e_latency()
+        };
+        let g_small = gap(128);
+        let g_large = gap(8192);
+        assert!(g_small >= 0.99, "HALO never loses to CENT: {g_small}");
+        assert!(g_large > 2.0, "large-context gap {g_large}");
+        assert!(g_large > g_small);
+    }
+
+    #[test]
+    fn halo_decode_matches_cent_decode() {
+        // both run decode on CiD -> same TPOT
+        let m = llama();
+        let sc = Scenario { l_in: 2048, l_out: 512, batch: 1 };
+        let cent = simulate_e2e(&m, &hw(), MappingKind::Cent, &sc);
+        let halo = simulate_e2e(&m, &hw(), MappingKind::Halo1, &sc);
+        assert!((cent.tpot() / halo.tpot() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attacc_decode_is_much_slower_at_bs1() {
+        // paper: HALO1 34x faster decode than AttAcc1 at batch 1
+        let m = llama();
+        let sc = Scenario { l_in: 2048, l_out: 512, batch: 1 };
+        let halo = simulate_e2e(&m, &hw(), MappingKind::Halo1, &sc);
+        let att = simulate_e2e(&m, &hw(), MappingKind::AttAcc1, &sc);
+        let r = att.tpot() / halo.tpot();
+        assert!(r > 10.0 && r < 80.0, "decode ratio {r} (paper: 34x)");
+    }
+
+    #[test]
+    fn halo2_slowdown_is_modest() {
+        // paper §V-C: ~10% geomean slowdown for HALO2
+        let m = llama();
+        let mut ratios = Vec::new();
+        for l_in in L_INS {
+            for l_out in [128usize, 512, 2048] {
+                let sc = Scenario { l_in, l_out, batch: 1 };
+                let h1 = simulate_e2e(&m, &hw(), MappingKind::Halo1, &sc);
+                let h2 = simulate_e2e(&m, &hw(), MappingKind::Halo2, &sc);
+                ratios.push(h2.e2e_latency() / h1.e2e_latency());
+            }
+        }
+        let g = geomean(&ratios);
+        assert!(g >= 1.0 && g < 1.45, "HALO2/HALO1 geomean {g} (paper: ~1.1)");
+    }
+
+    #[test]
+    fn qwen_runs_and_orders_like_llama() {
+        let m = LlmConfig::qwen3_8b();
+        let sc = Scenario { l_in: 2048, l_out: 512, batch: 1 };
+        let cent = simulate_e2e(&m, &hw(), MappingKind::Cent, &sc);
+        let halo = simulate_e2e(&m, &hw(), MappingKind::Halo1, &sc);
+        let att = simulate_e2e(&m, &hw(), MappingKind::AttAcc1, &sc);
+        assert!(halo.e2e_latency() < cent.e2e_latency());
+        assert!(halo.e2e_latency() < att.e2e_latency());
+    }
+
+    #[test]
+    fn fig4_breakdown_shapes() {
+        // prefill on CiM: compute-dominated; decode on CiM: memory/write
+        // dominated (~90% in the paper)
+        let m = llama();
+        let pre = simulate_phase(&m, &hw(), MappingKind::FullCim, Phase::Prefill, 2048, 1);
+        let dec = simulate_phase(&m, &hw(), MappingKind::FullCim, Phase::Decode, 2048, 1);
+        assert!(pre.compute_fraction() > 0.5, "prefill compute frac {}", pre.compute_fraction());
+        let dec_mem = (dec.total.t_memory + dec.total.t_write) / dec.latency;
+        assert!(dec_mem > 0.8, "decode memory+write frac {dec_mem}");
+    }
+
+    #[test]
+    fn energy_breakdown_sums() {
+        let m = llama();
+        let r = simulate_e2e(&m, &hw(), MappingKind::Halo1, &Scenario { l_in: 512, l_out: 128, batch: 1 });
+        for ph in [&r.prefill, &r.decode_step] {
+            let sum: f64 = ph.by_kind.values().map(|c| c.energy).sum();
+            assert!((sum / ph.energy - 1.0).abs() < 1e-9);
+            let sum_eng: f64 = ph.by_engine.values().map(|c| c.energy).sum();
+            assert!((sum_eng / ph.energy - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn batch_speedup_monotone_for_attacc() {
+        // AttAcc amortizes its decode weight streaming across the batch
+        let m = llama();
+        let per_seq_tpot = |b: usize| {
+            let sc = Scenario { l_in: 128, l_out: 2048, batch: b };
+            simulate_e2e(&m, &hw(), MappingKind::AttAcc1, &sc).tpot() / b as f64
+        };
+        assert!(per_seq_tpot(16) < per_seq_tpot(1));
+    }
+
+    #[test]
+    fn fig9_crossover_band() {
+        // paper Fig. 9: HALO/CENT win at low batch; AttAcc catches up
+        // around batch 64
+        let m = llama();
+        let e2e = |mk: MappingKind, b: usize| {
+            simulate_e2e(&m, &hw(), mk, &Scenario { l_in: 128, l_out: 2048, batch: b })
+                .e2e_latency()
+        };
+        assert!(e2e(MappingKind::Halo1, 1) < e2e(MappingKind::AttAcc1, 1) / 4.0);
+        let r64 = e2e(MappingKind::AttAcc1, 64) / e2e(MappingKind::Halo1, 64);
+        assert!(r64 < 1.3, "AttAcc competitive at batch 64: ratio {r64}");
+    }
+}

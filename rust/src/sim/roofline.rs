@@ -1,0 +1,120 @@
+//! Roofline analysis (Fig. 1): arithmetic intensity vs attainable
+//! throughput of every GEMM/GEMV in a phase on a given engine.
+
+use crate::arch::MatmulEngine;
+use crate::model::OpGraph;
+
+/// One point on the roofline plot.
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    pub kind: &'static str,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// FLOP per byte.
+    pub intensity: f64,
+    /// min(peak, bw * AI), FLOP/s.
+    pub attainable_flops: f64,
+    /// Whether the op sits in the compute-bound region.
+    pub compute_bound: bool,
+}
+
+/// Roofline parameters of an engine (FLOP/s peak, B/s slope).
+#[derive(Debug, Clone, Copy)]
+pub struct Roofline {
+    pub peak_flops: f64,
+    pub stream_bw: f64,
+}
+
+impl Roofline {
+    pub fn of(engine: &dyn MatmulEngine) -> Self {
+        Roofline { peak_flops: 2.0 * engine.peak_macs(), stream_bw: engine.stream_bw() }
+    }
+
+    /// Ridge point: intensity where memory and compute bounds meet.
+    pub fn ridge(&self) -> f64 {
+        self.peak_flops / self.stream_bw
+    }
+
+    pub fn attainable(&self, intensity: f64) -> f64 {
+        (intensity * self.stream_bw).min(self.peak_flops)
+    }
+}
+
+/// Compute roofline points for all matmul ops of a graph.
+pub fn roofline_points(graph: &OpGraph, rf: &Roofline, dtype_bytes: usize) -> Vec<RooflinePoint> {
+    graph
+        .matmul_ops()
+        .map(|op| {
+            let ai = op.arithmetic_intensity(dtype_bytes);
+            RooflinePoint {
+                kind: op.kind.name(),
+                m: op.m,
+                k: op.k,
+                n: op.n,
+                intensity: ai,
+                attainable_flops: rf.attainable(ai),
+                compute_bound: ai >= rf.ridge(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::cim::CimEngine;
+    use crate::config::HwConfig;
+    use crate::model::{build_decode_graph, build_prefill_graph, LlmConfig};
+
+    #[test]
+    fn fig1_prefill_compute_bound_decode_memory_bound() {
+        // the paper's Fig. 1: L_in=512 prefill GEMMs approach the compute
+        // roof; decode (BS=1) ops are all memory-bound
+        let hw = HwConfig::paper();
+        let m = LlmConfig::llama2_7b();
+        let rf = Roofline::of(&CimEngine::new(&hw));
+        assert!(rf.ridge() > 10.0 && rf.ridge() < 500.0, "ridge {}", rf.ridge());
+
+        let pre = roofline_points(&build_prefill_graph(&m, 512, 1), &rf, 1);
+        let weight_gemms: Vec<_> = pre
+            .iter()
+            .filter(|p| !matches!(p.kind, "attn_score" | "attn_value" | "lm_head"))
+            .collect();
+        assert!(weight_gemms.iter().all(|p| p.compute_bound), "{weight_gemms:?}");
+
+        let dec = roofline_points(&build_decode_graph(&m, 512, 1), &rf, 1);
+        assert!(dec.iter().all(|p| !p.compute_bound));
+    }
+
+    #[test]
+    fn fig1_bs16_attention_stays_memory_bound() {
+        // batching pushes weight GEMVs toward compute; attention stays
+        // memory-bound (per-sequence KV)
+        let hw = HwConfig::paper();
+        let m = LlmConfig::llama2_7b();
+        let rf = Roofline::of(&CimEngine::new(&hw));
+        let dec = roofline_points(&build_decode_graph(&m, 512, 16), &rf, 1);
+        for p in &dec {
+            if matches!(p.kind, "attn_score" | "attn_value") {
+                assert!(!p.compute_bound, "{p:?}");
+                assert!(p.intensity < 5.0);
+            }
+        }
+        // weight ops at BS=16 have 16x the intensity of BS=1
+        let b1 = roofline_points(&build_decode_graph(&m, 512, 1), &rf, 1);
+        let ai = |pts: &[RooflinePoint], kind: &str| {
+            pts.iter().find(|p| p.kind == kind).unwrap().intensity
+        };
+        let r = ai(&dec, "ffn_up") / ai(&b1, "ffn_up");
+        assert!(r > 10.0 && r < 18.0, "{r}");
+    }
+
+    #[test]
+    fn attainable_clamps_at_peak() {
+        let rf = Roofline { peak_flops: 100.0, stream_bw: 10.0 };
+        assert_eq!(rf.ridge(), 10.0);
+        assert_eq!(rf.attainable(5.0), 50.0);
+        assert_eq!(rf.attainable(50.0), 100.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs `[[bench]]` targets with `harness = false`; each
+//! target builds a [`BenchSuite`], registers closures, and calls `run()`,
+//! which warms up, samples wall-clock time, and prints mean / stddev /
+//! p50 / p95 per benchmark plus an optional throughput line.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+    pub throughput_items: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        crate::util::mean(&self.samples)
+    }
+    pub fn stddev(&self) -> f64 {
+        crate::util::stddev(&self.samples)
+    }
+    pub fn p50(&self) -> f64 {
+        crate::util::percentile(&self.samples, 50.0)
+    }
+    pub fn p95(&self) -> f64 {
+        crate::util::percentile(&self.samples, 95.0)
+    }
+}
+
+pub struct BenchSuite {
+    title: String,
+    min_samples: usize,
+    max_samples: usize,
+    target_time: Duration,
+    warmup: Duration,
+    results: Vec<BenchResult>,
+    filter: Option<String>,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> Self {
+        // honor `cargo bench -- <filter>`
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        BenchSuite {
+            title: title.to_string(),
+            min_samples: 10,
+            max_samples: 200,
+            target_time: Duration::from_secs(2),
+            warmup: Duration::from_millis(300),
+            results: Vec::new(),
+            filter,
+        }
+    }
+
+    pub fn with_target_time(mut self, d: Duration) -> Self {
+        self.target_time = d;
+        self
+    }
+
+    /// Benchmark `f`; one sample per call.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) {
+        self.bench_items(name, None, &mut f)
+    }
+
+    /// Benchmark with a throughput denominator (items per iteration).
+    pub fn bench_throughput(&mut self, name: &str, items: f64, mut f: impl FnMut()) {
+        self.bench_items(name, Some(items), &mut f)
+    }
+
+    fn bench_items(&mut self, name: &str, items: Option<f64>, f: &mut dyn FnMut()) {
+        if let Some(filt) = &self.filter {
+            if !name.contains(filt.as_str()) {
+                return;
+            }
+        }
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::new();
+        let t0 = Instant::now();
+        while samples.len() < self.min_samples
+            || (t0.elapsed() < self.target_time && samples.len() < self.max_samples)
+        {
+            let s = Instant::now();
+            black_box(f());
+            samples.push(s.elapsed().as_secs_f64());
+        }
+        let r = BenchResult { name: name.to_string(), samples, throughput_items: items };
+        print_result(&r);
+        self.results.push(r);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn finish(self) {
+        println!(
+            "\n[{}] {} benchmarks done",
+            self.title,
+            self.results.len()
+        );
+    }
+}
+
+fn print_result(r: &BenchResult) {
+    let mut line = format!(
+        "{:<44} {:>12}/iter  (sd {:>10}, p95 {:>10}, n={})",
+        r.name,
+        crate::util::fmt_seconds(r.mean()),
+        crate::util::fmt_seconds(r.stddev()),
+        crate::util::fmt_seconds(r.p95()),
+        r.samples.len()
+    );
+    if let Some(items) = r.throughput_items {
+        line.push_str(&format!("  [{:.1} items/s]", items / r.mean()));
+    }
+    println!("{line}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut s = BenchSuite::new("t").with_target_time(Duration::from_millis(50));
+        s.warmup = Duration::from_millis(5);
+        let mut n = 0u64;
+        s.bench("noop", || {
+            n = n.wrapping_add(1);
+        });
+        assert!(!s.results().is_empty());
+        assert!(s.results()[0].samples.len() >= 10);
+        assert!(s.results()[0].mean() >= 0.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` generated inputs
+//! and, on failure, greedily shrinks using the generator's `shrink` before
+//! panicking with the minimal counterexample.
+
+use super::Rng;
+use std::fmt::Debug;
+
+/// A generator of random values plus a shrinking strategy.
+pub trait Gen {
+    type Value: Clone + Debug;
+    fn gen(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values; empty when fully shrunk.
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Uniform usize in [lo, hi] with halving shrink toward lo.
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn gen(&self, rng: &mut Rng) -> usize {
+        rng.range(self.0 as u64, self.1 as u64 + 1) as usize
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            let mid = self.0 + (*v - self.0) / 2;
+            if mid != *v && mid != self.0 {
+                out.push(mid);
+            }
+            if *v - 1 != mid && *v - 1 >= self.0 {
+                out.push(*v - 1);
+            }
+        }
+        out
+    }
+}
+
+/// Pick uniformly from a fixed slice (shrinks toward the first element).
+pub struct OneOf<T: Clone + Debug + 'static>(pub &'static [T]);
+
+impl<T: Clone + Debug + PartialEq + 'static> Gen for OneOf<T> {
+    type Value = T;
+    fn gen(&self, rng: &mut Rng) -> T {
+        self.0[rng.below(self.0.len() as u64) as usize].clone()
+    }
+    fn shrink(&self, v: &T) -> Vec<T> {
+        if self.0.first() != Some(v) {
+            vec![self.0[0].clone()]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Pair of generators.
+pub struct Pair<A: Gen, B: Gen>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn gen(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.gen(rng), self.1.gen(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Triple of generators.
+pub struct Triple<A: Gen, B: Gen, C: Gen>(pub A, pub B, pub C);
+
+impl<A: Gen, B: Gen, C: Gen> Gen for Triple<A, B, C> {
+    type Value = (A::Value, B::Value, C::Value);
+    fn gen(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.gen(rng), self.1.gen(rng), self.2.gen(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone(), v.2.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b, v.2.clone())));
+        out.extend(self.2.shrink(&v.2).into_iter().map(|c| (v.0.clone(), v.1.clone(), c)));
+        out
+    }
+}
+
+/// Run `prop` over `cases` random inputs; shrink and panic on failure.
+pub fn forall<G: Gen>(seed: u64, cases: usize, gen: G, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.gen(&mut rng);
+        if !prop(&v) {
+            // greedy shrink
+            let mut cur = v;
+            'outer: loop {
+                for cand in gen.shrink(&cur) {
+                    if !prop(&cand) {
+                        cur = cand;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!("property failed on case {case}: minimal counterexample {cur:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(1, 200, Pair(UsizeIn(1, 100), UsizeIn(1, 100)), |(a, b)| a + b >= *a.max(b));
+    }
+
+    #[test]
+    fn shrinks_to_minimal() {
+        let res = std::panic::catch_unwind(|| {
+            forall(1, 500, UsizeIn(0, 1000), |v| *v < 50);
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        // greedy shrink should land on exactly 50 (smallest failing value)
+        assert!(msg.contains("counterexample 50"), "{msg}");
+    }
+
+    #[test]
+    fn one_of_generates_members() {
+        let g = OneOf(&[2usize, 4, 8]);
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            assert!([2, 4, 8].contains(&g.gen(&mut rng)));
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Runtime integration tests: manifest + weights + PJRT round-trips over
+//! the real artifacts. Skipped (pass vacuously) when `make artifacts` has
+//! not run — CI for the analytical plane must not require jax.
+
+use std::path::{Path, PathBuf};
+
+use halo::runtime::{Dtype, HostTensor, Manifest, Runtime, Weights};
+
+fn artifacts() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(p) => p,
+            None => {
+                eprintln!("skipping: artifacts/ not built");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_and_weights_agree_with_model_shapes() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let w = Weights::load(&m).unwrap();
+    assert_eq!(w.tensors.len(), m.params.len());
+    // first param is the embedding (vocab, d_model)
+    let vocab = m.config_usize("vocab").unwrap();
+    let d = m.config_usize("d_model").unwrap();
+    assert_eq!(m.params[0].shape, vec![vocab, d]);
+    assert_eq!(m.params[0].name, "embed");
+    // parameter blob is densely packed
+    let total: usize = m.params.iter().map(|p| p.nelems * 4).sum();
+    assert_eq!(std::fs::metadata(dir.join("weights.bin")).unwrap().len() as usize, total);
+}
+
+#[test]
+fn manifest_entries_have_consistent_signatures() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    for (name, e) in &m.entries {
+        assert!(dir.join(&e.hlo_file).exists(), "{name} hlo missing");
+        assert!(e.n_params <= e.inputs.len());
+        // every testvec file exists and matches its signature's byte size
+        for (f, spec) in e.testvec_inputs.iter().zip(&e.inputs[e.n_params..]) {
+            let sz = std::fs::metadata(dir.join("testvec").join(f)).unwrap().len() as usize;
+            assert_eq!(sz, spec.nbytes(), "{name}/{f}");
+        }
+        for (f, spec) in e.testvec_outputs.iter().zip(&e.outputs) {
+            let sz = std::fs::metadata(dir.join("testvec").join(f)).unwrap().len() as usize;
+            assert_eq!(sz, spec.nbytes(), "{name}/{f}");
+        }
+    }
+}
+
+#[test]
+fn cid_kernel_roundtrip_is_exact() {
+    // int8 GEMV through HLO text -> PJRT equals the python-side vector
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let spec = rt.manifest.entry("cid_gemv_4x256x512").unwrap().clone();
+    let exe = rt.compile("cid_gemv_4x256x512").unwrap();
+    let inputs: Vec<HostTensor> = spec
+        .testvec_inputs
+        .iter()
+        .zip(&spec.inputs[spec.n_params..])
+        .map(|(f, s)| rt.manifest.load_testvec(f, s).unwrap())
+        .collect();
+    let outs = exe.run(&inputs).unwrap();
+    let want = rt
+        .manifest
+        .load_testvec(&spec.testvec_outputs[0], &spec.outputs[0])
+        .unwrap();
+    assert_eq!(outs[0], want, "digital path must be bit-exact");
+}
+
+#[test]
+fn cid_kernel_matches_host_reference() {
+    // independent check: recompute the int8 GEMM on the host in Rust
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let spec = rt.manifest.entry("cid_gemv_4x256x512").unwrap().clone();
+    let x = rt.manifest.load_testvec(&spec.testvec_inputs[0], &spec.inputs[0]).unwrap();
+    let w = rt.manifest.load_testvec(&spec.testvec_inputs[1], &spec.inputs[1]).unwrap();
+    let want = rt.manifest.load_testvec(&spec.testvec_outputs[0], &spec.outputs[0]).unwrap();
+    let (m, k) = (x.spec.shape[0], x.spec.shape[1]);
+    let n = w.spec.shape[1];
+    let xs = x.as_i8().unwrap();
+    let ws = w.as_i8().unwrap();
+    let mut host = vec![0i32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let xv = xs[i * k + kk] as i32;
+            for j in 0..n {
+                host[i * n + j] += xv * ws[kk * n + j] as i32;
+            }
+        }
+    }
+    assert_eq!(host, want.as_i32().unwrap());
+}
+
+#[test]
+fn prefill_ideal_deterministic_across_runs() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let name = "prefill_ideal_b1_s16";
+    let spec = rt.manifest.entry(name).unwrap().clone();
+    let exe = rt.compile(name).unwrap();
+    let inputs: Vec<HostTensor> = spec
+        .testvec_inputs
+        .iter()
+        .zip(&spec.inputs[spec.n_params..])
+        .map(|(f, s)| rt.manifest.load_testvec(f, s).unwrap())
+        .collect();
+    let a = exe.run(&inputs).unwrap();
+    let b = exe.run(&inputs).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x, y);
+    }
+    assert_eq!(a[0].spec.dtype, Dtype::F32);
+}
+
+#[test]
+fn decode_entry_shape_contract() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let e = m.entry("decode_b4").unwrap();
+    let nl = m.config_usize("n_layers").unwrap();
+    let s = m.config_usize("max_seq").unwrap();
+    let kvh = m.config_usize("n_kv_heads").unwrap();
+    let hd = m.config_usize("head_dim").unwrap();
+    let np = e.n_params;
+    assert_eq!(e.inputs[np].shape, vec![4]); // tokens
+    assert_eq!(e.inputs[np + 1].shape, vec![4]); // pos
+    assert_eq!(e.inputs[np + 2].shape, vec![nl, 4, s, kvh, hd]); // K
+    assert_eq!(e.outputs[1].shape, vec![nl, 4, s, kvh, hd]); // K'
+}

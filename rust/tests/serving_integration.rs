@@ -1,0 +1,91 @@
+//! Serving-stack integration tests over the real PJRT engine: slot
+//! isolation, determinism, continuous batching, and phase-aware
+//! correctness of the coordinator. Skipped when artifacts are absent.
+//!
+//! PJRT compiles are the slow part, so all cases share one engine through
+//! a serial test (the engine is deliberately not Sync).
+
+use std::path::{Path, PathBuf};
+
+use halo::coordinator::{InferenceEngine, Request, Server};
+
+fn artifacts() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+fn prompt(seed: u64, len: usize, vocab: usize) -> Vec<i32> {
+    let mut rng = halo::util::Rng::new(seed);
+    (0..len).map(|_| rng.below(vocab as u64) as i32).collect()
+}
+
+#[test]
+fn serving_stack_end_to_end() {
+    let dir = match artifacts() {
+        Some(p) => p,
+        None => {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+    };
+    let engine = InferenceEngine::load(&dir, 4).expect("engine load");
+    let vocab = engine.vocab;
+    let mut server = Server::new(engine);
+
+    // --- determinism: same prompt twice produces identical tokens -------
+    let p1 = prompt(1, 9, vocab);
+    server.submit(Request::new(100, p1.clone(), 6));
+    let (r1, _) = server.run_to_completion().unwrap();
+    server.submit(Request::new(101, p1.clone(), 6));
+    let (r2, _) = server.run_to_completion().unwrap();
+    assert_eq!(r1[0].tokens, r2[0].tokens, "greedy generation must be deterministic");
+    assert_eq!(r1[0].tokens.len(), 6);
+    assert!(r1[0].tokens.iter().all(|t| (0..vocab as i32).contains(t)));
+
+    // --- slot isolation: result is batch-composition independent --------
+    let p2 = prompt(2, 12, vocab);
+    let p3 = prompt(3, 5, vocab);
+    server.submit(Request::new(200, p2.clone(), 5));
+    let (alone, _) = server.run_to_completion().unwrap();
+    server.submit(Request::new(201, p2.clone(), 5));
+    server.submit(Request::new(202, p3.clone(), 7));
+    server.submit(Request::new(203, prompt(4, 7, vocab), 4));
+    let (together, _) = server.run_to_completion().unwrap();
+    let t201 = together.iter().find(|r| r.id == 201).unwrap();
+    assert_eq!(
+        alone[0].tokens, t201.tokens,
+        "a sequence's output must not depend on its batch-mates"
+    );
+
+    // --- continuous batching: more requests than slots ------------------
+    for id in 0..7u64 {
+        server.submit(Request::new(300 + id, prompt(10 + id, 4 + id as usize, vocab), 3));
+    }
+    let (many, stats) = server.run_to_completion().unwrap();
+    assert_eq!(many.len(), 7);
+    let mut ids: Vec<u64> = many.iter().map(|r| r.id).collect();
+    ids.sort();
+    assert_eq!(ids, (300..307).collect::<Vec<_>>());
+    assert!(many.iter().all(|r| r.tokens.len() == 3));
+    assert!(stats.requests == 7 && stats.generated_tokens == 21);
+    assert!(stats.execute_fraction() > 0.5, "PJRT should dominate wall time");
+
+    // --- prompt-length ladder: both prefill sizes exercised -------------
+    let long = prompt(20, 40, vocab); // > 16 -> uses the s64 executable
+    server.submit(Request::new(400, long, 2));
+    let (r, _) = server.run_to_completion().unwrap();
+    assert_eq!(r[0].tokens.len(), 2);
+
+    // --- max_new_tokens == 1: satisfied by prefill alone -----------------
+    server.submit(Request::new(500, prompt(30, 6, vocab), 1));
+    let (r, stats) = server.run_to_completion().unwrap();
+    assert_eq!(r[0].tokens.len(), 1);
+    assert_eq!(stats.decode_steps, 0);
+
+    // --- oversized prompt is rejected, not wedged ------------------------
+    server.submit(Request::new(600, prompt(40, 200, vocab), 2));
+    server.submit(Request::new(601, prompt(41, 6, vocab), 2));
+    let (r, _) = server.run_to_completion().unwrap();
+    assert_eq!(r.len(), 1, "only the well-sized request completes");
+    assert_eq!(r[0].id, 601);
+}

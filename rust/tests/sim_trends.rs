@@ -1,0 +1,212 @@
+//! Integration tests over the analytical plane: cross-module trends that
+//! the paper's figures depend on, plus property tests on simulator
+//! invariants (monotonicity, normalization, conservation).
+
+use halo::config::HwConfig;
+use halo::mapping::MappingKind;
+use halo::model::{LlmConfig, Phase};
+use halo::report;
+use halo::sim::{simulate_e2e, simulate_phase, Scenario};
+use halo::util::prop::{forall, OneOf, Triple, UsizeIn};
+use halo::util::geomean;
+
+fn hw() -> HwConfig {
+    HwConfig::paper()
+}
+
+const ALL_MAPPINGS: [MappingKind; 8] = [
+    MappingKind::Cent,
+    MappingKind::AttAcc1,
+    MappingKind::AttAcc2,
+    MappingKind::Halo1,
+    MappingKind::Halo2,
+    MappingKind::FullCid,
+    MappingKind::FullCim,
+    MappingKind::HaloSa,
+];
+
+#[test]
+fn e2e_latency_monotone_in_context_for_all_mappings() {
+    let m = LlmConfig::llama2_7b();
+    forall(
+        3,
+        50,
+        Triple(UsizeIn(64, 4096), UsizeIn(64, 2048), OneOf(&ALL_MAPPINGS)),
+        |(l_in, l_out, mk)| {
+            let a = simulate_e2e(&m, &hw(), *mk, &Scenario { l_in: *l_in, l_out: *l_out, batch: 1 });
+            let b = simulate_e2e(
+                &m,
+                &hw(),
+                *mk,
+                &Scenario { l_in: l_in + 64, l_out: *l_out, batch: 1 },
+            );
+            let c = simulate_e2e(
+                &m,
+                &hw(),
+                *mk,
+                &Scenario { l_in: *l_in, l_out: l_out + 64, batch: 1 },
+            );
+            a.e2e_latency() <= b.e2e_latency() + 1e-12
+                && a.e2e_latency() <= c.e2e_latency() + 1e-12
+                && a.e2e_energy() <= b.e2e_energy() + 1e-9
+                && a.e2e_energy() <= c.e2e_energy() + 1e-9
+        },
+    );
+}
+
+#[test]
+fn latency_and_energy_always_positive_and_finite() {
+    let q = LlmConfig::qwen3_8b();
+    forall(
+        11,
+        40,
+        Triple(UsizeIn(1, 8192), UsizeIn(1, 4096), OneOf(&ALL_MAPPINGS)),
+        |(l_in, l_out, mk)| {
+            let r = simulate_e2e(&q, &hw(), *mk, &Scenario { l_in: *l_in, l_out: *l_out, batch: 1 });
+            let vals = [r.ttft(), r.tpot(), r.e2e_latency(), r.e2e_energy()];
+            vals.iter().all(|v| v.is_finite() && *v > 0.0)
+        },
+    );
+}
+
+#[test]
+fn batch_increases_throughput_never_per_batch_latency_decrease() {
+    // more sequences never finish faster in aggregate latency, but
+    // per-sequence throughput improves (or stays flat) for every mapping
+    let m = LlmConfig::llama2_7b();
+    forall(7, 30, Triple(UsizeIn(1, 32), UsizeIn(64, 1024), OneOf(&ALL_MAPPINGS)), |(b, l, mk)| {
+        let sc1 = Scenario { l_in: *l, l_out: 256, batch: *b };
+        let sc2 = Scenario { l_in: *l, l_out: 256, batch: b * 2 };
+        let r1 = simulate_e2e(&m, &hw(), *mk, &sc1);
+        let r2 = simulate_e2e(&m, &hw(), *mk, &sc2);
+        r2.e2e_latency() + 1e-12 >= r1.e2e_latency()
+            && r2.e2e_latency() / (2.0 * b.max(&1) .clone() as f64)
+                <= r1.e2e_latency() / *b as f64 + 1e-9
+    });
+}
+
+#[test]
+fn phase_aware_mapping_dominates_both_extremes() {
+    // HALO1 should never lose to Fully-CiD or Fully-CiM on e2e latency
+    let m = LlmConfig::llama2_7b();
+    for (l_in, l_out) in report::context_grid() {
+        let sc = Scenario { l_in, l_out, batch: 1 };
+        let halo = simulate_e2e(&m, &hw(), MappingKind::Halo1, &sc).e2e_latency();
+        let cid = simulate_e2e(&m, &hw(), MappingKind::FullCid, &sc).e2e_latency();
+        let cim = simulate_e2e(&m, &hw(), MappingKind::FullCim, &sc).e2e_latency();
+        assert!(halo <= cid * 1.0001 && halo <= cim * 1.0001, "({l_in},{l_out})");
+    }
+}
+
+#[test]
+fn fig7_headline_bands_hold_for_both_models() {
+    // abstract claims: up to 18x vs AttAcc, 2.5x vs CENT; geomeans land in
+    // the published bands for BOTH evaluated models
+    for m in [LlmConfig::llama2_7b(), LlmConfig::qwen3_8b()] {
+        let mut vs_att = Vec::new();
+        let mut vs_cent = Vec::new();
+        for (l_in, l_out) in report::context_grid() {
+            let sc = Scenario { l_in, l_out, batch: 1 };
+            let halo = simulate_e2e(&m, &hw(), MappingKind::Halo1, &sc).e2e_latency();
+            vs_att.push(simulate_e2e(&m, &hw(), MappingKind::AttAcc1, &sc).e2e_latency() / halo);
+            vs_cent.push(simulate_e2e(&m, &hw(), MappingKind::Cent, &sc).e2e_latency() / halo);
+        }
+        let ga = geomean(&vs_att);
+        let gc = geomean(&vs_cent);
+        assert!(ga > 10.0 && ga < 35.0, "{}: vs AttAcc1 {ga} (paper 18x)", m.name);
+        assert!(gc > 1.5 && gc < 4.0, "{}: vs CENT {gc} (paper 2.4x)", m.name);
+    }
+}
+
+#[test]
+fn attacc_beats_halo_only_at_high_batch() {
+    // Fig. 9 crossover: HALO1 wins up to batch 32, AttAcc1 by batch 64
+    let m = LlmConfig::llama2_7b();
+    let e2e = |mk: MappingKind, b: usize| {
+        simulate_e2e(&m, &hw(), mk, &Scenario { l_in: 128, l_out: 2048, batch: b }).e2e_latency()
+    };
+    for b in [1usize, 2, 4, 8, 16, 32] {
+        assert!(e2e(MappingKind::Halo1, b) < e2e(MappingKind::AttAcc1, b), "batch {b}");
+    }
+    assert!(e2e(MappingKind::AttAcc1, 64) < e2e(MappingKind::Halo1, 64));
+}
+
+#[test]
+fn wordline_ablation_monotone() {
+    // more aggressive wordline throttling monotonically slows prefill
+    let m = LlmConfig::llama2_7b();
+    let mut last = 0.0;
+    for wl in [128usize, 64, 32, 16] {
+        let mut hwc = hw();
+        hwc.cim = hwc.cim.clone().with_wordlines(wl);
+        let r = simulate_phase(&m, &hwc, MappingKind::FullCim, Phase::Prefill, 2048, 1);
+        assert!(r.latency >= last, "wl {wl}");
+        last = r.latency;
+    }
+}
+
+#[test]
+fn gb_bandwidth_ablation_decode_bound() {
+    // fully-CiM decode is interposer/write bound: halving GB bandwidth
+    // must hurt it, while CiD decode is unaffected
+    let m = LlmConfig::llama2_7b();
+    let mut slow = hw();
+    // /8 pushes the per-round fill time past the crossbar-write bound
+    slow.cim.gb_bw /= 8.0;
+    slow.interposer.bw /= 8.0;
+    let fast_cim = simulate_phase(&m, &hw(), MappingKind::FullCim, Phase::Decode, 1024, 1);
+    let slow_cim = simulate_phase(&m, &slow, MappingKind::FullCim, Phase::Decode, 1024, 1);
+    assert!(slow_cim.latency > 1.5 * fast_cim.latency);
+    let fast_cid = simulate_phase(&m, &hw(), MappingKind::FullCid, Phase::Decode, 1024, 1);
+    let slow_cid = simulate_phase(&m, &slow, MappingKind::FullCid, Phase::Decode, 1024, 1);
+    assert!((slow_cid.latency / fast_cid.latency - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn figure_tables_are_complete_and_consistent() {
+    let tables = report::all_figures(&hw());
+    assert_eq!(tables.len(), 8);
+    for t in &tables {
+        assert!(!t.rows.is_empty(), "{} empty", t.name);
+        for r in &t.rows {
+            assert_eq!(r.len(), t.headers.len(), "{} arity", t.name);
+        }
+    }
+    // fig10: HALO-SA normalizes to itself
+    let f10 = &tables[6];
+    assert_eq!(f10.name, "fig10_cim_vs_sa");
+    for row in f10.rows.iter().filter(|r| r[2] == "HALO-SA") {
+        let norm: f64 = row[4].parse().unwrap();
+        assert!((norm - 1.0).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn kv_cache_pressure_shows_in_decode_latency() {
+    // decode TPOT grows with context (attention streams the KV cache)
+    let m = LlmConfig::llama2_7b();
+    let t = |ctx: usize| {
+        simulate_phase(&m, &hw(), MappingKind::Halo1, Phase::Decode, ctx, 1).latency
+    };
+    assert!(t(8192) > t(512) * 1.2);
+    // and GQA (qwen) reduces the KV growth rate relative to MHA
+    let q = LlmConfig::qwen3_8b();
+    let tq = |ctx: usize| {
+        simulate_phase(&q, &hw(), MappingKind::Halo1, Phase::Decode, ctx, 1).latency
+    };
+    let llama_growth = t(8192) - t(512);
+    let qwen_growth = tq(8192) - tq(512);
+    assert!(qwen_growth < llama_growth, "GQA must shrink KV traffic growth");
+}
+
+#[test]
+fn energy_conservation_across_breakdowns() {
+    let m = LlmConfig::qwen3_8b();
+    forall(5, 20, Triple(UsizeIn(64, 4096), UsizeIn(64, 1024), OneOf(&ALL_MAPPINGS)), |(li, lo, mk)| {
+        let r = simulate_e2e(&m, &hw(), *mk, &Scenario { l_in: *li, l_out: *lo, batch: 1 });
+        let by_kind: f64 = r.prefill.by_kind.values().map(|c| c.energy).sum();
+        let by_engine: f64 = r.prefill.by_engine.values().map(|c| c.energy).sum();
+        (by_kind / r.prefill.energy - 1.0).abs() < 1e-9
+            && (by_engine / r.prefill.energy - 1.0).abs() < 1e-9
+    });
+}
