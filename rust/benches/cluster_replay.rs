@@ -1,0 +1,47 @@
+//! Microbenchmarks of the cluster plane: trace generation, single-device
+//! cycle stepping, and whole-fleet replays under each routing policy.
+//! The fleet replay loop is the hot path the `halo cluster` CLI and the
+//! cluster report tables sit on.
+
+use halo::cluster::{Interconnect, Mix, Policy};
+use halo::config::HwConfig;
+use halo::model::LlmConfig;
+use halo::sim::queueing::replay_trace;
+use halo::mapping::MappingKind;
+use halo::util::bench::{bb, BenchSuite};
+
+fn main() {
+    let hw = HwConfig::paper();
+    let llm = LlmConfig::llama2_7b();
+    let mut s = BenchSuite::new("cluster_replay");
+
+    s.bench("interactive_trace_1k", || {
+        bb(Mix::Interactive.trace(7, 1000, 50.0));
+    });
+
+    // the refactored single-device core (regression guard vs the fleet)
+    let tr1 = Mix::Chat.trace(11, 96, 1.0e6);
+    s.bench_throughput("replay_trace_single_device_burst", tr1.len() as f64, || {
+        bb(replay_trace(&llm, &hw, MappingKind::Halo1, 8, &tr1));
+    });
+
+    let trace = Mix::Interactive.trace(13, 160, 40.0);
+    for policy in Policy::all() {
+        let name = format!("fleet8_replay_{}", policy.name());
+        s.bench_throughput(&name, trace.len() as f64, || {
+            let (mut fleet, mut router) =
+                policy.build(&llm, &hw, 8, 8, 0.5, Interconnect::board());
+            bb(fleet.replay(&trace, router.as_mut()));
+        });
+    }
+
+    // disaggregated replay with an interconnect slow enough that KV
+    // transfers dominate (more in-flight handoffs -> more events)
+    s.bench_throughput("fleet8_replay_disaggregated_wan", trace.len() as f64, || {
+        let (mut fleet, mut router) =
+            Policy::PhaseDisaggregated.build(&llm, &hw, 8, 8, 0.5, Interconnect::wan());
+        bb(fleet.replay(&trace, router.as_mut()));
+    });
+
+    s.finish();
+}

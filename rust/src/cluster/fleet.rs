@@ -1,0 +1,353 @@
+//! A fleet of HALO devices advanced in global event order.
+//!
+//! Each device is an independent [`Device`] state machine with its own
+//! clock; the fleet interleaves three event sources — trace arrivals,
+//! KV-handoff deliveries, and device scheduling cycles — always taking
+//! the earliest. Requests routed with distinct prefill/decode devices
+//! incur a KV-cache transfer over the [`Interconnect`] between the
+//! prefill's completion and the decode admission.
+
+use super::interconnect::{kv_transfer_bytes, Interconnect};
+use super::router::Router;
+use crate::config::HwConfig;
+use crate::mapping::MappingKind;
+use crate::model::LlmConfig;
+use crate::sim::device::{Device, DeviceJob};
+use crate::sim::queueing::{
+    e2e_percentile, served_rate, ttft_percentile, ServedRequest, TraceRequest,
+};
+
+/// A KV cache in flight between a prefill device and a decode device.
+#[derive(Debug, Clone)]
+struct InFlight {
+    ready: f64,
+    dev: usize,
+    arrival: f64,
+    first_token_at: f64,
+    ctx: usize,
+    remaining: usize,
+}
+
+/// N devices, their routing pools, and the link between them.
+pub struct Fleet {
+    pub llm: LlmConfig,
+    pub devices: Vec<Device>,
+    pub interconnect: Interconnect,
+    /// Devices eligible to run prefills (all of them for unified fleets).
+    pub prefill_pool: Vec<usize>,
+    /// Devices eligible to run decode (all of them for unified fleets).
+    pub decode_pool: Vec<usize>,
+    /// KV bytes moved across the interconnect so far.
+    pub kv_bytes: u64,
+    pub transfers: u64,
+    /// Decode work committed by routing but not yet delivered (request
+    /// still in prefill or KV transfer), per device. Without it, burst
+    /// routing would herd every request onto one decode device, since
+    /// `Device::load` only rises once the handoff lands.
+    pending_decode: Vec<usize>,
+}
+
+impl Fleet {
+    /// A homogeneous fleet: every device runs the HALO1 phase-aware
+    /// mapping end-to-end (the monolithic baseline).
+    pub fn unified(
+        llm: &LlmConfig,
+        hw: &HwConfig,
+        devices: usize,
+        slots: usize,
+        interconnect: Interconnect,
+    ) -> Self {
+        assert!(devices > 0);
+        let devs =
+            (0..devices).map(|i| Device::new(llm, hw, MappingKind::Halo1, slots, i)).collect();
+        Fleet {
+            llm: llm.clone(),
+            devices: devs,
+            interconnect,
+            prefill_pool: (0..devices).collect(),
+            decode_pool: (0..devices).collect(),
+            kv_bytes: 0,
+            transfers: 0,
+            pending_decode: vec![0; devices],
+        }
+    }
+
+    /// A phase-disaggregated fleet: a Fully-CiM prefill pool feeding a
+    /// Fully-CiD decode pool (Table II taken to cluster scale).
+    /// `prefill_frac` of the devices (at least one, at most n-1) prefill.
+    pub fn disaggregated(
+        llm: &LlmConfig,
+        hw: &HwConfig,
+        devices: usize,
+        slots: usize,
+        prefill_frac: f64,
+        interconnect: Interconnect,
+    ) -> Self {
+        assert!(devices >= 2, "disaggregation needs at least 2 devices");
+        assert!(prefill_frac > 0.0 && prefill_frac < 1.0);
+        let n_pre =
+            ((devices as f64 * prefill_frac).round() as usize).clamp(1, devices - 1);
+        let devs = (0..devices)
+            .map(|i| {
+                let mapping =
+                    if i < n_pre { MappingKind::FullCim } else { MappingKind::FullCid };
+                Device::new(llm, hw, mapping, slots, i)
+            })
+            .collect();
+        Fleet {
+            llm: llm.clone(),
+            devices: devs,
+            interconnect,
+            prefill_pool: (0..n_pre).collect(),
+            decode_pool: (n_pre..devices).collect(),
+            kv_bytes: 0,
+            transfers: 0,
+            pending_decode: vec![0; devices],
+        }
+    }
+
+    /// Decode-side load of a device as a router should see it: queued +
+    /// active work plus decode assignments still in prefill or transfer.
+    pub fn decode_load(&self, dev: usize) -> usize {
+        self.devices[dev].load() + self.pending_decode[dev]
+    }
+
+    /// Serve a trace through the fleet under `router`. Consumes the
+    /// fleet's working state; call once per constructed fleet.
+    pub fn replay(&mut self, trace: &[TraceRequest], router: &mut dyn Router) -> FleetResult {
+        let mut pending = trace.iter().peekable();
+        let mut inflight: Vec<InFlight> = Vec::new();
+        loop {
+            // earliest actionable device
+            let mut best: Option<(f64, usize)> = None;
+            for d in &self.devices {
+                if let Some(t) = d.next_action_time() {
+                    if best.map_or(true, |(bt, _)| t < bt) {
+                        best = Some((t, d.id));
+                    }
+                }
+            }
+            let t_dev = best.map_or(f64::INFINITY, |(t, _)| t);
+            let t_arr = pending.peek().map_or(f64::INFINITY, |r| r.arrival);
+            let t_hand = inflight.iter().map(|h| h.ready).fold(f64::INFINITY, f64::min);
+
+            if t_arr.is_finite() && t_arr <= t_dev && t_arr <= t_hand {
+                // route the next arrival (ties resolve arrival-first, the
+                // single-device replay's "pull arrivals up to now" rule)
+                let req = pending.next().unwrap();
+                let route = router.route(self, req);
+                if route.prefill == route.decode {
+                    self.devices[route.prefill].push(DeviceJob::full(req));
+                } else {
+                    self.pending_decode[route.decode] += 1;
+                    self.devices[route.prefill].push(DeviceJob::PrefillOnly {
+                        arrival: req.arrival,
+                        ready: req.arrival,
+                        l_in: req.l_in,
+                        l_out: req.l_out,
+                        decode_dev: route.decode,
+                    });
+                }
+            } else if t_hand.is_finite() && t_hand <= t_dev {
+                // deliver the earliest completed KV transfer
+                let i = inflight
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.ready.partial_cmp(&b.1.ready).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                let h = inflight.swap_remove(i);
+                self.pending_decode[h.dev] -= 1;
+                self.devices[h.dev].push(DeviceJob::DecodeOnly {
+                    arrival: h.arrival,
+                    ready: h.ready,
+                    first_token_at: h.first_token_at,
+                    ctx: h.ctx,
+                    remaining: h.remaining,
+                });
+            } else if let Some((_, id)) = best {
+                for done in self.devices[id].step_cycle() {
+                    let bytes = kv_transfer_bytes(&self.llm, done.l_in);
+                    self.kv_bytes += bytes;
+                    self.transfers += 1;
+                    inflight.push(InFlight {
+                        ready: done.done_at + self.interconnect.transfer_time(bytes),
+                        dev: done.decode_dev,
+                        arrival: done.arrival,
+                        first_token_at: done.done_at,
+                        ctx: done.l_in,
+                        remaining: done.l_out.saturating_sub(1),
+                    });
+                }
+            } else {
+                break;
+            }
+        }
+        self.collect(trace.len())
+    }
+
+    fn collect(&mut self, n_requests: usize) -> FleetResult {
+        let makespan = self.devices.iter().map(|d| d.now()).fold(0.0, f64::max);
+        let mut served = Vec::new();
+        let mut per_device = Vec::new();
+        for d in &mut self.devices {
+            per_device.push(DeviceSummary {
+                id: d.id,
+                mapping: d.mapping,
+                role: role_of(d.id, &self.prefill_pool, &self.decode_pool),
+                prefills: d.prefills,
+                decode_steps: d.decode_steps,
+                served: d.served.len(),
+                busy: d.busy,
+                last_active: d.now(),
+            });
+            served.append(&mut d.served);
+        }
+        debug_assert_eq!(served.len(), n_requests, "requests conserved");
+        FleetResult {
+            served,
+            makespan,
+            decode_steps: per_device.iter().map(|s| s.decode_steps).sum(),
+            prefills: per_device.iter().map(|s| s.prefills).sum(),
+            kv_bytes: self.kv_bytes,
+            transfers: self.transfers,
+            per_device,
+        }
+    }
+}
+
+fn role_of(id: usize, prefill: &[usize], decode: &[usize]) -> &'static str {
+    match (prefill.contains(&id), decode.contains(&id)) {
+        (true, true) => "unified",
+        (true, false) => "prefill",
+        (false, true) => "decode",
+        (false, false) => "idle",
+    }
+}
+
+/// Per-device share of a fleet replay.
+#[derive(Debug, Clone)]
+pub struct DeviceSummary {
+    pub id: usize,
+    pub mapping: MappingKind,
+    pub role: &'static str,
+    pub prefills: u64,
+    pub decode_steps: u64,
+    pub served: usize,
+    pub busy: f64,
+    pub last_active: f64,
+}
+
+/// Aggregate results of a fleet replay.
+#[derive(Debug, Clone)]
+pub struct FleetResult {
+    pub served: Vec<ServedRequest>,
+    pub makespan: f64,
+    pub decode_steps: u64,
+    pub prefills: u64,
+    pub kv_bytes: u64,
+    pub transfers: u64,
+    pub per_device: Vec<DeviceSummary>,
+}
+
+impl FleetResult {
+    pub fn ttft_p50(&self) -> f64 {
+        ttft_percentile(&self.served, 50.0)
+    }
+    pub fn ttft_p99(&self) -> f64 {
+        ttft_percentile(&self.served, 99.0)
+    }
+    pub fn e2e_p50(&self) -> f64 {
+        e2e_percentile(&self.served, 50.0)
+    }
+    pub fn e2e_p99(&self) -> f64 {
+        e2e_percentile(&self.served, 99.0)
+    }
+    pub fn throughput_rps(&self) -> f64 {
+        served_rate(self.served.len(), self.makespan)
+    }
+    /// Mean device busy fraction over the fleet makespan.
+    pub fn utilization(&self) -> f64 {
+        let busy: f64 = self.per_device.iter().map(|d| d.busy).sum();
+        busy / (self.per_device.len() as f64 * self.makespan.max(1e-12))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::router::{LeastLoaded, PhaseDisaggregated, RoundRobin};
+    use crate::sim::queueing::{poisson_trace, replay_trace};
+
+    fn llm() -> LlmConfig {
+        LlmConfig::llama2_7b()
+    }
+
+    fn hw() -> HwConfig {
+        HwConfig::paper()
+    }
+
+    #[test]
+    fn single_device_fleet_reproduces_replay_trace() {
+        let tr = poisson_trace(21, 40, 4.0, (64, 1024), 32);
+        let single = replay_trace(&llm(), &hw(), MappingKind::Halo1, 4, &tr);
+        let mut fleet = Fleet::unified(&llm(), &hw(), 1, 4, Interconnect::board());
+        let r = fleet.replay(&tr, &mut RoundRobin::default());
+        assert_eq!(r.served.len(), single.served.len());
+        assert_eq!(r.decode_steps, single.decode_steps);
+        assert!((r.makespan - single.makespan).abs() < 1e-12, "{} vs {}", r.makespan, single.makespan);
+        for (a, b) in r.served.iter().zip(&single.served) {
+            assert_eq!(a.arrival, b.arrival);
+            assert!((a.ttft - b.ttft).abs() < 1e-12);
+            assert!((a.e2e - b.e2e).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn unified_fleet_conserves_requests_without_transfers() {
+        let tr = poisson_trace(22, 60, 20.0, (64, 512), 16);
+        let mut fleet = Fleet::unified(&llm(), &hw(), 4, 4, Interconnect::board());
+        let r = fleet.replay(&tr, &mut LeastLoaded);
+        assert_eq!(r.served.len(), 60);
+        assert_eq!(r.transfers, 0);
+        assert_eq!(r.kv_bytes, 0);
+        // least-loaded spreads work across every device
+        assert!(r.per_device.iter().all(|d| d.served > 0), "{:?}", r.per_device);
+    }
+
+    #[test]
+    fn disaggregated_fleet_transfers_every_kv_cache() {
+        let tr = poisson_trace(23, 30, 10.0, (128, 512), 8);
+        let mut fleet = Fleet::disaggregated(&llm(), &hw(), 4, 4, 0.5, Interconnect::board());
+        let r = fleet.replay(&tr, &mut PhaseDisaggregated);
+        assert_eq!(r.served.len(), 30);
+        assert_eq!(r.transfers, 30);
+        let expect: u64 = tr.iter().map(|q| kv_transfer_bytes(&llm(), q.l_in)).sum();
+        assert_eq!(r.kv_bytes, expect);
+        // prefill devices never decode; decode devices never prefill
+        for d in &r.per_device {
+            match d.role {
+                "prefill" => assert!(d.decode_steps == 0 && d.prefills > 0 && d.served == 0),
+                "decode" => assert!(d.prefills == 0 && d.served > 0),
+                other => panic!("unexpected role {other}"),
+            }
+        }
+        for s in &r.served {
+            assert!(s.ttft > 0.0 && s.e2e >= s.ttft);
+        }
+    }
+
+    #[test]
+    fn slow_link_delays_e2e_not_ttft() {
+        let tr = poisson_trace(24, 20, 5.0, (256, 1024), 8);
+        let run = |link: Interconnect| {
+            let mut fleet = Fleet::disaggregated(&llm(), &hw(), 4, 4, 0.5, link);
+            fleet.replay(&tr, &mut PhaseDisaggregated)
+        };
+        let fast = run(Interconnect::board());
+        let slow = run(Interconnect::wan());
+        // TTFT is earned at prefill completion; the link only delays decode
+        assert!((fast.ttft_p50() - slow.ttft_p50()).abs() < 1e-9);
+        assert!(slow.e2e_p50() > fast.e2e_p50() + 0.05, "{} vs {}", slow.e2e_p50(), fast.e2e_p50());
+    }
+}

@@ -1,0 +1,111 @@
+//! Inter-device interconnect model.
+//!
+//! When a request prefills on one device and decodes on another, its KV
+//! cache must cross the fleet interconnect. The model is a simple
+//! latency + size/bandwidth pipe — enough to expose the regime change the
+//! integration tests assert: phase-disaggregated routing wins when the
+//! link is fast relative to decode-step times and loses when KV transfers
+//! dominate end-to-end latency.
+
+use crate::model::LlmConfig;
+
+/// A fleet interconnect: per-transfer latency plus a bandwidth pipe.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Interconnect {
+    pub name: &'static str,
+    /// Link bandwidth, B/s.
+    pub bw: f64,
+    /// Per-transfer latency, s (protocol + switch traversal).
+    pub latency: f64,
+}
+
+impl Interconnect {
+    pub fn new(bw: f64, latency: f64) -> Self {
+        assert!(bw > 0.0 && latency >= 0.0);
+        Interconnect { name: "custom", bw, latency }
+    }
+
+    /// On-board / 2.5D-class link (NVLink-generation bandwidth).
+    pub fn board() -> Self {
+        Interconnect { name: "board", bw: 256.0e9, latency: 2.0e-6 }
+    }
+
+    /// PCIe Gen5 x16-class link.
+    pub fn pcie5() -> Self {
+        Interconnect { name: "pcie5", bw: 64.0e9, latency: 5.0e-6 }
+    }
+
+    /// 100 GbE-class link.
+    pub fn ethernet() -> Self {
+        Interconnect { name: "eth100g", bw: 12.5e9, latency: 50.0e-6 }
+    }
+
+    /// Deliberately slow wide-area-class link (KV transfer dominates).
+    pub fn wan() -> Self {
+        Interconnect { name: "wan", bw: 1.0e9, latency: 1.0e-3 }
+    }
+
+    pub fn by_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "board" | "nvlink" | "fast" => Some(Self::board()),
+            "pcie" | "pcie5" => Some(Self::pcie5()),
+            "eth" | "eth100g" | "ethernet" => Some(Self::ethernet()),
+            "wan" | "slow" => Some(Self::wan()),
+            _ => None,
+        }
+    }
+
+    /// Wall-clock time to move `bytes` across the link.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency + bytes as f64 / self.bw
+    }
+}
+
+/// KV-cache bytes for `ctx` tokens of context:
+/// `2 (K and V) x layers x ctx x kv_heads x head_dim x kv_bytes`.
+pub fn kv_transfer_bytes(llm: &LlmConfig, ctx: usize) -> u64 {
+    llm.kv_bytes_per_token() * ctx as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_is_latency_plus_pipe() {
+        let l = Interconnect::new(1.0e9, 1.0e-3);
+        assert!((l.transfer_time(1_000_000) - (1.0e-3 + 1.0e-3)).abs() < 1e-12);
+        assert!(l.transfer_time(0) == 1.0e-3);
+    }
+
+    #[test]
+    fn presets_order_by_speed() {
+        let bytes = kv_transfer_bytes(&LlmConfig::llama2_7b(), 2048);
+        // llama2-7b: 256 KiB/token -> 512 MiB at 2048 ctx
+        assert_eq!(bytes, 2048 * 2 * 32 * 4096);
+        let t_board = Interconnect::board().transfer_time(bytes);
+        let t_pcie = Interconnect::pcie5().transfer_time(bytes);
+        let t_eth = Interconnect::ethernet().transfer_time(bytes);
+        let t_wan = Interconnect::wan().transfer_time(bytes);
+        assert!(t_board < t_pcie && t_pcie < t_eth && t_eth < t_wan);
+        // the fast link moves a long-context KV cache in milliseconds,
+        // the slow one takes the better part of a second
+        assert!(t_board < 5e-3, "{t_board}");
+        assert!(t_wan > 0.4, "{t_wan}");
+    }
+
+    #[test]
+    fn gqa_shrinks_transfers() {
+        let llama = kv_transfer_bytes(&LlmConfig::llama2_7b(), 1024);
+        let qwen = kv_transfer_bytes(&LlmConfig::qwen3_8b(), 1024);
+        assert!(qwen < llama);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for l in [Interconnect::board(), Interconnect::pcie5(), Interconnect::ethernet(), Interconnect::wan()] {
+            assert_eq!(Interconnect::by_name(l.name), Some(l.clone()));
+        }
+        assert!(Interconnect::by_name("carrier-pigeon").is_none());
+    }
+}

@@ -1,0 +1,33 @@
+//! Cluster-scale serving: a fleet of HALO devices behind a router.
+//!
+//! The paper's core insight — route prefill to the compute-dense CiM die
+//! and decode to the bandwidth-dense CiD substrate — generalizes from
+//! intra-device mapping to inter-device scheduling: a *prefill pool* of
+//! Fully-CiM-mapped devices can feed a *decode pool* of Fully-CiD-mapped
+//! devices over an interconnect that carries the KV cache, the
+//! cluster-level analogue of HALO's Table II phase-aware mapping (and of
+//! disaggregated LLM serving à la DistServe/Splitwise).
+//!
+//! Pieces:
+//! * [`interconnect`] — inter-device link model charging a KV-cache
+//!   transfer (`bytes = 2 x layers x ctx x kv_heads x head_dim`) whenever
+//!   prefill and decode run on different devices;
+//! * [`workload`] — named scenario mixes (chat, summarization,
+//!   generation, interactive) on the Poisson trace machinery;
+//! * [`router`] — pluggable request routing: round-robin, least-loaded,
+//!   and phase-disaggregated (prefill pool -> decode pool);
+//! * [`fleet`] — N independent [`sim::device::Device`](crate::sim::device)
+//!   state machines advanced in global event order.
+//!
+//! Entry points: [`Policy::build`] to construct a (fleet, router) pair and
+//! [`Fleet::replay`] to serve a trace through it.
+
+pub mod fleet;
+pub mod interconnect;
+pub mod router;
+pub mod workload;
+
+pub use fleet::{Fleet, FleetResult};
+pub use interconnect::{kv_transfer_bytes, Interconnect};
+pub use router::{LeastLoaded, PhaseDisaggregated, Policy, Route, Router, RoundRobin};
+pub use workload::Mix;

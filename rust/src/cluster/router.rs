@@ -1,0 +1,222 @@
+//! Pluggable request routing across a fleet.
+//!
+//! A router decides, at arrival time, which device runs a request's
+//! prefill and which runs its decode. Unified policies (round-robin,
+//! least-loaded) keep both phases on one device; the phase-disaggregated
+//! policy splits them across the prefill and decode pools, incurring a
+//! KV-cache transfer over the fleet interconnect.
+
+use super::fleet::Fleet;
+use super::interconnect::Interconnect;
+use crate::config::HwConfig;
+use crate::model::LlmConfig;
+use crate::sim::queueing::TraceRequest;
+
+/// A routing decision: prefill device and decode device (equal indices
+/// mean the whole request stays on one device — no KV transfer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Route {
+    pub prefill: usize,
+    pub decode: usize,
+}
+
+/// Request-routing policy over a fleet.
+pub trait Router {
+    fn name(&self) -> &'static str;
+    /// Route one arriving request given the current fleet state.
+    fn route(&mut self, fleet: &Fleet, req: &TraceRequest) -> Route;
+}
+
+/// Blind round-robin over the prefill pool; decode stays local.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl Router for RoundRobin {
+    fn name(&self) -> &'static str {
+        "roundrobin"
+    }
+    fn route(&mut self, fleet: &Fleet, _req: &TraceRequest) -> Route {
+        let pool = &fleet.prefill_pool;
+        let dev = pool[self.next % pool.len()];
+        self.next = self.next.wrapping_add(1);
+        Route { prefill: dev, decode: dev }
+    }
+}
+
+/// Join-the-shortest-queue over the prefill pool (queue + active slots);
+/// decode stays local.
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+fn argmin_load(fleet: &Fleet, pool: &[usize]) -> usize {
+    *pool
+        .iter()
+        .min_by_key(|&&d| fleet.devices[d].load())
+        .expect("empty pool")
+}
+
+impl Router for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "leastloaded"
+    }
+    fn route(&mut self, fleet: &Fleet, _req: &TraceRequest) -> Route {
+        let dev = argmin_load(fleet, &fleet.prefill_pool);
+        Route { prefill: dev, decode: dev }
+    }
+}
+
+/// Cluster-level analogue of HALO's phase-aware mapping: prefill on the
+/// least-loaded device of the (Fully-CiM) prefill pool, decode on the
+/// least-loaded device of the (Fully-CiD) decode pool.
+#[derive(Debug, Default)]
+pub struct PhaseDisaggregated;
+
+impl Router for PhaseDisaggregated {
+    fn name(&self) -> &'static str {
+        "disaggregated"
+    }
+    fn route(&mut self, fleet: &Fleet, _req: &TraceRequest) -> Route {
+        // decode placement must count assignments still in prefill or KV
+        // transfer, or bursts herd onto one decode device
+        let decode = *fleet
+            .decode_pool
+            .iter()
+            .min_by_key(|&&d| fleet.decode_load(d))
+            .expect("empty decode pool");
+        Route { prefill: argmin_load(fleet, &fleet.prefill_pool), decode }
+    }
+}
+
+/// Named (fleet topology, router) policies exposed on the CLI and in the
+/// report tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Monolithic HALO1 devices, blind round-robin routing.
+    RoundRobin,
+    /// Monolithic HALO1 devices, least-loaded routing (the strongest
+    /// non-disaggregated baseline).
+    LeastLoaded,
+    /// Fully-CiM prefill pool feeding a Fully-CiD decode pool.
+    PhaseDisaggregated,
+}
+
+impl Policy {
+    pub fn all() -> [Policy; 3] {
+        [Policy::RoundRobin, Policy::LeastLoaded, Policy::PhaseDisaggregated]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "roundrobin",
+            Policy::LeastLoaded => "leastloaded",
+            Policy::PhaseDisaggregated => "disaggregated",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Self> {
+        let norm: String =
+            s.to_ascii_lowercase().chars().filter(|c| *c != '-' && *c != '_').collect();
+        match norm.as_str() {
+            "roundrobin" | "rr" => Some(Policy::RoundRobin),
+            // `monolithic` = every device runs the HALO1 phase-aware
+            // mapping end-to-end; least-loaded is its routing
+            "leastloaded" | "ll" | "monolithic" | "mono" => Some(Policy::LeastLoaded),
+            "disaggregated" | "disagg" | "phasedisaggregated" | "pd" => {
+                Some(Policy::PhaseDisaggregated)
+            }
+            _ => None,
+        }
+    }
+
+    /// Construct the (fleet, router) pair this policy describes.
+    /// `prefill_frac` only applies to the disaggregated topology.
+    pub fn build(
+        &self,
+        llm: &LlmConfig,
+        hw: &HwConfig,
+        devices: usize,
+        slots: usize,
+        prefill_frac: f64,
+        link: Interconnect,
+    ) -> (Fleet, Box<dyn Router>) {
+        match self {
+            Policy::RoundRobin => {
+                (Fleet::unified(llm, hw, devices, slots, link), Box::new(RoundRobin::default()))
+            }
+            Policy::LeastLoaded => {
+                (Fleet::unified(llm, hw, devices, slots, link), Box::new(LeastLoaded))
+            }
+            Policy::PhaseDisaggregated => (
+                Fleet::disaggregated(llm, hw, devices, slots, prefill_frac, link),
+                Box::new(PhaseDisaggregated),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(n: usize) -> Fleet {
+        Fleet::unified(
+            &LlmConfig::llama2_7b(),
+            &HwConfig::paper(),
+            n,
+            4,
+            Interconnect::board(),
+        )
+    }
+
+    fn req() -> TraceRequest {
+        TraceRequest { arrival: 0.0, l_in: 128, l_out: 16 }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let f = fleet(3);
+        let mut rr = RoundRobin::default();
+        let picks: Vec<usize> = (0..6).map(|_| rr.route(&f, &req()).prefill).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_avoids_busy_device() {
+        let mut f = fleet(2);
+        f.devices[0].push(crate::sim::device::DeviceJob::full(&req()));
+        let mut ll = LeastLoaded;
+        let r = ll.route(&f, &req());
+        assert_eq!(r.prefill, 1);
+        assert_eq!(r.decode, 1);
+    }
+
+    #[test]
+    fn disaggregated_splits_pools() {
+        let f = Fleet::disaggregated(
+            &LlmConfig::llama2_7b(),
+            &HwConfig::paper(),
+            4,
+            4,
+            0.5,
+            Interconnect::board(),
+        );
+        let mut pd = PhaseDisaggregated;
+        let r = pd.route(&f, &req());
+        assert!(f.prefill_pool.contains(&r.prefill));
+        assert!(f.decode_pool.contains(&r.decode));
+        assert_ne!(r.prefill, r.decode);
+    }
+
+    #[test]
+    fn policy_by_name() {
+        assert_eq!(Policy::by_name("disaggregated"), Some(Policy::PhaseDisaggregated));
+        assert_eq!(Policy::by_name("monolithic"), Some(Policy::LeastLoaded));
+        assert_eq!(Policy::by_name("round-robin"), Some(Policy::RoundRobin));
+        assert!(Policy::by_name("random").is_none());
+        for p in Policy::all() {
+            assert_eq!(Policy::by_name(p.name()), Some(p));
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Named scenario mixes layered on the Poisson trace machinery.
+//!
+//! Each mix is a distribution over (prompt length, output length) pairs —
+//! log-uniform within a band, mirroring `poisson_trace` — chosen to stress
+//! a different side of the prefill/decode dichotomy:
+//!
+//! * **chat**: short-in / short-out — balanced, latency-sensitive;
+//! * **summarization**: long-in / short-out — prefill-dominated;
+//! * **generation**: short-in / long-out — decode-dominated;
+//! * **interactive**: a 50/25/25 blend of the three.
+
+use crate::sim::queueing::{log_uniform, trace_with, TraceRequest};
+use crate::util::Rng;
+
+/// Named workload mix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mix {
+    Chat,
+    Summarization,
+    Generation,
+    Interactive,
+}
+
+impl Mix {
+    pub fn all() -> [Mix; 4] {
+        [Mix::Chat, Mix::Summarization, Mix::Generation, Mix::Interactive]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mix::Chat => "chat",
+            Mix::Summarization => "summarization",
+            Mix::Generation => "generation",
+            Mix::Interactive => "interactive",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "chat" => Some(Mix::Chat),
+            "summarization" | "summarize" | "sum" => Some(Mix::Summarization),
+            "generation" | "gen" => Some(Mix::Generation),
+            "interactive" | "mixed" | "blend" => Some(Mix::Interactive),
+            _ => None,
+        }
+    }
+
+    /// (l_in, l_out) bands: short-in/short-out, long-in/short-out,
+    /// short-in/long-out.
+    fn sample(&self, rng: &mut Rng) -> (usize, usize) {
+        match self {
+            Mix::Chat => (log_uniform(rng, 64, 512), log_uniform(rng, 64, 256)),
+            Mix::Summarization => (log_uniform(rng, 2048, 8192), log_uniform(rng, 32, 128)),
+            Mix::Generation => (log_uniform(rng, 64, 256), log_uniform(rng, 512, 2048)),
+            Mix::Interactive => {
+                let u = rng.f64();
+                if u < 0.5 {
+                    Mix::Chat.sample(rng)
+                } else if u < 0.75 {
+                    Mix::Summarization.sample(rng)
+                } else {
+                    Mix::Generation.sample(rng)
+                }
+            }
+        }
+    }
+
+    /// Poisson-arrival trace of `n` requests from this mix.
+    pub fn trace(&self, seed: u64, n: usize, rate_per_s: f64) -> Vec<TraceRequest> {
+        trace_with(seed, n, rate_per_s, |rng| self.sample(rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_respect_bands() {
+        let tr = Mix::Chat.trace(1, 500, 10.0);
+        assert_eq!(tr.len(), 500);
+        assert!(tr.iter().all(|r| (64..=512).contains(&r.l_in) && (64..=256).contains(&r.l_out)));
+        let tr = Mix::Summarization.trace(2, 500, 10.0);
+        assert!(tr.iter().all(|r| r.l_in >= 2048 && r.l_out <= 128));
+        let tr = Mix::Generation.trace(3, 500, 10.0);
+        assert!(tr.iter().all(|r| r.l_in <= 256 && r.l_out >= 512));
+    }
+
+    #[test]
+    fn interactive_blends_all_three() {
+        let tr = Mix::Interactive.trace(7, 2000, 10.0);
+        let sum = tr.iter().filter(|r| r.l_in >= 2048).count();
+        let gen = tr.iter().filter(|r| r.l_out >= 512).count();
+        let chat = tr.iter().filter(|r| r.l_in <= 512 && r.l_out <= 256).count();
+        // 50/25/25 split with slack
+        assert!((800..=1200).contains(&chat), "{chat}");
+        assert!((300..=700).contains(&sum), "{sum}");
+        assert!((300..=700).contains(&gen), "{gen}");
+        // arrivals strictly increase (Poisson machinery intact)
+        assert!(tr.windows(2).all(|w| w[0].arrival < w[1].arrival));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Mix::Interactive.trace(9, 100, 5.0);
+        let b = Mix::Interactive.trace(9, 100, 5.0);
+        assert!(a.iter().zip(&b).all(|(x, y)| {
+            x.arrival == y.arrival && x.l_in == y.l_in && x.l_out == y.l_out
+        }));
+        let c = Mix::Interactive.trace(10, 100, 5.0);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.l_in != y.l_in || x.arrival != y.arrival));
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for m in Mix::all() {
+            assert_eq!(Mix::by_name(m.name()), Some(m));
+        }
+        assert!(Mix::by_name("batch").is_none());
+    }
+}

@@ -18,6 +18,15 @@
 //!   requests with a phase-aware dispatcher ([`coordinator`]); Python is
 //!   never on the request path.
 //!
+//! * **Cluster plane** — fleet-scale serving built on the analytical
+//!   plane ([`cluster`]): N independent device state machines
+//!   ([`sim::device`]) behind pluggable routers, including a
+//!   phase-disaggregated policy that takes the paper's prefill-on-CiM /
+//!   decode-on-CiD mapping to cluster scale, with KV-cache transfers
+//!   charged over a configurable interconnect. Named workload mixes
+//!   (chat, summarization, generation, interactive) drive saturation,
+//!   scaling-efficiency, and tail-latency studies (`halo cluster`).
+//!
 //! Quickstart:
 //! ```no_run
 //! use halo::config::HwConfig;
@@ -33,6 +42,7 @@
 //! ```
 
 pub mod arch;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod mapping;

@@ -4,6 +4,7 @@
 //!   simulate  — analytical simulation of one scenario under one mapping
 //!   report    — regenerate the paper's figures/tables (CSV + markdown)
 //!   roofline  — print the Fig. 1 roofline points
+//!   cluster   — fleet-scale serving simulation with routing policies
 //!   serve     — functional serving demo over the AOT artifacts (PJRT)
 //!   validate  — replay the python test vectors through the Rust runtime
 
@@ -12,6 +13,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 
+use halo::cluster::{Interconnect, Mix, Policy};
 use halo::config::HwConfig;
 use halo::coordinator::{InferenceEngine, Request, Server};
 use halo::mapping::MappingKind;
@@ -27,8 +29,11 @@ halo — memory-centric heterogeneous accelerator for low-batch LLM inference
 USAGE:
   halo simulate [--model llama2-7b|qwen3-8b] [--mapping HALO1|HALO2|CENT|AttAcc1|AttAcc2|FullCiD|FullCiM|HALO-SA]
                 [--lin N] [--lout N] [--batch N]
-  halo report   [--all | --fig 1|4|5|7|8|9|10 | --headline] [--out DIR]
+  halo report   [--all | --fig 1|4|5|6|7|8|9|10|cluster | --headline] [--out DIR]
   halo roofline [--lin N] [--batch N]
+  halo cluster  [--devices N] [--policy roundrobin|leastloaded|disaggregated] [--mix chat|summarization|generation|interactive]
+                [--model llama2-7b|qwen3-8b] [--requests N] [--rate R] [--slots N] [--link board|pcie|eth|wan]
+                [--prefill-frac F] [--seed S]
   halo serve    [--artifacts DIR] [--requests N] [--max-new N] [--slots N]
   halo validate [--artifacts DIR]
 ";
@@ -55,6 +60,10 @@ fn flag_usize(f: &HashMap<String, String>, k: &str, default: usize) -> usize {
     f.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+fn flag_f64(f: &HashMap<String, String>, k: &str, default: f64) -> f64 {
+    f.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
@@ -64,6 +73,7 @@ fn main() -> Result<()> {
         "simulate" => cmd_simulate(&flags),
         "report" => cmd_report(&flags),
         "roofline" => cmd_roofline(&flags),
+        "cluster" => cmd_cluster(&flags),
         "serve" => cmd_serve(&flags),
         "validate" => cmd_validate(&flags),
         _ => {
@@ -126,6 +136,18 @@ fn cmd_report(f: &HashMap<String, String>) -> Result<()> {
             "8" => vec![report::fig78_e2e(&hw, true)],
             "9" => vec![report::fig9_batch_sweep(&hw)],
             "10" => vec![report::fig10_cim_vs_sa(&hw)],
+            "cluster" => {
+                let t1 = report::cluster::single_device_capacity(
+                    &hw,
+                    &LlmConfig::llama2_7b(),
+                    Mix::Interactive,
+                    8,
+                );
+                vec![
+                    report::cluster::cluster_scaling_at(&hw, t1),
+                    report::cluster::cluster_policy_comparison_at(&hw, t1),
+                ]
+            }
             other => bail!("unknown figure {other}"),
         }
     } else {
@@ -141,10 +163,94 @@ fn cmd_report(f: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_roofline(f: &HashMap<String, String>) -> Result<()> {
     let hw = HwConfig::paper();
-    let _ = f;
-    let t = report::fig1_roofline(&hw);
+    let l_in = flag_usize(f, "lin", 512);
+    let batch = flag_usize(f, "batch", 16);
+    let t = report::fig1_roofline_at(&hw, l_in, batch);
     println!("{}", t.to_markdown());
     Ok(())
+}
+
+fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
+    let hw = HwConfig::paper();
+    let model = f.get("model").map(String::as_str).unwrap_or("llama2-7b");
+    let llm = LlmConfig::by_name(model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let devices = flag_usize(f, "devices", 8);
+    let policy = {
+        let name = f.get("policy").map(String::as_str).unwrap_or("disaggregated");
+        Policy::by_name(name).ok_or_else(|| anyhow!("unknown policy {name}"))?
+    };
+    let mix = {
+        let name = f.get("mix").map(String::as_str).unwrap_or("interactive");
+        Mix::by_name(name).ok_or_else(|| anyhow!("unknown mix {name}"))?
+    };
+    let link = {
+        let name = f.get("link").map(String::as_str).unwrap_or("board");
+        Interconnect::by_name(name).ok_or_else(|| anyhow!("unknown link {name}"))?
+    };
+    if devices == 0 {
+        bail!("--devices must be at least 1");
+    }
+    if policy == Policy::PhaseDisaggregated && devices < 2 {
+        bail!("disaggregated routing needs at least 2 devices");
+    }
+    let slots = flag_usize(f, "slots", 8);
+    if slots == 0 {
+        bail!("--slots must be at least 1");
+    }
+    let n_req = flag_usize(f, "requests", 160);
+    let seed = flag_usize(f, "seed", 42) as u64;
+    let prefill_frac = flag_f64(f, "prefill-frac", 0.5);
+    if !(prefill_frac > 0.0 && prefill_frac < 1.0) {
+        bail!("--prefill-frac must be strictly between 0 and 1");
+    }
+    // default offered load: 3x one monolithic device's measured capacity
+    let rate = match f.get("rate").and_then(|v| v.parse::<f64>().ok()) {
+        Some(r) => r,
+        None => 3.0 * report::cluster::single_device_capacity(&hw, &llm, mix, slots),
+    };
+
+    println!(
+        "fleet    : {devices}x HALO devices ({} policy, {} link, {slots} slots/device)",
+        policy.name(),
+        link.name
+    );
+    println!("workload : {} mix, {n_req} requests at {rate:.2} req/s (seed {seed})", mix.name());
+    let trace = mix.trace(seed, n_req, rate);
+    let (mut fleet, mut router) = policy.build(&llm, &hw, devices, slots, prefill_frac, link);
+    let r = fleet.replay(&trace, router.as_mut());
+
+    let mut t = report::Table::new(
+        "fleet_summary",
+        "Fleet summary — per-device share of the replay",
+        &["device", "mapping", "role", "prefills", "decode_steps", "served", "busy_frac"],
+    );
+    for d in &r.per_device {
+        t.row(vec![
+            d.id.to_string(),
+            d.mapping.name().into(),
+            d.role.into(),
+            d.prefills.to_string(),
+            d.decode_steps.to_string(),
+            d.served.to_string(),
+            format!("{:.3}", d.busy / r.makespan.max(1e-12)),
+        ]);
+    }
+    println!("\n{}", t.to_markdown());
+    println!("served     : {} requests in {}", r.served.len(), fmt_seconds(r.makespan));
+    println!("throughput : {:.2} req/s (mean utilization {:.1}%)", r.throughput_rps(), r.utilization() * 100.0);
+    println!("TTFT       : p50 {}  p99 {}", fmt_seconds(r.ttft_p50()), fmt_seconds(r.ttft_p99()));
+    println!("e2e        : p50 {}  p99 {}", fmt_seconds(r.e2e_p50()), fmt_seconds(r.e2e_p99()));
+    println!(
+        "KV traffic : {:.3} GB over {} transfers ({})",
+        r.kv_bytes as f64 / 1e9,
+        r.transfers,
+        link_desc(&fleet.interconnect)
+    );
+    Ok(())
+}
+
+fn link_desc(l: &Interconnect) -> String {
+    format!("{}: {:.1} GB/s, {:.0} us latency", l.name, l.bw / 1e9, l.latency * 1e6)
 }
 
 fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {

@@ -1,0 +1,155 @@
+//! Cluster-plane tables: fleet scaling and router-policy comparisons.
+//!
+//! Offered load is calibrated against the measured single-device
+//! (monolithic HALO1) capacity so the tables stay meaningful if the
+//! underlying cost model shifts: every run offers `3x` one device's
+//! saturated throughput, which overloads a 1-device fleet and leaves an
+//! 8-device fleet comfortable.
+
+use super::Table;
+use crate::cluster::{Interconnect, Mix, Policy};
+use crate::config::HwConfig;
+use crate::model::LlmConfig;
+
+use super::f;
+
+/// Decode slots per device used throughout the cluster tables.
+const SLOTS: usize = 8;
+const N_REQ: usize = 160;
+
+/// Measured saturated throughput (req/s) of one monolithic HALO1 device
+/// with `slots` decode slots on `mix`: replay a burst trace (everything
+/// arrives almost at once) and read the served rate.
+pub fn single_device_capacity(hw: &HwConfig, llm: &LlmConfig, mix: Mix, slots: usize) -> f64 {
+    let burst = mix.trace(11, 96, 1.0e6);
+    let (mut fleet, mut router) =
+        Policy::LeastLoaded.build(llm, hw, 1, slots, 0.5, Interconnect::board());
+    fleet.replay(&burst, router.as_mut()).throughput_rps()
+}
+
+/// Throughput and tail latency vs fleet size at fixed offered load
+/// (3x single-device capacity, interactive mix, least-loaded routing).
+pub fn cluster_scaling(hw: &HwConfig) -> Table {
+    let t1 = single_device_capacity(hw, &LlmConfig::llama2_7b(), Mix::Interactive, SLOTS);
+    cluster_scaling_at(hw, t1)
+}
+
+/// [`cluster_scaling`] with the single-device capacity `t1` already
+/// measured (callers generating several tables calibrate once).
+pub fn cluster_scaling_at(hw: &HwConfig, t1: f64) -> Table {
+    let llm = LlmConfig::llama2_7b();
+    let mix = Mix::Interactive;
+    let rate = 3.0 * t1;
+    let mut t = Table::new(
+        "cluster_scaling",
+        &format!(
+            "Cluster scaling — throughput and tail latency vs fleet size \
+             (LLaMA-2 7B, {} mix, offered {:.2} req/s = 3x single-device capacity)",
+            mix.name(),
+            rate
+        ),
+        &["devices", "policy", "offered_rps", "served_rps", "ttft_p50_s", "ttft_p99_s", "e2e_p99_s", "utilization", "speedup_vs_1"],
+    );
+    let mut base_rps = 0.0f64;
+    for devices in [1usize, 2, 4, 8] {
+        let trace = mix.trace(31, N_REQ, rate);
+        let (mut fleet, mut router) =
+            Policy::LeastLoaded.build(&llm, hw, devices, SLOTS, 0.5, Interconnect::board());
+        let r = fleet.replay(&trace, router.as_mut());
+        if devices == 1 {
+            base_rps = r.throughput_rps();
+        }
+        t.row(vec![
+            devices.to_string(),
+            "leastloaded".into(),
+            f(rate),
+            f(r.throughput_rps()),
+            f(r.ttft_p50()),
+            f(r.ttft_p99()),
+            f(r.e2e_p99()),
+            f(r.utilization()),
+            f(r.throughput_rps() / base_rps.max(1e-12)),
+        ]);
+    }
+    t
+}
+
+/// Router-policy comparison at a fixed 8-device fleet on the interactive
+/// mix: monolithic round-robin and least-loaded vs phase-disaggregated
+/// over progressively slower interconnects.
+pub fn cluster_policy_comparison(hw: &HwConfig) -> Table {
+    let t1 = single_device_capacity(hw, &LlmConfig::llama2_7b(), Mix::Interactive, SLOTS);
+    cluster_policy_comparison_at(hw, t1)
+}
+
+/// [`cluster_policy_comparison`] with the single-device capacity `t1`
+/// already measured.
+pub fn cluster_policy_comparison_at(hw: &HwConfig, t1: f64) -> Table {
+    let llm = LlmConfig::llama2_7b();
+    let mix = Mix::Interactive;
+    let devices = 8usize;
+    let rate = 3.0 * t1;
+    let trace = mix.trace(37, N_REQ, rate);
+    let mut t = Table::new(
+        "cluster_policy_comparison",
+        &format!(
+            "Router policies at {devices} devices — {} mix, offered {rate:.2} req/s",
+            mix.name()
+        ),
+        &["policy", "link", "served_rps", "ttft_p50_s", "ttft_p99_s", "e2e_p50_s", "e2e_p99_s", "kv_gb", "utilization"],
+    );
+    let cases: [(Policy, Interconnect); 5] = [
+        (Policy::RoundRobin, Interconnect::board()),
+        (Policy::LeastLoaded, Interconnect::board()),
+        (Policy::PhaseDisaggregated, Interconnect::board()),
+        (Policy::PhaseDisaggregated, Interconnect::ethernet()),
+        (Policy::PhaseDisaggregated, Interconnect::wan()),
+    ];
+    for (policy, link) in cases {
+        let link_name = link.name;
+        let (mut fleet, mut router) = policy.build(&llm, hw, devices, SLOTS, 0.5, link);
+        let r = fleet.replay(&trace, router.as_mut());
+        t.row(vec![
+            policy.name().into(),
+            link_name.into(),
+            f(r.throughput_rps()),
+            f(r.ttft_p50()),
+            f(r.ttft_p99()),
+            f(r.e2e_p50()),
+            f(r.e2e_p99()),
+            f(r.kv_bytes as f64 / 1e9),
+            f(r.utilization()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaling_table_shape_and_trends() {
+        let t = cluster_scaling(&HwConfig::paper());
+        assert_eq!(t.rows.len(), 4);
+        let rps = t.col_f64("served_rps");
+        // adding devices never hurts served throughput under overload
+        assert!(rps[3] > rps[0], "{rps:?}");
+        let speedup = t.col_f64("speedup_vs_1");
+        assert!((speedup[0] - 1.0).abs() < 1e-9);
+        let p99 = t.col_f64("ttft_p99_s");
+        assert!(p99[3] < p99[0], "tail must shrink with fleet size: {p99:?}");
+    }
+
+    #[test]
+    fn policy_table_covers_links_and_counts_kv() {
+        let t = cluster_policy_comparison(&HwConfig::paper());
+        assert_eq!(t.rows.len(), 5);
+        let kv = t.col_f64("kv_gb");
+        // monolithic rows move no KV; disaggregated rows all move the same
+        assert_eq!(kv[0], 0.0);
+        assert_eq!(kv[1], 0.0);
+        assert!(kv[2] > 0.0);
+        assert!((kv[2] - kv[3]).abs() < 1e-9 && (kv[3] - kv[4]).abs() < 1e-9);
+    }
+}

@@ -1,6 +1,9 @@
 //! Figure/table harness: regenerates every figure of the paper's
 //! evaluation (Figs. 1, 4, 5, 6, 7, 8, 9, 10) and the headline geomean
-//! claims, as CSV + markdown.
+//! claims, as CSV + markdown. Cluster-plane tables (fleet scaling and
+//! router-policy comparisons) live in [`cluster`].
+
+pub mod cluster;
 
 use std::fmt::Write as _;
 use std::fs;
@@ -64,7 +67,7 @@ impl Table {
     }
 }
 
-fn f(v: f64) -> String {
+pub(crate) fn f(v: f64) -> String {
     format!("{v:.6e}")
 }
 
@@ -89,11 +92,18 @@ pub fn lin_sweep() -> Vec<usize> {
 /// Fig. 1: roofline of the CiM accelerator, prefill (BS=1, L=512) vs
 /// decode (BS=1 and BS=16) GEMMs of LLaMA-2 7B.
 pub fn fig1_roofline(hw: &HwConfig) -> Table {
+    fig1_roofline_at(hw, 512, 16)
+}
+
+/// Fig. 1 roofline at a custom scenario point: prefill (`l_in`, BS=1) vs
+/// decode at context `l_in` for BS=1 and BS=`batch` (the CLI's
+/// `roofline --lin/--batch` entry).
+pub fn fig1_roofline_at(hw: &HwConfig, l_in: usize, batch: usize) -> Table {
     let m = LlmConfig::llama2_7b();
     let rf = Roofline::of(&CimEngine::new(hw));
     let mut t = Table::new(
         "fig1_roofline",
-        "Fig.1 — CiM roofline: LLaMA-2 7B GEMMs, prefill (L_in=512) vs decode",
+        &format!("Fig.1 — CiM roofline: LLaMA-2 7B GEMMs, prefill (L_in={l_in}) vs decode"),
         &["phase", "batch", "op", "M", "K", "N", "intensity_flop_per_byte", "attainable_flops", "compute_bound", "ridge", "peak_flops"],
     );
     let mut push = |phase: &str, batch: usize, graph| {
@@ -113,9 +123,11 @@ pub fn fig1_roofline(hw: &HwConfig) -> Table {
             ]);
         }
     };
-    push("prefill", 1, build_prefill_graph(&m, 512, 1));
-    push("decode", 1, build_decode_graph(&m, 512, 1));
-    push("decode", 16, build_decode_graph(&m, 512, 16));
+    push("prefill", 1, build_prefill_graph(&m, l_in, 1));
+    push("decode", 1, build_decode_graph(&m, l_in, 1));
+    if batch != 1 {
+        push("decode", batch, build_decode_graph(&m, l_in, batch));
+    }
     t
 }
 

@@ -7,6 +7,7 @@
 //! context length (attention GEMVs and softmax scale linearly, everything
 //! else is constant), so the midpoint equals the exact per-step average.
 
+pub mod device;
 pub mod queueing;
 pub mod roofline;
 

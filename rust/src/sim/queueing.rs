@@ -13,11 +13,16 @@
 //! both CiD and CiM mappings are throughput-limited by the same shared
 //! substrate); decode steps process all active slots in one batched step
 //! whose duration comes from `simulate_phase` at the batch's mean context.
+//!
+//! The device state machine itself lives in [`sim::device`](super::device)
+//! so the `cluster` fleet simulator and this single-device replay share
+//! one core; this module keeps the trace generators and the single-device
+//! entry point.
 
-use super::{simulate_graph, EngineSet, Scenario};
+use super::device::{Device, DeviceJob};
 use crate::config::HwConfig;
 use crate::mapping::MappingKind;
-use crate::model::{build_decode_graph, build_prefill_graph, LlmConfig};
+use crate::model::LlmConfig;
 use crate::util::{percentile, Rng};
 
 /// One request in the trace.
@@ -28,6 +33,33 @@ pub struct TraceRequest {
     pub l_out: usize,
 }
 
+/// Generate a Poisson-arrival trace whose per-request lengths come from
+/// `sample` (drawing from the same RNG keeps traces reproducible).
+pub fn trace_with(
+    seed: u64,
+    n: usize,
+    rate_per_s: f64,
+    mut sample: impl FnMut(&mut Rng) -> (usize, usize),
+) -> Vec<TraceRequest> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exp(rate_per_s);
+            let (l_in, l_out) = sample(&mut rng);
+            TraceRequest { arrival: t, l_in, l_out }
+        })
+        .collect()
+}
+
+/// Log-uniform integer in `[lo, hi]` — the prompt-length law shared by
+/// [`poisson_trace`] and the cluster workload mixes.
+pub fn log_uniform(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    let u = rng.f64();
+    let v = (lo as f64 * (hi as f64 / lo as f64).powf(u)).round() as usize;
+    v.max(1)
+}
+
 /// Generate a Poisson-arrival trace with log-uniform prompt lengths.
 pub fn poisson_trace(
     seed: u64,
@@ -36,17 +68,8 @@ pub fn poisson_trace(
     l_in_range: (usize, usize),
     l_out: usize,
 ) -> Vec<TraceRequest> {
-    let mut rng = Rng::new(seed);
-    let mut t = 0.0;
     let (lo, hi) = l_in_range;
-    (0..n)
-        .map(|_| {
-            t += rng.exp(rate_per_s);
-            let u = rng.f64();
-            let l_in = (lo as f64 * ((hi as f64 / lo as f64).powf(u))).round() as usize;
-            TraceRequest { arrival: t, l_in: l_in.max(1), l_out }
-        })
-        .collect()
+    trace_with(seed, n, rate_per_s, |rng| (log_uniform(rng, lo, hi), l_out))
 }
 
 /// Completed-request record.
@@ -55,6 +78,22 @@ pub struct ServedRequest {
     pub arrival: f64,
     pub ttft: f64,
     pub e2e: f64,
+}
+
+/// p-th TTFT percentile over a served set (shared by the single-device
+/// [`QueueingResult`] and the fleet result type).
+pub fn ttft_percentile(served: &[ServedRequest], p: f64) -> f64 {
+    percentile(&served.iter().map(|r| r.ttft).collect::<Vec<_>>(), p)
+}
+
+/// p-th end-to-end-latency percentile over a served set.
+pub fn e2e_percentile(served: &[ServedRequest], p: f64) -> f64 {
+    percentile(&served.iter().map(|r| r.e2e).collect::<Vec<_>>(), p)
+}
+
+/// Served requests per second over a makespan.
+pub fn served_rate(n_served: usize, makespan: f64) -> f64 {
+    n_served as f64 / makespan.max(1e-12)
 }
 
 /// Aggregate results of a trace replay.
@@ -67,34 +106,20 @@ pub struct QueueingResult {
 
 impl QueueingResult {
     pub fn ttft_p50(&self) -> f64 {
-        percentile(&self.ttfts(), 50.0)
+        ttft_percentile(&self.served, 50.0)
     }
     pub fn ttft_p99(&self) -> f64 {
-        percentile(&self.ttfts(), 99.0)
+        ttft_percentile(&self.served, 99.0)
     }
     pub fn e2e_p50(&self) -> f64 {
-        percentile(&self.e2es(), 50.0)
+        e2e_percentile(&self.served, 50.0)
     }
     pub fn e2e_p99(&self) -> f64 {
-        percentile(&self.e2es(), 99.0)
+        e2e_percentile(&self.served, 99.0)
     }
     pub fn throughput_rps(&self) -> f64 {
-        self.served.len() as f64 / self.makespan.max(1e-12)
+        served_rate(self.served.len(), self.makespan)
     }
-    fn ttfts(&self) -> Vec<f64> {
-        self.served.iter().map(|r| r.ttft).collect()
-    }
-    fn e2es(&self) -> Vec<f64> {
-        self.served.iter().map(|r| r.e2e).collect()
-    }
-}
-
-#[derive(Debug, Clone)]
-struct ActiveSeq {
-    arrival: f64,
-    first_token_at: f64,
-    ctx: usize,
-    remaining: usize,
 }
 
 /// Replay a trace on one device under a mapping.
@@ -111,99 +136,37 @@ pub fn replay_trace(
     slots: usize,
     trace: &[TraceRequest],
 ) -> QueueingResult {
-    assert!(slots > 0);
-    let engines = EngineSet::new(hw, mapping);
-    // memoized prefill latency per distinct l_in, decode step per batch size
-    let mut prefill_cache: std::collections::BTreeMap<usize, f64> = Default::default();
-    let mut prefill = |l_in: usize| {
-        *prefill_cache.entry(l_in).or_insert_with(|| {
-            simulate_graph(&build_prefill_graph(llm, l_in, 1), &engines, mapping).latency
-        })
-    };
-    // decode step latency at (batch, ctx): affine in ctx — sample two
-    // points per batch size and interpolate
-    let mut dec_coef: std::collections::BTreeMap<usize, (f64, f64)> = Default::default();
-    let mut decode_step = |batch: usize, ctx: usize| {
-        let (a, b) = *dec_coef.entry(batch).or_insert_with(|| {
-            let t1 = simulate_graph(&build_decode_graph(llm, 512, batch), &engines, mapping).latency;
-            let t2 =
-                simulate_graph(&build_decode_graph(llm, 1024, batch), &engines, mapping).latency;
-            let slope = (t2 - t1) / 512.0;
-            (t1 - slope * 512.0, slope)
-        });
-        a + b * ctx.max(1) as f64
-    };
-
-    let mut queue: std::collections::VecDeque<&TraceRequest> = Default::default();
+    let mut dev = Device::new(llm, hw, mapping, slots, 0);
     let mut pending = trace.iter().peekable();
-    let mut active: Vec<Option<ActiveSeq>> = vec![None; slots];
-    let mut served = Vec::new();
-    let mut now = 0.0f64;
-    let mut steps = 0u64;
-
     loop {
-        // pull arrivals up to `now`
-        while let Some(r) = pending.peek() {
-            if r.arrival <= now {
-                queue.push_back(pending.next().unwrap());
-            } else {
-                break;
-            }
+        // pull arrivals up to the device clock
+        while pending.peek().map_or(false, |r| r.arrival <= dev.now()) {
+            dev.push(DeviceJob::full(pending.next().unwrap()));
         }
-        // admit into free slots (prefill serializes the device)
-        while let Some(slot) = active.iter().position(Option::is_none) {
-            let Some(req) = queue.pop_front() else { break };
-            let p = prefill(req.l_in);
-            let start = now.max(req.arrival);
-            now = start + p;
-            active[slot] = Some(ActiveSeq {
-                arrival: req.arrival,
-                first_token_at: now,
-                ctx: req.l_in,
-                remaining: req.l_out.saturating_sub(1),
-            });
-        }
-
-        let batch = active.iter().flatten().count();
-        if batch == 0 {
+        if !dev.has_work() {
             match pending.peek() {
                 Some(r) => {
-                    now = now.max(r.arrival);
+                    let t = r.arrival;
+                    dev.advance_to(t);
                     continue;
                 }
-                None if queue.is_empty() => break,
-                None => continue,
+                None => break,
             }
         }
-
-        // one batched decode step at the mean active context
-        let mean_ctx =
-            active.iter().flatten().map(|s| s.ctx).sum::<usize>() / batch;
-        now += decode_step(batch, mean_ctx);
-        steps += 1;
-        for slot in active.iter_mut() {
-            if let Some(s) = slot {
-                s.ctx += 1;
-                if s.remaining == 0 {
-                    served.push(ServedRequest {
-                        arrival: s.arrival,
-                        ttft: s.first_token_at - s.arrival,
-                        e2e: now - s.arrival,
-                    });
-                    *slot = None;
-                } else {
-                    s.remaining -= 1;
-                }
-            }
-        }
+        dev.step_cycle();
     }
-
-    QueueingResult { served, makespan: now, decode_steps: steps }
+    QueueingResult {
+        served: std::mem::take(&mut dev.served),
+        makespan: dev.now(),
+        decode_steps: dev.decode_steps,
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::{simulate_graph, EngineSet};
+    use crate::model::build_decode_graph;
 
     fn llm() -> LlmConfig {
         LlmConfig::llama2_7b()

@@ -1,0 +1,132 @@
+//! Cluster-plane integration tests: scaling efficiency, router-policy
+//! ordering across interconnect speeds, and exact equivalence of the
+//! refactored single-device core with the fleet simulator.
+
+use halo::cluster::{Interconnect, Mix, Policy};
+use halo::config::HwConfig;
+use halo::mapping::MappingKind;
+use halo::report;
+use halo::sim::queueing::replay_trace;
+use halo::model::LlmConfig;
+
+fn hw() -> HwConfig {
+    HwConfig::paper()
+}
+
+fn llm() -> LlmConfig {
+    LlmConfig::llama2_7b()
+}
+
+fn run(
+    policy: Policy,
+    devices: usize,
+    link: Interconnect,
+    trace: &[halo::sim::queueing::TraceRequest],
+) -> halo::cluster::FleetResult {
+    let (mut fleet, mut router) = policy.build(&llm(), &hw(), devices, 8, 0.5, link);
+    fleet.replay(trace, router.as_mut())
+}
+
+#[test]
+fn throughput_scales_at_least_3x_from_1_to_8_devices() {
+    // saturating load: the whole trace arrives in the first microseconds,
+    // so served rate == fleet capacity
+    let trace = Mix::Chat.trace(1, 160, 1.0e6);
+    let r1 = run(Policy::LeastLoaded, 1, Interconnect::board(), &trace);
+    let r8 = run(Policy::LeastLoaded, 8, Interconnect::board(), &trace);
+    assert_eq!(r1.served.len(), 160);
+    assert_eq!(r8.served.len(), 160);
+    let speedup = r8.throughput_rps() / r1.throughput_rps();
+    assert!(speedup >= 3.0, "1->8 device speedup only {speedup:.2}x");
+    // and it cannot meaningfully exceed the device count
+    assert!(speedup <= 8.5, "superlinear speedup {speedup:.2}x");
+}
+
+#[test]
+fn more_devices_never_reduce_saturated_throughput() {
+    let trace = Mix::Chat.trace(2, 120, 1.0e6);
+    let mut last = 0.0;
+    for devices in [1usize, 2, 4, 8] {
+        let r = run(Policy::LeastLoaded, devices, Interconnect::board(), &trace);
+        let rps = r.throughput_rps();
+        assert!(rps >= last * 0.999, "throughput regressed at {devices} devices: {rps} < {last}");
+        last = rps;
+    }
+}
+
+#[test]
+fn disaggregated_beats_round_robin_on_mixed_tail_ttft_with_fast_link() {
+    // offered load: 3x one device's capacity on an 8-device fleet — busy
+    // but stable for every policy
+    let t1 = report::cluster::single_device_capacity(&hw(), &llm(), Mix::Interactive, 8);
+    let trace = Mix::Interactive.trace(5, 240, 3.0 * t1);
+    let rr = run(Policy::RoundRobin, 8, Interconnect::board(), &trace);
+    let pd = run(Policy::PhaseDisaggregated, 8, Interconnect::board(), &trace);
+    assert_eq!(rr.served.len(), 240);
+    assert_eq!(pd.served.len(), 240);
+    // dedicated prefill devices keep new requests from queueing behind
+    // decode slots: the tail TTFT must drop
+    assert!(
+        pd.ttft_p99() < rr.ttft_p99(),
+        "disaggregated p99 TTFT {} !< round-robin {}",
+        pd.ttft_p99(),
+        rr.ttft_p99()
+    );
+    // the fast link moved every KV cache and still won
+    assert_eq!(pd.transfers, 240);
+    assert_eq!(rr.transfers, 0);
+}
+
+#[test]
+fn disaggregation_loses_when_the_link_is_slow() {
+    let t1 = report::cluster::single_device_capacity(&hw(), &llm(), Mix::Interactive, 8);
+    let trace = Mix::Interactive.trace(6, 240, 3.0 * t1);
+    let rr = run(Policy::RoundRobin, 8, Interconnect::board(), &trace);
+    let pd_fast = run(Policy::PhaseDisaggregated, 8, Interconnect::board(), &trace);
+    let pd_slow = run(Policy::PhaseDisaggregated, 8, Interconnect::wan(), &trace);
+    let mean = |r: &halo::cluster::FleetResult| {
+        r.served.iter().map(|s| s.e2e).sum::<f64>() / r.served.len() as f64
+    };
+    // same KV volume, very different cost
+    assert_eq!(pd_fast.kv_bytes, pd_slow.kv_bytes);
+    assert!(mean(&pd_slow) > mean(&pd_fast) + 0.05, "{} vs {}", mean(&pd_slow), mean(&pd_fast));
+    // once transfers dominate, the monolithic baseline wins end-to-end
+    assert!(
+        mean(&pd_slow) > mean(&rr),
+        "slow-link disaggregation should lose on mean e2e: {} vs {}",
+        mean(&pd_slow),
+        mean(&rr)
+    );
+}
+
+#[test]
+fn single_device_fleet_is_bit_identical_to_replay_trace() {
+    // acceptance (c): the Device refactor reproduces the pre-refactor
+    // replay exactly, including through the fleet event loop
+    let trace = Mix::Interactive.trace(9, 60, 8.0);
+    let single = replay_trace(&llm(), &hw(), MappingKind::Halo1, 8, &trace);
+    let fleet = run(Policy::RoundRobin, 1, Interconnect::board(), &trace);
+    assert_eq!(fleet.served.len(), single.served.len());
+    assert_eq!(fleet.decode_steps, single.decode_steps);
+    assert_eq!(fleet.makespan, single.makespan);
+    for (a, b) in fleet.served.iter().zip(&single.served) {
+        assert_eq!(a.arrival, b.arrival);
+        assert_eq!(a.ttft, b.ttft);
+        assert_eq!(a.e2e, b.e2e);
+    }
+}
+
+#[test]
+fn every_mix_runs_on_every_policy() {
+    for mix in Mix::all() {
+        let trace = mix.trace(12, 40, 20.0);
+        for policy in Policy::all() {
+            let r = run(policy, 4, Interconnect::pcie5(), &trace);
+            assert_eq!(r.served.len(), 40, "{} on {}", policy.name(), mix.name());
+            assert!(r.makespan > 0.0);
+            for s in &r.served {
+                assert!(s.ttft > 0.0 && s.e2e >= s.ttft);
+            }
+        }
+    }
+}

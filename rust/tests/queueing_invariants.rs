@@ -1,0 +1,77 @@
+//! Property tests on the queueing simulator's invariants — regression
+//! guards for the Device extraction: `replay_trace` must conserve
+//! requests across seeds/rates/mappings, every TTFT must cover that
+//! request's prefill latency, and e2e must dominate TTFT.
+
+use halo::config::HwConfig;
+use halo::mapping::MappingKind;
+use halo::model::LlmConfig;
+use halo::sim::device::CostModel;
+use halo::sim::queueing::{poisson_trace, replay_trace};
+use halo::util::prop::{forall, OneOf, Triple, UsizeIn};
+
+fn hw() -> HwConfig {
+    HwConfig::paper()
+}
+
+const MAPPINGS: [MappingKind; 3] =
+    [MappingKind::Halo1, MappingKind::Cent, MappingKind::AttAcc1];
+
+const RATES: [u64; 4] = [1, 5, 25, 500];
+
+#[test]
+fn replay_conserves_requests_across_seeds_and_rates() {
+    let llm = LlmConfig::llama2_7b();
+    forall(
+        101,
+        12,
+        Triple(UsizeIn(1, 1000), OneOf(&RATES), UsizeIn(1, 6)),
+        |(seed, rate, slots)| {
+            let tr = poisson_trace(*seed as u64, 30, *rate as f64, (64, 1024), 24);
+            let r = replay_trace(&llm, &hw(), MappingKind::Halo1, *slots, &tr);
+            if r.served.len() != tr.len() {
+                return false;
+            }
+            // every arrival appears exactly once in the served set
+            let mut got: Vec<f64> = r.served.iter().map(|s| s.arrival).collect();
+            let mut want: Vec<f64> = tr.iter().map(|q| q.arrival).collect();
+            got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            got == want
+        },
+    );
+}
+
+#[test]
+fn ttft_covers_prefill_and_e2e_covers_ttft() {
+    let llm = LlmConfig::llama2_7b();
+    forall(
+        102,
+        8,
+        Triple(UsizeIn(1, 1000), OneOf(&RATES), OneOf(&MAPPINGS)),
+        |(seed, rate, mapping)| {
+            let tr = poisson_trace(*seed as u64 + 7, 25, *rate as f64, (64, 2048), 16);
+            let r = replay_trace(&llm, &hw(), *mapping, 4, &tr);
+            let mut cost = CostModel::new(&llm, &hw(), *mapping);
+            r.served.iter().all(|s| {
+                // arrivals are unique, so they key the original request
+                let req = tr.iter().find(|q| q.arrival == s.arrival).expect("served unknown arrival");
+                let p = cost.prefill(req.l_in);
+                s.ttft >= p - 1e-12 && s.e2e >= s.ttft - 1e-12
+            })
+        },
+    );
+}
+
+#[test]
+fn decode_steps_cover_longest_output() {
+    let llm = LlmConfig::llama2_7b();
+    forall(103, 10, Triple(UsizeIn(1, 500), OneOf(&RATES), UsizeIn(2, 64)), |(seed, rate, l_out)| {
+        let tr = poisson_trace(*seed as u64, 20, *rate as f64, (64, 512), *l_out);
+        let r = replay_trace(&llm, &hw(), MappingKind::Halo1, 4, &tr);
+        // each decode step emits at most one token per sequence, and the
+        // first token comes from prefill
+        r.decode_steps >= (*l_out as u64 - 1).max(1)
+            && r.makespan >= tr.last().unwrap().arrival
+    });
+}
