@@ -3,10 +3,10 @@
 //! The fleet replay loop is the hot path the `halo cluster` CLI and the
 //! cluster report tables sit on.
 
-use halo::cluster::{Interconnect, Mix, Policy};
+use halo::cluster::{Interconnect, Mix, Policy, SchedConfig};
 use halo::config::HwConfig;
 use halo::model::LlmConfig;
-use halo::sim::queueing::replay_trace;
+use halo::sim::queueing::{replay_trace, replay_trace_with};
 use halo::mapping::MappingKind;
 use halo::util::bench::{bb, BenchSuite};
 
@@ -40,6 +40,28 @@ fn main() {
     s.bench_throughput("fleet8_replay_disaggregated_wan", trace.len() as f64, || {
         let (mut fleet, mut router) =
             Policy::PhaseDisaggregated.build(&llm, &hw, 8, 8, 0.5, Interconnect::wan());
+        bb(fleet.replay(&trace, router.as_mut()));
+    });
+
+    // chunked prefill multiplies scheduling cycles (one chunk per prompt
+    // per cycle) — the scheduler's own hot path
+    s.bench_throughput("replay_single_device_chunked512", tr1.len() as f64, || {
+        bb(replay_trace_with(
+            &llm,
+            &hw,
+            MappingKind::Halo1,
+            8,
+            SchedConfig::chunked(512),
+            &tr1,
+        ));
+    });
+
+    // KV-capped decode pool: eviction/recompute churn plus the
+    // capacity-aware router's headroom scans
+    s.bench_throughput("fleet4_replay_kvaware_capped", trace.len() as f64, || {
+        let sched = SchedConfig::default().with_kv_capacity(4_000_000_000);
+        let (mut fleet, mut router) =
+            Policy::KvAware.build_with(&llm, &hw, 4, 8, 0.5, Interconnect::board(), sched);
         bb(fleet.replay(&trace, router.as_mut()));
     });
 

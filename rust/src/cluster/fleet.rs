@@ -12,7 +12,7 @@ use super::router::Router;
 use crate::config::HwConfig;
 use crate::mapping::MappingKind;
 use crate::model::LlmConfig;
-use crate::sim::device::{Device, DeviceJob};
+use crate::sim::device::{Device, DeviceJob, SchedConfig};
 use crate::sim::queueing::{
     e2e_percentile, served_rate, ttft_percentile, ServedRequest, TraceRequest,
 };
@@ -45,6 +45,10 @@ pub struct Fleet {
     /// routing would herd every request onto one decode device, since
     /// `Device::load` only rises once the handoff lands.
     pending_decode: Vec<usize>,
+    /// Estimated KV bytes of those undelivered decode assignments
+    /// (`(l_in + l_out) x bytes/token`), per device — what a
+    /// capacity-aware router must subtract from the device headroom.
+    pending_kv: Vec<u64>,
 }
 
 impl Fleet {
@@ -57,9 +61,23 @@ impl Fleet {
         slots: usize,
         interconnect: Interconnect,
     ) -> Self {
+        Self::unified_with(llm, hw, devices, slots, interconnect, SchedConfig::default())
+    }
+
+    /// [`Fleet::unified`] under an explicit per-device scheduling
+    /// configuration (chunked prefill, admission policy, KV capacity).
+    pub fn unified_with(
+        llm: &LlmConfig,
+        hw: &HwConfig,
+        devices: usize,
+        slots: usize,
+        interconnect: Interconnect,
+        sched: SchedConfig,
+    ) -> Self {
         assert!(devices > 0);
-        let devs =
-            (0..devices).map(|i| Device::new(llm, hw, MappingKind::Halo1, slots, i)).collect();
+        let devs = (0..devices)
+            .map(|i| Device::with_sched(llm, hw, MappingKind::Halo1, slots, i, sched.clone()))
+            .collect();
         Fleet {
             llm: llm.clone(),
             devices: devs,
@@ -69,6 +87,7 @@ impl Fleet {
             kv_bytes: 0,
             transfers: 0,
             pending_decode: vec![0; devices],
+            pending_kv: vec![0; devices],
         }
     }
 
@@ -83,6 +102,29 @@ impl Fleet {
         prefill_frac: f64,
         interconnect: Interconnect,
     ) -> Self {
+        Self::disaggregated_with(
+            llm,
+            hw,
+            devices,
+            slots,
+            prefill_frac,
+            interconnect,
+            SchedConfig::default(),
+        )
+    }
+
+    /// [`Fleet::disaggregated`] under an explicit per-device scheduling
+    /// configuration. The KV capacity applies to every device; use
+    /// [`Fleet::set_kv_capacity`] afterwards for heterogeneous budgets.
+    pub fn disaggregated_with(
+        llm: &LlmConfig,
+        hw: &HwConfig,
+        devices: usize,
+        slots: usize,
+        prefill_frac: f64,
+        interconnect: Interconnect,
+        sched: SchedConfig,
+    ) -> Self {
         assert!(devices >= 2, "disaggregation needs at least 2 devices");
         assert!(prefill_frac > 0.0 && prefill_frac < 1.0);
         let n_pre =
@@ -91,7 +133,7 @@ impl Fleet {
             .map(|i| {
                 let mapping =
                     if i < n_pre { MappingKind::FullCim } else { MappingKind::FullCid };
-                Device::new(llm, hw, mapping, slots, i)
+                Device::with_sched(llm, hw, mapping, slots, i, sched.clone())
             })
             .collect();
         Fleet {
@@ -103,13 +145,37 @@ impl Fleet {
             kv_bytes: 0,
             transfers: 0,
             pending_decode: vec![0; devices],
+            pending_kv: vec![0; devices],
         }
+    }
+
+    /// Override one device's resident-KV budget (heterogeneous fleets:
+    /// e.g. a decode pool mixing large- and small-memory devices).
+    pub fn set_kv_capacity(&mut self, dev: usize, cap: Option<u64>) {
+        self.devices[dev].set_kv_capacity(cap);
     }
 
     /// Decode-side load of a device as a router should see it: queued +
     /// active work plus decode assignments still in prefill or transfer.
     pub fn decode_load(&self, dev: usize) -> usize {
         self.devices[dev].load() + self.pending_decode[dev]
+    }
+
+    /// Decode-side KV headroom of a device as a router should see it:
+    /// the device's uncommitted budget minus the estimated KV of
+    /// assignments still in prefill or transfer (`u64::MAX`-ish when the
+    /// budget is unlimited).
+    pub fn decode_kv_headroom(&self, dev: usize) -> u64 {
+        self.devices[dev].kv_headroom().saturating_sub(self.pending_kv[dev])
+    }
+
+    /// Estimated lifetime KV bytes of a request once fully decoded. The
+    /// `max(1)` mirrors the decode continuation's final context
+    /// (`ctx + remaining + 1`, with `remaining = l_out - 1` floored at
+    /// zero), keeping the routing-time credit and the delivery-time debit
+    /// of `pending_kv` exactly symmetric even for `l_out == 0` requests.
+    pub fn kv_estimate(&self, req: &TraceRequest) -> u64 {
+        (req.l_in + req.l_out.max(1)) as u64 * self.llm.kv_bytes_per_token()
     }
 
     /// Serve a trace through the fleet under `router`. Consumes the
@@ -122,7 +188,7 @@ impl Fleet {
             let mut best: Option<(f64, usize)> = None;
             for d in &self.devices {
                 if let Some(t) = d.next_action_time() {
-                    if best.map_or(true, |(bt, _)| t < bt) {
+                    if best.is_none_or(|(bt, _)| t < bt) {
                         best = Some((t, d.id));
                     }
                 }
@@ -139,7 +205,9 @@ impl Fleet {
                 if route.prefill == route.decode {
                     self.devices[route.prefill].push(DeviceJob::full(req));
                 } else {
+                    let est = self.kv_estimate(req);
                     self.pending_decode[route.decode] += 1;
+                    self.pending_kv[route.decode] += est;
                     self.devices[route.prefill].push(DeviceJob::PrefillOnly {
                         arrival: req.arrival,
                         ready: req.arrival,
@@ -158,6 +226,10 @@ impl Fleet {
                     .unwrap();
                 let h = inflight.swap_remove(i);
                 self.pending_decode[h.dev] -= 1;
+                // exact reverse of kv_estimate:
+                // l_in + max(l_out, 1) == ctx + remaining + 1
+                let est = (h.ctx + h.remaining + 1) as u64 * self.llm.kv_bytes_per_token();
+                self.pending_kv[h.dev] = self.pending_kv[h.dev].saturating_sub(est);
                 self.devices[h.dev].push(DeviceJob::DecodeOnly {
                     arrival: h.arrival,
                     ready: h.ready,
@@ -199,7 +271,12 @@ impl Fleet {
                 decode_steps: d.decode_steps,
                 served: d.served.len(),
                 busy: d.busy,
-                last_active: d.now(),
+                // when this device last executed work — not its clock,
+                // which idle-jumps can push past the final activity
+                last_active: d.last_active,
+                evictions: d.evictions,
+                recompute_tokens: d.recompute_tokens,
+                kv_peak: d.kv_peak,
             });
             served.append(&mut d.served);
         }
@@ -211,6 +288,8 @@ impl Fleet {
             prefills: per_device.iter().map(|s| s.prefills).sum(),
             kv_bytes: self.kv_bytes,
             transfers: self.transfers,
+            evictions: per_device.iter().map(|s| s.evictions).sum(),
+            recompute_tokens: per_device.iter().map(|s| s.recompute_tokens).sum(),
             per_device,
         }
     }
@@ -235,7 +314,14 @@ pub struct DeviceSummary {
     pub decode_steps: u64,
     pub served: usize,
     pub busy: f64,
+    /// Clock value at this device's last executed work (`<= makespan`).
     pub last_active: f64,
+    /// Sequences evicted here under KV pressure.
+    pub evictions: u64,
+    /// Cached tokens re-prefilled here because of evictions.
+    pub recompute_tokens: u64,
+    /// High-water mark of resident KV bytes on this device.
+    pub kv_peak: u64,
 }
 
 /// Aggregate results of a fleet replay.
@@ -247,6 +333,10 @@ pub struct FleetResult {
     pub prefills: u64,
     pub kv_bytes: u64,
     pub transfers: u64,
+    /// Fleet-wide sequences evicted under KV pressure.
+    pub evictions: u64,
+    /// Fleet-wide cached tokens re-prefilled because of evictions.
+    pub recompute_tokens: u64,
     pub per_device: Vec<DeviceSummary>,
 }
 

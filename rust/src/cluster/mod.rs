@@ -15,11 +15,16 @@
 //! * [`workload`] — named scenario mixes (chat, summarization,
 //!   generation, interactive) on the Poisson trace machinery;
 //! * [`router`] — pluggable request routing: round-robin, least-loaded,
-//!   and phase-disaggregated (prefill pool -> decode pool);
+//!   phase-disaggregated (prefill pool -> decode pool), and KV-capacity-
+//!   aware decode placement that skips full decode devices;
 //! * [`fleet`] — N independent [`sim::device::Device`](crate::sim::device)
-//!   state machines advanced in global event order.
+//!   state machines advanced in global event order, each carrying its own
+//!   [`SchedConfig`] (chunked prefill, admission policy, resident-KV
+//!   budget with eviction-and-recompute) and, optionally, a heterogeneous
+//!   per-device KV capacity ([`Fleet::set_kv_capacity`]).
 //!
-//! Entry points: [`Policy::build`] to construct a (fleet, router) pair and
+//! Entry points: [`Policy::build`] (or [`Policy::build_with`] for a
+//! non-default scheduler) to construct a (fleet, router) pair and
 //! [`Fleet::replay`] to serve a trace through it.
 
 pub mod fleet;
@@ -27,7 +32,8 @@ pub mod interconnect;
 pub mod router;
 pub mod workload;
 
+pub use crate::sim::device::{AdmissionPolicy, SchedConfig};
 pub use fleet::{Fleet, FleetResult};
 pub use interconnect::{kv_transfer_bytes, Interconnect};
-pub use router::{LeastLoaded, PhaseDisaggregated, Policy, Route, Router, RoundRobin};
+pub use router::{KvAware, LeastLoaded, PhaseDisaggregated, Policy, Route, Router, RoundRobin};
 pub use workload::Mix;

@@ -10,6 +10,7 @@ use super::fleet::Fleet;
 use super::interconnect::Interconnect;
 use crate::config::HwConfig;
 use crate::model::LlmConfig;
+use crate::sim::device::SchedConfig;
 use crate::sim::queueing::TraceRequest;
 
 /// A routing decision: prefill device and decode device (equal indices
@@ -89,6 +90,35 @@ impl Router for PhaseDisaggregated {
     }
 }
 
+/// Capacity-aware phase disaggregation: decode placement skips devices
+/// whose projected KV headroom cannot hold the request's lifetime KV
+/// (`(l_in + l_out) x bytes/token`), then picks the least-loaded fitting
+/// device. When no decode device fits — the whole pool is under
+/// pressure — it falls back to the device with the most headroom, and
+/// the device-level eviction machinery absorbs the overflow.
+#[derive(Debug, Default)]
+pub struct KvAware;
+
+impl Router for KvAware {
+    fn name(&self) -> &'static str {
+        "kvaware"
+    }
+    fn route(&mut self, fleet: &Fleet, req: &TraceRequest) -> Route {
+        let need = fleet.kv_estimate(req);
+        let decode = fleet
+            .decode_pool
+            .iter()
+            .filter(|&&d| fleet.decode_kv_headroom(d) >= need)
+            .min_by_key(|&&d| fleet.decode_load(d))
+            .or_else(|| {
+                fleet.decode_pool.iter().max_by_key(|&&d| fleet.decode_kv_headroom(d))
+            })
+            .copied()
+            .expect("empty decode pool");
+        Route { prefill: argmin_load(fleet, &fleet.prefill_pool), decode }
+    }
+}
+
 /// Named (fleet topology, router) policies exposed on the CLI and in the
 /// report tables.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -100,11 +130,19 @@ pub enum Policy {
     LeastLoaded,
     /// Fully-CiM prefill pool feeding a Fully-CiD decode pool.
     PhaseDisaggregated,
+    /// Phase-disaggregated pools with KV-capacity-aware decode placement
+    /// (skips decode devices whose budget cannot hold the request).
+    KvAware,
 }
 
 impl Policy {
-    pub fn all() -> [Policy; 3] {
-        [Policy::RoundRobin, Policy::LeastLoaded, Policy::PhaseDisaggregated]
+    /// Every routing policy, in display order — a `'static` slice source
+    /// for property-test generators (see also [`Policy::all`]).
+    pub const ALL: [Policy; 4] =
+        [Policy::RoundRobin, Policy::LeastLoaded, Policy::PhaseDisaggregated, Policy::KvAware];
+
+    pub fn all() -> [Policy; 4] {
+        Self::ALL
     }
 
     pub fn name(&self) -> &'static str {
@@ -112,6 +150,7 @@ impl Policy {
             Policy::RoundRobin => "roundrobin",
             Policy::LeastLoaded => "leastloaded",
             Policy::PhaseDisaggregated => "disaggregated",
+            Policy::KvAware => "kvaware",
         }
     }
 
@@ -126,12 +165,13 @@ impl Policy {
             "disaggregated" | "disagg" | "phasedisaggregated" | "pd" => {
                 Some(Policy::PhaseDisaggregated)
             }
+            "kvaware" | "kv" | "capacity" | "capacityaware" => Some(Policy::KvAware),
             _ => None,
         }
     }
 
     /// Construct the (fleet, router) pair this policy describes.
-    /// `prefill_frac` only applies to the disaggregated topology.
+    /// `prefill_frac` only applies to the disaggregated topologies.
     pub fn build(
         &self,
         llm: &LlmConfig,
@@ -141,16 +181,38 @@ impl Policy {
         prefill_frac: f64,
         link: Interconnect,
     ) -> (Fleet, Box<dyn Router>) {
+        self.build_with(llm, hw, devices, slots, prefill_frac, link, SchedConfig::default())
+    }
+
+    /// [`Policy::build`] under an explicit per-device scheduling
+    /// configuration (chunked prefill, admission policy, KV capacity).
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_with(
+        &self,
+        llm: &LlmConfig,
+        hw: &HwConfig,
+        devices: usize,
+        slots: usize,
+        prefill_frac: f64,
+        link: Interconnect,
+        sched: SchedConfig,
+    ) -> (Fleet, Box<dyn Router>) {
         match self {
-            Policy::RoundRobin => {
-                (Fleet::unified(llm, hw, devices, slots, link), Box::new(RoundRobin::default()))
-            }
-            Policy::LeastLoaded => {
-                (Fleet::unified(llm, hw, devices, slots, link), Box::new(LeastLoaded))
-            }
+            Policy::RoundRobin => (
+                Fleet::unified_with(llm, hw, devices, slots, link, sched),
+                Box::new(RoundRobin::default()),
+            ),
+            Policy::LeastLoaded => (
+                Fleet::unified_with(llm, hw, devices, slots, link, sched),
+                Box::new(LeastLoaded),
+            ),
             Policy::PhaseDisaggregated => (
-                Fleet::disaggregated(llm, hw, devices, slots, prefill_frac, link),
+                Fleet::disaggregated_with(llm, hw, devices, slots, prefill_frac, link, sched),
                 Box::new(PhaseDisaggregated),
+            ),
+            Policy::KvAware => (
+                Fleet::disaggregated_with(llm, hw, devices, slots, prefill_frac, link, sched),
+                Box::new(KvAware),
             ),
         }
     }
@@ -214,9 +276,37 @@ mod tests {
         assert_eq!(Policy::by_name("disaggregated"), Some(Policy::PhaseDisaggregated));
         assert_eq!(Policy::by_name("monolithic"), Some(Policy::LeastLoaded));
         assert_eq!(Policy::by_name("round-robin"), Some(Policy::RoundRobin));
+        assert_eq!(Policy::by_name("kv-aware"), Some(Policy::KvAware));
         assert!(Policy::by_name("random").is_none());
         for p in Policy::all() {
             assert_eq!(Policy::by_name(p.name()), Some(p));
         }
+    }
+
+    #[test]
+    fn kv_aware_skips_full_decode_devices() {
+        let llm = LlmConfig::llama2_7b();
+        let mut f = Fleet::disaggregated(
+            &llm,
+            &HwConfig::paper(),
+            4,
+            4,
+            0.5,
+            Interconnect::board(),
+        );
+        // decode pool = {2, 3}; device 2 gets a budget too small for the
+        // request's lifetime KV, device 3 a comfortable one
+        let r = req();
+        let need = f.kv_estimate(&r);
+        f.set_kv_capacity(2, Some(need / 2));
+        f.set_kv_capacity(3, Some(need * 100));
+        let mut kv = KvAware;
+        let route = kv.route(&f, &r);
+        assert_eq!(route.decode, 3, "must skip the full decode device");
+        assert!(f.prefill_pool.contains(&route.prefill));
+        // when nothing fits, fall back to the most-headroom device
+        f.set_kv_capacity(3, Some(need / 4));
+        let route = kv.route(&f, &r);
+        assert_eq!(route.decode, 2, "largest headroom wins under pressure");
     }
 }

@@ -371,6 +371,13 @@ impl HwConfig {
     pub fn cid_peak_macs(&self) -> f64 {
         self.hbm.total_banks() as f64 * self.cid.mults_per_bank as f64 / self.hbm.t_ccd
     }
+
+    /// Per-device KV-cache byte budget: HBM capacity left after the
+    /// resident model weights. The serving simulator's decode pools use
+    /// this as the default capacity limit when one is requested.
+    pub fn kv_budget(&self, weight_bytes: u64) -> u64 {
+        self.hbm.total_capacity().saturating_sub(weight_bytes)
+    }
 }
 
 #[cfg(test)]
@@ -452,5 +459,15 @@ mod tests {
     #[should_panic]
     fn wordlines_must_divide() {
         CimConfig::paper().with_wordlines(100);
+    }
+
+    #[test]
+    fn kv_budget_leaves_room_after_weights() {
+        let hw = HwConfig::paper();
+        // a 7B int8 model leaves most of the 80 GB for KV
+        let budget = hw.kv_budget(7 << 30);
+        assert_eq!(budget, (80u64 << 30) - (7 << 30));
+        // degenerate: weights larger than HBM clamp to zero
+        assert_eq!(hw.kv_budget(u64::MAX), 0);
     }
 }

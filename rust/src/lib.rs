@@ -23,9 +23,16 @@
 //!   ([`sim::device`]) behind pluggable routers, including a
 //!   phase-disaggregated policy that takes the paper's prefill-on-CiM /
 //!   decode-on-CiD mapping to cluster scale, with KV-cache transfers
-//!   charged over a configurable interconnect. Named workload mixes
+//!   charged over a configurable interconnect. Each device carries a
+//!   pluggable scheduler ([`sim::device::SchedConfig`]): chunked prefill
+//!   (`--chunk`) interleaves prompt chunks with the running decode batch,
+//!   admission policies (`--admission` fifo/spf/priority) reorder the
+//!   ready queue, and a resident-KV byte budget (`--kv-cap`) enforces
+//!   decode-side capacity with vLLM-style eviction-and-recompute; the
+//!   kvaware router skips full decode devices. Named workload mixes
 //!   (chat, summarization, generation, interactive) drive saturation,
-//!   scaling-efficiency, and tail-latency studies (`halo cluster`).
+//!   scaling-efficiency, tail-latency, chunk-size, and capacity-pressure
+//!   studies (`halo cluster`, `halo report --fig cluster`).
 //!
 //! Quickstart:
 //! ```no_run

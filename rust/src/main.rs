@@ -13,7 +13,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 
-use halo::cluster::{Interconnect, Mix, Policy};
+use halo::cluster::{AdmissionPolicy, Interconnect, Mix, Policy, SchedConfig};
 use halo::config::HwConfig;
 use halo::coordinator::{InferenceEngine, Request, Server};
 use halo::mapping::MappingKind;
@@ -31,9 +31,15 @@ USAGE:
                 [--lin N] [--lout N] [--batch N]
   halo report   [--all | --fig 1|4|5|6|7|8|9|10|cluster | --headline] [--out DIR]
   halo roofline [--lin N] [--batch N]
-  halo cluster  [--devices N] [--policy roundrobin|leastloaded|disaggregated] [--mix chat|summarization|generation|interactive]
+  halo cluster  [--devices N] [--policy roundrobin|leastloaded|disaggregated|kvaware] [--mix chat|summarization|generation|interactive]
                 [--model llama2-7b|qwen3-8b] [--requests N] [--rate R] [--slots N] [--link board|pcie|eth|wan]
                 [--prefill-frac F] [--seed S]
+                [--chunk TOKENS] [--admission fifo|spf|priority] [--kv-cap GB|auto]
+                  --chunk     prefill chunk size (0 = serialized monolithic prefill, the default)
+                  --admission ready-queue order: fifo (default), spf (shortest prompt first),
+                              priority (interactive prompts <= 512 tokens first)
+                  --kv-cap    per-device resident-KV budget in GB (0 = unlimited, the default);
+                              `auto` derives it from HBM capacity minus model weights
   halo serve    [--artifacts DIR] [--requests N] [--max-new N] [--slots N]
   halo validate [--artifacts DIR]
 ";
@@ -146,6 +152,8 @@ fn cmd_report(f: &HashMap<String, String>) -> Result<()> {
                 vec![
                     report::cluster::cluster_scaling_at(&hw, t1),
                     report::cluster::cluster_policy_comparison_at(&hw, t1),
+                    report::cluster::chunked_prefill_ttft_at(&hw, t1),
+                    report::cluster::kv_capacity_pressure_at(&hw, t1),
                 ]
             }
             other => bail!("unknown figure {other}"),
@@ -190,7 +198,7 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
     if devices == 0 {
         bail!("--devices must be at least 1");
     }
-    if policy == Policy::PhaseDisaggregated && devices < 2 {
+    if matches!(policy, Policy::PhaseDisaggregated | Policy::KvAware) && devices < 2 {
         bail!("disaggregated routing needs at least 2 devices");
     }
     let slots = flag_usize(f, "slots", 8);
@@ -203,6 +211,23 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
     if !(prefill_frac > 0.0 && prefill_frac < 1.0) {
         bail!("--prefill-frac must be strictly between 0 and 1");
     }
+    let chunk = flag_usize(f, "chunk", 0);
+    let admission = {
+        let name = f.get("admission").map(String::as_str).unwrap_or("fifo");
+        AdmissionPolicy::by_name(name).ok_or_else(|| anyhow!("unknown admission policy {name}"))?
+    };
+    let kv_capacity = match f.get("kv-cap").map(String::as_str) {
+        None => None,
+        Some("auto") => Some(hw.kv_budget(llm.weight_bytes())),
+        Some(v) => {
+            let gb: f64 = v.parse().map_err(|_| anyhow!("--kv-cap wants GB or `auto`, got {v}"))?;
+            if gb < 0.0 {
+                bail!("--kv-cap must be non-negative");
+            }
+            (gb > 0.0).then_some((gb * 1e9) as u64)
+        }
+    };
+    let sched = SchedConfig { chunk: (chunk > 0).then_some(chunk), admission, kv_capacity };
     // default offered load: 3x one monolithic device's measured capacity
     let rate = match f.get("rate").and_then(|v| v.parse::<f64>().ok()) {
         Some(r) => r,
@@ -214,15 +239,38 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
         policy.name(),
         link.name
     );
+    println!(
+        "scheduler: {} prefill, {} admission, KV budget {}",
+        match sched.chunk {
+            Some(c) => format!("chunked({c})"),
+            None => "serialized".into(),
+        },
+        sched.admission.name(),
+        match sched.kv_capacity {
+            Some(b) => format!("{:.1} GB/device", b as f64 / 1e9),
+            None => "unlimited".into(),
+        }
+    );
     println!("workload : {} mix, {n_req} requests at {rate:.2} req/s (seed {seed})", mix.name());
     let trace = mix.trace(seed, n_req, rate);
-    let (mut fleet, mut router) = policy.build(&llm, &hw, devices, slots, prefill_frac, link);
+    let (mut fleet, mut router) =
+        policy.build_with(&llm, &hw, devices, slots, prefill_frac, link, sched);
     let r = fleet.replay(&trace, router.as_mut());
 
     let mut t = report::Table::new(
         "fleet_summary",
         "Fleet summary — per-device share of the replay",
-        &["device", "mapping", "role", "prefills", "decode_steps", "served", "busy_frac"],
+        &[
+            "device",
+            "mapping",
+            "role",
+            "prefills",
+            "decode_steps",
+            "served",
+            "busy_frac",
+            "evictions",
+            "kv_peak_gb",
+        ],
     );
     for d in &r.per_device {
         t.row(vec![
@@ -233,6 +281,8 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
             d.decode_steps.to_string(),
             d.served.to_string(),
             format!("{:.3}", d.busy / r.makespan.max(1e-12)),
+            d.evictions.to_string(),
+            format!("{:.3}", d.kv_peak as f64 / 1e9),
         ]);
     }
     println!("\n{}", t.to_markdown());
@@ -246,6 +296,12 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
         r.transfers,
         link_desc(&fleet.interconnect)
     );
+    if r.evictions > 0 {
+        println!(
+            "KV pressure: {} evictions, {} tokens recomputed",
+            r.evictions, r.recompute_tokens
+        );
+    }
     Ok(())
 }
 

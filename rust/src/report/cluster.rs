@@ -1,15 +1,19 @@
-//! Cluster-plane tables: fleet scaling and router-policy comparisons.
+//! Cluster-plane tables: fleet scaling, router-policy comparisons,
+//! chunked-prefill TTFT sweeps, and KV-capacity pressure.
 //!
 //! Offered load is calibrated against the measured single-device
 //! (monolithic HALO1) capacity so the tables stay meaningful if the
-//! underlying cost model shifts: every run offers `3x` one device's
-//! saturated throughput, which overloads a 1-device fleet and leaves an
-//! 8-device fleet comfortable.
+//! underlying cost model shifts: scaling/policy runs offer `3x` one
+//! device's saturated throughput (overloads a 1-device fleet, leaves an
+//! 8-device fleet comfortable); the scheduler tables pick their own
+//! multiples of the same calibration.
 
 use super::Table;
-use crate::cluster::{Interconnect, Mix, Policy};
+use crate::cluster::{AdmissionPolicy, Interconnect, Mix, Policy, SchedConfig};
 use crate::config::HwConfig;
+use crate::mapping::MappingKind;
 use crate::model::LlmConfig;
+use crate::sim::queueing::replay_trace_with;
 
 use super::f;
 
@@ -124,6 +128,132 @@ pub fn cluster_policy_comparison_at(hw: &HwConfig, t1: f64) -> Table {
     t
 }
 
+/// TTFT vs prefill chunk size on one device under the interactive mix,
+/// plus admission-policy contrast rows (chunk 0 = serialized prefill).
+pub fn chunked_prefill_ttft(hw: &HwConfig) -> Table {
+    let t1 = single_device_capacity(hw, &LlmConfig::llama2_7b(), Mix::Interactive, SLOTS);
+    chunked_prefill_ttft_at(hw, t1)
+}
+
+/// [`chunked_prefill_ttft`] with the single-device capacity `t1` already
+/// measured.
+///
+/// Mild overload (1.25x capacity) keeps every request contended, so the
+/// p50 isolates scheduling rather than idle-arrival luck: under
+/// serialized FIFO a chat prompt waits for the *whole* prefill of every
+/// long prompt admitted ahead of it; chunked prefill streams those long
+/// prompts through in chunks and completes the chat prompt's prefill
+/// between chunks.
+pub fn chunked_prefill_ttft_at(hw: &HwConfig, t1: f64) -> Table {
+    let llm = LlmConfig::llama2_7b();
+    let mix = Mix::Interactive;
+    let rate = 1.25 * t1;
+    let trace = mix.trace(41, N_REQ, rate);
+    let mut t = Table::new(
+        "cluster_chunked_prefill",
+        &format!(
+            "Chunked prefill and admission policy — single HALO1 device, {} mix, \
+             offered {rate:.2} req/s (chunk 0 = serialized prefill)",
+            mix.name()
+        ),
+        &[
+            "chunk",
+            "admission",
+            "ttft_p50_s",
+            "ttft_p99_s",
+            "e2e_p50_s",
+            "e2e_p99_s",
+            "served_rps",
+        ],
+    );
+    let cases: [(usize, AdmissionPolicy); 8] = [
+        (0, AdmissionPolicy::Fifo),
+        (256, AdmissionPolicy::Fifo),
+        (512, AdmissionPolicy::Fifo),
+        (1024, AdmissionPolicy::Fifo),
+        (2048, AdmissionPolicy::Fifo),
+        (0, AdmissionPolicy::ShortestFirst),
+        (512, AdmissionPolicy::ShortestFirst),
+        (0, AdmissionPolicy::Interactive),
+    ];
+    for (chunk, admission) in cases {
+        let sched = SchedConfig {
+            chunk: (chunk > 0).then_some(chunk),
+            admission,
+            kv_capacity: None,
+        };
+        let r = replay_trace_with(&llm, hw, MappingKind::Halo1, SLOTS, sched, &trace);
+        t.row(vec![
+            chunk.to_string(),
+            admission.name().into(),
+            f(r.ttft_p50()),
+            f(r.ttft_p99()),
+            f(r.e2e_p50()),
+            f(r.e2e_p99()),
+            f(r.throughput_rps()),
+        ]);
+    }
+    t
+}
+
+/// KV-capacity pressure on the decode pool of a 4-device disaggregated
+/// fleet under capacity-aware routing: shrinking per-device budgets force
+/// eviction-and-recompute (cap 0 = unlimited).
+pub fn kv_capacity_pressure(hw: &HwConfig) -> Table {
+    let t1 = single_device_capacity(hw, &LlmConfig::llama2_7b(), Mix::Interactive, SLOTS);
+    kv_capacity_pressure_at(hw, t1)
+}
+
+/// [`kv_capacity_pressure`] with the single-device capacity `t1` already
+/// measured. The smallest budget still exceeds any single request's
+/// lifetime KV, so the resident-KV invariant (`kv_peak <= cap`) holds on
+/// every row.
+pub fn kv_capacity_pressure_at(hw: &HwConfig, t1: f64) -> Table {
+    let llm = LlmConfig::llama2_7b();
+    let mix = Mix::Interactive;
+    let devices = 4usize;
+    let rate = 2.0 * t1;
+    let trace = mix.trace(43, N_REQ, rate);
+    let mut t = Table::new(
+        "cluster_kv_pressure",
+        &format!(
+            "KV-capacity pressure — {devices}-device disaggregated fleet, kvaware routing, \
+             {} mix, offered {rate:.2} req/s (cap 0 = unlimited)",
+            mix.name()
+        ),
+        &[
+            "kv_cap_gb",
+            "evictions",
+            "recompute_tokens",
+            "served_rps",
+            "ttft_p50_s",
+            "e2e_p99_s",
+            "kv_peak_gb",
+        ],
+    );
+    for cap_gb in [0.0f64, 16.0, 8.0, 4.0] {
+        let (mut fleet, mut router) =
+            Policy::KvAware.build(&llm, hw, devices, SLOTS, 0.5, Interconnect::board());
+        if cap_gb > 0.0 {
+            for d in fleet.decode_pool.clone() {
+                fleet.set_kv_capacity(d, Some((cap_gb * 1e9) as u64));
+            }
+        }
+        let r = fleet.replay(&trace, router.as_mut());
+        let peak = r.per_device.iter().map(|d| d.kv_peak).max().unwrap_or(0);
+        t.row(vec![
+            format!("{cap_gb}"),
+            r.evictions.to_string(),
+            r.recompute_tokens.to_string(),
+            f(r.throughput_rps()),
+            f(r.ttft_p50()),
+            f(r.e2e_p99()),
+            f(peak as f64 / 1e9),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,5 +281,48 @@ mod tests {
         assert_eq!(kv[1], 0.0);
         assert!(kv[2] > 0.0);
         assert!((kv[2] - kv[3]).abs() < 1e-9 && (kv[3] - kv[4]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chunked_prefill_improves_interactive_ttft_p50() {
+        let t = chunked_prefill_ttft(&HwConfig::paper());
+        assert_eq!(t.rows.len(), 8);
+        let chunk = t.col_f64("chunk");
+        let p50 = t.col_f64("ttft_p50_s");
+        // row 0 is the serialized-FIFO baseline; rows 1..=4 are the FIFO
+        // chunk sweep
+        assert_eq!(chunk[0], 0.0);
+        assert!(chunk[1..5].iter().all(|&c| c > 0.0));
+        let best_chunked = p50[1..5].iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(
+            best_chunked < p50[0],
+            "some chunk size must strictly improve TTFT p50 over serialized: \
+             best chunked {best_chunked} vs serialized {}",
+            p50[0]
+        );
+    }
+
+    #[test]
+    fn kv_pressure_table_respects_budgets() {
+        let t = kv_capacity_pressure(&HwConfig::paper());
+        assert_eq!(t.rows.len(), 4);
+        let caps = t.col_f64("kv_cap_gb");
+        let ev = t.col_f64("evictions");
+        let peaks = t.col_f64("kv_peak_gb");
+        // unlimited budget never evicts, and some KV is actually resident
+        assert_eq!(caps[0], 0.0);
+        assert_eq!(ev[0], 0.0);
+        assert!(peaks[0] > 0.0);
+        // capped rows never exceed their budget (the resident-KV invariant;
+        // slack covers the %.6e cell formatting)
+        for i in 1..t.rows.len() {
+            assert!(caps[i] > 0.0);
+            assert!(
+                peaks[i] <= caps[i] * (1.0 + 1e-5),
+                "row {i}: peak {} exceeds cap {}",
+                peaks[i],
+                caps[i]
+            );
+        }
     }
 }

@@ -17,9 +17,12 @@
 //! The device state machine itself lives in [`sim::device`](super::device)
 //! so the `cluster` fleet simulator and this single-device replay share
 //! one core; this module keeps the trace generators and the single-device
-//! entry point.
+//! entry points. [`replay_trace`] runs the legacy configuration
+//! (serialized prefill, FIFO, unlimited KV); [`replay_trace_with`] takes
+//! an explicit [`SchedConfig`] for chunked prefill, priority admission,
+//! and KV-capacity studies.
 
-use super::device::{Device, DeviceJob};
+use super::device::{Device, DeviceJob, SchedConfig};
 use crate::config::HwConfig;
 use crate::mapping::MappingKind;
 use crate::model::LlmConfig;
@@ -102,6 +105,10 @@ pub struct QueueingResult {
     pub served: Vec<ServedRequest>,
     pub makespan: f64,
     pub decode_steps: u64,
+    /// Sequences evicted under KV pressure (0 with an unlimited budget).
+    pub evictions: u64,
+    /// Cached tokens re-prefilled because of evictions.
+    pub recompute_tokens: u64,
 }
 
 impl QueueingResult {
@@ -136,11 +143,25 @@ pub fn replay_trace(
     slots: usize,
     trace: &[TraceRequest],
 ) -> QueueingResult {
-    let mut dev = Device::new(llm, hw, mapping, slots, 0);
+    replay_trace_with(llm, hw, mapping, slots, SchedConfig::default(), trace)
+}
+
+/// [`replay_trace`] under an explicit device scheduling configuration
+/// (chunked prefill, admission policy, KV capacity). The default
+/// [`SchedConfig`] reproduces `replay_trace` bit-for-bit.
+pub fn replay_trace_with(
+    llm: &LlmConfig,
+    hw: &HwConfig,
+    mapping: MappingKind,
+    slots: usize,
+    sched: SchedConfig,
+    trace: &[TraceRequest],
+) -> QueueingResult {
+    let mut dev = Device::with_sched(llm, hw, mapping, slots, 0, sched);
     let mut pending = trace.iter().peekable();
     loop {
         // pull arrivals up to the device clock
-        while pending.peek().map_or(false, |r| r.arrival <= dev.now()) {
+        while pending.peek().is_some_and(|r| r.arrival <= dev.now()) {
             dev.push(DeviceJob::full(pending.next().unwrap()));
         }
         if !dev.has_work() {
@@ -159,6 +180,8 @@ pub fn replay_trace(
         served: std::mem::take(&mut dev.served),
         makespan: dev.now(),
         decode_steps: dev.decode_steps,
+        evictions: dev.evictions,
+        recompute_tokens: dev.recompute_tokens,
     }
 }
 

@@ -1,8 +1,9 @@
 //! Cluster-plane integration tests: scaling efficiency, router-policy
-//! ordering across interconnect speeds, and exact equivalence of the
-//! refactored single-device core with the fleet simulator.
+//! ordering across interconnect speeds, exact equivalence of the
+//! refactored single-device core with the fleet simulator, and the
+//! KV-capacity / chunked-prefill scheduler paths.
 
-use halo::cluster::{Interconnect, Mix, Policy};
+use halo::cluster::{Interconnect, Mix, Policy, SchedConfig};
 use halo::config::HwConfig;
 use halo::mapping::MappingKind;
 use halo::report;
@@ -124,6 +125,114 @@ fn every_mix_runs_on_every_policy() {
             let r = run(policy, 4, Interconnect::pcie5(), &trace);
             assert_eq!(r.served.len(), 40, "{} on {}", policy.name(), mix.name());
             assert!(r.makespan > 0.0);
+            for s in &r.served {
+                assert!(s.ttft > 0.0 && s.e2e >= s.ttft);
+            }
+        }
+    }
+}
+
+#[test]
+fn build_with_default_sched_matches_build_bit_for_bit() {
+    // acceptance: the scheduler threading must not perturb the default
+    // (serialized FIFO, unlimited KV) configuration in any way
+    let trace = Mix::Interactive.trace(15, 80, 12.0);
+    for policy in Policy::all() {
+        let (mut fa, mut ra) = policy.build(&llm(), &hw(), 4, 8, 0.5, Interconnect::board());
+        let (mut fb, mut rb) = policy.build_with(
+            &llm(),
+            &hw(),
+            4,
+            8,
+            0.5,
+            Interconnect::board(),
+            SchedConfig::default(),
+        );
+        let a = fa.replay(&trace, ra.as_mut());
+        let b = fb.replay(&trace, rb.as_mut());
+        assert_eq!(a.makespan, b.makespan, "{}", policy.name());
+        assert_eq!(a.decode_steps, b.decode_steps);
+        assert_eq!(a.evictions, 0);
+        assert_eq!(b.evictions, 0);
+        for (x, y) in a.served.iter().zip(&b.served) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.ttft, y.ttft);
+            assert_eq!(x.e2e, y.e2e);
+        }
+    }
+}
+
+#[test]
+fn decode_pool_kv_budget_is_never_exceeded() {
+    // acceptance: resident KV bytes never exceed the configured budget.
+    // 4 GB/device comfortably exceeds any single interactive request's
+    // lifetime KV (~2.2 GB), so the invariant is strict.
+    let cap = 4_000_000_000u64;
+    let t1 = report::cluster::single_device_capacity(&hw(), &llm(), Mix::Interactive, 8);
+    let trace = Mix::Interactive.trace(16, 160, 2.0 * t1);
+    let sched = SchedConfig::default().with_kv_capacity(cap);
+    let (mut fleet, mut router) =
+        Policy::KvAware.build_with(&llm(), &hw(), 4, 8, 0.5, Interconnect::board(), sched);
+    let r = fleet.replay(&trace, router.as_mut());
+    assert_eq!(r.served.len(), 160, "eviction/recompute must conserve requests");
+    for d in &r.per_device {
+        assert!(
+            d.kv_peak <= cap,
+            "device {} resident KV peak {} exceeds budget {cap}",
+            d.id,
+            d.kv_peak
+        );
+        if d.role == "prefill" {
+            // handoff KV is transient and charged to the decode side
+            assert_eq!(d.kv_peak, 0, "prefill device {} holds resident KV", d.id);
+            assert_eq!(d.evictions, 0);
+        }
+    }
+    // recompute accounting is consistent: tokens only when evictions
+    assert_eq!(r.evictions == 0, r.recompute_tokens == 0);
+    for s in &r.served {
+        assert!(s.ttft > 0.0 && s.e2e >= s.ttft);
+    }
+}
+
+#[test]
+fn heterogeneous_decode_capacities_route_toward_headroom() {
+    // decode pool = {2, 3}: device 2 gets a tight budget, device 3 an
+    // unlimited one; capacity-aware routing must shift decode work (and
+    // all eviction pressure) toward device 3
+    let t1 = report::cluster::single_device_capacity(&hw(), &llm(), Mix::Interactive, 8);
+    let trace = Mix::Interactive.trace(17, 120, 2.0 * t1);
+    let tight = 3_000_000_000u64;
+    let (mut fleet, mut router) =
+        Policy::KvAware.build(&llm(), &hw(), 4, 8, 0.5, Interconnect::board());
+    fleet.set_kv_capacity(2, Some(tight));
+    let r = fleet.replay(&trace, router.as_mut());
+    assert_eq!(r.served.len(), 120);
+    let d2 = &r.per_device[2];
+    let d3 = &r.per_device[3];
+    assert!(d2.kv_peak <= tight, "tight device over budget: {}", d2.kv_peak);
+    // the unlimited device never needs to evict, and both decode
+    assert_eq!(d3.evictions, 0);
+    assert!(d2.served > 0 && d3.served > 0, "{} vs {}", d2.served, d3.served);
+}
+
+#[test]
+fn chunked_prefill_conserves_requests_across_mixes_and_links() {
+    for mix in [Mix::Chat, Mix::Summarization, Mix::Interactive] {
+        let trace = mix.trace(18, 40, 15.0);
+        for chunk in [256usize, 1024] {
+            let (mut fleet, mut router) = Policy::PhaseDisaggregated.build_with(
+                &llm(),
+                &hw(),
+                4,
+                8,
+                0.5,
+                Interconnect::pcie5(),
+                SchedConfig::chunked(chunk),
+            );
+            let r = fleet.replay(&trace, router.as_mut());
+            assert_eq!(r.served.len(), 40, "chunk {chunk} on {}", mix.name());
+            assert_eq!(r.transfers, 40);
             for s in &r.served {
                 assert!(s.ttft > 0.0 && s.e2e >= s.ttft);
             }

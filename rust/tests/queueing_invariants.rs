@@ -1,14 +1,19 @@
 //! Property tests on the queueing simulator's invariants — regression
-//! guards for the Device extraction: `replay_trace` must conserve
-//! requests across seeds/rates/mappings, every TTFT must cover that
-//! request's prefill latency, and e2e must dominate TTFT.
+//! guards for the Device extraction and the scheduler work on top of it:
+//! `replay_trace` must conserve requests across seeds/rates/mappings,
+//! every TTFT must cover that request's prefill latency, e2e must
+//! dominate TTFT, per-device busy time must never exceed the fleet
+//! makespan under any routing policy or scheduler, and the memoized
+//! `CostModel` must agree with direct graph simulation.
 
+use halo::cluster::{Interconnect, Mix, Policy};
 use halo::config::HwConfig;
 use halo::mapping::MappingKind;
-use halo::model::LlmConfig;
-use halo::sim::device::CostModel;
-use halo::sim::queueing::{poisson_trace, replay_trace};
-use halo::util::prop::{forall, OneOf, Triple, UsizeIn};
+use halo::model::{build_decode_graph, LlmConfig};
+use halo::sim::device::{AdmissionPolicy, CostModel, SchedConfig};
+use halo::sim::queueing::{poisson_trace, replay_trace, replay_trace_with};
+use halo::sim::{simulate_graph, EngineSet};
+use halo::util::prop::{forall, OneOf, Pair, Triple, UsizeIn};
 
 fn hw() -> HwConfig {
     HwConfig::paper()
@@ -73,5 +78,120 @@ fn decode_steps_cover_longest_output() {
         // first token comes from prefill
         r.decode_steps >= (*l_out as u64 - 1).max(1)
             && r.makespan >= tr.last().unwrap().arrival
+    });
+}
+
+// ------------------------------------------------------------- CostModel
+
+#[test]
+fn decode_interpolation_matches_direct_simulation_at_unsampled_points() {
+    // the cost model samples (512, 1024) per batch size and interpolates;
+    // decode cost is affine in context, so the interpolated value must
+    // match a direct graph simulation at points it never sampled
+    let llm = LlmConfig::llama2_7b();
+    for mapping in MAPPINGS {
+        let mut cm = CostModel::new(&llm, &hw(), mapping);
+        let engines = EngineSet::new(&hw(), mapping);
+        for (batch, ctx) in [(1usize, 777usize), (3, 768), (5, 600), (2, 900)] {
+            let graph = build_decode_graph(&llm, ctx, batch);
+            let direct = simulate_graph(&graph, &engines, mapping).latency;
+            let interp = cm.decode_step(batch, ctx);
+            assert!(
+                (interp - direct).abs() < 1e-6 * direct,
+                "{} batch {batch} ctx {ctx}: interp {interp} vs direct {direct}",
+                mapping.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prefill_memoization_is_stable_across_repeat_calls() {
+    let llm = LlmConfig::llama2_7b();
+    let mut cm = CostModel::new(&llm, &hw(), MappingKind::Halo1);
+    for l_in in [64usize, 777, 2048, 8192] {
+        let first = cm.prefill(l_in);
+        assert!(first > 0.0);
+        // bitwise-identical on every repeat call (memoized, no recompute
+        // drift)
+        for _ in 0..3 {
+            assert_eq!(cm.prefill(l_in), first, "prefill({l_in}) drifted");
+        }
+    }
+    let d = cm.decode_step(4, 640);
+    assert_eq!(cm.decode_step(4, 640), d);
+    let c = cm.prefill_chunk(1024, 256);
+    assert_eq!(cm.prefill_chunk(1024, 256), c);
+}
+
+#[test]
+fn default_sched_replay_is_bit_identical_to_legacy_entry_point() {
+    let llm = LlmConfig::llama2_7b();
+    let tr = poisson_trace(77, 40, 8.0, (64, 2048), 32);
+    let legacy = replay_trace(&llm, &hw(), MappingKind::Halo1, 4, &tr);
+    let explicit =
+        replay_trace_with(&llm, &hw(), MappingKind::Halo1, 4, SchedConfig::default(), &tr);
+    assert_eq!(legacy.makespan, explicit.makespan);
+    assert_eq!(legacy.decode_steps, explicit.decode_steps);
+    assert_eq!(explicit.evictions, 0);
+    for (a, b) in legacy.served.iter().zip(&explicit.served) {
+        assert_eq!(a.arrival, b.arrival);
+        assert_eq!(a.ttft, b.ttft);
+        assert_eq!(a.e2e, b.e2e);
+    }
+}
+
+// ------------------------------------------- fleet accounting invariants
+
+const CHUNKS: [usize; 3] = [0, 256, 1024];
+
+#[test]
+fn per_device_busy_never_exceeds_makespan_under_any_policy() {
+    let llm = LlmConfig::llama2_7b();
+    let hw = hw();
+    forall(
+        104,
+        10,
+        Triple(UsizeIn(1, 1000), OneOf(&Policy::ALL), OneOf(&CHUNKS)),
+        |(seed, policy, chunk)| {
+            let trace = Mix::Interactive.trace(*seed as u64, 24, 12.0);
+            let sched = SchedConfig {
+                chunk: (*chunk > 0).then_some(*chunk),
+                ..SchedConfig::default()
+            };
+            let (mut fleet, mut router) =
+                policy.build_with(&llm, &hw, 4, 4, 0.5, Interconnect::board(), sched);
+            let r = fleet.replay(&trace, router.as_mut());
+            r.served.len() == trace.len()
+                && r.per_device.iter().all(|d| {
+                    d.busy <= r.makespan + 1e-9
+                        && d.busy <= d.last_active + 1e-9
+                        && d.last_active <= r.makespan + 1e-9
+                })
+        },
+    );
+}
+
+#[test]
+fn busy_bounded_under_admission_policies_and_kv_pressure() {
+    let llm = LlmConfig::llama2_7b();
+    let hw = hw();
+    const ADMISSIONS: [AdmissionPolicy; 3] =
+        [AdmissionPolicy::Fifo, AdmissionPolicy::ShortestFirst, AdmissionPolicy::Interactive];
+    let cap = 4_000_000_000u64; // 4 GB: tight for the interactive mix
+    forall(105, 6, Pair(UsizeIn(1, 1000), OneOf(&ADMISSIONS)), |(seed, admission)| {
+        let trace = Mix::Interactive.trace(*seed as u64 + 13, 20, 15.0);
+        let sched = SchedConfig {
+            chunk: Some(512),
+            admission: *admission,
+            kv_capacity: Some(cap),
+        };
+        let (mut fleet, mut router) =
+            Policy::KvAware.build_with(&llm, &hw, 4, 4, 0.5, Interconnect::board(), sched);
+        let r = fleet.replay(&trace, router.as_mut());
+        r.served.len() == trace.len()
+            && r.per_device.iter().all(|d| {
+                d.busy <= r.makespan + 1e-9 && d.kv_peak <= cap
+            })
     });
 }
