@@ -82,6 +82,10 @@ fn main() {
         let sc = Scenario { l_in: 2048, l_out: 512, batch: 1 };
         // bypass the mapping's own wordline override by comparing FullCim
         let r = simulate_e2e(&m, &hw, MappingKind::FullCim, &sc);
-        println!("  {:>3} wordlines: prefill {:.1} ms (accuracy up, latency up)", wl, r.ttft() * 1e3);
+        println!(
+            "  {:>3} wordlines: prefill {:.1} ms (accuracy up, latency up)",
+            wl,
+            r.ttft() * 1e3
+        );
     }
 }

@@ -1,0 +1,57 @@
+//! SLO auto-tuning with the DSE engine: search the scheduler space on
+//! one device, print the Pareto frontier, then ask for the cheapest
+//! configuration meeting a median-TTFT SLO — the ROADMAP's "chunk-size
+//! auto-tuning against a TTFT SLO" follow-on, end to end.
+//!
+//!     cargo run --release --example dse_autotune
+
+use halo::cluster::Mix;
+use halo::dse::{explore, DseConfig, Exhaustive, SearchSpace, SloSpec};
+use halo::model::LlmConfig;
+use halo::report::dse::frontier_table;
+use halo::util::fmt_seconds;
+
+fn main() {
+    let space = SearchSpace::sched();
+    let mut cfg = DseConfig::new(LlmConfig::llama2_7b(), Mix::Interactive);
+    cfg.requests = 120;
+    cfg.seed = 41;
+    cfg.rate_scale = 1.25; // mild overload: scheduling, not idle luck
+
+    println!("searching {} scheduler configurations...\n", space.len());
+    let res = explore(&space, &mut Exhaustive, &cfg);
+    let table = frontier_table(
+        &res,
+        "dse_sched_frontier",
+        &format!("Scheduler-space Pareto frontier ({:.2} req/s offered)", res.rate),
+    );
+    println!("{}", table.to_markdown());
+
+    // read the serialized-FIFO baseline's median TTFT off the search,
+    // then demand 40% better and re-run in auto-tune mode
+    let serialized = res
+        .evaluated
+        .iter()
+        .find(|e| e.candidate.chunk == 0 && e.candidate.admission.name() == "fifo")
+        .expect("baseline point");
+    let target = 0.6 * serialized.metrics.slo_ttft;
+    println!(
+        "serialized FIFO median TTFT: {}  ->  asking for {}",
+        fmt_seconds(serialized.metrics.slo_ttft),
+        fmt_seconds(target)
+    );
+    cfg.slo = Some(SloSpec::median(target));
+    let tuned = explore(&space, &mut Exhaustive, &cfg);
+    match tuned.slo_choice {
+        Some(i) => {
+            let e = &tuned.evaluated[i];
+            println!(
+                "auto-tune pick: {}  (median TTFT {}, relative cost {:.2})",
+                e.candidate.label(),
+                fmt_seconds(e.metrics.slo_ttft),
+                e.metrics.cost
+            );
+        }
+        None => println!("no scheduler configuration meets that SLO at this load"),
+    }
+}

@@ -1,0 +1,41 @@
+//! Microbenchmarks of the DSE plane: candidate evaluation (one fleet
+//! replay + scoring), full smoke-grid searches, and hill-climbing over
+//! the fleet space — the paths `halo dse` sits on.
+
+use halo::cluster::Mix;
+use halo::dse::{explore, DseConfig, Exhaustive, HillClimb, RandomSearch, SearchSpace};
+use halo::model::LlmConfig;
+use halo::util::bench::{bb, BenchSuite};
+
+fn main() {
+    let mut s = BenchSuite::new("dse_search");
+    let base = {
+        let mut cfg = DseConfig::new(LlmConfig::llama2_7b(), Mix::Interactive);
+        cfg.requests = 48;
+        cfg.rate = Some(15.0); // fixed load: no calibration inside the loop
+        cfg
+    };
+
+    // one-candidate space = the cost of a single evaluation
+    let point = SearchSpace::paper_point();
+    s.bench("evaluate_single_candidate", || {
+        bb(explore(&point, &mut Exhaustive, &base));
+    });
+
+    let smoke = SearchSpace::smoke();
+    s.bench_throughput("grid_smoke_space", smoke.len() as f64, || {
+        bb(explore(&smoke, &mut Exhaustive, &base));
+    });
+
+    let fleet = SearchSpace::fleet();
+    s.bench_throughput("random12_fleet_space", 12.0, || {
+        bb(explore(&fleet, &mut RandomSearch { samples: 12, seed: 9 }, &base));
+    });
+
+    s.bench("hillclimb_fleet_space", || {
+        let mut hc = HillClimb { restarts: 1, steps: 6, seed: 5 };
+        bb(explore(&fleet, &mut hc, &base));
+    });
+
+    s.finish();
+}

@@ -141,7 +141,8 @@ mod tests {
     #[test]
     fn large_gemm_is_compute_bound() {
         let e = engine();
-        let op = Op::matmul(OpKind::FfnUp, OpClass::Gemm, Operand::StaticWeight, 2048, 4096, 11008, 1);
+        let op =
+            Op::matmul(OpKind::FfnUp, OpClass::Gemm, Operand::StaticWeight, 2048, 4096, 11008, 1);
         let c = e.matmul_cost(&op);
         assert!(c.t_compute > c.t_memory, "{c:?}");
         // effective rate == multiplier peak
@@ -163,8 +164,10 @@ mod tests {
     #[test]
     fn energy_positive_and_scales_with_passes() {
         let e = engine();
-        let m1 = Op::matmul(OpKind::FfnUp, OpClass::Gemm, Operand::StaticWeight, 128, 4096, 4096, 1);
-        let m2 = Op::matmul(OpKind::FfnUp, OpClass::Gemm, Operand::StaticWeight, 256, 4096, 4096, 1);
+        let m1 =
+            Op::matmul(OpKind::FfnUp, OpClass::Gemm, Operand::StaticWeight, 128, 4096, 4096, 1);
+        let m2 =
+            Op::matmul(OpKind::FfnUp, OpClass::Gemm, Operand::StaticWeight, 256, 4096, 4096, 1);
         let c1 = e.matmul_cost(&m1);
         let c2 = e.matmul_cost(&m2);
         assert!(c1.energy > 0.0);
@@ -175,8 +178,10 @@ mod tests {
     #[test]
     fn count_replication_is_linear() {
         let e = engine();
-        let one = Op::matmul(OpKind::AttnScore, OpClass::Attention, Operand::Dynamic, 1, 128, 512, 1);
-        let many = Op::matmul(OpKind::AttnScore, OpClass::Attention, Operand::Dynamic, 1, 128, 512, 32);
+        let one =
+            Op::matmul(OpKind::AttnScore, OpClass::Attention, Operand::Dynamic, 1, 128, 512, 1);
+        let many =
+            Op::matmul(OpKind::AttnScore, OpClass::Attention, Operand::Dynamic, 1, 128, 512, 32);
         let c1 = e.matmul_cost(&one);
         let c32 = e.matmul_cost(&many);
         assert!((c32.latency / c1.latency - 32.0).abs() < 1e-6);

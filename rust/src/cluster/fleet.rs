@@ -91,6 +91,38 @@ impl Fleet {
         }
     }
 
+    /// A unified fleet with an explicit per-device mapping — heterogeneous
+    /// compositions such as HALO1 devices serving alongside HALO2
+    /// (accuracy-tiered) or HALO-SA (digital-fallback) devices. Every
+    /// device prefills and decodes; routing decides who gets what.
+    pub fn heterogeneous_with(
+        llm: &LlmConfig,
+        hw: &HwConfig,
+        mappings: &[MappingKind],
+        slots: usize,
+        interconnect: Interconnect,
+        sched: SchedConfig,
+    ) -> Self {
+        assert!(!mappings.is_empty(), "heterogeneous fleet needs at least 1 device");
+        let devs = mappings
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| Device::with_sched(llm, hw, m, slots, i, sched.clone()))
+            .collect();
+        let devices = mappings.len();
+        Fleet {
+            llm: llm.clone(),
+            devices: devs,
+            interconnect,
+            prefill_pool: (0..devices).collect(),
+            decode_pool: (0..devices).collect(),
+            kv_bytes: 0,
+            transfers: 0,
+            pending_decode: vec![0; devices],
+            pending_kv: vec![0; devices],
+        }
+    }
+
     /// A phase-disaggregated fleet: a Fully-CiM prefill pool feeding a
     /// Fully-CiD decode pool (Table II taken to cluster scale).
     /// `prefill_frac` of the devices (at least one, at most n-1) prefill.
@@ -167,6 +199,14 @@ impl Fleet {
     /// budget is unlimited).
     pub fn decode_kv_headroom(&self, dev: usize) -> u64 {
         self.devices[dev].kv_headroom().saturating_sub(self.pending_kv[dev])
+    }
+
+    /// Outbound KV parked on a prefill device (queued + streaming handoff
+    /// prefills): work that will land in the decode pool once it
+    /// completes. A capacity-aware router reads this before adding to a
+    /// device's handoff backlog while the decode pool is under pressure.
+    pub fn prefill_handoff_backlog(&self, dev: usize) -> u64 {
+        self.devices[dev].handoff_backlog_bytes()
     }
 
     /// Estimated lifetime KV bytes of a request once fully decoded. The
@@ -385,7 +425,12 @@ mod tests {
         let r = fleet.replay(&tr, &mut RoundRobin::default());
         assert_eq!(r.served.len(), single.served.len());
         assert_eq!(r.decode_steps, single.decode_steps);
-        assert!((r.makespan - single.makespan).abs() < 1e-12, "{} vs {}", r.makespan, single.makespan);
+        assert!(
+            (r.makespan - single.makespan).abs() < 1e-12,
+            "{} vs {}",
+            r.makespan,
+            single.makespan
+        );
         for (a, b) in r.served.iter().zip(&single.served) {
             assert_eq!(a.arrival, b.arrival);
             assert!((a.ttft - b.ttft).abs() < 1e-12);
@@ -425,6 +470,28 @@ mod tests {
         for s in &r.served {
             assert!(s.ttft > 0.0 && s.e2e >= s.ttft);
         }
+    }
+
+    #[test]
+    fn heterogeneous_fleet_mixes_mappings_and_conserves() {
+        let tr = poisson_trace(26, 40, 30.0, (64, 512), 16);
+        let mappings = [MappingKind::Halo1, MappingKind::Halo2, MappingKind::Halo1];
+        let mut fleet = Fleet::heterogeneous_with(
+            &llm(),
+            &hw(),
+            &mappings,
+            4,
+            Interconnect::board(),
+            crate::sim::device::SchedConfig::default(),
+        );
+        assert_eq!(fleet.devices[1].mapping, MappingKind::Halo2);
+        let r = fleet.replay(&tr, &mut LeastLoaded);
+        assert_eq!(r.served.len(), 40);
+        assert_eq!(r.transfers, 0, "unified pools keep both phases local");
+        assert!(r.per_device.iter().all(|d| d.role == "unified"));
+        // the mapping column survives into the per-device summary
+        let summary: Vec<MappingKind> = r.per_device.iter().map(|d| d.mapping).collect();
+        assert_eq!(summary, mappings);
     }
 
     #[test]

@@ -103,7 +103,12 @@ mod tests {
 
     #[test]
     fn by_name_roundtrip() {
-        for l in [Interconnect::board(), Interconnect::pcie5(), Interconnect::ethernet(), Interconnect::wan()] {
+        for l in [
+            Interconnect::board(),
+            Interconnect::pcie5(),
+            Interconnect::ethernet(),
+            Interconnect::wan(),
+        ] {
             assert_eq!(Interconnect::by_name(l.name), Some(l.clone()));
         }
         assert!(Interconnect::by_name("carrier-pigeon").is_none());

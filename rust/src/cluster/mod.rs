@@ -13,19 +13,25 @@
 //!   transfer (`bytes = 2 x layers x ctx x kv_heads x head_dim`) whenever
 //!   prefill and decode run on different devices;
 //! * [`workload`] — named scenario mixes (chat, summarization,
-//!   generation, interactive) on the Poisson trace machinery;
+//!   generation, interactive) on the Poisson trace machinery, optional
+//!   per-request tenant tags ([`Mix::trace_tenants`]) and per-tenant
+//!   replay breakdowns ([`per_tenant_stats`]);
 //! * [`router`] — pluggable request routing: round-robin, least-loaded,
 //!   phase-disaggregated (prefill pool -> decode pool), and KV-capacity-
-//!   aware decode placement that skips full decode devices;
+//!   aware placement: decode skips full devices, and under decode-pool
+//!   pressure prefill placement steers to the device with the smallest
+//!   outbound handoff backlog;
 //! * [`fleet`] — N independent [`sim::device::Device`](crate::sim::device)
 //!   state machines advanced in global event order, each carrying its own
 //!   [`SchedConfig`] (chunked prefill, admission policy, resident-KV
-//!   budget with eviction-and-recompute) and, optionally, a heterogeneous
-//!   per-device KV capacity ([`Fleet::set_kv_capacity`]).
+//!   budget with eviction-and-recompute), optionally a heterogeneous
+//!   per-device KV capacity ([`Fleet::set_kv_capacity`]) or an explicit
+//!   per-device mapping composition ([`Fleet::heterogeneous_with`]).
 //!
 //! Entry points: [`Policy::build`] (or [`Policy::build_with`] for a
 //! non-default scheduler) to construct a (fleet, router) pair and
-//! [`Fleet::replay`] to serve a trace through it.
+//! [`Fleet::replay`] to serve a trace through it. The [`crate::dse`]
+//! plane searches over all of these knobs at once.
 
 pub mod fleet;
 pub mod interconnect;
@@ -36,4 +42,4 @@ pub use crate::sim::device::{AdmissionPolicy, SchedConfig};
 pub use fleet::{Fleet, FleetResult};
 pub use interconnect::{kv_transfer_bytes, Interconnect};
 pub use router::{KvAware, LeastLoaded, PhaseDisaggregated, Policy, Route, Router, RoundRobin};
-pub use workload::Mix;
+pub use workload::{per_tenant_stats, Mix, TenantStats};

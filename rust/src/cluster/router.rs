@@ -96,6 +96,14 @@ impl Router for PhaseDisaggregated {
 /// device. When no decode device fits — the whole pool is under
 /// pressure — it falls back to the device with the most headroom, and
 /// the device-level eviction machinery absorbs the overflow.
+///
+/// Prefill placement is destination-aware too: while the decode pool has
+/// headroom it is plain least-loaded, but once the pool is under pressure
+/// (nothing fits this request) the prefill goes to the device with the
+/// *smallest outbound handoff backlog* — the device whose queued prefills
+/// will flood the decode pool last — so this request's KV arrives after
+/// the pool has had the most time to drain, instead of piling onto the
+/// device already feeding it fastest.
 #[derive(Debug, Default)]
 pub struct KvAware;
 
@@ -105,17 +113,29 @@ impl Router for KvAware {
     }
     fn route(&mut self, fleet: &Fleet, req: &TraceRequest) -> Route {
         let need = fleet.kv_estimate(req);
-        let decode = fleet
+        let fitting = fleet
             .decode_pool
             .iter()
             .filter(|&&d| fleet.decode_kv_headroom(d) >= need)
             .min_by_key(|&&d| fleet.decode_load(d))
-            .or_else(|| {
-                fleet.decode_pool.iter().max_by_key(|&&d| fleet.decode_kv_headroom(d))
-            })
-            .copied()
-            .expect("empty decode pool");
-        Route { prefill: argmin_load(fleet, &fleet.prefill_pool), decode }
+            .copied();
+        let decode = fitting.unwrap_or_else(|| {
+            *fleet
+                .decode_pool
+                .iter()
+                .max_by_key(|&&d| fleet.decode_kv_headroom(d))
+                .expect("empty decode pool")
+        });
+        let prefill = if fitting.is_some() {
+            argmin_load(fleet, &fleet.prefill_pool)
+        } else {
+            *fleet
+                .prefill_pool
+                .iter()
+                .min_by_key(|&&d| (fleet.prefill_handoff_backlog(d), fleet.devices[d].load(), d))
+                .expect("empty prefill pool")
+        };
+        Route { prefill, decode }
     }
 }
 
@@ -170,6 +190,24 @@ impl Policy {
         }
     }
 
+    /// The router half of this policy alone — for callers (the `dse`
+    /// plane) that build the fleet themselves, e.g. with a heterogeneous
+    /// per-device mapping composition.
+    pub fn router(&self) -> Box<dyn Router> {
+        match self {
+            Policy::RoundRobin => Box::new(RoundRobin::default()),
+            Policy::LeastLoaded => Box::new(LeastLoaded),
+            Policy::PhaseDisaggregated => Box::new(PhaseDisaggregated),
+            Policy::KvAware => Box::new(KvAware),
+        }
+    }
+
+    /// Whether this policy routes over split prefill/decode pools (and so
+    /// needs a fleet of at least two devices).
+    pub fn is_disaggregated(&self) -> bool {
+        matches!(self, Policy::PhaseDisaggregated | Policy::KvAware)
+    }
+
     /// Construct the (fleet, router) pair this policy describes.
     /// `prefill_frac` only applies to the disaggregated topologies.
     pub fn build(
@@ -197,24 +235,12 @@ impl Policy {
         link: Interconnect,
         sched: SchedConfig,
     ) -> (Fleet, Box<dyn Router>) {
-        match self {
-            Policy::RoundRobin => (
-                Fleet::unified_with(llm, hw, devices, slots, link, sched),
-                Box::new(RoundRobin::default()),
-            ),
-            Policy::LeastLoaded => (
-                Fleet::unified_with(llm, hw, devices, slots, link, sched),
-                Box::new(LeastLoaded),
-            ),
-            Policy::PhaseDisaggregated => (
-                Fleet::disaggregated_with(llm, hw, devices, slots, prefill_frac, link, sched),
-                Box::new(PhaseDisaggregated),
-            ),
-            Policy::KvAware => (
-                Fleet::disaggregated_with(llm, hw, devices, slots, prefill_frac, link, sched),
-                Box::new(KvAware),
-            ),
-        }
+        let fleet = if self.is_disaggregated() {
+            Fleet::disaggregated_with(llm, hw, devices, slots, prefill_frac, link, sched)
+        } else {
+            Fleet::unified_with(llm, hw, devices, slots, link, sched)
+        };
+        (fleet, self.router())
     }
 }
 
@@ -233,7 +259,7 @@ mod tests {
     }
 
     fn req() -> TraceRequest {
-        TraceRequest { arrival: 0.0, l_in: 128, l_out: 16 }
+        TraceRequest { arrival: 0.0, l_in: 128, l_out: 16, tenant: 0 }
     }
 
     #[test]
@@ -308,5 +334,52 @@ mod tests {
         f.set_kv_capacity(3, Some(need / 4));
         let route = kv.route(&f, &r);
         assert_eq!(route.decode, 2, "largest headroom wins under pressure");
+    }
+
+    #[test]
+    fn kv_aware_prefill_placement_checks_decode_pool_headroom() {
+        use crate::sim::device::DeviceJob;
+        let llm = LlmConfig::llama2_7b();
+        let mut f = Fleet::disaggregated(
+            &llm,
+            &HwConfig::paper(),
+            4,
+            4,
+            0.5,
+            Interconnect::board(),
+        );
+        // prefill pool = {0, 1}: device 0 carries two small handoff
+        // prefills (load 2, small outbound KV); device 1 carries one huge
+        // one (load 1, large outbound KV)
+        for _ in 0..2 {
+            f.devices[0].push(DeviceJob::PrefillOnly {
+                arrival: 0.0,
+                ready: 0.0,
+                l_in: 64,
+                l_out: 8,
+                decode_dev: 2,
+            });
+        }
+        f.devices[1].push(DeviceJob::PrefillOnly {
+            arrival: 0.0,
+            ready: 0.0,
+            l_in: 8192,
+            l_out: 8,
+            decode_dev: 3,
+        });
+        assert!(f.prefill_handoff_backlog(1) > f.prefill_handoff_backlog(0));
+        let r = req();
+        let need = f.kv_estimate(&r);
+        let mut kv = KvAware;
+        // decode pool has headroom: plain least-loaded prefill placement
+        let route = kv.route(&f, &r);
+        assert_eq!(route.prefill, 1, "no pressure -> least-loaded prefill device");
+        // decode pool under pressure (nothing fits): steer the prefill to
+        // the device with the smallest outbound handoff backlog instead
+        f.set_kv_capacity(2, Some(need / 2));
+        f.set_kv_capacity(3, Some(need / 2));
+        let route = kv.route(&f, &r);
+        assert_eq!(route.prefill, 0, "pressure -> smallest handoff backlog wins");
+        assert!(f.decode_pool.contains(&route.decode));
     }
 }

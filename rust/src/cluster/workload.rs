@@ -9,8 +9,10 @@
 //! * **generation**: short-in / long-out — decode-dominated;
 //! * **interactive**: a 50/25/25 blend of the three.
 
-use crate::sim::queueing::{log_uniform, trace_with, TraceRequest};
-use crate::util::Rng;
+use crate::sim::queueing::{
+    log_uniform, trace_with, trace_with_tenants, ServedRequest, TraceRequest,
+};
+use crate::util::{percentile, Rng};
 
 /// Named workload mix.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -69,6 +71,68 @@ impl Mix {
     pub fn trace(&self, seed: u64, n: usize, rate_per_s: f64) -> Vec<TraceRequest> {
         trace_with(seed, n, rate_per_s, |rng| self.sample(rng))
     }
+
+    /// [`Mix::trace`] with each request tagged by a uniformly drawn
+    /// tenant in `[0, tenants)`; `tenants <= 1` is bit-identical to
+    /// [`Mix::trace`].
+    pub fn trace_tenants(
+        &self,
+        seed: u64,
+        n: usize,
+        rate_per_s: f64,
+        tenants: usize,
+    ) -> Vec<TraceRequest> {
+        trace_with_tenants(seed, n, rate_per_s, tenants, |rng| self.sample(rng))
+    }
+}
+
+/// Per-tenant share of a replay (requests, TTFT/e2e percentiles, decode
+/// token throughput over the fleet makespan).
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    pub tenant: usize,
+    pub requests: usize,
+    /// Output tokens generated for this tenant.
+    pub tokens: u64,
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    pub e2e_p50: f64,
+    pub e2e_p99: f64,
+    pub tok_per_s: f64,
+}
+
+/// Join served records back to their trace requests (arrivals are
+/// strictly increasing, hence unique) and aggregate per tenant. Tenants
+/// absent from the trace produce no row; rows come back sorted by tenant.
+pub fn per_tenant_stats(
+    trace: &[TraceRequest],
+    served: &[ServedRequest],
+    makespan: f64,
+) -> Vec<TenantStats> {
+    use std::collections::{BTreeMap, HashMap};
+    let by_arrival: HashMap<u64, &TraceRequest> =
+        trace.iter().map(|r| (r.arrival.to_bits(), r)).collect();
+    let mut groups: BTreeMap<usize, (Vec<f64>, Vec<f64>, u64)> = BTreeMap::new();
+    for s in served {
+        let Some(req) = by_arrival.get(&s.arrival.to_bits()) else { continue };
+        let g = groups.entry(req.tenant).or_default();
+        g.0.push(s.ttft);
+        g.1.push(s.e2e);
+        g.2 += req.l_out as u64;
+    }
+    groups
+        .into_iter()
+        .map(|(tenant, (ttfts, e2es, tokens))| TenantStats {
+            tenant,
+            requests: ttfts.len(),
+            tokens,
+            ttft_p50: percentile(&ttfts, 50.0),
+            ttft_p99: percentile(&ttfts, 99.0),
+            e2e_p50: percentile(&e2es, 50.0),
+            e2e_p99: percentile(&e2es, 99.0),
+            tok_per_s: tokens as f64 / makespan.max(1e-12),
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -117,5 +181,30 @@ mod tests {
             assert_eq!(Mix::by_name(m.name()), Some(m));
         }
         assert!(Mix::by_name("batch").is_none());
+    }
+
+    #[test]
+    fn tenant_stats_join_and_conserve() {
+        use crate::cluster::{Interconnect, Policy};
+        use crate::config::HwConfig;
+        use crate::model::LlmConfig;
+        let llm = LlmConfig::llama2_7b();
+        let trace = Mix::Chat.trace_tenants(5, 80, 50.0, 3);
+        let (mut fleet, mut router) =
+            Policy::LeastLoaded.build(&llm, &HwConfig::paper(), 2, 8, 0.5, Interconnect::board());
+        let r = fleet.replay(&trace, router.as_mut());
+        let stats = per_tenant_stats(&trace, &r.served, r.makespan);
+        // every request lands in exactly one tenant bucket
+        assert_eq!(stats.iter().map(|t| t.requests).sum::<usize>(), 80);
+        let want_tokens: u64 = trace.iter().map(|q| q.l_out as u64).sum();
+        assert_eq!(stats.iter().map(|t| t.tokens).sum::<u64>(), want_tokens);
+        // tenants come back sorted, with sane latency orderings
+        assert!(stats.windows(2).all(|w| w[0].tenant < w[1].tenant));
+        for t in &stats {
+            assert!(t.requests > 0);
+            assert!(t.ttft_p50 > 0.0 && t.ttft_p99 >= t.ttft_p50);
+            assert!(t.e2e_p99 >= t.e2e_p50 && t.e2e_p50 >= t.ttft_p50);
+            assert!(t.tok_per_s > 0.0);
+        }
     }
 }

@@ -207,6 +207,15 @@ impl CimConfig {
         self
     }
 
+    /// Scale the tile mesh (a `dse` knob: more CiM tiles buy prefill
+    /// throughput at a proportional area/cost premium). Buffer sizes and
+    /// bandwidths are left untouched — the mesh is the first-order lever.
+    pub fn with_tile_mesh(mut self, mesh: (usize, usize)) -> Self {
+        assert!(mesh.0 > 0 && mesh.1 > 0, "tile mesh must be non-empty");
+        self.tile_mesh = mesh;
+        self
+    }
+
     pub fn cores(&self) -> usize {
         self.tile_mesh.0 * self.tile_mesh.1 * self.core_mesh.0 * self.core_mesh.1
     }
@@ -334,6 +343,14 @@ impl InterposerConfig {
     pub fn paper() -> Self {
         InterposerConfig { bw: 2.0e12, e_link: 4.8e-12 }
     }
+
+    /// Bandwidth-scaled variant (a `dse` knob: wider/narrower 2.5D link).
+    /// Energy per byte is geometry-bound and does not scale with width.
+    pub fn scaled(mut self, factor: f64) -> Self {
+        assert!(factor > 0.0, "bandwidth scale must be positive");
+        self.bw *= factor;
+        self
+    }
 }
 
 /// Complete HALO hardware description (Table I).
@@ -459,6 +476,28 @@ mod tests {
     #[should_panic]
     fn wordlines_must_divide() {
         CimConfig::paper().with_wordlines(100);
+    }
+
+    #[test]
+    fn tile_mesh_scaling_scales_peak() {
+        let base = CimConfig::paper();
+        let wide = CimConfig::paper().with_tile_mesh((8, 4));
+        assert_eq!(wide.resident_tiles(), 2 * base.resident_tiles());
+        assert!((wide.peak_macs() / base.peak_macs() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interposer_scaling_touches_bw_only() {
+        let base = InterposerConfig::paper();
+        let fat = InterposerConfig::paper().scaled(2.0);
+        assert_eq!(fat.bw, 2.0 * base.bw);
+        assert_eq!(fat.e_link, base.e_link);
+    }
+
+    #[test]
+    #[should_panic]
+    fn interposer_scale_must_be_positive() {
+        InterposerConfig::paper().scaled(0.0);
     }
 
     #[test]

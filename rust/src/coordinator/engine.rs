@@ -123,7 +123,9 @@ impl InferenceEngine {
             .prefills
             .iter()
             .find(|(l, _)| *l >= plen)
-            .ok_or_else(|| anyhow!("prompt of {plen} exceeds longest prefill ({})", self.max_prompt()))?;
+            .ok_or_else(|| {
+                anyhow!("prompt of {plen} exceeds longest prefill ({})", self.max_prompt())
+            })?;
 
         // right-pad: padded positions are causally after the prompt, so
         // their K/V never get attended (decode positions start at plen)

@@ -34,7 +34,13 @@ pub struct KvCache {
 }
 
 impl KvCache {
-    pub fn new(n_layers: usize, slots: usize, max_seq: usize, kv_heads: usize, head_dim: usize) -> Self {
+    pub fn new(
+        n_layers: usize,
+        slots: usize,
+        max_seq: usize,
+        kv_heads: usize,
+        head_dim: usize,
+    ) -> Self {
         let spec = TensorSpec {
             shape: vec![n_layers, slots, max_seq, kv_heads, head_dim],
             dtype: Dtype::F32,

@@ -76,9 +76,11 @@ impl Server {
 
         loop {
             // admission: fill every free slot (prefill phase)
-            while let Some((slot, req)) =
-                self.batcher.admit(self.engine.kv.free_slot(), self.engine.max_prompt(), &mut rejects)
-            {
+            while let Some((slot, req)) = self.batcher.admit(
+                self.engine.kv.free_slot(),
+                self.engine.max_prompt(),
+                &mut rejects,
+            ) {
                 let admitted_at = Instant::now();
                 let out =
                     self.engine.prefill_into_slot(slot, req.id, &req.prompt, req.max_new_tokens)?;
@@ -155,7 +157,8 @@ impl Server {
     pub fn spawn(
         artifacts: std::path::PathBuf,
         slots: usize,
-    ) -> (mpsc::Sender<Request>, mpsc::Receiver<Response>, thread::JoinHandle<Result<ServerStats>>) {
+    ) -> (mpsc::Sender<Request>, mpsc::Receiver<Response>, thread::JoinHandle<Result<ServerStats>>)
+    {
         let (tx_req, rx_req) = mpsc::channel::<Request>();
         let (tx_resp, rx_resp) = mpsc::channel::<Response>();
         let handle = thread::spawn(move || -> Result<ServerStats> {

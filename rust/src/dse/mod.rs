@@ -1,0 +1,313 @@
+//! Design-space exploration and SLO auto-tuning over the whole simulator.
+//!
+//! The paper's methodology is a search: sweep the architectural extremes
+//! (Fully-CiD, Fully-CiM, phase-aware; §V-B), score each point, and pick
+//! the winner. This plane turns that from a hand-run argument into an
+//! engine — "evaluate one point" becomes "find the best point":
+//!
+//! * [`space`] — the searchable cross product: router policy, fleet
+//!   composition (uniform or heterogeneous HALO1/HALO2/SA), device count,
+//!   pool split, scheduler knobs (chunk / admission / KV budget), and
+//!   hardware knobs (CiM tile mesh, interposer bandwidth);
+//! * [`strategy`] — pluggable, seeded, deterministic search drivers:
+//!   exhaustive grid, random sampling, steepest hill-climb with restarts;
+//! * [`objective`] — multi-objective scoring (TTFT p50/p99, decode
+//!   throughput, evictions, SLO attainment, fleet cost, ...);
+//! * [`pareto`] — dominance and frontier extraction.
+//!
+//! [`explore`] wires them together: it calibrates one offered load,
+//! generates one trace, memoizes every candidate's replay (revisits are
+//! free, so hill-climbs can wander), and returns every evaluated point,
+//! the Pareto frontier, and — when a TTFT SLO is given — the *cheapest*
+//! configuration that meets it. Everything is deterministic per seed:
+//! two runs with the same arguments are bit-identical.
+
+pub mod objective;
+pub mod pareto;
+pub mod space;
+pub mod strategy;
+
+use std::collections::BTreeMap;
+
+pub use objective::{fleet_cost, Direction, Metrics, Objective};
+pub use pareto::{dominates, pareto_indices};
+pub use space::{Candidate, Composition, Index, SearchSpace, AXES};
+pub use strategy::{Exhaustive, HillClimb, RandomSearch, Strategy};
+
+use crate::cluster::{Interconnect, Mix};
+use crate::config::HwConfig;
+use crate::model::LlmConfig;
+use crate::report::cluster::single_device_capacity;
+use crate::sim::queueing::TraceRequest;
+
+/// A TTFT service-level objective: the TTFT at `pct` (a percentile in
+/// 0..=100) must not exceed `ttft` seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    pub ttft: f64,
+    pub pct: f64,
+}
+
+impl SloSpec {
+    /// Median-TTFT SLO (the default percentile).
+    pub fn median(ttft: f64) -> Self {
+        SloSpec { ttft, pct: 50.0 }
+    }
+}
+
+/// Everything one exploration run needs besides the space and strategy.
+#[derive(Debug, Clone)]
+pub struct DseConfig {
+    pub llm: LlmConfig,
+    pub mix: Mix,
+    /// Requests per evaluated trace.
+    pub requests: usize,
+    /// Seeds both the trace and any stochastic strategy.
+    pub seed: u64,
+    /// Decode slots per device.
+    pub slots: usize,
+    pub link: Interconnect,
+    /// Absolute offered load in req/s; `None` calibrates it as
+    /// `rate_scale x` one paper-default device's saturated throughput.
+    pub rate: Option<f64>,
+    pub rate_scale: f64,
+    /// Tenants in the trace (1 = untagged single-tenant).
+    pub tenants: usize,
+    pub slo: Option<SloSpec>,
+    /// Scored dimensions; the first one doubles as the scalar guidance
+    /// for hill-climbing when no SLO is set.
+    pub objectives: Vec<Objective>,
+    pub base_hw: HwConfig,
+}
+
+impl DseConfig {
+    pub fn new(llm: LlmConfig, mix: Mix) -> Self {
+        DseConfig {
+            llm,
+            mix,
+            requests: 96,
+            seed: 42,
+            slots: 8,
+            link: Interconnect::board(),
+            rate: None,
+            rate_scale: 1.5,
+            tenants: 1,
+            slo: None,
+            objectives: Objective::default_set(),
+            base_hw: HwConfig::paper(),
+        }
+    }
+}
+
+/// One evaluated point of the space.
+#[derive(Debug, Clone)]
+pub struct Evaluated {
+    pub index: Index,
+    pub candidate: Candidate,
+    pub metrics: Metrics,
+    /// Minimized coordinates, one per configured objective.
+    pub scores: Vec<f64>,
+}
+
+/// The outcome of one exploration run.
+#[derive(Debug, Clone)]
+pub struct DseResult {
+    pub objectives: Vec<Objective>,
+    pub slo: Option<SloSpec>,
+    /// The offered load every candidate was replayed under, req/s.
+    pub rate: f64,
+    /// Every distinct evaluated candidate, in first-visit order.
+    pub evaluated: Vec<Evaluated>,
+    /// Indices into `evaluated` of the Pareto-optimal points, sorted by
+    /// the first objective.
+    pub frontier: Vec<usize>,
+    /// Index of the cheapest candidate meeting the SLO, if one was set
+    /// and met.
+    pub slo_choice: Option<usize>,
+}
+
+impl DseResult {
+    pub fn frontier_points(&self) -> Vec<&Evaluated> {
+        self.frontier.iter().map(|&i| &self.evaluated[i]).collect()
+    }
+
+    /// Index of the evaluated candidate best on `obj` (by minimized
+    /// score; ties resolve to the earliest-visited).
+    pub fn best_by(&self, obj: Objective) -> Option<usize> {
+        (0..self.evaluated.len())
+            .min_by(|&a, &b| {
+                obj.score(&self.evaluated[a].metrics)
+                    .total_cmp(&obj.score(&self.evaluated[b].metrics))
+            })
+    }
+
+    fn meets_slo(&self, i: usize) -> bool {
+        match self.slo {
+            None => false,
+            Some(slo) => self.evaluated[i].metrics.slo_ttft <= slo.ttft,
+        }
+    }
+}
+
+/// Scalar guidance for strategies: the SLO-penalized cost in auto-tune
+/// mode (any config missing the SLO scores worse than every config
+/// meeting it), else the first objective.
+fn scalarize(cfg: &DseConfig, m: &Metrics) -> f64 {
+    match cfg.slo {
+        Some(slo) => {
+            if m.slo_ttft <= slo.ttft {
+                m.cost
+            } else {
+                1e12 + (m.slo_ttft - slo.ttft)
+            }
+        }
+        None => cfg.objectives[0].score(m),
+    }
+}
+
+fn evaluate_candidate(cand: &Candidate, cfg: &DseConfig, trace: &[TraceRequest]) -> Metrics {
+    let hw = cand.hw(&cfg.base_hw);
+    let (mut fleet, mut router) = cand.build_fleet(&cfg.llm, &hw, cfg.slots, cfg.link.clone());
+    let r = fleet.replay(trace, router.as_mut());
+    Metrics::collect(cand, trace, &r, cfg.slo.map(|s| (s.ttft, s.pct)))
+}
+
+/// Run one exploration: calibrate the offered load, drive `strategy`
+/// over `space` with memoized candidate evaluation, then extract the
+/// Pareto frontier and the SLO choice. Deterministic per (space,
+/// strategy, cfg) — including bit-identical floating-point results.
+pub fn explore(
+    space: &SearchSpace,
+    strategy: &mut dyn Strategy,
+    cfg: &DseConfig,
+) -> DseResult {
+    assert!(!cfg.objectives.is_empty(), "need at least one objective");
+    assert!(cfg.requests > 0 && cfg.slots > 0 && cfg.tenants > 0);
+    let rate = cfg.rate.unwrap_or_else(|| {
+        cfg.rate_scale * single_device_capacity(&cfg.base_hw, &cfg.llm, cfg.mix, cfg.slots)
+    });
+    let trace = cfg.mix.trace_tenants(cfg.seed, cfg.requests, rate, cfg.tenants);
+
+    let mut evaluated: Vec<Evaluated> = Vec::new();
+    // memo keyed on the canonical index (axes a topology ignores are
+    // pinned), so physically identical points replay once and appear as
+    // one frontier row; invalid points pin to +inf
+    let mut memo: BTreeMap<Index, f64> = BTreeMap::new();
+    {
+        let mut eval = |idx: &Index| -> f64 {
+            let key = space.canonical(idx);
+            if let Some(&s) = memo.get(&key) {
+                return s;
+            }
+            let cand = space.decode(&key);
+            if !cand.valid() {
+                memo.insert(key, f64::INFINITY);
+                return f64::INFINITY;
+            }
+            let metrics = evaluate_candidate(&cand, cfg, &trace);
+            let scalar = scalarize(cfg, &metrics);
+            let scores = cfg.objectives.iter().map(|o| o.score(&metrics)).collect();
+            evaluated.push(Evaluated { index: key, candidate: cand, metrics, scores });
+            memo.insert(key, scalar);
+            scalar
+        };
+        strategy.search(space, &mut eval);
+    }
+
+    let score_vecs: Vec<Vec<f64>> = evaluated.iter().map(|e| e.scores.clone()).collect();
+    let mut frontier = pareto_indices(&score_vecs);
+    frontier.sort_by(|&a, &b| {
+        evaluated[a].scores[0]
+            .total_cmp(&evaluated[b].scores[0])
+            .then(a.cmp(&b))
+    });
+
+    let mut result = DseResult {
+        objectives: cfg.objectives.clone(),
+        slo: cfg.slo,
+        rate,
+        evaluated,
+        frontier,
+        slo_choice: None,
+    };
+    if cfg.slo.is_some() {
+        let mut best: Option<usize> = None;
+        for i in 0..result.evaluated.len() {
+            if !result.meets_slo(i) {
+                continue;
+            }
+            best = match best {
+                None => Some(i),
+                Some(b) => {
+                    let (mi, mb) = (&result.evaluated[i].metrics, &result.evaluated[b].metrics);
+                    let better = mi.cost < mb.cost
+                        || (mi.cost == mb.cost && mi.slo_ttft < mb.slo_ttft);
+                    Some(if better { i } else { b })
+                }
+            };
+        }
+        result.slo_choice = best;
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Policy;
+
+    fn tiny_cfg() -> DseConfig {
+        let mut cfg = DseConfig::new(LlmConfig::llama2_7b(), Mix::Interactive);
+        cfg.requests = 40;
+        cfg.seed = 7;
+        cfg
+    }
+
+    fn tiny_space() -> SearchSpace {
+        SearchSpace::paper_point()
+            .with_policies(vec![Policy::LeastLoaded])
+            .with_devices(vec![1])
+            .with_chunks(vec![0, 512])
+    }
+
+    #[test]
+    fn explore_scores_every_candidate_and_extracts_a_frontier() {
+        let cfg = tiny_cfg();
+        let res = explore(&tiny_space(), &mut Exhaustive, &cfg);
+        assert_eq!(res.evaluated.len(), 2);
+        assert!(!res.frontier.is_empty());
+        for e in &res.evaluated {
+            assert_eq!(e.scores.len(), cfg.objectives.len());
+            assert!(e.metrics.throughput_rps > 0.0);
+            assert!(e.metrics.ttft_p99 >= e.metrics.ttft_p50);
+            assert_eq!(e.metrics.cost, 1.0, "single paper device costs 1.0");
+        }
+        // no frontier point dominated by any evaluated point
+        for &i in &res.frontier {
+            assert!(!res
+                .evaluated
+                .iter()
+                .any(|e| dominates(&e.scores, &res.evaluated[i].scores)));
+        }
+    }
+
+    #[test]
+    fn invalid_candidates_are_skipped_not_evaluated() {
+        let space = SearchSpace::paper_point()
+            .with_policies(vec![Policy::LeastLoaded, Policy::KvAware])
+            .with_devices(vec![1]);
+        let res = explore(&space, &mut Exhaustive, &tiny_cfg());
+        // kvaware on one device is structurally invalid -> only the
+        // unified point is evaluated
+        assert_eq!(res.evaluated.len(), 1);
+        assert_eq!(res.evaluated[0].candidate.policy, Policy::LeastLoaded);
+    }
+
+    #[test]
+    fn explicit_rate_bypasses_calibration() {
+        let mut cfg = tiny_cfg();
+        cfg.rate = Some(3.5);
+        let res = explore(&tiny_space(), &mut Exhaustive, &cfg);
+        assert_eq!(res.rate, 3.5);
+    }
+}

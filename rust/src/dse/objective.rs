@@ -1,0 +1,270 @@
+//! Multi-objective scoring of an evaluated candidate.
+//!
+//! A replay yields a [`Metrics`] record; each [`Objective`] reads one
+//! scalar out of it with a direction (minimize latency/cost/evictions,
+//! maximize throughput/SLO attainment). [`Objective::score`] folds the
+//! direction in — scores are always *minimized* — so the Pareto machinery
+//! and the scalar search guidance never need to know about directions.
+
+use super::space::Candidate;
+use crate::cluster::{per_tenant_stats, FleetResult};
+use crate::sim::queueing::{ttft_percentile, TraceRequest};
+
+/// Everything the objectives can read about one evaluated candidate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metrics {
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    pub e2e_p50: f64,
+    pub e2e_p99: f64,
+    /// Served requests per second over the makespan.
+    pub throughput_rps: f64,
+    /// Generated (decode) tokens per second over the makespan.
+    pub decode_tok_per_s: f64,
+    pub utilization: f64,
+    pub evictions: f64,
+    pub recompute_tokens: f64,
+    pub kv_transfer_gb: f64,
+    /// Worst per-tenant TTFT p99 (equals `ttft_p99` for 1 tenant).
+    pub worst_tenant_ttft_p99: f64,
+    /// TTFT at the SLO percentile (p50 unless configured otherwise).
+    pub slo_ttft: f64,
+    /// Fraction of requests whose TTFT met the SLO (1.0 when no SLO set).
+    pub slo_attainment: f64,
+    /// Relative fleet cost of the candidate (see [`fleet_cost`]).
+    pub cost: f64,
+}
+
+impl Metrics {
+    /// Collect metrics from a finished replay. `slo` is the optional
+    /// (ttft_seconds, percentile) SLO spec used for `slo_ttft` /
+    /// `slo_attainment`.
+    pub fn collect(
+        cand: &Candidate,
+        trace: &[TraceRequest],
+        r: &FleetResult,
+        slo: Option<(f64, f64)>,
+    ) -> Metrics {
+        let total_tokens: u64 = trace.iter().map(|q| q.l_out as u64).sum();
+        let tenants = per_tenant_stats(trace, &r.served, r.makespan);
+        let worst_tenant =
+            tenants.iter().map(|t| t.ttft_p99).fold(0.0f64, f64::max);
+        let pct = slo.map_or(50.0, |(_, p)| p);
+        let slo_ttft = ttft_percentile(&r.served, pct);
+        let slo_attainment = match slo {
+            None => 1.0,
+            Some((target, _)) => {
+                let met = r.served.iter().filter(|s| s.ttft <= target).count();
+                met as f64 / r.served.len().max(1) as f64
+            }
+        };
+        Metrics {
+            ttft_p50: r.ttft_p50(),
+            ttft_p99: r.ttft_p99(),
+            e2e_p50: r.e2e_p50(),
+            e2e_p99: r.e2e_p99(),
+            throughput_rps: r.throughput_rps(),
+            decode_tok_per_s: total_tokens as f64 / r.makespan.max(1e-12),
+            utilization: r.utilization(),
+            evictions: r.evictions as f64,
+            recompute_tokens: r.recompute_tokens as f64,
+            kv_transfer_gb: r.kv_bytes as f64 / 1e9,
+            worst_tenant_ttft_p99: worst_tenant,
+            slo_ttft,
+            slo_attainment,
+            cost: fleet_cost(cand),
+        }
+    }
+}
+
+/// Relative fleet cost of a candidate: device count scaled by the
+/// per-device premium of its hardware knobs. CALIBRATED proxy (the paper
+/// gives no $ figures): the CiM die is tile-dominated, so doubling the
+/// tile mesh adds ~35% of a device; a wider interposer is cheap (~10%
+/// per extra unit of bandwidth scale). Good enough to make "cheapest
+/// config meeting the SLO" a meaningful query.
+pub fn fleet_cost(c: &Candidate) -> f64 {
+    let tile_premium = 0.35 * (c.tile_scale.saturating_sub(1)) as f64;
+    let link_premium = 0.10 * (c.interposer_scale - 1.0).max(0.0);
+    c.devices as f64 * (1.0 + tile_premium + link_premium)
+}
+
+/// Optimization direction of an objective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    Minimize,
+    Maximize,
+}
+
+/// One scored dimension of the search.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Objective {
+    TtftP50,
+    TtftP99,
+    E2eP50,
+    E2eP99,
+    /// Served requests per second (maximize).
+    Throughput,
+    /// Generated tokens per second (maximize).
+    DecodeThroughput,
+    /// KV-pressure evictions (minimize).
+    Evictions,
+    /// Relative fleet cost (minimize).
+    Cost,
+    /// Fraction of requests meeting the TTFT SLO (maximize).
+    SloAttainment,
+    /// Worst per-tenant TTFT p99 (minimize; multi-tenant fairness).
+    WorstTenantTtft,
+}
+
+impl Objective {
+    pub fn all() -> [Objective; 10] {
+        [
+            Objective::TtftP50,
+            Objective::TtftP99,
+            Objective::E2eP50,
+            Objective::E2eP99,
+            Objective::Throughput,
+            Objective::DecodeThroughput,
+            Objective::Evictions,
+            Objective::Cost,
+            Objective::SloAttainment,
+            Objective::WorstTenantTtft,
+        ]
+    }
+
+    /// The default search objectives: latency (median + tail),
+    /// throughput, and cost — the axes of the paper's own §V-B argument.
+    pub fn default_set() -> Vec<Objective> {
+        vec![Objective::TtftP50, Objective::TtftP99, Objective::Throughput, Objective::Cost]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::TtftP50 => "ttft_p50",
+            Objective::TtftP99 => "ttft_p99",
+            Objective::E2eP50 => "e2e_p50",
+            Objective::E2eP99 => "e2e_p99",
+            Objective::Throughput => "throughput",
+            Objective::DecodeThroughput => "decode_tput",
+            Objective::Evictions => "evictions",
+            Objective::Cost => "cost",
+            Objective::SloAttainment => "slo_attainment",
+            Objective::WorstTenantTtft => "tenant_ttft_p99",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Objective> {
+        let norm: String =
+            s.to_ascii_lowercase().chars().filter(|c| *c != '-' && *c != '_').collect();
+        match norm.as_str() {
+            "ttftp50" | "ttft" => Some(Objective::TtftP50),
+            "ttftp99" => Some(Objective::TtftP99),
+            "e2ep50" | "e2e" => Some(Objective::E2eP50),
+            "e2ep99" => Some(Objective::E2eP99),
+            "throughput" | "rps" => Some(Objective::Throughput),
+            "decodetput" | "tokens" | "tokpersec" => Some(Objective::DecodeThroughput),
+            "evictions" => Some(Objective::Evictions),
+            "cost" => Some(Objective::Cost),
+            "sloattainment" | "slo" => Some(Objective::SloAttainment),
+            "tenantttftp99" | "tenantttft" | "fairness" => Some(Objective::WorstTenantTtft),
+            _ => None,
+        }
+    }
+
+    pub fn direction(&self) -> Direction {
+        match self {
+            Objective::Throughput
+            | Objective::DecodeThroughput
+            | Objective::SloAttainment => Direction::Maximize,
+            _ => Direction::Minimize,
+        }
+    }
+
+    /// The raw metric value (in its natural direction, for reporting).
+    pub fn value(&self, m: &Metrics) -> f64 {
+        match self {
+            Objective::TtftP50 => m.ttft_p50,
+            Objective::TtftP99 => m.ttft_p99,
+            Objective::E2eP50 => m.e2e_p50,
+            Objective::E2eP99 => m.e2e_p99,
+            Objective::Throughput => m.throughput_rps,
+            Objective::DecodeThroughput => m.decode_tok_per_s,
+            Objective::Evictions => m.evictions,
+            Objective::Cost => m.cost,
+            Objective::SloAttainment => m.slo_attainment,
+            Objective::WorstTenantTtft => m.worst_tenant_ttft_p99,
+        }
+    }
+
+    /// The minimized coordinate fed to the Pareto machinery.
+    pub fn score(&self, m: &Metrics) -> f64 {
+        match self.direction() {
+            Direction::Minimize => self.value(m),
+            Direction::Maximize => -self.value(m),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::space::SearchSpace;
+
+    #[test]
+    fn by_name_roundtrip() {
+        for o in Objective::all() {
+            assert_eq!(Objective::by_name(o.name()), Some(o), "{}", o.name());
+        }
+        assert!(Objective::by_name("accuracy").is_none());
+    }
+
+    #[test]
+    fn default_set_spans_three_plus_objectives() {
+        assert!(Objective::default_set().len() >= 3);
+    }
+
+    #[test]
+    fn cost_monotone_in_devices_and_tiles() {
+        let space = SearchSpace::paper_point();
+        let base = space.decode(&space.first_index());
+        let mut more_devices = base.clone();
+        more_devices.devices *= 2;
+        assert!(fleet_cost(&more_devices) > fleet_cost(&base));
+        let mut more_tiles = base.clone();
+        more_tiles.tile_scale = 2;
+        assert!(fleet_cost(&more_tiles) > fleet_cost(&base));
+        let mut fat_link = base.clone();
+        fat_link.interposer_scale = 2.0;
+        assert!(fleet_cost(&fat_link) > fleet_cost(&base));
+        // and a narrower link never goes below the device floor
+        let mut thin_link = base.clone();
+        thin_link.interposer_scale = 0.5;
+        assert!(fleet_cost(&thin_link) >= base.devices as f64);
+    }
+
+    #[test]
+    fn maximize_objectives_negate_into_scores() {
+        let space = SearchSpace::paper_point();
+        let cand = space.decode(&space.first_index());
+        let m = Metrics {
+            ttft_p50: 0.1,
+            ttft_p99: 0.5,
+            e2e_p50: 1.0,
+            e2e_p99: 2.0,
+            throughput_rps: 30.0,
+            decode_tok_per_s: 9000.0,
+            utilization: 0.8,
+            evictions: 3.0,
+            recompute_tokens: 600.0,
+            kv_transfer_gb: 1.5,
+            worst_tenant_ttft_p99: 0.6,
+            slo_ttft: 0.1,
+            slo_attainment: 0.95,
+            cost: fleet_cost(&cand),
+        };
+        assert_eq!(Objective::Throughput.score(&m), -30.0);
+        assert_eq!(Objective::TtftP50.score(&m), 0.1);
+        assert_eq!(Objective::SloAttainment.score(&m), -0.95);
+    }
+}

@@ -1,0 +1,89 @@
+//! Pareto dominance and frontier extraction over score vectors.
+//!
+//! Scores are *minimized* coordinates (maximize-direction objectives are
+//! negated by [`super::objective::Objective::score`] before they get
+//! here). Equal points do not dominate each other, so exact ties all
+//! survive onto the frontier — a property the search tests rely on.
+
+/// `a` dominates `b` iff `a` is no worse on every coordinate and
+/// strictly better on at least one.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len(), "score arity");
+    let mut strict = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strict = true;
+        }
+    }
+    strict
+}
+
+/// Indices of the non-dominated points, in input order. O(n^2), which is
+/// fine at search scale (hundreds of evaluated candidates).
+pub fn pareto_indices(points: &[Vec<f64>]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| {
+            !points.iter().enumerate().any(|(j, p)| j != i && dominates(p, &points[i]))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Pair, UsizeIn};
+    use crate::util::Rng;
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0]), "trade-offs don't dominate");
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]), "equality is not dominance");
+    }
+
+    #[test]
+    fn frontier_of_known_set() {
+        let pts = vec![
+            vec![1.0, 5.0], // frontier
+            vec![2.0, 4.0], // frontier
+            vec![2.0, 5.0], // dominated by both
+            vec![5.0, 1.0], // frontier
+            vec![5.0, 1.0], // exact duplicate: also kept
+        ];
+        assert_eq!(pareto_indices(&pts), vec![0, 1, 3, 4]);
+    }
+
+    #[test]
+    fn frontier_properties_hold_on_random_sets() {
+        // for random point clouds: (a) no frontier point is dominated by
+        // any other point, (b) every non-frontier point is dominated by
+        // some frontier point (completeness)
+        forall(17, 60, Pair(UsizeIn(1, 40), UsizeIn(1, 4)), |&(n, dim)| {
+            let mut rng = Rng::new((n * 131 + dim) as u64);
+            let pts: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..dim).map(|_| (rng.below(6) as f64) * 0.5).collect())
+                .collect();
+            let front = pareto_indices(&pts);
+            if front.is_empty() {
+                return false;
+            }
+            let on_front = |i: usize| front.contains(&i);
+            for i in 0..n {
+                let dominated = pts.iter().any(|p| dominates(p, &pts[i]));
+                if on_front(i) && dominated {
+                    return false;
+                }
+                if !on_front(i)
+                    && !front.iter().any(|&j| dominates(&pts[j], &pts[i]))
+                {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+}

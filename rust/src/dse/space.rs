@@ -1,0 +1,573 @@
+//! The searchable configuration space: axes, candidates, and presets.
+//!
+//! A [`SearchSpace`] is a cross product of small per-axis value lists
+//! covering every plane the simulator exposes: router policy and fleet
+//! composition (cluster), device count and pool split, scheduler knobs
+//! (chunk size, admission, KV budget), and hardware knobs (CiM tile mesh,
+//! interposer bandwidth — the CiM *wordline* knob rides on the mapping
+//! choice, HALO1 vs HALO2, because the engine set pins wordlines per
+//! Table II). A point in the space is an [`Index`] (one position per
+//! axis); [`SearchSpace::decode`] turns it into a concrete [`Candidate`]
+//! that knows how to build its own [`HwConfig`] and fleet.
+
+use crate::cluster::{Fleet, Interconnect, Policy, Router, SchedConfig};
+use crate::config::HwConfig;
+use crate::mapping::MappingKind;
+use crate::model::LlmConfig;
+use crate::sim::device::AdmissionPolicy;
+use crate::util::Rng;
+
+/// Number of axes in the space (fixed; see [`SearchSpace`] fields).
+pub const AXES: usize = 9;
+
+/// One point of the space: a per-axis position vector.
+pub type Index = [usize; AXES];
+
+/// How a *unified* fleet's devices are mapped. Disaggregated topologies
+/// ignore this — their pools are Fully-CiM / Fully-CiD by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Composition {
+    /// Every device runs the same mapping.
+    Uniform(MappingKind),
+    /// Alternate HALO1 / HALO2 devices (latency/accuracy tiering).
+    MixedHalo,
+    /// Alternate HALO1 / HALO-SA devices (analog + digital fallback).
+    MixedHaloSa,
+}
+
+impl Composition {
+    pub fn name(&self) -> String {
+        match self {
+            Composition::Uniform(m) => m.name().to_string(),
+            Composition::MixedHalo => "H1+H2".to_string(),
+            Composition::MixedHaloSa => "H1+SA".to_string(),
+        }
+    }
+
+    /// Per-device mappings for a unified fleet of `devices`.
+    pub fn mappings(&self, devices: usize) -> Vec<MappingKind> {
+        (0..devices)
+            .map(|i| match self {
+                Composition::Uniform(m) => *m,
+                Composition::MixedHalo => {
+                    if i % 2 == 0 {
+                        MappingKind::Halo1
+                    } else {
+                        MappingKind::Halo2
+                    }
+                }
+                Composition::MixedHaloSa => {
+                    if i % 2 == 0 {
+                        MappingKind::Halo1
+                    } else {
+                        MappingKind::HaloSa
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+/// A fully resolved configuration point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    pub policy: Policy,
+    pub composition: Composition,
+    pub devices: usize,
+    /// Prefill chunk size in tokens (0 = serialized monolithic prefill).
+    pub chunk: usize,
+    pub admission: AdmissionPolicy,
+    /// Per-device resident-KV budget in GB (0 = unlimited).
+    pub kv_cap_gb: f64,
+    /// Prefill-pool fraction (disaggregated topologies only).
+    pub prefill_frac: f64,
+    /// CiM tile-mesh width multiplier (1 = Table I's 4x4 mesh).
+    pub tile_scale: usize,
+    /// Interposer / global-buffer bandwidth multiplier.
+    pub interposer_scale: f64,
+}
+
+impl Candidate {
+    /// Structurally impossible combinations (skipped without evaluation).
+    pub fn valid(&self) -> bool {
+        !(self.policy.is_disaggregated() && self.devices < 2)
+    }
+
+    /// The candidate's hardware point, derived from `base`.
+    pub fn hw(&self, base: &HwConfig) -> HwConfig {
+        let mut hw = base.clone();
+        let mesh = (hw.cim.tile_mesh.0 * self.tile_scale, hw.cim.tile_mesh.1);
+        hw.cim = hw.cim.with_tile_mesh(mesh);
+        hw.interposer = hw.interposer.clone().scaled(self.interposer_scale);
+        // the global buffer is sized to the link (Table I ties them)
+        hw.cim.gb_bw *= self.interposer_scale;
+        hw
+    }
+
+    /// The candidate's per-device scheduler.
+    pub fn sched(&self) -> SchedConfig {
+        SchedConfig {
+            chunk: (self.chunk > 0).then_some(self.chunk),
+            admission: self.admission,
+            kv_capacity: (self.kv_cap_gb > 0.0).then_some((self.kv_cap_gb * 1e9) as u64),
+        }
+    }
+
+    /// Build the (fleet, router) pair this candidate describes.
+    pub fn build_fleet(
+        &self,
+        llm: &LlmConfig,
+        hw: &HwConfig,
+        slots: usize,
+        link: Interconnect,
+    ) -> (Fleet, Box<dyn Router>) {
+        let sched = self.sched();
+        let fleet = if self.policy.is_disaggregated() {
+            Fleet::disaggregated_with(
+                llm,
+                hw,
+                self.devices,
+                slots,
+                self.prefill_frac,
+                link,
+                sched,
+            )
+        } else {
+            Fleet::heterogeneous_with(
+                llm,
+                hw,
+                &self.composition.mappings(self.devices),
+                slots,
+                link,
+                sched,
+            )
+        };
+        (fleet, self.policy.router())
+    }
+
+    /// Compact one-line description for tables and logs.
+    pub fn label(&self) -> String {
+        let fleet = if self.policy.is_disaggregated() {
+            format!("cim->cid x{} pf={:.2}", self.devices, self.prefill_frac)
+        } else {
+            format!("{} x{}", self.composition.name(), self.devices)
+        };
+        let kv = if self.kv_cap_gb > 0.0 {
+            format!("{:.0}GB", self.kv_cap_gb)
+        } else {
+            "inf".to_string()
+        };
+        format!(
+            "{} {} chunk={} {} kv={} tiles=x{} bw=x{:.2}",
+            self.policy.name(),
+            fleet,
+            self.chunk,
+            self.admission.name(),
+            kv,
+            self.tile_scale,
+            self.interposer_scale
+        )
+    }
+}
+
+/// The cross product of per-axis value lists. Build with the `with_*`
+/// methods from a preset or from [`SearchSpace::paper_point`].
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub policies: Vec<Policy>,
+    pub compositions: Vec<Composition>,
+    pub devices: Vec<usize>,
+    pub chunks: Vec<usize>,
+    pub admissions: Vec<AdmissionPolicy>,
+    pub kv_caps_gb: Vec<f64>,
+    pub prefill_fracs: Vec<f64>,
+    pub tile_scales: Vec<usize>,
+    pub interposer_scales: Vec<f64>,
+}
+
+impl SearchSpace {
+    /// The single-point space at the paper's configuration: one HALO1
+    /// device fleet of 4 behind least-loaded routing, default scheduler.
+    pub fn paper_point() -> Self {
+        SearchSpace {
+            policies: vec![Policy::LeastLoaded],
+            compositions: vec![Composition::Uniform(MappingKind::Halo1)],
+            devices: vec![4],
+            chunks: vec![0],
+            admissions: vec![AdmissionPolicy::Fifo],
+            kv_caps_gb: vec![0.0],
+            prefill_fracs: vec![0.5],
+            tile_scales: vec![1],
+            interposer_scales: vec![1.0],
+        }
+    }
+
+    pub fn with_policies(mut self, v: Vec<Policy>) -> Self {
+        assert!(!v.is_empty());
+        self.policies = v;
+        self
+    }
+
+    pub fn with_compositions(mut self, v: Vec<Composition>) -> Self {
+        assert!(!v.is_empty());
+        self.compositions = v;
+        self
+    }
+
+    pub fn with_devices(mut self, v: Vec<usize>) -> Self {
+        assert!(!v.is_empty() && v.iter().all(|&d| d > 0));
+        self.devices = v;
+        self
+    }
+
+    pub fn with_chunks(mut self, v: Vec<usize>) -> Self {
+        assert!(!v.is_empty());
+        self.chunks = v;
+        self
+    }
+
+    pub fn with_admissions(mut self, v: Vec<AdmissionPolicy>) -> Self {
+        assert!(!v.is_empty());
+        self.admissions = v;
+        self
+    }
+
+    pub fn with_kv_caps_gb(mut self, v: Vec<f64>) -> Self {
+        assert!(!v.is_empty() && v.iter().all(|&g| g >= 0.0));
+        self.kv_caps_gb = v;
+        self
+    }
+
+    pub fn with_prefill_fracs(mut self, v: Vec<f64>) -> Self {
+        assert!(!v.is_empty() && v.iter().all(|&f| f > 0.0 && f < 1.0));
+        self.prefill_fracs = v;
+        self
+    }
+
+    pub fn with_tile_scales(mut self, v: Vec<usize>) -> Self {
+        assert!(!v.is_empty() && v.iter().all(|&s| s > 0));
+        self.tile_scales = v;
+        self
+    }
+
+    pub fn with_interposer_scales(mut self, v: Vec<f64>) -> Self {
+        assert!(!v.is_empty() && v.iter().all(|&s| s > 0.0));
+        self.interposer_scales = v;
+        self
+    }
+
+    /// Per-axis cardinalities, in [`Index`] order.
+    pub fn dims(&self) -> Index {
+        [
+            self.policies.len(),
+            self.compositions.len(),
+            self.devices.len(),
+            self.chunks.len(),
+            self.admissions.len(),
+            self.kv_caps_gb.len(),
+            self.prefill_fracs.len(),
+            self.tile_scales.len(),
+            self.interposer_scales.len(),
+        ]
+    }
+
+    /// Total number of points (valid or not).
+    pub fn len(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The all-zeros index (every axis at its first value).
+    pub fn first_index(&self) -> Index {
+        [0; AXES]
+    }
+
+    /// Mixed-radix decode of a flat enumeration position.
+    pub fn flat(&self, mut i: usize) -> Index {
+        let dims = self.dims();
+        let mut idx = [0usize; AXES];
+        for axis in (0..AXES).rev() {
+            idx[axis] = i % dims[axis];
+            i /= dims[axis];
+        }
+        idx
+    }
+
+    /// Uniformly random point (for random search and climb restarts).
+    pub fn sample(&self, rng: &mut Rng) -> Index {
+        let dims = self.dims();
+        let mut idx = [0usize; AXES];
+        for axis in 0..AXES {
+            idx[axis] = rng.below(dims[axis] as u64) as usize;
+        }
+        idx
+    }
+
+    /// Canonical form of an index: axes the point's topology ignores are
+    /// pinned to 0 so physically identical configurations share one memo
+    /// entry (and one frontier row). Disaggregated topologies ignore the
+    /// composition axis (their pools are Fully-CiM/Fully-CiD by
+    /// construction); unified topologies ignore the prefill-fraction
+    /// axis (there are no split pools).
+    pub fn canonical(&self, idx: &Index) -> Index {
+        let mut out = *idx;
+        if self.policies[out[0]].is_disaggregated() {
+            out[1] = 0; // composition
+        } else {
+            out[6] = 0; // prefill_frac
+        }
+        out
+    }
+
+    /// Neighbor of `idx` one step along `axis` (`dir` = -1 or +1), or
+    /// `None` at the axis boundary.
+    pub fn step(&self, idx: &Index, axis: usize, dir: i64) -> Option<Index> {
+        let dims = self.dims();
+        let cur = idx[axis] as i64 + dir;
+        if cur < 0 || cur >= dims[axis] as i64 {
+            return None;
+        }
+        let mut out = *idx;
+        out[axis] = cur as usize;
+        Some(out)
+    }
+
+    /// Resolve an index to its concrete candidate.
+    pub fn decode(&self, idx: &Index) -> Candidate {
+        Candidate {
+            policy: self.policies[idx[0]],
+            composition: self.compositions[idx[1]],
+            devices: self.devices[idx[2]],
+            chunk: self.chunks[idx[3]],
+            admission: self.admissions[idx[4]],
+            kv_cap_gb: self.kv_caps_gb[idx[5]],
+            prefill_frac: self.prefill_fracs[idx[6]],
+            tile_scale: self.tile_scales[idx[7]],
+            interposer_scale: self.interposer_scales[idx[8]],
+        }
+    }
+
+    // ------------------------------------------------------------ presets
+
+    /// Tiny grid for CI smoke runs: unified vs KV-aware disaggregated,
+    /// serialized vs chunked prefill, capped vs uncapped KV (8 points).
+    pub fn smoke() -> Self {
+        Self::paper_point()
+            .with_policies(vec![Policy::LeastLoaded, Policy::KvAware])
+            .with_devices(vec![2])
+            .with_chunks(vec![0, 512])
+            .with_kv_caps_gb(vec![0.0, 8.0])
+    }
+
+    /// Scheduler-knob space on one device: chunk sweep x admission
+    /// policies (the chunk-size auto-tuning space of the ROADMAP).
+    pub fn sched() -> Self {
+        Self::paper_point()
+            .with_devices(vec![1])
+            .with_chunks(vec![0, 256, 512, 1024, 2048])
+            .with_admissions(AdmissionPolicy::all().to_vec())
+    }
+
+    /// Fleet-level space: routing policy x fleet size x chunking x KV
+    /// budget (36 points; the pool-sizing/routing tradeoff).
+    pub fn fleet() -> Self {
+        Self::paper_point()
+            .with_policies(vec![
+                Policy::LeastLoaded,
+                Policy::PhaseDisaggregated,
+                Policy::KvAware,
+            ])
+            .with_devices(vec![2, 4, 8])
+            .with_chunks(vec![0, 512])
+            .with_kv_caps_gb(vec![0.0, 8.0])
+    }
+
+    /// Hardware space: mapping composition x CiM tile mesh x interposer
+    /// bandwidth on small unified fleets. Fleets of at least 2 keep the
+    /// mixed compositions distinct from their uniform degenerations.
+    pub fn hardware() -> Self {
+        Self::paper_point()
+            .with_devices(vec![2, 4])
+            .with_compositions(vec![
+                Composition::Uniform(MappingKind::Halo1),
+                Composition::Uniform(MappingKind::Halo2),
+                Composition::MixedHalo,
+                Composition::MixedHaloSa,
+            ])
+            .with_tile_scales(vec![1, 2])
+            .with_interposer_scales(vec![0.5, 1.0, 2.0])
+    }
+
+    /// The §V-B extremes as a degenerate 3-point search: Fully-CiD vs
+    /// Fully-CiM vs phase-aware HALO1 on a single device.
+    pub fn mapping_extremes() -> Self {
+        Self::paper_point().with_devices(vec![1]).with_compositions(vec![
+            Composition::Uniform(MappingKind::FullCid),
+            Composition::Uniform(MappingKind::FullCim),
+            Composition::Uniform(MappingKind::Halo1),
+        ])
+    }
+
+    /// Everything at once (~10k points) — random/hill-climb territory.
+    pub fn full() -> Self {
+        let comps: Vec<Composition> = MappingKind::dse_unified()
+            .iter()
+            .map(|&m| Composition::Uniform(m))
+            .chain([Composition::MixedHalo, Composition::MixedHaloSa])
+            .collect();
+        Self::paper_point()
+            .with_policies(Policy::all().to_vec())
+            .with_compositions(comps)
+            .with_devices(vec![1, 2, 4, 8])
+            .with_chunks(vec![0, 512, 2048])
+            .with_admissions(AdmissionPolicy::all().to_vec())
+            .with_kv_caps_gb(vec![0.0, 8.0])
+            .with_prefill_fracs(vec![0.25, 0.5])
+            .with_tile_scales(vec![1, 2])
+            .with_interposer_scales(vec![0.5, 1.0, 2.0])
+    }
+
+    pub fn preset(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "smoke" => Some(Self::smoke()),
+            "sched" | "scheduler" => Some(Self::sched()),
+            "fleet" | "cluster" => Some(Self::fleet()),
+            "hw" | "hardware" => Some(Self::hardware()),
+            "mapping" | "extremes" | "vb" => Some(Self::mapping_extremes()),
+            "full" | "all" => Some(Self::full()),
+            _ => None,
+        }
+    }
+
+    pub fn preset_names() -> &'static [&'static str] {
+        &["smoke", "sched", "fleet", "hw", "mapping", "full"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_decode_roundtrips_the_grid() {
+        let s = SearchSpace::fleet();
+        assert_eq!(s.len(), 3 * 3 * 2 * 2);
+        let mut seen = std::collections::BTreeSet::new();
+        for i in 0..s.len() {
+            let idx = s.flat(i);
+            let dims = s.dims();
+            assert!(idx.iter().zip(dims.iter()).all(|(&x, &d)| x < d));
+            seen.insert(idx);
+        }
+        assert_eq!(seen.len(), s.len(), "flat enumeration covers every point once");
+    }
+
+    #[test]
+    fn validity_rejects_single_device_disaggregation() {
+        let s = SearchSpace::paper_point()
+            .with_policies(vec![Policy::KvAware])
+            .with_devices(vec![1]);
+        assert!(!s.decode(&s.first_index()).valid());
+        let ok = SearchSpace::paper_point();
+        assert!(ok.decode(&ok.first_index()).valid());
+    }
+
+    #[test]
+    fn candidate_hw_applies_knobs() {
+        let mut s = SearchSpace::paper_point()
+            .with_tile_scales(vec![2])
+            .with_interposer_scales(vec![4.0]);
+        s.chunks = vec![768];
+        s.kv_caps_gb = vec![2.0];
+        let c = s.decode(&s.first_index());
+        let base = HwConfig::paper();
+        let hw = c.hw(&base);
+        assert_eq!(hw.cim.tile_mesh, (8, 4));
+        assert_eq!(hw.interposer.bw, 4.0 * base.interposer.bw);
+        assert_eq!(hw.cim.gb_bw, 4.0 * base.cim.gb_bw);
+        let sched = c.sched();
+        assert_eq!(sched.chunk, Some(768));
+        assert_eq!(sched.kv_capacity, Some(2_000_000_000));
+    }
+
+    #[test]
+    fn compositions_tile_the_fleet() {
+        let mix = Composition::MixedHalo.mappings(5);
+        assert_eq!(
+            mix,
+            vec![
+                MappingKind::Halo1,
+                MappingKind::Halo2,
+                MappingKind::Halo1,
+                MappingKind::Halo2,
+                MappingKind::Halo1
+            ]
+        );
+        assert!(Composition::Uniform(MappingKind::FullCim)
+            .mappings(3)
+            .iter()
+            .all(|&m| m == MappingKind::FullCim));
+    }
+
+    #[test]
+    fn canonical_pins_ignored_axes() {
+        let s = SearchSpace::paper_point()
+            .with_policies(vec![Policy::LeastLoaded, Policy::KvAware])
+            .with_devices(vec![2])
+            .with_compositions(vec![
+                Composition::Uniform(MappingKind::Halo1),
+                Composition::Uniform(MappingKind::Halo2),
+            ])
+            .with_prefill_fracs(vec![0.25, 0.5]);
+        // unified (policy 0): prefill_frac is pinned, composition kept
+        let mut unified = s.first_index();
+        unified[1] = 1;
+        unified[6] = 1;
+        let c = s.canonical(&unified);
+        assert_eq!(c[6], 0, "unified ignores prefill_frac");
+        assert_eq!(c[1], 1, "unified keeps composition");
+        // disaggregated (policy 1): composition pinned, prefill_frac kept
+        let mut disagg = unified;
+        disagg[0] = 1;
+        let c = s.canonical(&disagg);
+        assert_eq!(c[1], 0, "disaggregated ignores composition");
+        assert_eq!(c[6], 1, "disaggregated keeps prefill_frac");
+    }
+
+    #[test]
+    fn step_respects_bounds() {
+        let s = SearchSpace::sched();
+        let first = s.first_index();
+        assert!(s.step(&first, 3, -1).is_none());
+        let up = s.step(&first, 3, 1).unwrap();
+        assert_eq!(up[3], 1);
+        let dims = s.dims();
+        let mut last = first;
+        last[3] = dims[3] - 1;
+        assert!(s.step(&last, 3, 1).is_none());
+    }
+
+    #[test]
+    fn presets_resolve_and_are_nonempty() {
+        for name in SearchSpace::preset_names() {
+            let s = SearchSpace::preset(name).unwrap();
+            assert!(!s.is_empty(), "{name}");
+            // every preset contains at least one valid candidate
+            assert!((0..s.len()).any(|i| s.decode(&s.flat(i)).valid()), "{name}");
+        }
+        assert!(SearchSpace::preset("galaxy").is_none());
+    }
+
+    #[test]
+    fn labels_identify_the_knobs() {
+        let s = SearchSpace::smoke();
+        let labels: std::collections::BTreeSet<String> =
+            (0..s.len()).map(|i| s.decode(&s.flat(i)).label()).collect();
+        assert_eq!(labels.len(), s.len(), "labels are unique per candidate");
+        assert!(labels.iter().any(|l| l.contains("chunk=512")));
+        assert!(labels.iter().any(|l| l.contains("kvaware")));
+    }
+}

@@ -1,0 +1,177 @@
+//! Pluggable search strategies over a [`SearchSpace`].
+//!
+//! A strategy only decides *which* points to visit; the engine owns
+//! evaluation, memoization, and scoring. The `eval` callback returns a
+//! scalar guidance score (lower is better — the first objective, or the
+//! SLO-penalized cost in auto-tune mode) and `f64::INFINITY` for invalid
+//! points, so strategies need no validity logic of their own. All
+//! strategies are deterministic given their seed.
+
+use super::space::{Index, SearchSpace, AXES};
+use crate::util::Rng;
+
+/// A search strategy: drive `eval` over points of `space`.
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+    fn search(&mut self, space: &SearchSpace, eval: &mut dyn FnMut(&Index) -> f64);
+}
+
+/// Exhaustive grid enumeration (the degenerate §V-B "search" and every
+/// small space). Visits points in flat mixed-radix order.
+#[derive(Debug, Default)]
+pub struct Exhaustive;
+
+impl Strategy for Exhaustive {
+    fn name(&self) -> &'static str {
+        "grid"
+    }
+    fn search(&mut self, space: &SearchSpace, eval: &mut dyn FnMut(&Index) -> f64) {
+        for i in 0..space.len() {
+            eval(&space.flat(i));
+        }
+    }
+}
+
+/// Seeded uniform random sampling (with replacement; the engine's memo
+/// makes repeats free). The workhorse for big spaces.
+#[derive(Debug)]
+pub struct RandomSearch {
+    pub samples: usize,
+    pub seed: u64,
+}
+
+impl Strategy for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+    fn search(&mut self, space: &SearchSpace, eval: &mut dyn FnMut(&Index) -> f64) {
+        let mut rng = Rng::new(self.seed);
+        for _ in 0..self.samples {
+            eval(&space.sample(&mut rng));
+        }
+    }
+}
+
+/// Seeded steepest-ascent hill climbing with random restarts: from a
+/// random point, evaluate every one-step axis neighbor and move to the
+/// best strictly-improving one until a local optimum (or the step budget)
+/// is reached. Restarts cover the space's basins; the engine's memo makes
+/// revisits free, so the frontier still sees every point touched.
+#[derive(Debug)]
+pub struct HillClimb {
+    pub restarts: usize,
+    pub steps: usize,
+    pub seed: u64,
+}
+
+impl Strategy for HillClimb {
+    fn name(&self) -> &'static str {
+        "hillclimb"
+    }
+    fn search(&mut self, space: &SearchSpace, eval: &mut dyn FnMut(&Index) -> f64) {
+        let mut rng = Rng::new(self.seed);
+        for _ in 0..self.restarts.max(1) {
+            let mut cur = space.sample(&mut rng);
+            let mut cur_score = eval(&cur);
+            for _ in 0..self.steps {
+                let mut best: Option<(Index, f64)> = None;
+                for axis in 0..AXES {
+                    for dir in [-1i64, 1] {
+                        let Some(next) = space.step(&cur, axis, dir) else { continue };
+                        let s = eval(&next);
+                        if s < cur_score && best.is_none_or(|(_, bs)| s < bs) {
+                            best = Some((next, s));
+                        }
+                    }
+                }
+                match best {
+                    Some((next, s)) => {
+                        cur = next;
+                        cur_score = s;
+                    }
+                    None => break,
+                }
+            }
+        }
+    }
+}
+
+/// Resolve a strategy by CLI name. `samples` feeds random search;
+/// `restarts`/`steps` feed hill climbing.
+pub fn by_name(
+    name: &str,
+    seed: u64,
+    samples: usize,
+    restarts: usize,
+    steps: usize,
+) -> Option<Box<dyn Strategy>> {
+    match name.to_ascii_lowercase().as_str() {
+        "grid" | "exhaustive" => Some(Box::new(Exhaustive)),
+        "random" | "rand" => Some(Box::new(RandomSearch { samples, seed })),
+        "hillclimb" | "climb" | "hc" => Some(Box::new(HillClimb { restarts, steps, seed })),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    fn visited(strategy: &mut dyn Strategy, space: &SearchSpace) -> Vec<Index> {
+        let mut order = Vec::new();
+        let mut eval = |idx: &Index| {
+            order.push(*idx);
+            // synthetic deterministic score: distance from the origin
+            idx.iter().map(|&x| x as f64).sum::<f64>()
+        };
+        strategy.search(space, &mut eval);
+        order
+    }
+
+    #[test]
+    fn grid_visits_every_point_once() {
+        let space = SearchSpace::smoke();
+        let order = visited(&mut Exhaustive, &space);
+        assert_eq!(order.len(), space.len());
+        let unique: BTreeSet<Index> = order.iter().copied().collect();
+        assert_eq!(unique.len(), space.len());
+    }
+
+    #[test]
+    fn random_is_seeded_and_in_bounds() {
+        let space = SearchSpace::fleet();
+        let a = visited(&mut RandomSearch { samples: 25, seed: 9 }, &space);
+        let b = visited(&mut RandomSearch { samples: 25, seed: 9 }, &space);
+        assert_eq!(a, b, "same seed, same visit order");
+        let c = visited(&mut RandomSearch { samples: 25, seed: 10 }, &space);
+        assert_ne!(a, c, "different seed, different walk");
+        let dims = space.dims();
+        assert!(a.iter().all(|idx| idx.iter().zip(dims.iter()).all(|(&x, &d)| x < d)));
+    }
+
+    #[test]
+    fn hillclimb_descends_the_synthetic_bowl() {
+        // with score = sum of coordinates, the climb must end at the
+        // origin from any restart
+        let space = SearchSpace::fleet();
+        let mut best_seen = f64::INFINITY;
+        let mut eval = |idx: &Index| {
+            let s = idx.iter().map(|&x| x as f64).sum::<f64>();
+            if s < best_seen {
+                best_seen = s;
+            }
+            s
+        };
+        HillClimb { restarts: 2, steps: 50, seed: 5 }.search(&space, &mut eval);
+        assert_eq!(best_seen, 0.0, "steepest descent reaches the origin");
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        for (name, want) in [("grid", "grid"), ("random", "random"), ("hc", "hillclimb")] {
+            assert_eq!(by_name(name, 1, 10, 2, 20).unwrap().name(), want);
+        }
+        assert!(by_name("annealing", 1, 10, 2, 20).is_none());
+    }
+}

@@ -32,7 +32,20 @@
 //!   kvaware router skips full decode devices. Named workload mixes
 //!   (chat, summarization, generation, interactive) drive saturation,
 //!   scaling-efficiency, tail-latency, chunk-size, and capacity-pressure
-//!   studies (`halo cluster`, `halo report --fig cluster`).
+//!   studies (`halo cluster`, `halo report --fig cluster`). Traces carry
+//!   optional tenant tags with per-tenant TTFT/throughput breakdowns.
+//!
+//! * **DSE plane** — design-space exploration and SLO auto-tuning
+//!   ([`dse`]): a deterministic, seeded search engine over mappings,
+//!   scheduler knobs, fleet composition, and hardware knobs (CiM tile
+//!   mesh, interposer bandwidth). Pluggable strategies (grid, random,
+//!   hill-climb) drive memoized fleet replays; results come back as a
+//!   Pareto frontier over configurable objectives (TTFT p50/p99, decode
+//!   throughput, evictions, SLO attainment, fleet cost), and an SLO mode
+//!   returns the cheapest configuration meeting a TTFT target
+//!   (`halo dse`, `halo report --fig dse`). The §V-B Fully-CiD /
+//!   Fully-CiM / HALO comparison falls out as a degenerate 3-point
+//!   search.
 //!
 //! Quickstart:
 //! ```no_run
@@ -52,6 +65,7 @@ pub mod arch;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod dse;
 pub mod mapping;
 pub mod model;
 pub mod report;

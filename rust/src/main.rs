@@ -5,6 +5,7 @@
 //!   report    — regenerate the paper's figures/tables (CSV + markdown)
 //!   roofline  — print the Fig. 1 roofline points
 //!   cluster   — fleet-scale serving simulation with routing policies
+//!   dse       — design-space exploration / SLO auto-tuning over the simulator
 //!   serve     — functional serving demo over the AOT artifacts (PJRT)
 //!   validate  — replay the python test vectors through the Rust runtime
 
@@ -13,9 +14,10 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 
-use halo::cluster::{AdmissionPolicy, Interconnect, Mix, Policy, SchedConfig};
+use halo::cluster::{per_tenant_stats, AdmissionPolicy, Interconnect, Mix, Policy, SchedConfig};
 use halo::config::HwConfig;
 use halo::coordinator::{InferenceEngine, Request, Server};
+use halo::dse::{self, DseConfig, Objective, SearchSpace, SloSpec};
 use halo::mapping::MappingKind;
 use halo::model::LlmConfig;
 use halo::report;
@@ -29,17 +31,34 @@ halo — memory-centric heterogeneous accelerator for low-batch LLM inference
 USAGE:
   halo simulate [--model llama2-7b|qwen3-8b] [--mapping HALO1|HALO2|CENT|AttAcc1|AttAcc2|FullCiD|FullCiM|HALO-SA]
                 [--lin N] [--lout N] [--batch N]
-  halo report   [--all | --fig 1|4|5|6|7|8|9|10|cluster | --headline] [--out DIR]
+  halo report   [--all | --fig 1|4|5|6|7|8|9|10|cluster|dse | --headline] [--out DIR]
   halo roofline [--lin N] [--batch N]
   halo cluster  [--devices N] [--policy roundrobin|leastloaded|disaggregated|kvaware] [--mix chat|summarization|generation|interactive]
                 [--model llama2-7b|qwen3-8b] [--requests N] [--rate R] [--slots N] [--link board|pcie|eth|wan]
-                [--prefill-frac F] [--seed S]
+                [--prefill-frac F] [--seed S] [--tenants N]
                 [--chunk TOKENS] [--admission fifo|spf|priority] [--kv-cap GB|auto]
                   --chunk     prefill chunk size (0 = serialized monolithic prefill, the default)
                   --admission ready-queue order: fifo (default), spf (shortest prompt first),
                               priority (interactive prompts <= 512 tokens first)
                   --kv-cap    per-device resident-KV budget in GB (0 = unlimited, the default);
                               `auto` derives it from HBM capacity minus model weights
+                  --tenants   tag requests with N tenants and print per-tenant breakdowns
+  halo dse      [--space smoke|sched|fleet|hw|mapping|full] [--strategy grid|random|hillclimb]
+                [--model llama2-7b|qwen3-8b] [--mix chat|summarization|generation|interactive]
+                [--requests N] [--seed S] [--slots N] [--link board|pcie|eth|wan]
+                [--rate R | --rate-scale X] [--tenants N] [--samples N] [--restarts N] [--steps N]
+                [--objectives csv] [--ttft-slo MS] [--slo-pct P] [--smoke] [--out DIR]
+                  --space      candidate space preset (default sched; see dse::space presets)
+                  --strategy   grid enumerates everything; random/hillclimb sample big spaces
+                               (--samples, --restarts/--steps; seeded by --seed)
+                  --objectives comma list of ttft-p50,ttft-p99,e2e-p50,e2e-p99,throughput,
+                               decode-tput,evictions,cost,slo,tenant-ttft
+                               (default ttft-p50,ttft-p99,throughput,cost)
+                  --ttft-slo   auto-tune mode: also report the cheapest config whose TTFT at
+                               --slo-pct (default p50) meets this many milliseconds
+                  --rate       absolute offered load in req/s; --rate-scale multiplies one
+                               device's measured capacity instead (default 1.5x)
+                  --smoke      tiny CI grid: alias for --space smoke with 48 requests
   halo serve    [--artifacts DIR] [--requests N] [--max-new N] [--slots N]
   halo validate [--artifacts DIR]
 ";
@@ -80,6 +99,7 @@ fn main() -> Result<()> {
         "report" => cmd_report(&flags),
         "roofline" => cmd_roofline(&flags),
         "cluster" => cmd_cluster(&flags),
+        "dse" => cmd_dse(&flags),
         "serve" => cmd_serve(&flags),
         "validate" => cmd_validate(&flags),
         _ => {
@@ -156,6 +176,11 @@ fn cmd_report(f: &HashMap<String, String>) -> Result<()> {
                     report::cluster::kv_capacity_pressure_at(&hw, t1),
                 ]
             }
+            "dse" => vec![
+                report::dse::vb_extremes_search(&hw),
+                report::dse::dse_frontier_for_mix(&hw, Mix::Chat),
+                report::dse::dse_frontier_for_mix(&hw, Mix::Summarization),
+            ],
             other => bail!("unknown figure {other}"),
         }
     } else {
@@ -228,6 +253,10 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
         }
     };
     let sched = SchedConfig { chunk: (chunk > 0).then_some(chunk), admission, kv_capacity };
+    let tenants = flag_usize(f, "tenants", 1);
+    if tenants == 0 {
+        bail!("--tenants must be at least 1");
+    }
     // default offered load: 3x one monolithic device's measured capacity
     let rate = match f.get("rate").and_then(|v| v.parse::<f64>().ok()) {
         Some(r) => r,
@@ -252,7 +281,7 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
         }
     );
     println!("workload : {} mix, {n_req} requests at {rate:.2} req/s (seed {seed})", mix.name());
-    let trace = mix.trace(seed, n_req, rate);
+    let trace = mix.trace_tenants(seed, n_req, rate, tenants);
     let (mut fleet, mut router) =
         policy.build_with(&llm, &hw, devices, slots, prefill_frac, link, sched);
     let r = fleet.replay(&trace, router.as_mut());
@@ -286,8 +315,31 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
         ]);
     }
     println!("\n{}", t.to_markdown());
+    if tenants > 1 {
+        let mut tt = report::Table::new(
+            "tenant_summary",
+            "Per-tenant share of the replay",
+            &["tenant", "requests", "tokens", "ttft_p50_s", "ttft_p99_s", "e2e_p99_s", "tok_per_s"],
+        );
+        for s in per_tenant_stats(&trace, &r.served, r.makespan) {
+            tt.row(vec![
+                s.tenant.to_string(),
+                s.requests.to_string(),
+                s.tokens.to_string(),
+                format!("{:.6}", s.ttft_p50),
+                format!("{:.6}", s.ttft_p99),
+                format!("{:.6}", s.e2e_p99),
+                format!("{:.2}", s.tok_per_s),
+            ]);
+        }
+        println!("{}", tt.to_markdown());
+    }
     println!("served     : {} requests in {}", r.served.len(), fmt_seconds(r.makespan));
-    println!("throughput : {:.2} req/s (mean utilization {:.1}%)", r.throughput_rps(), r.utilization() * 100.0);
+    println!(
+        "throughput : {:.2} req/s (mean utilization {:.1}%)",
+        r.throughput_rps(),
+        r.utilization() * 100.0
+    );
     println!("TTFT       : p50 {}  p99 {}", fmt_seconds(r.ttft_p50()), fmt_seconds(r.ttft_p99()));
     println!("e2e        : p50 {}  p99 {}", fmt_seconds(r.e2e_p50()), fmt_seconds(r.e2e_p99()));
     println!(
@@ -307,6 +359,135 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
 
 fn link_desc(l: &Interconnect) -> String {
     format!("{}: {:.1} GB/s, {:.0} us latency", l.name, l.bw / 1e9, l.latency * 1e6)
+}
+
+fn cmd_dse(f: &HashMap<String, String>) -> Result<()> {
+    let smoke = f.contains_key("smoke");
+    let space_name =
+        f.get("space").map(String::as_str).unwrap_or(if smoke { "smoke" } else { "sched" });
+    let space = SearchSpace::preset(space_name).ok_or_else(|| {
+        anyhow!("unknown space {space_name} (one of {:?})", SearchSpace::preset_names())
+    })?;
+
+    let model = f.get("model").map(String::as_str).unwrap_or("llama2-7b");
+    let llm = LlmConfig::by_name(model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let mix = {
+        let name = f.get("mix").map(String::as_str).unwrap_or("interactive");
+        Mix::by_name(name).ok_or_else(|| anyhow!("unknown mix {name}"))?
+    };
+    let link = {
+        let name = f.get("link").map(String::as_str).unwrap_or("board");
+        Interconnect::by_name(name).ok_or_else(|| anyhow!("unknown link {name}"))?
+    };
+
+    let mut cfg = DseConfig::new(llm, mix);
+    cfg.link = link;
+    cfg.requests = flag_usize(f, "requests", if smoke { 48 } else { 96 });
+    cfg.seed = flag_usize(f, "seed", 42) as u64;
+    cfg.slots = flag_usize(f, "slots", 8);
+    cfg.tenants = flag_usize(f, "tenants", 1);
+    cfg.rate = f.get("rate").and_then(|v| v.parse().ok());
+    cfg.rate_scale = flag_f64(f, "rate-scale", 1.5);
+    if cfg.requests == 0 || cfg.slots == 0 || cfg.tenants == 0 {
+        bail!("--requests, --slots and --tenants must be at least 1");
+    }
+    if cfg.rate.is_some_and(|r| r <= 0.0) {
+        bail!("--rate must be a positive offered load in req/s");
+    }
+    if cfg.rate_scale <= 0.0 {
+        bail!("--rate-scale must be positive");
+    }
+    if let Some(objs) = f.get("objectives") {
+        let parsed: Option<Vec<Objective>> =
+            objs.split(',').map(|s| Objective::by_name(s.trim())).collect();
+        cfg.objectives =
+            parsed.ok_or_else(|| anyhow!("unknown objective in `{objs}`"))?;
+        if cfg.objectives.is_empty() {
+            bail!("--objectives must name at least one objective");
+        }
+    }
+    if let Some(ms) = f.get("ttft-slo") {
+        let ms: f64 = ms.parse().map_err(|_| anyhow!("--ttft-slo wants milliseconds"))?;
+        if ms <= 0.0 {
+            bail!("--ttft-slo must be positive");
+        }
+        let pct = flag_f64(f, "slo-pct", 50.0);
+        if !(0.0..=100.0).contains(&pct) {
+            bail!("--slo-pct must be a percentile in 0..=100");
+        }
+        cfg.slo = Some(SloSpec { ttft: ms / 1e3, pct });
+    }
+    if cfg.objectives.contains(&Objective::SloAttainment) && cfg.slo.is_none() {
+        bail!("the `slo` objective needs --ttft-slo (attainment is constant 1.0 without one)");
+    }
+
+    let strategy_name = f.get("strategy").map(String::as_str).unwrap_or("grid");
+    let samples = flag_usize(f, "samples", 64);
+    let restarts = flag_usize(f, "restarts", 4);
+    let steps = flag_usize(f, "steps", 32);
+    let mut strategy = dse::strategy::by_name(strategy_name, cfg.seed, samples, restarts, steps)
+        .ok_or_else(|| anyhow!("unknown strategy {strategy_name} (grid|random|hillclimb)"))?;
+    if strategy.name() == "grid" && space.len() > 512 {
+        bail!(
+            "space `{space_name}` has {} points — too many for grid; use --strategy random \
+             or hillclimb",
+            space.len()
+        );
+    }
+
+    println!(
+        "search   : {} over `{space_name}` ({} points, {} axes), seed {}",
+        strategy.name(),
+        space.len(),
+        halo::dse::AXES,
+        cfg.seed
+    );
+    let res = dse::explore(&space, strategy.as_mut(), &cfg);
+    println!(
+        "workload : {} mix, {} requests at {:.2} req/s, {} tenant(s)",
+        cfg.mix.name(),
+        cfg.requests,
+        res.rate,
+        cfg.tenants
+    );
+    println!(
+        "evaluated: {} candidates -> {} on the Pareto frontier over {:?}\n",
+        res.evaluated.len(),
+        res.frontier.len(),
+        res.objectives.iter().map(|o| o.name()).collect::<Vec<_>>()
+    );
+    let table = report::dse::frontier_table(
+        &res,
+        "dse_frontier",
+        &format!("DSE Pareto frontier — {} space, {} mix", space_name, cfg.mix.name()),
+    );
+    println!("{}", table.to_markdown());
+    if let Some(slo) = cfg.slo {
+        match res.slo_choice {
+            Some(i) => {
+                let e = &res.evaluated[i];
+                println!(
+                    "SLO pick : {} — TTFT p{:.0} {} <= {} at relative cost {:.2}",
+                    e.candidate.label(),
+                    slo.pct,
+                    fmt_seconds(e.metrics.slo_ttft),
+                    fmt_seconds(slo.ttft),
+                    e.metrics.cost
+                );
+            }
+            None => println!(
+                "SLO pick : no evaluated config meets TTFT p{:.0} <= {}",
+                slo.pct,
+                fmt_seconds(slo.ttft)
+            ),
+        }
+    }
+    if let Some(out) = f.get("out") {
+        let dir = PathBuf::from(out);
+        table.write_csv(&dir)?;
+        println!("CSV written to {}", dir.display());
+    }
+    Ok(())
 }
 
 fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
@@ -385,7 +566,9 @@ fn cmd_validate(f: &HashMap<String, String>) -> Result<()> {
         // reported (finiteness-checked) but not diff-asserted; the
         // ideal-ADC twins and every integer-path entry must match tightly.
         let calibrated = name.starts_with("prefill_b1_");
-        let finite = outs.iter().all(|t| t.as_f32().map(|v| v.iter().all(|x| x.is_finite())).unwrap_or(true));
+        let finite = outs
+            .iter()
+            .all(|t| t.as_f32().map(|v| v.iter().all(|x| x.is_finite())).unwrap_or(true));
         let ok = if calibrated { finite } else { worst_rel < 1e-4 };
         println!(
             "{:>24}: max rel diff = {:.3e}  {}",

@@ -59,6 +59,20 @@ impl MappingKind {
         }
     }
 
+    /// Mappings worth searching over for *unified* fleet devices in the
+    /// `dse` plane: the phase-aware points plus the §V-B extremes (the
+    /// AttAcc baselines are strictly dominated on decode and only clutter
+    /// a search).
+    pub fn dse_unified() -> &'static [MappingKind] {
+        &[
+            MappingKind::Halo1,
+            MappingKind::Halo2,
+            MappingKind::HaloSa,
+            MappingKind::FullCid,
+            MappingKind::FullCim,
+        ]
+    }
+
     /// All Table II mappings compared in Figs. 7-8.
     pub fn table2() -> &'static [MappingKind] {
         &[

@@ -244,7 +244,9 @@ mod tests {
 
     #[test]
     fn intensity_grows_with_m() {
-        let mk = |m| Op::matmul(OpKind::FfnUp, OpClass::Gemm, Operand::StaticWeight, m, 4096, 4096, 1);
+        let mk = |m| {
+            Op::matmul(OpKind::FfnUp, OpClass::Gemm, Operand::StaticWeight, m, 4096, 4096, 1)
+        };
         let a1 = mk(1).arithmetic_intensity(1);
         let a512 = mk(512).arithmetic_intensity(1);
         assert!(a1 < 2.5, "GEMV AI ~1-2: {a1}");

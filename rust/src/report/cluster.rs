@@ -52,7 +52,17 @@ pub fn cluster_scaling_at(hw: &HwConfig, t1: f64) -> Table {
             mix.name(),
             rate
         ),
-        &["devices", "policy", "offered_rps", "served_rps", "ttft_p50_s", "ttft_p99_s", "e2e_p99_s", "utilization", "speedup_vs_1"],
+        &[
+            "devices",
+            "policy",
+            "offered_rps",
+            "served_rps",
+            "ttft_p50_s",
+            "ttft_p99_s",
+            "e2e_p99_s",
+            "utilization",
+            "speedup_vs_1",
+        ],
     );
     let mut base_rps = 0.0f64;
     for devices in [1usize, 2, 4, 8] {
@@ -100,7 +110,17 @@ pub fn cluster_policy_comparison_at(hw: &HwConfig, t1: f64) -> Table {
             "Router policies at {devices} devices — {} mix, offered {rate:.2} req/s",
             mix.name()
         ),
-        &["policy", "link", "served_rps", "ttft_p50_s", "ttft_p99_s", "e2e_p50_s", "e2e_p99_s", "kv_gb", "utilization"],
+        &[
+            "policy",
+            "link",
+            "served_rps",
+            "ttft_p50_s",
+            "ttft_p99_s",
+            "e2e_p50_s",
+            "e2e_p99_s",
+            "kv_gb",
+            "utilization",
+        ],
     );
     let cases: [(Policy, Interconnect); 5] = [
         (Policy::RoundRobin, Interconnect::board()),

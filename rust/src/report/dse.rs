@@ -1,0 +1,125 @@
+//! DSE-plane tables: Pareto frontiers per workload mix and the §V-B
+//! Fully-CiD / Fully-CiM / HALO tradeoff reproduced as a degenerate
+//! 3-point search.
+
+use super::{f, Table};
+use crate::cluster::Mix;
+use crate::config::HwConfig;
+use crate::dse::{explore, DseConfig, DseResult, Exhaustive, Objective, SearchSpace};
+use crate::model::LlmConfig;
+
+/// Render a search result's Pareto frontier as a table: one row per
+/// frontier point, candidate knobs first, then the raw (un-negated)
+/// value of every configured objective.
+pub fn frontier_table(res: &DseResult, name: &str, title: &str) -> Table {
+    let mut headers: Vec<String> = ["config", "policy", "devices", "chunk", "admission"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    headers.extend(res.objectives.iter().map(|o| o.name().to_string()));
+    let hdr_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut t = Table::new(name, title, &hdr_refs);
+    for e in res.frontier_points() {
+        let mut row = vec![
+            e.candidate.label(),
+            e.candidate.policy.name().to_string(),
+            e.candidate.devices.to_string(),
+            e.candidate.chunk.to_string(),
+            e.candidate.admission.name().to_string(),
+        ];
+        row.extend(res.objectives.iter().map(|o| f(o.value(&e.metrics))));
+        t.row(row);
+    }
+    t
+}
+
+/// The §V-B architectural-extremes comparison as a 3-point search:
+/// Fully-CiD vs Fully-CiM vs phase-aware HALO1 on one device, ranked by
+/// median end-to-end latency. The `rank_by_e2e` column is the paper's
+/// verdict; `on_frontier` shows which points survive multi-objective
+/// dominance.
+pub fn vb_extremes_search(hw: &HwConfig) -> Table {
+    let mut cfg = DseConfig::new(LlmConfig::llama2_7b(), Mix::Interactive);
+    cfg.base_hw = hw.clone();
+    cfg.requests = 48;
+    cfg.seed = 17;
+    cfg.rate_scale = 1.5;
+    cfg.objectives =
+        vec![Objective::E2eP50, Objective::TtftP50, Objective::Throughput];
+    let res = explore(&SearchSpace::mapping_extremes(), &mut Exhaustive, &cfg);
+    // rank all three points by median e2e
+    let mut order: Vec<usize> = (0..res.evaluated.len()).collect();
+    order.sort_by(|&a, &b| {
+        res.evaluated[a].metrics.e2e_p50.total_cmp(&res.evaluated[b].metrics.e2e_p50)
+    });
+    let mut t = Table::new(
+        "dse_vb_extremes",
+        "DSE §V-B extremes — Fully-CiD vs Fully-CiM vs HALO1 as a 3-point search \
+         (LLaMA-2 7B, interactive mix, 1 device)",
+        &["mapping", "ttft_p50_s", "e2e_p50_s", "served_rps", "on_frontier", "rank_by_e2e"],
+    );
+    for (i, e) in res.evaluated.iter().enumerate() {
+        let rank = order.iter().position(|&j| j == i).unwrap() + 1;
+        t.row(vec![
+            e.candidate.composition.name(),
+            f(e.metrics.ttft_p50),
+            f(e.metrics.e2e_p50),
+            f(e.metrics.throughput_rps),
+            res.frontier.contains(&i).to_string(),
+            rank.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Pareto frontier of the smoke space on one workload mix — the compact
+/// per-mix tradeoff table (`halo report --fig dse` emits chat and
+/// summarization; they disagree about chunking, which is the point).
+pub fn dse_frontier_for_mix(hw: &HwConfig, mix: Mix) -> Table {
+    let mut cfg = DseConfig::new(LlmConfig::llama2_7b(), mix);
+    cfg.base_hw = hw.clone();
+    cfg.requests = 64;
+    cfg.seed = 23;
+    cfg.rate_scale = 1.25;
+    let res = explore(&SearchSpace::smoke(), &mut Exhaustive, &cfg);
+    frontier_table(
+        &res,
+        &format!("dse_frontier_{}", mix.name()),
+        &format!(
+            "DSE Pareto frontier — smoke space, {} mix, offered {:.2} req/s",
+            mix.name(),
+            res.rate
+        ),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vb_table_ranks_halo1_first() {
+        let t = vb_extremes_search(&HwConfig::paper());
+        assert_eq!(t.rows.len(), 3);
+        let names: Vec<&str> = t.rows.iter().map(|r| r[0].as_str()).collect();
+        assert!(names.contains(&"HALO1"));
+        assert!(names.contains(&"Fully-CiD"));
+        assert!(names.contains(&"Fully-CiM"));
+        for r in &t.rows {
+            if r[0] == "HALO1" {
+                assert_eq!(r[5], "1", "HALO1 must rank first by e2e p50");
+                assert_eq!(r[4], "true", "HALO1 must sit on the frontier");
+            }
+        }
+    }
+
+    #[test]
+    fn mix_frontier_is_nonempty_with_objective_columns() {
+        let t = dse_frontier_for_mix(&HwConfig::paper(), Mix::Chat);
+        assert!(!t.rows.is_empty());
+        // candidate knobs + >= 3 objectives
+        assert!(t.headers.len() >= 5 + 3);
+        let p50 = t.col_f64("ttft_p50");
+        assert!(p50.iter().all(|&v| v > 0.0));
+    }
+}

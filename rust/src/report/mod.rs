@@ -1,9 +1,11 @@
 //! Figure/table harness: regenerates every figure of the paper's
 //! evaluation (Figs. 1, 4, 5, 6, 7, 8, 9, 10) and the headline geomean
 //! claims, as CSV + markdown. Cluster-plane tables (fleet scaling and
-//! router-policy comparisons) live in [`cluster`].
+//! router-policy comparisons) live in [`cluster`]; DSE-plane tables
+//! (Pareto frontiers, the §V-B 3-point search) live in [`dse`].
 
 pub mod cluster;
+pub mod dse;
 
 use std::fmt::Write as _;
 use std::fs;
@@ -104,7 +106,19 @@ pub fn fig1_roofline_at(hw: &HwConfig, l_in: usize, batch: usize) -> Table {
     let mut t = Table::new(
         "fig1_roofline",
         &format!("Fig.1 — CiM roofline: LLaMA-2 7B GEMMs, prefill (L_in={l_in}) vs decode"),
-        &["phase", "batch", "op", "M", "K", "N", "intensity_flop_per_byte", "attainable_flops", "compute_bound", "ridge", "peak_flops"],
+        &[
+            "phase",
+            "batch",
+            "op",
+            "M",
+            "K",
+            "N",
+            "intensity_flop_per_byte",
+            "attainable_flops",
+            "compute_bound",
+            "ridge",
+            "peak_flops",
+        ],
     );
     let mut push = |phase: &str, batch: usize, graph| {
         for p in roofline_points(&graph, &rf, 1) {
@@ -163,7 +177,17 @@ pub fn fig56_cid_vs_cim(hw: &HwConfig) -> Table {
     let mut t = Table::new(
         "fig56_cid_vs_cim",
         "Fig.5/6 — fully-CiD vs fully-CiM: TTFT, prefill energy, TPOT, decode energy/token (LLaMA-2 7B)",
-        &["l_in", "ttft_cid_s", "ttft_cim_s", "prefill_e_cid_j", "prefill_e_cim_j", "tpot_cid_s", "tpot_cim_s", "decode_e_cid_j", "decode_e_cim_j"],
+        &[
+            "l_in",
+            "ttft_cid_s",
+            "ttft_cim_s",
+            "prefill_e_cid_j",
+            "prefill_e_cim_j",
+            "tpot_cid_s",
+            "tpot_cim_s",
+            "decode_e_cid_j",
+            "decode_e_cim_j",
+        ],
     );
     for l_in in lin_sweep() {
         let pre_cid = simulate_phase(&m, hw, MappingKind::FullCid, Phase::Prefill, l_in, 1);
@@ -247,7 +271,13 @@ pub fn fig9_batch_sweep(hw: &HwConfig) -> Table {
         &["batch", "mapping", "e2e_s", "ttft_s", "tpot_s"],
     );
     for b in [1usize, 2, 4, 8, 16, 32, 64] {
-        for mk in [MappingKind::Halo1, MappingKind::Halo2, MappingKind::Cent, MappingKind::AttAcc1, MappingKind::AttAcc2] {
+        for mk in [
+            MappingKind::Halo1,
+            MappingKind::Halo2,
+            MappingKind::Cent,
+            MappingKind::AttAcc1,
+            MappingKind::AttAcc2,
+        ] {
             let r = simulate_e2e(&m, hw, mk, &Scenario { l_in: 128, l_out: 2048, batch: b });
             t.row(vec![
                 b.to_string(),
@@ -310,10 +340,26 @@ pub fn headline_summary(hw: &HwConfig) -> Table {
         tpot_r.push(dm.latency / dc.latency);
         dec_e_r.push(dm.energy / dc.energy);
     }
-    t.row(vec!["TTFT: fully-CiM over fully-CiD".into(), "6x".into(), format!("{:.2}x", geomean(&ttft_r))]);
-    t.row(vec!["Prefill energy: CiM under CiD".into(), "2.6x".into(), format!("{:.2}x", geomean(&pre_e_r))]);
-    t.row(vec!["TPOT: fully-CiD over fully-CiM".into(), "39x".into(), format!("{:.2}x", geomean(&tpot_r))]);
-    t.row(vec!["Decode energy: CiD under CiM".into(), "3.9x".into(), format!("{:.2}x", geomean(&dec_e_r))]);
+    t.row(vec![
+        "TTFT: fully-CiM over fully-CiD".into(),
+        "6x".into(),
+        format!("{:.2}x", geomean(&ttft_r)),
+    ]);
+    t.row(vec![
+        "Prefill energy: CiM under CiD".into(),
+        "2.6x".into(),
+        format!("{:.2}x", geomean(&pre_e_r)),
+    ]);
+    t.row(vec![
+        "TPOT: fully-CiD over fully-CiM".into(),
+        "39x".into(),
+        format!("{:.2}x", geomean(&tpot_r)),
+    ]);
+    t.row(vec![
+        "Decode energy: CiD under CiM".into(),
+        "3.9x".into(),
+        format!("{:.2}x", geomean(&dec_e_r)),
+    ]);
 
     // e2e & phase geomeans over both models and the grid
     let mut e2e_vs_att = Vec::new();
@@ -339,13 +385,41 @@ pub fn headline_summary(hw: &HwConfig) -> Table {
             h2_slow.push(halo2.e2e_latency() / halo.e2e_latency());
         }
     }
-    t.row(vec!["E2E speedup vs AttAcc1".into(), "18x".into(), format!("{:.2}x", geomean(&e2e_vs_att))]);
-    t.row(vec!["E2E speedup vs CENT".into(), "2.4x".into(), format!("{:.2}x", geomean(&e2e_vs_cent))]);
-    t.row(vec!["Prefill speedup vs CENT".into(), "6.54x".into(), format!("{:.2}x", geomean(&pre_vs_cent))]);
-    t.row(vec!["Decode speedup vs AttAcc1".into(), "34x".into(), format!("{:.2}x", geomean(&dec_vs_att))]);
-    t.row(vec!["Energy vs AttAcc1".into(), "2x".into(), format!("{:.2}x", geomean(&e_vs_att))]);
-    t.row(vec!["Energy vs CENT".into(), "1.8x".into(), format!("{:.2}x", geomean(&e_vs_cent))]);
-    t.row(vec!["HALO2 slowdown vs HALO1".into(), "1.1x".into(), format!("{:.2}x", geomean(&h2_slow))]);
+    t.row(vec![
+        "E2E speedup vs AttAcc1".into(),
+        "18x".into(),
+        format!("{:.2}x", geomean(&e2e_vs_att)),
+    ]);
+    t.row(vec![
+        "E2E speedup vs CENT".into(),
+        "2.4x".into(),
+        format!("{:.2}x", geomean(&e2e_vs_cent)),
+    ]);
+    t.row(vec![
+        "Prefill speedup vs CENT".into(),
+        "6.54x".into(),
+        format!("{:.2}x", geomean(&pre_vs_cent)),
+    ]);
+    t.row(vec![
+        "Decode speedup vs AttAcc1".into(),
+        "34x".into(),
+        format!("{:.2}x", geomean(&dec_vs_att)),
+    ]);
+    t.row(vec![
+        "Energy vs AttAcc1".into(),
+        "2x".into(),
+        format!("{:.2}x", geomean(&e_vs_att)),
+    ]);
+    t.row(vec![
+        "Energy vs CENT".into(),
+        "1.8x".into(),
+        format!("{:.2}x", geomean(&e_vs_cent)),
+    ]);
+    t.row(vec![
+        "HALO2 slowdown vs HALO1".into(),
+        "1.1x".into(),
+        format!("{:.2}x", geomean(&h2_slow)),
+    ]);
 
     // Fig.10 geomean
     let mut cim1_vs_sa = Vec::new();
@@ -356,8 +430,16 @@ pub fn headline_summary(hw: &HwConfig) -> Table {
         cim1_vs_sa.push(sa / simulate_e2e(&m, hw, MappingKind::Halo1, &sc).e2e_latency());
         cim2_vs_sa.push(sa / simulate_e2e(&m, hw, MappingKind::Halo2, &sc).e2e_latency());
     }
-    t.row(vec!["HALO-CiM1 speedup vs HALO-SA".into(), "1.3x".into(), format!("{:.2}x", geomean(&cim1_vs_sa))]);
-    t.row(vec!["HALO-CiM2 speedup vs HALO-SA".into(), "1.2x".into(), format!("{:.2}x", geomean(&cim2_vs_sa))]);
+    t.row(vec![
+        "HALO-CiM1 speedup vs HALO-SA".into(),
+        "1.3x".into(),
+        format!("{:.2}x", geomean(&cim1_vs_sa)),
+    ]);
+    t.row(vec![
+        "HALO-CiM2 speedup vs HALO-SA".into(),
+        "1.2x".into(),
+        format!("{:.2}x", geomean(&cim2_vs_sa)),
+    ]);
     t
 }
 

@@ -67,22 +67,33 @@ fn tensor_spec(j: &Json) -> Result<TensorSpec> {
 
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let text = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+            format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
+        })?;
         let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
 
         let mut params = Vec::new();
         for p in j.get("params").and_then(|p| p.as_arr()).ok_or_else(|| anyhow!("params"))? {
             params.push(ParamSpec {
                 name: p.get("name").and_then(|x| x.as_str()).unwrap_or_default().to_string(),
-                shape: p.get("shape").and_then(|x| x.as_usize_vec()).ok_or_else(|| anyhow!("param shape"))?,
-                offset: p.get("offset").and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("offset"))?,
-                nelems: p.get("nelems").and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("nelems"))?,
+                shape: p
+                    .get("shape")
+                    .and_then(|x| x.as_usize_vec())
+                    .ok_or_else(|| anyhow!("param shape"))?,
+                offset: p
+                    .get("offset")
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| anyhow!("offset"))?,
+                nelems: p
+                    .get("nelems")
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| anyhow!("nelems"))?,
             });
         }
 
         let mut entries = BTreeMap::new();
-        for (name, e) in j.get("entries").and_then(|e| e.as_obj()).ok_or_else(|| anyhow!("entries"))? {
+        let obj = j.get("entries").and_then(|e| e.as_obj()).ok_or_else(|| anyhow!("entries"))?;
+        for (name, e) in obj {
             let inputs = e
                 .get("inputs")
                 .and_then(|x| x.as_arr())
@@ -114,7 +125,11 @@ impl Manifest {
                 name.clone(),
                 EntrySpec {
                     name: name.clone(),
-                    hlo_file: e.get("hlo").and_then(|x| x.as_str()).ok_or_else(|| anyhow!("hlo"))?.to_string(),
+                    hlo_file: e
+                        .get("hlo")
+                        .and_then(|x| x.as_str())
+                        .ok_or_else(|| anyhow!("hlo"))?
+                        .to_string(),
                     n_params: e.get("n_params").and_then(|x| x.as_usize()).unwrap_or(0),
                     inputs,
                     outputs,

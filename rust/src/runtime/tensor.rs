@@ -162,9 +162,11 @@ impl HostTensor {
             (Storage::I32(a), Storage::I32(b)) if a.len() == b.len() => {
                 Ok(a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).fold(0.0, f64::max))
             }
-            (Storage::I8(a), Storage::I8(b)) if a.len() == b.len() => {
-                Ok(a.iter().zip(b).map(|(x, y)| (*x as i32 - *y as i32).abs() as f64).fold(0.0, f64::max))
-            }
+            (Storage::I8(a), Storage::I8(b)) if a.len() == b.len() => Ok(a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (*x as i32 - *y as i32).abs() as f64)
+                .fold(0.0, f64::max)),
             _ => Err(anyhow!("tensor mismatch: {:?} vs {:?}", self.spec, other.spec)),
         }
     }
@@ -223,8 +225,9 @@ mod tests {
 
     #[test]
     fn i8_bytes_are_signed() {
-        let t = HostTensor::from_bytes(&[0xff, 0x7f], TensorSpec { shape: vec![2], dtype: Dtype::I8 })
-            .unwrap();
+        let t =
+            HostTensor::from_bytes(&[0xff, 0x7f], TensorSpec { shape: vec![2], dtype: Dtype::I8 })
+                .unwrap();
         assert_eq!(t.as_i8().unwrap(), &[-1i8, 127]);
     }
 

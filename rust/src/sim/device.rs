@@ -104,7 +104,8 @@ impl CostModel {
         let (llm, engines, mapping) = (&self.llm, &self.engines, self.mapping);
         let (a, b) = *self.dec_coef.entry(batch).or_insert_with(|| {
             let t1 = simulate_graph(&build_decode_graph(llm, 512, batch), engines, mapping).latency;
-            let t2 = simulate_graph(&build_decode_graph(llm, 1024, batch), engines, mapping).latency;
+            let t2 =
+                simulate_graph(&build_decode_graph(llm, 1024, batch), engines, mapping).latency;
             let slope = (t2 - t1) / 512.0;
             (t1 - slope * 512.0, slope)
         });
@@ -360,7 +361,13 @@ pub struct Device {
 }
 
 impl Device {
-    pub fn new(llm: &LlmConfig, hw: &HwConfig, mapping: MappingKind, slots: usize, id: usize) -> Self {
+    pub fn new(
+        llm: &LlmConfig,
+        hw: &HwConfig,
+        mapping: MappingKind,
+        slots: usize,
+        id: usize,
+    ) -> Self {
         Self::with_sched(llm, hw, mapping, slots, id, SchedConfig::default())
     }
 
@@ -443,6 +450,32 @@ impl Device {
     pub fn kv_queued_bytes(&self) -> u64 {
         let tokens: usize = self.queue.iter().map(DeviceJob::kv_lifetime_tokens).sum();
         tokens as u64 * self.kv_per_token
+    }
+
+    /// Lifetime KV bytes of the prefill-handoff work parked on this
+    /// device (queued [`DeviceJob::PrefillOnly`] jobs plus in-progress
+    /// handoff prefills): KV this device will soon push *into the decode
+    /// pool*. Not charged against this device's own budget (handoff KV is
+    /// transient here), but a capacity-aware router reads it to steer new
+    /// prefills away from devices about to flood a pressured decode pool.
+    pub fn handoff_backlog_bytes(&self) -> u64 {
+        let queued: usize = self
+            .queue
+            .iter()
+            .map(|j| match j {
+                DeviceJob::PrefillOnly { l_in, l_out, .. } => l_in + (*l_out).max(1),
+                _ => 0,
+            })
+            .sum();
+        let streaming: usize = self
+            .prefilling
+            .iter()
+            .map(|p| match p.kind {
+                PrefillKind::Handoff { l_out, .. } => p.l_in + l_out.max(1),
+                _ => 0,
+            })
+            .sum();
+        (queued + streaming) as u64 * self.kv_per_token
     }
 
     /// Uncommitted, unpromised KV budget (`u64::MAX` when unlimited) —
@@ -867,8 +900,20 @@ mod tests {
     #[test]
     fn prefill_only_emits_handoff_without_using_slots() {
         let mut d = dev(1);
-        d.push(DeviceJob::PrefillOnly { arrival: 0.0, ready: 0.0, l_in: 128, l_out: 8, decode_dev: 3 });
-        d.push(DeviceJob::PrefillOnly { arrival: 0.0, ready: 0.0, l_in: 128, l_out: 8, decode_dev: 4 });
+        d.push(DeviceJob::PrefillOnly {
+            arrival: 0.0,
+            ready: 0.0,
+            l_in: 128,
+            l_out: 8,
+            decode_dev: 3,
+        });
+        d.push(DeviceJob::PrefillOnly {
+            arrival: 0.0,
+            ready: 0.0,
+            l_in: 128,
+            l_out: 8,
+            decode_dev: 4,
+        });
         let h = d.step_cycle();
         // both prefills drain in one cycle despite a single slot
         assert_eq!(h.len(), 2);
@@ -882,7 +927,13 @@ mod tests {
     #[test]
     fn decode_only_preserves_foreign_ttft() {
         let mut d = dev(2);
-        d.push(DeviceJob::DecodeOnly { arrival: 1.0, ready: 2.0, first_token_at: 1.5, ctx: 64, remaining: 2 });
+        d.push(DeviceJob::DecodeOnly {
+            arrival: 1.0,
+            ready: 2.0,
+            first_token_at: 1.5,
+            ctx: 64,
+            remaining: 2,
+        });
         while d.has_work() {
             d.step_cycle();
         }
@@ -1089,6 +1140,26 @@ mod tests {
         });
         assert_eq!(d.kv_committed_bytes(), 0);
         assert_eq!(d.kv_headroom(), 600 * kvpt);
+    }
+
+    #[test]
+    fn handoff_backlog_counts_outbound_kv_only() {
+        let llm = LlmConfig::llama2_7b();
+        let kvpt = llm.kv_bytes_per_token();
+        let mut d = dev(2);
+        assert_eq!(d.handoff_backlog_bytes(), 0);
+        // outbound handoff work counts its lifetime KV (l_in + l_out)
+        d.push(DeviceJob::PrefillOnly {
+            arrival: 0.0,
+            ready: 0.0,
+            l_in: 300,
+            l_out: 20,
+            decode_dev: 1,
+        });
+        assert_eq!(d.handoff_backlog_bytes(), 320 * kvpt);
+        // local work does not: it never crosses into the decode pool
+        d.push(DeviceJob::Full { arrival: 0.0, ready: 0.0, l_in: 500, l_out: 8 });
+        assert_eq!(d.handoff_backlog_bytes(), 320 * kvpt);
     }
 
     #[test]

@@ -328,7 +328,12 @@ mod tests {
     #[test]
     fn energy_breakdown_sums() {
         let m = llama();
-        let r = simulate_e2e(&m, &hw(), MappingKind::Halo1, &Scenario { l_in: 512, l_out: 128, batch: 1 });
+        let r = simulate_e2e(
+            &m,
+            &hw(),
+            MappingKind::Halo1,
+            &Scenario { l_in: 512, l_out: 128, batch: 1 },
+        );
         for ph in [&r.prefill, &r.decode_step] {
             let sum: f64 = ph.by_kind.values().map(|c| c.energy).sum();
             assert!((sum / ph.energy - 1.0).abs() < 1e-9);

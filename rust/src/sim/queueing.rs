@@ -28,12 +28,16 @@ use crate::mapping::MappingKind;
 use crate::model::LlmConfig;
 use crate::util::{percentile, Rng};
 
-/// One request in the trace.
+/// One request in the trace. `tenant` tags the submitting tenant for
+/// multi-tenant studies (0 for single-tenant traces); arrivals are
+/// strictly increasing, so a served record joins back to its trace
+/// request — and hence its tenant — by arrival time.
 #[derive(Debug, Clone)]
 pub struct TraceRequest {
     pub arrival: f64,
     pub l_in: usize,
     pub l_out: usize,
+    pub tenant: usize,
 }
 
 /// Generate a Poisson-arrival trace whose per-request lengths come from
@@ -42,6 +46,19 @@ pub fn trace_with(
     seed: u64,
     n: usize,
     rate_per_s: f64,
+    sample: impl FnMut(&mut Rng) -> (usize, usize),
+) -> Vec<TraceRequest> {
+    trace_with_tenants(seed, n, rate_per_s, 1, sample)
+}
+
+/// [`trace_with`] tagging each request with a uniformly drawn tenant in
+/// `[0, tenants)`. With `tenants <= 1` no tenant draw is made, so the
+/// trace is bit-identical to the single-tenant generator's.
+pub fn trace_with_tenants(
+    seed: u64,
+    n: usize,
+    rate_per_s: f64,
+    tenants: usize,
     mut sample: impl FnMut(&mut Rng) -> (usize, usize),
 ) -> Vec<TraceRequest> {
     let mut rng = Rng::new(seed);
@@ -50,7 +67,8 @@ pub fn trace_with(
         .map(|_| {
             t += rng.exp(rate_per_s);
             let (l_in, l_out) = sample(&mut rng);
-            TraceRequest { arrival: t, l_in, l_out }
+            let tenant = if tenants > 1 { rng.below(tenants as u64) as usize } else { 0 };
+            TraceRequest { arrival: t, l_in, l_out, tenant }
         })
         .collect()
 }
@@ -208,6 +226,26 @@ mod tests {
         let mean_gap = tr.last().unwrap().arrival / 2000.0;
         assert!((mean_gap - 0.1).abs() < 0.02, "{mean_gap}");
         assert!(tr.iter().all(|r| (64..=1024).contains(&r.l_in)));
+    }
+
+    #[test]
+    fn tenant_tagging_preserves_single_tenant_stream() {
+        let single = poisson_trace(6, 200, 10.0, (64, 1024), 64);
+        // tenants = 1 must be bit-identical to the untagged generator
+        let tagged =
+            trace_with_tenants(6, 200, 10.0, 1, |rng| (log_uniform(rng, 64, 1024), 64));
+        for (a, b) in single.iter().zip(&tagged) {
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+            assert_eq!((a.l_in, a.l_out, a.tenant), (b.l_in, b.l_out, b.tenant));
+        }
+        // multi-tenant draws cover every tenant and stay deterministic
+        let multi = trace_with_tenants(6, 600, 10.0, 3, |rng| (log_uniform(rng, 64, 1024), 64));
+        for t in 0..3 {
+            let n = multi.iter().filter(|r| r.tenant == t).count();
+            assert!(n > 100, "tenant {t} got only {n} of 600 requests");
+        }
+        let again = trace_with_tenants(6, 600, 10.0, 3, |rng| (log_uniform(rng, 64, 1024), 64));
+        assert!(multi.iter().zip(&again).all(|(a, b)| a.tenant == b.tenant));
     }
 
     #[test]

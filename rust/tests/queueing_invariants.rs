@@ -60,7 +60,8 @@ fn ttft_covers_prefill_and_e2e_covers_ttft() {
             let mut cost = CostModel::new(&llm, &hw(), *mapping);
             r.served.iter().all(|s| {
                 // arrivals are unique, so they key the original request
-                let req = tr.iter().find(|q| q.arrival == s.arrival).expect("served unknown arrival");
+                let req =
+                    tr.iter().find(|q| q.arrival == s.arrival).expect("served unknown arrival");
                 let p = cost.prefill(req.l_in);
                 s.ttft >= p - 1e-12 && s.e2e >= s.ttft - 1e-12
             })

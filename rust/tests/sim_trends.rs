@@ -33,7 +33,8 @@ fn e2e_latency_monotone_in_context_for_all_mappings() {
         50,
         Triple(UsizeIn(64, 4096), UsizeIn(64, 2048), OneOf(&ALL_MAPPINGS)),
         |(l_in, l_out, mk)| {
-            let a = simulate_e2e(&m, &hw(), *mk, &Scenario { l_in: *l_in, l_out: *l_out, batch: 1 });
+            let a =
+                simulate_e2e(&m, &hw(), *mk, &Scenario { l_in: *l_in, l_out: *l_out, batch: 1 });
             let b = simulate_e2e(
                 &m,
                 &hw(),
@@ -62,7 +63,8 @@ fn latency_and_energy_always_positive_and_finite() {
         40,
         Triple(UsizeIn(1, 8192), UsizeIn(1, 4096), OneOf(&ALL_MAPPINGS)),
         |(l_in, l_out, mk)| {
-            let r = simulate_e2e(&q, &hw(), *mk, &Scenario { l_in: *l_in, l_out: *l_out, batch: 1 });
+            let r =
+                simulate_e2e(&q, &hw(), *mk, &Scenario { l_in: *l_in, l_out: *l_out, batch: 1 });
             let vals = [r.ttft(), r.tpot(), r.e2e_latency(), r.e2e_energy()];
             vals.iter().all(|v| v.is_finite() && *v > 0.0)
         },
@@ -202,7 +204,8 @@ fn kv_cache_pressure_shows_in_decode_latency() {
 #[test]
 fn energy_conservation_across_breakdowns() {
     let m = LlmConfig::qwen3_8b();
-    forall(5, 20, Triple(UsizeIn(64, 4096), UsizeIn(64, 1024), OneOf(&ALL_MAPPINGS)), |(li, lo, mk)| {
+    let gen = Triple(UsizeIn(64, 4096), UsizeIn(64, 1024), OneOf(&ALL_MAPPINGS));
+    forall(5, 20, gen, |(li, lo, mk)| {
         let r = simulate_e2e(&m, &hw(), *mk, &Scenario { l_in: *li, l_out: *lo, batch: 1 });
         let by_kind: f64 = r.prefill.by_kind.values().map(|c| c.energy).sum();
         let by_engine: f64 = r.prefill.by_engine.values().map(|c| c.energy).sum();
