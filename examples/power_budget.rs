@@ -1,0 +1,74 @@
+//! The power plane end to end: compare the §V-B architectural extremes
+//! on mixed-workload energy per token, sweep a package TDP cap to watch
+//! the thermal throttle trade throughput for power, then run an
+//! energy-objective DSE search over the `power` space.
+//!
+//!     cargo run --release --example power_budget
+
+use halo::cluster::{Fleet, Interconnect, Mix, Policy, SchedConfig};
+use halo::config::HwConfig;
+use halo::dse::{explore, DseConfig, Exhaustive, Objective, SearchSpace};
+use halo::mapping::MappingKind;
+use halo::model::LlmConfig;
+use halo::power::ThermalConfig;
+use halo::report::dse::frontier_table;
+use halo::util::fmt_joules;
+
+fn main() {
+    let hw = HwConfig::paper();
+    let llm = LlmConfig::llama2_7b();
+    let trace = Mix::Interactive.trace(61, 64, 12.0);
+    let tokens: u64 = trace.iter().map(|q| q.l_out as u64).sum();
+
+    println!("== energy per token: Fully-CiD vs Fully-CiM vs HALO1 ==");
+    for mapping in [MappingKind::FullCid, MappingKind::FullCim, MappingKind::Halo1] {
+        let mut fleet = Fleet::heterogeneous_with(
+            &llm,
+            &hw,
+            &[mapping],
+            8,
+            Interconnect::board(),
+            SchedConfig::default(),
+        );
+        fleet.enable_power(&hw, None);
+        let mut router = Policy::LeastLoaded.router();
+        let r = fleet.replay(&trace, router.as_mut());
+        println!(
+            "  {:>9}: {}/token  ({:.0} W avg, {:.0} W peak)",
+            mapping.name(),
+            fmt_joules(r.energy_per_token(tokens)),
+            r.avg_power_w(),
+            r.peak_power_w
+        );
+    }
+
+    println!("\n== TDP sweep on one HALO1 device (saturating burst) ==");
+    let burst = Mix::Generation.trace(63, 48, 1.0e6);
+    for cap in [None, Some(150.0), Some(100.0), Some(60.0)] {
+        let mut fleet = Fleet::unified(&llm, &hw, 1, 8, Interconnect::board());
+        fleet.enable_power(&hw, cap.map(ThermalConfig::paper));
+        let mut router = Policy::LeastLoaded.router();
+        let r = fleet.replay(&burst, router.as_mut());
+        println!(
+            "  tdp {:>5}: {:6.3} req/s  avg {:5.1} W  throttled {:6.2} s",
+            cap.map_or("inf".to_string(), |w| format!("{w:.0}W")),
+            r.throughput_rps(),
+            r.avg_power_w(),
+            r.throttled_s
+        );
+    }
+
+    println!("\n== energy-objective DSE over the `power` space ==");
+    let mut cfg = DseConfig::new(llm, Mix::Interactive);
+    cfg.requests = 48;
+    cfg.seed = 67;
+    cfg.objectives =
+        vec![Objective::EnergyPerToken, Objective::Throughput, Objective::PeakPower];
+    let res = explore(&SearchSpace::power(), &mut Exhaustive, &cfg);
+    let table = frontier_table(
+        &res,
+        "power_frontier",
+        &format!("Energy/throughput/peak-power frontier ({:.2} req/s offered)", res.rate),
+    );
+    println!("{}", table.to_markdown());
+}

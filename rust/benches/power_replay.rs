@@ -1,0 +1,51 @@
+//! Microbenchmarks of the power plane: the overhead of per-event energy
+//! attribution on a fleet replay (the zero-feedback observer path), the
+//! thermally throttled replay (attribution + RC updates + stretched
+//! events), and windowed power-trace extraction.
+
+use halo::cluster::{Fleet, Interconnect, Mix, Policy};
+use halo::config::HwConfig;
+use halo::model::LlmConfig;
+use halo::power::{power_trace, ThermalConfig};
+use halo::util::bench::{bb, BenchSuite};
+
+fn main() {
+    let hw = HwConfig::paper();
+    let llm = LlmConfig::llama2_7b();
+    let mut s = BenchSuite::new("power_replay");
+    let trace = Mix::Interactive.trace(71, 120, 40.0);
+
+    // baseline: the untracked replay the observer must not perturb
+    s.bench_throughput("fleet4_replay_untracked", trace.len() as f64, || {
+        let (mut fleet, mut router) =
+            Policy::LeastLoaded.build(&llm, &hw, 4, 8, 0.5, Interconnect::board());
+        bb(fleet.replay(&trace, router.as_mut()));
+    });
+
+    s.bench_throughput("fleet4_replay_power_tracked", trace.len() as f64, || {
+        let (mut fleet, mut router) =
+            Policy::LeastLoaded.build(&llm, &hw, 4, 8, 0.5, Interconnect::board());
+        fleet.enable_power(&hw, None);
+        bb(fleet.replay(&trace, router.as_mut()));
+    });
+
+    s.bench_throughput("fleet4_replay_tdp_throttled", trace.len() as f64, || {
+        let (mut fleet, mut router) =
+            Policy::LeastLoaded.build(&llm, &hw, 4, 8, 0.5, Interconnect::board());
+        fleet.enable_power(&hw, Some(ThermalConfig::paper(100.0)));
+        bb(fleet.replay(&trace, router.as_mut()));
+    });
+
+    // trace extraction over a realistic event log
+    let mut fleet = Fleet::unified(&llm, &hw, 1, 8, Interconnect::board());
+    fleet.enable_power(&hw, None);
+    let mut router = Policy::LeastLoaded.router();
+    let r = fleet.replay(&trace, router.as_mut());
+    let pw = fleet.devices[0].power().expect("tracked");
+    let floor = pw.model.static_power(false);
+    s.bench("power_trace_64_windows", || {
+        bb(power_trace(&pw.events, floor, r.makespan, 64));
+    });
+
+    s.finish();
+}

@@ -12,6 +12,7 @@ use super::router::Router;
 use crate::config::HwConfig;
 use crate::mapping::MappingKind;
 use crate::model::LlmConfig;
+use crate::power::{EnergyBreakdown, ThermalConfig};
 use crate::sim::device::{Device, DeviceJob, SchedConfig};
 use crate::sim::queueing::{
     e2e_percentile, served_rate, ttft_percentile, ServedRequest, TraceRequest,
@@ -40,6 +41,8 @@ pub struct Fleet {
     /// KV bytes moved across the interconnect so far.
     pub kv_bytes: u64,
     pub transfers: u64,
+    /// Joules spent moving KV caches across the interconnect.
+    pub kv_energy_j: f64,
     /// Decode work committed by routing but not yet delivered (request
     /// still in prefill or KV transfer), per device. Without it, burst
     /// routing would herd every request onto one decode device, since
@@ -86,6 +89,7 @@ impl Fleet {
             decode_pool: (0..devices).collect(),
             kv_bytes: 0,
             transfers: 0,
+            kv_energy_j: 0.0,
             pending_decode: vec![0; devices],
             pending_kv: vec![0; devices],
         }
@@ -118,6 +122,7 @@ impl Fleet {
             decode_pool: (0..devices).collect(),
             kv_bytes: 0,
             transfers: 0,
+            kv_energy_j: 0.0,
             pending_decode: vec![0; devices],
             pending_kv: vec![0; devices],
         }
@@ -176,6 +181,7 @@ impl Fleet {
             decode_pool: (n_pre..devices).collect(),
             kv_bytes: 0,
             transfers: 0,
+            kv_energy_j: 0.0,
             pending_decode: vec![0; devices],
             pending_kv: vec![0; devices],
         }
@@ -185,6 +191,17 @@ impl Fleet {
     /// e.g. a decode pool mixing large- and small-memory devices).
     pub fn set_kv_capacity(&mut self, dev: usize, cap: Option<u64>) {
         self.devices[dev].set_kv_capacity(cap);
+    }
+
+    /// Attach per-event energy attribution to every device — and, with a
+    /// [`ThermalConfig`], a live per-package TDP throttle. Call before
+    /// [`Fleet::replay`]. Without a thermal cap the replay's latency
+    /// results stay bit-identical to the untracked fleet.
+    pub fn enable_power(&mut self, hw: &HwConfig, thermal: Option<ThermalConfig>) {
+        let llm = self.llm.clone();
+        for d in &mut self.devices {
+            d.enable_power(&llm, hw, thermal.clone());
+        }
     }
 
     /// Decode-side load of a device as a router should see it: queued +
@@ -282,6 +299,7 @@ impl Fleet {
                     let bytes = kv_transfer_bytes(&self.llm, done.l_in);
                     self.kv_bytes += bytes;
                     self.transfers += 1;
+                    self.kv_energy_j += self.interconnect.transfer_energy(bytes);
                     inflight.push(InFlight {
                         ready: done.done_at + self.interconnect.transfer_time(bytes),
                         dev: done.decode_dev,
@@ -302,7 +320,26 @@ impl Fleet {
         let makespan = self.devices.iter().map(|d| d.now()).fold(0.0, f64::max);
         let mut served = Vec::new();
         let mut per_device = Vec::new();
+        let mut fleet_energy = EnergyBreakdown::default();
+        let mut power_tracked = false;
+        let mut peak_power_w = 0.0f64;
+        let mut throttled_s = 0.0;
         for d in &mut self.devices {
+            // per-device energy: every busy event's dynamic + static
+            // share, plus the cold static floor over the idle remainder
+            // of the fleet makespan
+            let (energy, peak_w, dev_throttled) = match d.power() {
+                Some(pw) => {
+                    power_tracked = true;
+                    let mut e = pw.energy;
+                    e.e_static += pw.model.static_power(false) * (makespan - d.busy).max(0.0);
+                    (e, pw.peak_w, pw.throttled_s)
+                }
+                None => (EnergyBreakdown::default(), 0.0, 0.0),
+            };
+            fleet_energy.add(&energy);
+            peak_power_w = peak_power_w.max(peak_w);
+            throttled_s += dev_throttled;
             per_device.push(DeviceSummary {
                 id: d.id,
                 mapping: d.mapping,
@@ -317,9 +354,13 @@ impl Fleet {
                 evictions: d.evictions,
                 recompute_tokens: d.recompute_tokens,
                 kv_peak: d.kv_peak,
+                energy,
+                peak_power_w: peak_w,
+                throttled_s: dev_throttled,
             });
             served.append(&mut d.served);
         }
+        fleet_energy.e_link += self.kv_energy_j;
         debug_assert_eq!(served.len(), n_requests, "requests conserved");
         FleetResult {
             served,
@@ -328,8 +369,13 @@ impl Fleet {
             prefills: per_device.iter().map(|s| s.prefills).sum(),
             kv_bytes: self.kv_bytes,
             transfers: self.transfers,
+            kv_transfer_energy_j: self.kv_energy_j,
             evictions: per_device.iter().map(|s| s.evictions).sum(),
             recompute_tokens: per_device.iter().map(|s| s.recompute_tokens).sum(),
+            power_tracked,
+            energy: fleet_energy,
+            peak_power_w,
+            throttled_s,
             per_device,
         }
     }
@@ -362,6 +408,25 @@ pub struct DeviceSummary {
     pub recompute_tokens: u64,
     /// High-water mark of resident KV bytes on this device.
     pub kv_peak: u64,
+    /// Attributed energy over the whole makespan (zero when power
+    /// tracking is off).
+    pub energy: EnergyBreakdown,
+    /// Highest mean event power on this device, W.
+    pub peak_power_w: f64,
+    /// Extra service time added here by thermal throttling, s.
+    pub throttled_s: f64,
+}
+
+impl DeviceSummary {
+    /// Busy fraction of the fleet makespan (per-device utilization).
+    pub fn utilization(&self, makespan: f64) -> f64 {
+        self.busy / makespan.max(1e-12)
+    }
+
+    /// Mean power over the makespan, W (zero when untracked).
+    pub fn avg_power_w(&self, makespan: f64) -> f64 {
+        self.energy.total() / makespan.max(1e-12)
+    }
 }
 
 /// Aggregate results of a fleet replay.
@@ -373,10 +438,22 @@ pub struct FleetResult {
     pub prefills: u64,
     pub kv_bytes: u64,
     pub transfers: u64,
+    /// Joules spent moving KV caches across the interconnect (always
+    /// counted; independent of device power tracking).
+    pub kv_transfer_energy_j: f64,
     /// Fleet-wide sequences evicted under KV pressure.
     pub evictions: u64,
     /// Fleet-wide cached tokens re-prefilled because of evictions.
     pub recompute_tokens: u64,
+    /// Whether any device attributed energy (see [`Fleet::enable_power`]).
+    pub power_tracked: bool,
+    /// Fleet-wide energy: per-device dynamic + static (busy and idle)
+    /// plus interconnect KV-transfer energy in `e_link`.
+    pub energy: EnergyBreakdown,
+    /// Highest mean event power across the fleet's devices, W.
+    pub peak_power_w: f64,
+    /// Total extra service time added by thermal throttling, s.
+    pub throttled_s: f64,
     pub per_device: Vec<DeviceSummary>,
 }
 
@@ -400,6 +477,19 @@ impl FleetResult {
     pub fn utilization(&self) -> f64 {
         let busy: f64 = self.per_device.iter().map(|d| d.busy).sum();
         busy / (self.per_device.len() as f64 * self.makespan.max(1e-12))
+    }
+    /// Total fleet energy over the makespan, J (0 when untracked).
+    pub fn energy_j(&self) -> f64 {
+        self.energy.total()
+    }
+    /// Fleet energy per generated token, J (`tokens` = the trace's total
+    /// output tokens).
+    pub fn energy_per_token(&self, tokens: u64) -> f64 {
+        self.energy_j() / tokens.max(1) as f64
+    }
+    /// Mean fleet power over the makespan, W.
+    pub fn avg_power_w(&self) -> f64 {
+        self.energy_j() / self.makespan.max(1e-12)
     }
 }
 
@@ -492,6 +582,46 @@ mod tests {
         // the mapping column survives into the per-device summary
         let summary: Vec<MappingKind> = r.per_device.iter().map(|d| d.mapping).collect();
         assert_eq!(summary, mappings);
+    }
+
+    #[test]
+    fn kv_transfer_energy_counted_per_byte() {
+        let tr = poisson_trace(27, 20, 10.0, (128, 512), 8);
+        let link = Interconnect::board();
+        let mut fleet = Fleet::disaggregated(&llm(), &hw(), 4, 4, 0.5, link.clone());
+        let r = fleet.replay(&tr, &mut PhaseDisaggregated);
+        assert_eq!(r.transfers, 20);
+        let want = link.transfer_energy(r.kv_bytes);
+        assert!((r.kv_transfer_energy_j - want).abs() < 1e-9 * want.max(1.0));
+        // counted even without device power tracking, and folded into the
+        // fleet link-energy component
+        assert!(!r.power_tracked);
+        assert_eq!(r.energy.e_link, r.kv_transfer_energy_j);
+        assert_eq!(r.energy.dynamic(), 0.0);
+    }
+
+    #[test]
+    fn powered_fleet_attributes_energy_to_every_active_device() {
+        let tr = poisson_trace(28, 40, 20.0, (64, 512), 16);
+        let mut fleet = Fleet::unified(&llm(), &hw(), 2, 4, Interconnect::board());
+        fleet.enable_power(&hw(), None);
+        let r = fleet.replay(&tr, &mut LeastLoaded);
+        assert!(r.power_tracked);
+        assert!(r.energy_j() > 0.0);
+        assert!(r.peak_power_w > 0.0);
+        assert_eq!(r.throttled_s, 0.0, "no TDP cap, no throttling");
+        let device_sum: f64 = r.per_device.iter().map(|d| d.energy.total()).sum();
+        assert!((r.energy_j() - device_sum).abs() < 1e-9 * device_sum, "unified: no link energy");
+        for d in &r.per_device {
+            assert!(d.served == 0 || d.energy.dynamic() > 0.0, "device {}", d.id);
+            // static idle floor covers the makespan remainder
+            assert!(d.energy.e_static > 0.0);
+            assert!(d.utilization(r.makespan) <= 1.0 + 1e-12);
+            assert!(d.avg_power_w(r.makespan) > 0.0);
+        }
+        let tokens: u64 = tr.iter().map(|q| q.l_out as u64).sum();
+        assert!(r.energy_per_token(tokens) > 0.0);
+        assert!((r.avg_power_w() - r.energy_j() / r.makespan).abs() < 1e-9);
     }
 
     #[test]

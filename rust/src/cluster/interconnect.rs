@@ -9,7 +9,8 @@
 
 use crate::model::LlmConfig;
 
-/// A fleet interconnect: per-transfer latency plus a bandwidth pipe.
+/// A fleet interconnect: per-transfer latency plus a bandwidth pipe, with
+/// a per-byte transfer energy so KV handoffs cost joules as well as time.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Interconnect {
     pub name: &'static str,
@@ -17,32 +18,44 @@ pub struct Interconnect {
     pub bw: f64,
     /// Per-transfer latency, s (protocol + switch traversal).
     pub latency: f64,
+    /// Transfer energy, J/byte (SerDes + wire, both endpoints).
+    pub e_per_byte: f64,
 }
 
 impl Interconnect {
     pub fn new(bw: f64, latency: f64) -> Self {
         assert!(bw > 0.0 && latency >= 0.0);
-        Interconnect { name: "custom", bw, latency }
+        // default transfer energy: board-class SerDes
+        Interconnect { name: "custom", bw, latency, e_per_byte: 10.0e-12 }
     }
 
-    /// On-board / 2.5D-class link (NVLink-generation bandwidth).
+    /// Override the per-byte transfer energy.
+    pub fn with_transfer_energy(mut self, e_per_byte: f64) -> Self {
+        assert!(e_per_byte >= 0.0);
+        self.e_per_byte = e_per_byte;
+        self
+    }
+
+    /// On-board / 2.5D-class link (NVLink-generation bandwidth;
+    /// ~1.3 pJ/bit short-reach SerDes).
     pub fn board() -> Self {
-        Interconnect { name: "board", bw: 256.0e9, latency: 2.0e-6 }
+        Interconnect { name: "board", bw: 256.0e9, latency: 2.0e-6, e_per_byte: 10.0e-12 }
     }
 
-    /// PCIe Gen5 x16-class link.
+    /// PCIe Gen5 x16-class link (~4 pJ/bit).
     pub fn pcie5() -> Self {
-        Interconnect { name: "pcie5", bw: 64.0e9, latency: 5.0e-6 }
+        Interconnect { name: "pcie5", bw: 64.0e9, latency: 5.0e-6, e_per_byte: 32.0e-12 }
     }
 
-    /// 100 GbE-class link.
+    /// 100 GbE-class link (~20 pJ/bit incl. NIC/switch traversal).
     pub fn ethernet() -> Self {
-        Interconnect { name: "eth100g", bw: 12.5e9, latency: 50.0e-6 }
+        Interconnect { name: "eth100g", bw: 12.5e9, latency: 50.0e-6, e_per_byte: 160.0e-12 }
     }
 
-    /// Deliberately slow wide-area-class link (KV transfer dominates).
+    /// Deliberately slow wide-area-class link (KV transfer dominates; the
+    /// per-byte energy covers the long-haul transport chain).
     pub fn wan() -> Self {
-        Interconnect { name: "wan", bw: 1.0e9, latency: 1.0e-3 }
+        Interconnect { name: "wan", bw: 1.0e9, latency: 1.0e-3, e_per_byte: 20.0e-9 }
     }
 
     pub fn by_name(s: &str) -> Option<Self> {
@@ -58,6 +71,11 @@ impl Interconnect {
     /// Wall-clock time to move `bytes` across the link.
     pub fn transfer_time(&self, bytes: u64) -> f64 {
         self.latency + bytes as f64 / self.bw
+    }
+
+    /// Energy to move `bytes` across the link, J.
+    pub fn transfer_energy(&self, bytes: u64) -> f64 {
+        bytes as f64 * self.e_per_byte
     }
 }
 
@@ -99,6 +117,20 @@ mod tests {
         let llama = kv_transfer_bytes(&LlmConfig::llama2_7b(), 1024);
         let qwen = kv_transfer_bytes(&LlmConfig::qwen3_8b(), 1024);
         assert!(qwen < llama);
+    }
+
+    #[test]
+    fn transfer_energy_scales_with_bytes_and_link_class() {
+        let bytes = kv_transfer_bytes(&LlmConfig::llama2_7b(), 1024);
+        let e_board = Interconnect::board().transfer_energy(bytes);
+        let e_eth = Interconnect::ethernet().transfer_energy(bytes);
+        assert!(e_board > 0.0 && e_eth > e_board);
+        assert_eq!(Interconnect::board().transfer_energy(0), 0.0);
+        // 2x the bytes, 2x the joules
+        assert!((Interconnect::board().transfer_energy(2 * bytes) / e_board - 2.0).abs() < 1e-12);
+        // override hook
+        let custom = Interconnect::new(1e9, 0.0).with_transfer_energy(5e-12);
+        assert!((custom.transfer_energy(1000) - 5e-9).abs() < 1e-20);
     }
 
     #[test]

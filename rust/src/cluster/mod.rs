@@ -32,6 +32,12 @@
 //! non-default scheduler) to construct a (fleet, router) pair and
 //! [`Fleet::replay`] to serve a trace through it. The [`crate::dse`]
 //! plane searches over all of these knobs at once.
+//!
+//! Energy: [`Fleet::enable_power`] attaches the [`crate::power`] plane —
+//! per-event energy attribution on every device, optional per-package
+//! TDP throttling — and KV transfers across the [`Interconnect`] are
+//! charged joules per byte alongside their latency; both surface in the
+//! per-device and fleet-level replay stats.
 
 pub mod fleet;
 pub mod interconnect;

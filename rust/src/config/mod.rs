@@ -330,6 +330,39 @@ impl LogicDieConfig {
     }
 }
 
+/// Package-level power constants for the `power` plane: background
+/// (static) power integrated over wall-clock time, plus the default
+/// thermal design power of one HALO package.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerConfig {
+    /// HBM refresh background power per stack, W. CALIBRATED: ~1.2 W for
+    /// a 16 GB HBM3 stack at normal temperature; DRAM refresh rate (and
+    /// hence this power) doubles above the hot threshold (JEDEC 2x
+    /// refresh above ~85C), which the thermal model applies when the CiM
+    /// die heats the co-packaged stacks.
+    pub refresh_w_per_stack: f64,
+    /// Package static leakage (CiM + logic dies + PHYs), W. CALIBRATED.
+    pub leakage_w: f64,
+    /// Default package TDP, W (`halo power --tdp auto`). CALIBRATED:
+    /// sized just above the fully-CiD decode streaming power (~150 W
+    /// dynamic + static floor) so the paper-point config runs unthrottled
+    /// at nominal load but a tighter cap bites immediately.
+    pub tdp_w: f64,
+}
+
+impl PowerConfig {
+    pub fn paper() -> Self {
+        PowerConfig { refresh_w_per_stack: 1.2, leakage_w: 10.0, tdp_w: 180.0 }
+    }
+
+    /// Background (static) power floor of one package, W: refresh across
+    /// all `stacks` plus leakage. `hot_refresh` doubles the refresh share.
+    pub fn static_w(&self, stacks: usize, hot_refresh: bool) -> f64 {
+        let refresh = self.refresh_w_per_stack * stacks as f64;
+        self.leakage_w + if hot_refresh { 2.0 * refresh } else { refresh }
+    }
+}
+
 /// 2.5D interposer link between HBM stacks and the CiM chiplet.
 #[derive(Debug, Clone, PartialEq)]
 pub struct InterposerConfig {
@@ -362,6 +395,7 @@ pub struct HwConfig {
     pub systolic: SystolicConfig,
     pub logic: LogicDieConfig,
     pub interposer: InterposerConfig,
+    pub power: PowerConfig,
 }
 
 impl HwConfig {
@@ -374,6 +408,7 @@ impl HwConfig {
             systolic: SystolicConfig::paper(),
             logic: LogicDieConfig::paper(),
             interposer: InterposerConfig::paper(),
+            power: PowerConfig::paper(),
         }
     }
 
@@ -498,6 +533,18 @@ mod tests {
     #[should_panic]
     fn interposer_scale_must_be_positive() {
         InterposerConfig::paper().scaled(0.0);
+    }
+
+    #[test]
+    fn static_power_floor_and_hot_refresh() {
+        let hw = HwConfig::paper();
+        let cold = hw.power.static_w(hw.hbm.stacks, false);
+        let hot = hw.power.static_w(hw.hbm.stacks, true);
+        // leakage + 5 stacks of refresh; hot doubles only the refresh share
+        assert!((cold - (10.0 + 5.0 * 1.2)).abs() < 1e-12, "{cold}");
+        assert!((hot - cold - 5.0 * 1.2).abs() < 1e-12, "{hot}");
+        // the static floor is well under the default TDP
+        assert!(cold < hw.power.tdp_w / 5.0);
     }
 
     #[test]

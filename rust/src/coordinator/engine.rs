@@ -146,9 +146,9 @@ impl InferenceEngine {
         let first = row
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i as i32)
-            .unwrap();
+            .ok_or_else(|| anyhow!("prefill produced an empty logits row"))?;
 
         // the prefill itself produced the first generated token, so the
         // decode budget is one less than the request's max_new
@@ -164,7 +164,7 @@ impl InferenceEngine {
     /// and position vectors go up and only the logits come down.
     pub fn decode_step(&mut self, current_tokens: &[i32]) -> Result<Vec<i32>> {
         let b = self.slots();
-        let (toks, pos) = self.kv.step_inputs(current_tokens);
+        let (toks, pos) = self.kv.step_inputs(current_tokens)?;
         let t0 = Instant::now();
         let tok_t = HostTensor::i32(toks, &[b]);
         let pos_t = HostTensor::i32(pos, &[b]);

@@ -57,8 +57,8 @@ impl KvCache {
         }
     }
 
-    pub fn slot(&self, i: usize) -> Slot {
-        self.table[i]
+    pub fn slot(&self, i: usize) -> Option<Slot> {
+        self.table.get(i).copied()
     }
 
     pub fn free_slot(&self) -> Option<usize> {
@@ -76,6 +76,9 @@ impl KvCache {
     /// Claim a slot for a request whose prefill produced `pos` cached
     /// positions; `budget` = max new tokens.
     pub fn claim(&mut self, i: usize, request: u64, pos: usize, budget: usize) -> Result<()> {
+        if i >= self.slots {
+            bail!("slot index {i} out of range (slots = {})", self.slots);
+        }
         if !matches!(self.table[i], Slot::Free) {
             bail!("slot {i} is busy");
         }
@@ -91,15 +94,18 @@ impl KvCache {
     }
 
     /// Advance an active slot by one generated token. Returns true when
-    /// the slot is finished (budget exhausted or context full).
-    pub fn advance(&mut self, i: usize) -> bool {
-        match &mut self.table[i] {
-            Slot::Active { pos, generated, budget, .. } => {
+    /// the slot is finished (budget exhausted or context full); advancing
+    /// a free or out-of-range slot is a coordinator-state error, reported
+    /// rather than panicking.
+    pub fn advance(&mut self, i: usize) -> Result<bool> {
+        match self.table.get_mut(i) {
+            Some(Slot::Active { pos, generated, budget, .. }) => {
                 *pos += 1;
                 *generated += 1;
-                *generated >= *budget || *pos + 1 >= self.max_seq
+                Ok(*generated >= *budget || *pos + 1 >= self.max_seq)
             }
-            Slot::Free => panic!("advance on free slot {i}"),
+            Some(Slot::Free) => bail!("advance on free slot {i}"),
+            None => bail!("slot index {i} out of range (slots = {})", self.slots),
         }
     }
 
@@ -126,9 +132,12 @@ impl KvCache {
 
     /// Gather (token, pos) vectors for one decode step. Inactive slots get
     /// token 0 at position 0 (their writes are garbage by construction and
-    /// are overwritten by the next prefill claiming the slot).
-    pub fn step_inputs(&self, next_tokens: &[i32]) -> (Vec<i32>, Vec<i32>) {
-        assert_eq!(next_tokens.len(), self.slots);
+    /// are overwritten by the next prefill claiming the slot). A
+    /// wrong-arity token vector is a caller error, reported as a `Result`.
+    pub fn step_inputs(&self, next_tokens: &[i32]) -> Result<(Vec<i32>, Vec<i32>)> {
+        if next_tokens.len() != self.slots {
+            bail!("step_inputs got {} tokens for {} slots", next_tokens.len(), self.slots);
+        }
         let mut toks = vec![0i32; self.slots];
         let mut pos = vec![0i32; self.slots];
         for i in 0..self.slots {
@@ -137,7 +146,7 @@ impl KvCache {
                 pos[i] = p as i32;
             }
         }
-        (toks, pos)
+        Ok((toks, pos))
     }
 }
 
@@ -154,7 +163,7 @@ mod tests {
         let mut c = cache();
         assert_eq!(c.free_slot(), Some(0));
         c.claim(0, 77, 5, 3).unwrap();
-        assert!(matches!(c.slot(0), Slot::Active { request: 77, pos: 5, .. }));
+        assert!(matches!(c.slot(0), Some(Slot::Active { request: 77, pos: 5, .. })));
         assert_eq!(c.free_slot(), Some(1));
         assert!(c.claim(0, 78, 1, 1).is_err(), "double claim");
         c.release(0);
@@ -165,22 +174,32 @@ mod tests {
     fn advance_finishes_on_budget() {
         let mut c = cache();
         c.claim(1, 9, 4, 2).unwrap();
-        assert!(!c.advance(1));
-        assert!(c.advance(1)); // budget 2 reached
+        assert!(!c.advance(1).unwrap());
+        assert!(c.advance(1).unwrap()); // budget 2 reached
     }
 
     #[test]
     fn advance_finishes_on_context_limit() {
         let mut c = cache();
         c.claim(2, 9, 13, 100).unwrap();
-        assert!(!c.advance(2)); // pos 14
-        assert!(c.advance(2)); // pos 15 == max_seq-1 -> full
+        assert!(!c.advance(2).unwrap()); // pos 14
+        assert!(c.advance(2).unwrap()); // pos 15 == max_seq-1 -> full
     }
 
     #[test]
     fn claim_rejects_overlong_prompt() {
         let mut c = cache();
         assert!(c.claim(0, 1, 16, 4).is_err());
+    }
+
+    #[test]
+    fn bad_indices_and_arity_error_instead_of_panicking() {
+        let mut c = cache();
+        assert!(c.claim(99, 1, 2, 2).is_err(), "out-of-range claim");
+        assert!(c.advance(99).is_err(), "out-of-range advance");
+        assert!(c.advance(0).is_err(), "advance on a free slot");
+        assert_eq!(c.slot(99), None);
+        assert!(c.step_inputs(&[1, 2]).is_err(), "wrong-arity token vector");
     }
 
     #[test]
@@ -206,7 +225,7 @@ mod tests {
     fn step_inputs_mask_inactive() {
         let mut c = cache();
         c.claim(1, 5, 9, 4).unwrap();
-        let (toks, pos) = c.step_inputs(&[11, 22, 33, 44]);
+        let (toks, pos) = c.step_inputs(&[11, 22, 33, 44]).unwrap();
         assert_eq!(toks, vec![0, 22, 0, 0]);
         assert_eq!(pos, vec![0, 9, 0, 0]);
     }

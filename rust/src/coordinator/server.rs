@@ -106,17 +106,14 @@ impl Server {
             // one batched decode step (CiD path)
             let next = self.engine.decode_step(&current)?;
             steps += 1;
-            let finished: Vec<usize> = self
-                .engine
-                .kv
-                .active_slots()
-                .into_iter()
-                .filter(|&s| {
-                    inflight[s].tokens.push(next[s]);
-                    current[s] = next[s];
-                    self.engine.kv.advance(s)
-                })
-                .collect();
+            let mut finished = Vec::new();
+            for s in self.engine.kv.active_slots() {
+                inflight[s].tokens.push(next[s]);
+                current[s] = next[s];
+                if self.engine.kv.advance(s)? {
+                    finished.push(s);
+                }
+            }
             for s in finished {
                 self.finish(s, &mut inflight, &mut done);
             }
@@ -134,7 +131,10 @@ impl Server {
     }
 
     fn finish(&mut self, slot: usize, inflight: &mut [InFlight], done: &mut Vec<Response>) {
-        debug_assert!(matches!(self.engine.kv.slot(slot), Slot::Active { .. } | Slot::Free));
+        debug_assert!(matches!(
+            self.engine.kv.slot(slot),
+            Some(Slot::Active { .. }) | Some(Slot::Free)
+        ));
         let fl = std::mem::take(&mut inflight[slot]);
         let total = fl.admitted_at.map(|t| t.elapsed()).unwrap_or_default();
         let n_decode = fl.tokens.len().saturating_sub(1).max(1);

@@ -12,7 +12,8 @@
 //! * [`strategy`] — pluggable, seeded, deterministic search drivers:
 //!   exhaustive grid, random sampling, steepest hill-climb with restarts;
 //! * [`objective`] — multi-objective scoring (TTFT p50/p99, decode
-//!   throughput, evictions, SLO attainment, fleet cost, ...);
+//!   throughput, evictions, SLO attainment, fleet cost, and the power
+//!   plane's energy-per-token / EDP / peak-power);
 //! * [`pareto`] — dominance and frontier extraction.
 //!
 //! [`explore`] wires them together: it calibrates one offered load,
@@ -301,6 +302,43 @@ mod tests {
         // unified point is evaluated
         assert_eq!(res.evaluated.len(), 1);
         assert_eq!(res.evaluated[0].candidate.policy, Policy::LeastLoaded);
+    }
+
+    #[test]
+    fn energy_objectives_are_populated_and_rank_halo_first() {
+        let mut cfg = tiny_cfg();
+        cfg.objectives = vec![Objective::EnergyPerToken, Objective::Throughput];
+        let res = explore(&SearchSpace::mapping_extremes(), &mut Exhaustive, &cfg);
+        assert_eq!(res.evaluated.len(), 3);
+        for e in &res.evaluated {
+            assert!(e.metrics.energy_per_token_j > 0.0, "{}", e.candidate.label());
+            assert!(e.metrics.total_energy_j > 0.0);
+            assert!(e.metrics.peak_power_w > 0.0);
+            assert!(e.metrics.edp > 0.0);
+        }
+        // phase-aware HALO1 picks the cheaper engine per phase, so it
+        // must also be the cheapest-energy point of the three extremes
+        let best = res.best_by(Objective::EnergyPerToken).unwrap();
+        assert_eq!(res.evaluated[best].candidate.composition.name(), "HALO1");
+    }
+
+    #[test]
+    fn tdp_cap_degrades_throughput_in_the_search() {
+        let mut cfg = tiny_cfg();
+        cfg.objectives = vec![Objective::Throughput, Objective::PeakPower];
+        let space = SearchSpace::paper_point()
+            .with_devices(vec![1])
+            .with_tdp_caps_w(vec![0.0, 40.0]);
+        let res = explore(&space, &mut Exhaustive, &cfg);
+        assert_eq!(res.evaluated.len(), 2);
+        let free = res.evaluated.iter().find(|e| e.candidate.tdp_w == 0.0).unwrap();
+        let capped = res.evaluated.iter().find(|e| e.candidate.tdp_w > 0.0).unwrap();
+        assert!(
+            capped.metrics.throughput_rps < free.metrics.throughput_rps,
+            "a 40 W cap must cost throughput: {} vs {}",
+            capped.metrics.throughput_rps,
+            free.metrics.throughput_rps
+        );
     }
 
     #[test]

@@ -33,6 +33,15 @@ pub struct Metrics {
     pub slo_attainment: f64,
     /// Relative fleet cost of the candidate (see [`fleet_cost`]).
     pub cost: f64,
+    /// Fleet energy per generated token, J (power plane).
+    pub energy_per_token_j: f64,
+    /// Total fleet energy over the makespan, J.
+    pub total_energy_j: f64,
+    /// Highest mean event power across the fleet's devices, W.
+    pub peak_power_w: f64,
+    /// Energy-delay product: energy per token x median e2e latency
+    /// (J*s; jointly penalizes inefficient and slow configurations).
+    pub edp: f64,
 }
 
 impl Metrics {
@@ -58,6 +67,7 @@ impl Metrics {
                 met as f64 / r.served.len().max(1) as f64
             }
         };
+        let energy_per_token_j = r.energy_per_token(total_tokens);
         Metrics {
             ttft_p50: r.ttft_p50(),
             ttft_p99: r.ttft_p99(),
@@ -73,6 +83,10 @@ impl Metrics {
             slo_ttft,
             slo_attainment,
             cost: fleet_cost(cand),
+            energy_per_token_j,
+            total_energy_j: r.energy_j(),
+            peak_power_w: r.peak_power_w,
+            edp: energy_per_token_j * r.e2e_p50(),
         }
     }
 }
@@ -115,10 +129,16 @@ pub enum Objective {
     SloAttainment,
     /// Worst per-tenant TTFT p99 (minimize; multi-tenant fairness).
     WorstTenantTtft,
+    /// Fleet energy per generated token (minimize; power plane).
+    EnergyPerToken,
+    /// Energy-delay product: energy/token x median e2e (minimize).
+    Edp,
+    /// Highest per-package event power (minimize; TDP headroom).
+    PeakPower,
 }
 
 impl Objective {
-    pub fn all() -> [Objective; 10] {
+    pub fn all() -> [Objective; 13] {
         [
             Objective::TtftP50,
             Objective::TtftP99,
@@ -130,6 +150,9 @@ impl Objective {
             Objective::Cost,
             Objective::SloAttainment,
             Objective::WorstTenantTtft,
+            Objective::EnergyPerToken,
+            Objective::Edp,
+            Objective::PeakPower,
         ]
     }
 
@@ -151,6 +174,9 @@ impl Objective {
             Objective::Cost => "cost",
             Objective::SloAttainment => "slo_attainment",
             Objective::WorstTenantTtft => "tenant_ttft_p99",
+            Objective::EnergyPerToken => "energy_per_token",
+            Objective::Edp => "edp",
+            Objective::PeakPower => "peak_power",
         }
     }
 
@@ -168,6 +194,11 @@ impl Objective {
             "cost" => Some(Objective::Cost),
             "sloattainment" | "slo" => Some(Objective::SloAttainment),
             "tenantttftp99" | "tenantttft" | "fairness" => Some(Objective::WorstTenantTtft),
+            "energypertoken" | "energy" | "ept" | "joulespertoken" => {
+                Some(Objective::EnergyPerToken)
+            }
+            "edp" | "energydelay" => Some(Objective::Edp),
+            "peakpower" | "peak" | "watts" => Some(Objective::PeakPower),
             _ => None,
         }
     }
@@ -194,6 +225,9 @@ impl Objective {
             Objective::Cost => m.cost,
             Objective::SloAttainment => m.slo_attainment,
             Objective::WorstTenantTtft => m.worst_tenant_ttft_p99,
+            Objective::EnergyPerToken => m.energy_per_token_j,
+            Objective::Edp => m.edp,
+            Objective::PeakPower => m.peak_power_w,
         }
     }
 
@@ -262,9 +296,17 @@ mod tests {
             slo_ttft: 0.1,
             slo_attainment: 0.95,
             cost: fleet_cost(&cand),
+            energy_per_token_j: 0.05,
+            total_energy_j: 450.0,
+            peak_power_w: 160.0,
+            edp: 0.05,
         };
         assert_eq!(Objective::Throughput.score(&m), -30.0);
         assert_eq!(Objective::TtftP50.score(&m), 0.1);
         assert_eq!(Objective::SloAttainment.score(&m), -0.95);
+        // the power objectives all minimize their raw values
+        assert_eq!(Objective::EnergyPerToken.score(&m), 0.05);
+        assert_eq!(Objective::PeakPower.score(&m), 160.0);
+        assert_eq!(Objective::Edp.score(&m), 0.05);
     }
 }

@@ -3,10 +3,11 @@
 //! A [`SearchSpace`] is a cross product of small per-axis value lists
 //! covering every plane the simulator exposes: router policy and fleet
 //! composition (cluster), device count and pool split, scheduler knobs
-//! (chunk size, admission, KV budget), and hardware knobs (CiM tile mesh,
+//! (chunk size, admission, KV budget), hardware knobs (CiM tile mesh,
 //! interposer bandwidth — the CiM *wordline* knob rides on the mapping
 //! choice, HALO1 vs HALO2, because the engine set pins wordlines per
-//! Table II). A point in the space is an [`Index`] (one position per
+//! Table II), and a per-package TDP cap (0 = uncapped) that engages the
+//! power plane's thermal throttle. A point in the space is an [`Index`] (one position per
 //! axis); [`SearchSpace::decode`] turns it into a concrete [`Candidate`]
 //! that knows how to build its own [`HwConfig`] and fleet.
 
@@ -14,11 +15,12 @@ use crate::cluster::{Fleet, Interconnect, Policy, Router, SchedConfig};
 use crate::config::HwConfig;
 use crate::mapping::MappingKind;
 use crate::model::LlmConfig;
+use crate::power::ThermalConfig;
 use crate::sim::device::AdmissionPolicy;
 use crate::util::Rng;
 
 /// Number of axes in the space (fixed; see [`SearchSpace`] fields).
-pub const AXES: usize = 9;
+pub const AXES: usize = 10;
 
 /// One point of the space: a per-axis position vector.
 pub type Index = [usize; AXES];
@@ -85,6 +87,8 @@ pub struct Candidate {
     pub tile_scale: usize,
     /// Interposer / global-buffer bandwidth multiplier.
     pub interposer_scale: f64,
+    /// Per-package TDP cap in W (0 = uncapped, no thermal throttle).
+    pub tdp_w: f64,
 }
 
 impl Candidate {
@@ -113,7 +117,15 @@ impl Candidate {
         }
     }
 
-    /// Build the (fleet, router) pair this candidate describes.
+    /// The candidate's thermal configuration, if a TDP cap is set.
+    pub fn thermal(&self) -> Option<ThermalConfig> {
+        (self.tdp_w > 0.0).then(|| ThermalConfig::paper(self.tdp_w))
+    }
+
+    /// Build the (fleet, router) pair this candidate describes. Power
+    /// tracking is always attached (so every evaluation carries energy
+    /// metrics); the thermal throttle engages only under a TDP cap, so
+    /// uncapped candidates keep bit-identical latency results.
     pub fn build_fleet(
         &self,
         llm: &LlmConfig,
@@ -122,7 +134,7 @@ impl Candidate {
         link: Interconnect,
     ) -> (Fleet, Box<dyn Router>) {
         let sched = self.sched();
-        let fleet = if self.policy.is_disaggregated() {
+        let mut fleet = if self.policy.is_disaggregated() {
             Fleet::disaggregated_with(
                 llm,
                 hw,
@@ -142,6 +154,7 @@ impl Candidate {
                 sched,
             )
         };
+        fleet.enable_power(hw, self.thermal());
         (fleet, self.policy.router())
     }
 
@@ -157,15 +170,21 @@ impl Candidate {
         } else {
             "inf".to_string()
         };
+        let tdp = if self.tdp_w > 0.0 {
+            format!("{:.0}W", self.tdp_w)
+        } else {
+            "inf".to_string()
+        };
         format!(
-            "{} {} chunk={} {} kv={} tiles=x{} bw=x{:.2}",
+            "{} {} chunk={} {} kv={} tiles=x{} bw=x{:.2} tdp={}",
             self.policy.name(),
             fleet,
             self.chunk,
             self.admission.name(),
             kv,
             self.tile_scale,
-            self.interposer_scale
+            self.interposer_scale,
+            tdp
         )
     }
 }
@@ -183,6 +202,8 @@ pub struct SearchSpace {
     pub prefill_fracs: Vec<f64>,
     pub tile_scales: Vec<usize>,
     pub interposer_scales: Vec<f64>,
+    /// Per-package TDP caps in W (0 = uncapped).
+    pub tdp_caps_w: Vec<f64>,
 }
 
 impl SearchSpace {
@@ -199,6 +220,7 @@ impl SearchSpace {
             prefill_fracs: vec![0.5],
             tile_scales: vec![1],
             interposer_scales: vec![1.0],
+            tdp_caps_w: vec![0.0],
         }
     }
 
@@ -256,6 +278,12 @@ impl SearchSpace {
         self
     }
 
+    pub fn with_tdp_caps_w(mut self, v: Vec<f64>) -> Self {
+        assert!(!v.is_empty() && v.iter().all(|&w| w >= 0.0));
+        self.tdp_caps_w = v;
+        self
+    }
+
     /// Per-axis cardinalities, in [`Index`] order.
     pub fn dims(&self) -> Index {
         [
@@ -268,6 +296,7 @@ impl SearchSpace {
             self.prefill_fracs.len(),
             self.tile_scales.len(),
             self.interposer_scales.len(),
+            self.tdp_caps_w.len(),
         ]
     }
 
@@ -347,6 +376,7 @@ impl SearchSpace {
             prefill_frac: self.prefill_fracs[idx[6]],
             tile_scale: self.tile_scales[idx[7]],
             interposer_scale: self.interposer_scales[idx[8]],
+            tdp_w: self.tdp_caps_w[idx[9]],
         }
     }
 
@@ -411,7 +441,22 @@ impl SearchSpace {
         ])
     }
 
-    /// Everything at once (~10k points) — random/hill-climb territory.
+    /// Energy/TDP space: the architectural extremes and phase-aware
+    /// points under tightening package power caps on small unified
+    /// fleets — the `energy-per-token` / `edp` search territory.
+    pub fn power() -> Self {
+        Self::paper_point()
+            .with_devices(vec![1, 2])
+            .with_compositions(vec![
+                Composition::Uniform(MappingKind::FullCid),
+                Composition::Uniform(MappingKind::FullCim),
+                Composition::Uniform(MappingKind::Halo1),
+                Composition::Uniform(MappingKind::Halo2),
+            ])
+            .with_tdp_caps_w(vec![0.0, 120.0, 60.0])
+    }
+
+    /// Everything at once (~20k points) — random/hill-climb territory.
     pub fn full() -> Self {
         let comps: Vec<Composition> = MappingKind::dse_unified()
             .iter()
@@ -428,6 +473,7 @@ impl SearchSpace {
             .with_prefill_fracs(vec![0.25, 0.5])
             .with_tile_scales(vec![1, 2])
             .with_interposer_scales(vec![0.5, 1.0, 2.0])
+            .with_tdp_caps_w(vec![0.0, 120.0])
     }
 
     pub fn preset(name: &str) -> Option<Self> {
@@ -437,13 +483,14 @@ impl SearchSpace {
             "fleet" | "cluster" => Some(Self::fleet()),
             "hw" | "hardware" => Some(Self::hardware()),
             "mapping" | "extremes" | "vb" => Some(Self::mapping_extremes()),
+            "power" | "energy" | "tdp" => Some(Self::power()),
             "full" | "all" => Some(Self::full()),
             _ => None,
         }
     }
 
     pub fn preset_names() -> &'static [&'static str] {
-        &["smoke", "sched", "fleet", "hw", "mapping", "full"]
+        &["smoke", "sched", "fleet", "hw", "mapping", "power", "full"]
     }
 }
 
@@ -559,6 +606,26 @@ mod tests {
             assert!((0..s.len()).any(|i| s.decode(&s.flat(i)).valid()), "{name}");
         }
         assert!(SearchSpace::preset("galaxy").is_none());
+    }
+
+    #[test]
+    fn tdp_axis_decodes_into_a_thermal_config() {
+        let s = SearchSpace::paper_point().with_tdp_caps_w(vec![0.0, 90.0]);
+        let uncapped = s.decode(&s.first_index());
+        assert_eq!(uncapped.tdp_w, 0.0);
+        assert!(uncapped.thermal().is_none());
+        let mut idx = s.first_index();
+        idx[9] = 1;
+        let capped = s.decode(&idx);
+        assert_eq!(capped.tdp_w, 90.0);
+        let th = capped.thermal().expect("capped candidate carries a thermal config");
+        assert_eq!(th.tdp_w, 90.0);
+        assert!(capped.label().contains("tdp=90W"), "{}", capped.label());
+        assert!(uncapped.label().contains("tdp=inf"), "{}", uncapped.label());
+        // the power preset spans mappings x caps
+        let p = SearchSpace::power();
+        assert!(p.len() >= 12);
+        assert_eq!(SearchSpace::preset("power").unwrap().len(), p.len());
     }
 
     #[test]

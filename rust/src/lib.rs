@@ -47,6 +47,20 @@
 //!   Fully-CiM / HALO comparison falls out as a degenerate 3-point
 //!   search.
 //!
+//! * **Power plane** — per-event energy attribution and thermal/TDP
+//!   feedback ([`power`]): an [`power::EnergyModel`] (the energy twin of
+//!   the device cost model, calibrated against the arch plane's per-op
+//!   joules) attributes CiD DRAM/MAC, CiM DAC/ADC/write, systolic,
+//!   interposer-link, and static refresh/leakage energy to every
+//!   simulated event; a per-package RC thermal model with a TDP cap
+//!   throttles device service when over budget (with a 2.5D coupling
+//!   term that doubles HBM refresh when the CiM die runs hot), and
+//!   windowed power traces expose avg/peak watts over time. Threaded
+//!   through fleet stats (per-device energy/utilization, KV-transfer
+//!   energy) and the DSE objectives (`energy-per-token`, `edp`,
+//!   `peak-power`, TDP as a search axis). Surfaces: `halo power`,
+//!   `halo report --fig power`, `halo cluster --power/--tdp`.
+//!
 //! Quickstart:
 //! ```no_run
 //! use halo::config::HwConfig;
@@ -68,6 +82,7 @@ pub mod coordinator;
 pub mod dse;
 pub mod mapping;
 pub mod model;
+pub mod power;
 pub mod report;
 pub mod runtime;
 pub mod sim;

@@ -6,6 +6,7 @@
 //!   roofline  — print the Fig. 1 roofline points
 //!   cluster   — fleet-scale serving simulation with routing policies
 //!   dse       — design-space exploration / SLO auto-tuning over the simulator
+//!   power     — per-event energy attribution and TDP throttling studies
 //!   serve     — functional serving demo over the AOT artifacts (PJRT)
 //!   validate  — replay the python test vectors through the Rust runtime
 
@@ -14,12 +15,15 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 
-use halo::cluster::{per_tenant_stats, AdmissionPolicy, Interconnect, Mix, Policy, SchedConfig};
+use halo::cluster::{
+    per_tenant_stats, AdmissionPolicy, Fleet, Interconnect, Mix, Policy, Router, SchedConfig,
+};
 use halo::config::HwConfig;
 use halo::coordinator::{InferenceEngine, Request, Server};
 use halo::dse::{self, DseConfig, Objective, SearchSpace, SloSpec};
 use halo::mapping::MappingKind;
 use halo::model::LlmConfig;
+use halo::power::{power_trace, ThermalConfig};
 use halo::report;
 use halo::runtime::Runtime;
 use halo::sim::{simulate_e2e, Scenario};
@@ -31,19 +35,24 @@ halo — memory-centric heterogeneous accelerator for low-batch LLM inference
 USAGE:
   halo simulate [--model llama2-7b|qwen3-8b] [--mapping HALO1|HALO2|CENT|AttAcc1|AttAcc2|FullCiD|FullCiM|HALO-SA]
                 [--lin N] [--lout N] [--batch N]
-  halo report   [--all | --fig 1|4|5|6|7|8|9|10|cluster|dse | --headline] [--out DIR]
+  halo report   [--all | --fig 1|4|5|6|7|8|9|10|cluster|dse|power | --headline] [--out DIR]
   halo roofline [--lin N] [--batch N]
   halo cluster  [--devices N] [--policy roundrobin|leastloaded|disaggregated|kvaware] [--mix chat|summarization|generation|interactive]
                 [--model llama2-7b|qwen3-8b] [--requests N] [--rate R] [--slots N] [--link board|pcie|eth|wan]
                 [--prefill-frac F] [--seed S] [--tenants N]
                 [--chunk TOKENS] [--admission fifo|spf|priority] [--kv-cap GB|auto]
+                [--power] [--tdp W|auto]
                   --chunk     prefill chunk size (0 = serialized monolithic prefill, the default)
                   --admission ready-queue order: fifo (default), spf (shortest prompt first),
                               priority (interactive prompts <= 512 tokens first)
                   --kv-cap    per-device resident-KV budget in GB (0 = unlimited, the default);
                               `auto` derives it from HBM capacity minus model weights
                   --tenants   tag requests with N tenants and print per-tenant breakdowns
-  halo dse      [--space smoke|sched|fleet|hw|mapping|full] [--strategy grid|random|hillclimb]
+                  --power     attribute per-event energy (per-device + fleet totals)
+                  --tdp       per-package TDP cap in W (implies --power): device service
+                              throttles when the RC thermal model runs over cap;
+                              `auto` uses the calibrated package TDP
+  halo dse      [--space smoke|sched|fleet|hw|mapping|power|full] [--strategy grid|random|hillclimb]
                 [--model llama2-7b|qwen3-8b] [--mix chat|summarization|generation|interactive]
                 [--requests N] [--seed S] [--slots N] [--link board|pcie|eth|wan]
                 [--rate R | --rate-scale X] [--tenants N] [--samples N] [--restarts N] [--steps N]
@@ -52,13 +61,22 @@ USAGE:
                   --strategy   grid enumerates everything; random/hillclimb sample big spaces
                                (--samples, --restarts/--steps; seeded by --seed)
                   --objectives comma list of ttft-p50,ttft-p99,e2e-p50,e2e-p99,throughput,
-                               decode-tput,evictions,cost,slo,tenant-ttft
+                               decode-tput,evictions,cost,slo,tenant-ttft,
+                               energy-per-token,edp,peak-power
                                (default ttft-p50,ttft-p99,throughput,cost)
                   --ttft-slo   auto-tune mode: also report the cheapest config whose TTFT at
                                --slo-pct (default p50) meets this many milliseconds
                   --rate       absolute offered load in req/s; --rate-scale multiplies one
                                device's measured capacity instead (default 1.5x)
                   --smoke      tiny CI grid: alias for --space smoke with 48 requests
+  halo power    [--model llama2-7b|qwen3-8b] [--mix chat|summarization|generation|interactive]
+                [--mappings csv] [--devices N] [--slots N] [--requests N] [--rate R]
+                [--tdp W|auto] [--windows N] [--seed S] [--smoke] [--out DIR]
+                  --mappings  mappings to compare (default fullcid,fullcim,halo1)
+                  --tdp       per-package TDP cap in W; the thermal throttle slows
+                              service while over cap (`auto` = calibrated package TDP)
+                  --windows   also print an N-window power-over-time trace per mapping
+                  --smoke     tiny CI run: 32 requests on one device
   halo serve    [--artifacts DIR] [--requests N] [--max-new N] [--slots N]
   halo validate [--artifacts DIR]
 ";
@@ -89,6 +107,22 @@ fn flag_f64(f: &HashMap<String, String>, k: &str, default: f64) -> f64 {
     f.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Parse `--tdp W|auto` into a package cap (W); `auto` reads the
+/// calibrated package TDP from the hardware config.
+fn flag_tdp(f: &HashMap<String, String>, hw: &HwConfig) -> Result<Option<f64>> {
+    match f.get("tdp").map(String::as_str) {
+        None => Ok(None),
+        Some("auto") => Ok(Some(hw.power.tdp_w)),
+        Some(v) => {
+            let w: f64 = v.parse().map_err(|_| anyhow!("--tdp wants watts or `auto`, got {v}"))?;
+            if w <= 0.0 {
+                bail!("--tdp must be positive");
+            }
+            Ok(Some(w))
+        }
+    }
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
@@ -100,6 +134,7 @@ fn main() -> Result<()> {
         "roofline" => cmd_roofline(&flags),
         "cluster" => cmd_cluster(&flags),
         "dse" => cmd_dse(&flags),
+        "power" => cmd_power(&flags),
         "serve" => cmd_serve(&flags),
         "validate" => cmd_validate(&flags),
         _ => {
@@ -181,6 +216,19 @@ fn cmd_report(f: &HashMap<String, String>) -> Result<()> {
                 report::dse::dse_frontier_for_mix(&hw, Mix::Chat),
                 report::dse::dse_frontier_for_mix(&hw, Mix::Summarization),
             ],
+            "power" => {
+                let t1 = report::cluster::single_device_capacity(
+                    &hw,
+                    &LlmConfig::llama2_7b(),
+                    Mix::Interactive,
+                    8,
+                );
+                vec![
+                    report::power::power_extremes_at(&hw, t1),
+                    report::power::power_timeline_at(&hw, t1),
+                    report::power::tdp_throttling(&hw),
+                ]
+            }
             other => bail!("unknown figure {other}"),
         }
     } else {
@@ -257,6 +305,8 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
     if tenants == 0 {
         bail!("--tenants must be at least 1");
     }
+    let tdp = flag_tdp(f, &hw)?;
+    let track_power = f.contains_key("power") || tdp.is_some();
     // default offered load: 3x one monolithic device's measured capacity
     let rate = match f.get("rate").and_then(|v| v.parse::<f64>().ok()) {
         Some(r) => r,
@@ -284,6 +334,14 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
     let trace = mix.trace_tenants(seed, n_req, rate, tenants);
     let (mut fleet, mut router) =
         policy.build_with(&llm, &hw, devices, slots, prefill_frac, link, sched);
+    if track_power {
+        fleet.enable_power(&hw, tdp.map(ThermalConfig::paper));
+        if let Some(w) = tdp {
+            println!("power    : tracked, TDP cap {w:.0} W/package (thermal throttle live)");
+        } else {
+            println!("power    : tracked, no TDP cap");
+        }
+    }
     let r = fleet.replay(&trace, router.as_mut());
 
     let mut t = report::Table::new(
@@ -296,9 +354,12 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
             "prefills",
             "decode_steps",
             "served",
-            "busy_frac",
+            "busy_s",
+            "util",
             "evictions",
             "kv_peak_gb",
+            "energy_j",
+            "avg_w",
         ],
     );
     for d in &r.per_device {
@@ -309,9 +370,12 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
             d.prefills.to_string(),
             d.decode_steps.to_string(),
             d.served.to_string(),
-            format!("{:.3}", d.busy / r.makespan.max(1e-12)),
+            format!("{:.3}", d.busy),
+            format!("{:.3}", d.utilization(r.makespan)),
             d.evictions.to_string(),
             format!("{:.3}", d.kv_peak as f64 / 1e9),
+            format!("{:.2}", d.energy.total()),
+            format!("{:.1}", d.avg_power_w(r.makespan)),
         ]);
     }
     println!("\n{}", t.to_markdown());
@@ -352,6 +416,25 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
         println!(
             "KV pressure: {} evictions, {} tokens recomputed",
             r.evictions, r.recompute_tokens
+        );
+    }
+    if r.power_tracked {
+        let tokens: u64 = trace.iter().map(|q| q.l_out as u64).sum();
+        println!(
+            "energy     : {} fleet total ({} / token, {:.3} J on KV transfers)",
+            fmt_joules(r.energy_j()),
+            fmt_joules(r.energy_per_token(tokens)),
+            r.kv_transfer_energy_j
+        );
+        println!(
+            "power      : {:.1} W avg, {:.1} W peak event{}",
+            r.avg_power_w(),
+            r.peak_power_w,
+            if r.throttled_s > 0.0 {
+                format!(", {} lost to throttling", fmt_seconds(r.throttled_s))
+            } else {
+                String::new()
+            }
         );
     }
     Ok(())
@@ -485,6 +568,152 @@ fn cmd_dse(f: &HashMap<String, String>) -> Result<()> {
     if let Some(out) = f.get("out") {
         let dir = PathBuf::from(out);
         table.write_csv(&dir)?;
+        println!("CSV written to {}", dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_power(f: &HashMap<String, String>) -> Result<()> {
+    let hw = HwConfig::paper();
+    let smoke = f.contains_key("smoke");
+    let model = f.get("model").map(String::as_str).unwrap_or("llama2-7b");
+    let llm = LlmConfig::by_name(model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let mix = {
+        let name = f.get("mix").map(String::as_str).unwrap_or("interactive");
+        Mix::by_name(name).ok_or_else(|| anyhow!("unknown mix {name}"))?
+    };
+    let mappings: Vec<MappingKind> = match f.get("mappings") {
+        None => report::power::extreme_mappings().to_vec(),
+        Some(csv) => csv
+            .split(',')
+            .map(|s| {
+                MappingKind::by_name(s.trim())
+                    .ok_or_else(|| anyhow!("unknown mapping {}", s.trim()))
+            })
+            .collect::<Result<_>>()?,
+    };
+    if mappings.is_empty() {
+        bail!("--mappings must name at least one mapping");
+    }
+    let devices = flag_usize(f, "devices", 1);
+    let slots = flag_usize(f, "slots", 8);
+    let n_req = flag_usize(f, "requests", if smoke { 32 } else { 96 });
+    if devices == 0 || slots == 0 || n_req == 0 {
+        bail!("--devices, --slots and --requests must be at least 1");
+    }
+    let seed = flag_usize(f, "seed", 42) as u64;
+    let windows = flag_usize(f, "windows", 0);
+    let tdp = flag_tdp(f, &hw)?;
+    let rate = match f.get("rate") {
+        Some(v) => {
+            let r: f64 = v.parse().map_err(|_| anyhow!("--rate wants req/s, got {v}"))?;
+            if r <= 0.0 {
+                bail!("--rate must be a positive offered load in req/s");
+            }
+            r
+        }
+        None => 1.25 * report::cluster::single_device_capacity(&hw, &llm, mix, slots),
+    };
+    let trace = mix.trace(seed, n_req, rate);
+    let tokens: u64 = trace.iter().map(|q| q.l_out as u64).sum();
+
+    println!(
+        "workload : {} mix, {n_req} requests at {rate:.2} req/s on {devices} device(s), \
+         seed {seed}",
+        mix.name()
+    );
+    match tdp {
+        Some(w) => println!("power    : TDP cap {w:.0} W/package (thermal throttle live)"),
+        None => println!("power    : uncapped (attribution only)"),
+    }
+
+    let mut t = report::Table::new(
+        "power_summary",
+        &format!("Per-mapping energy/power summary — {} mix", mix.name()),
+        &[
+            "mapping",
+            "energy_per_token_j",
+            "e_dram_j",
+            "e_compute_j",
+            "e_buffer_j",
+            "e_write_j",
+            "e_static_j",
+            "avg_power_w",
+            "peak_power_w",
+            "throttled_s",
+            "ttft_p50_s",
+            "served_rps",
+        ],
+    );
+    let mut timelines: Vec<report::Table> = Vec::new();
+    for &mk in &mappings {
+        let per_dev = vec![mk; devices];
+        let mut fleet = Fleet::heterogeneous_with(
+            &llm,
+            &hw,
+            &per_dev,
+            slots,
+            Interconnect::board(),
+            SchedConfig::default(),
+        );
+        fleet.enable_power(&hw, tdp.map(ThermalConfig::paper));
+        let mut router: Box<dyn Router> = Policy::LeastLoaded.router();
+        let r = fleet.replay(&trace, router.as_mut());
+        t.row(vec![
+            mk.name().into(),
+            format!("{:.6e}", r.energy_per_token(tokens)),
+            format!("{:.3}", r.energy.e_dram),
+            format!("{:.3}", r.energy.e_compute),
+            format!("{:.3}", r.energy.e_buffer),
+            format!("{:.3}", r.energy.e_write),
+            format!("{:.3}", r.energy.e_static),
+            format!("{:.1}", r.avg_power_w()),
+            format!("{:.1}", r.peak_power_w),
+            format!("{:.3}", r.throttled_s),
+            format!("{:.6}", r.ttft_p50()),
+            format!("{:.3}", r.throughput_rps()),
+        ]);
+        if windows > 0 {
+            let mut tl = report::Table::new(
+                &format!("power_timeline_{}", mk.name().to_ascii_lowercase()),
+                &format!("Power over time — {}, {windows} windows", mk.name()),
+                &["window", "t_start_s", "t_end_s", "avg_w"],
+            );
+            // fleet-level timeline: one trace per device over the shared
+            // makespan (power_trace has single-device busy/idle
+            // semantics), summed window by window
+            let mut fleet_avg = vec![0.0f64; windows];
+            let mut window_s = r.makespan / windows as f64;
+            for d in &fleet.devices {
+                let Some(pw) = d.power() else { continue };
+                let tr =
+                    power_trace(&pw.events, pw.model.static_power(false), r.makespan, windows);
+                window_s = tr.window_s;
+                for (acc, &avg) in fleet_avg.iter_mut().zip(&tr.avg_w) {
+                    *acc += avg;
+                }
+            }
+            for (w, &avg) in fleet_avg.iter().enumerate() {
+                tl.row(vec![
+                    w.to_string(),
+                    format!("{:.4}", w as f64 * window_s),
+                    format!("{:.4}", (w + 1) as f64 * window_s),
+                    format!("{avg:.1}"),
+                ]);
+            }
+            timelines.push(tl);
+        }
+    }
+    println!("\n{}", t.to_markdown());
+    for tl in &timelines {
+        println!("{}", tl.to_markdown());
+    }
+    if let Some(out) = f.get("out") {
+        let dir = PathBuf::from(out);
+        t.write_csv(&dir)?;
+        for tl in &timelines {
+            tl.write_csv(&dir)?;
+        }
         println!("CSV written to {}", dir.display());
     }
     Ok(())

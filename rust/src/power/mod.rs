@@ -1,0 +1,150 @@
+//! Power plane: per-event energy attribution, TDP/thermal throttling, and
+//! windowed power traces for the event-driven simulator.
+//!
+//! The analytical `arch` plane has always computed per-op joules; this
+//! plane threads that energy through everything built on top of it:
+//!
+//! * [`model`] — [`EnergyModel`], the energy twin of the device
+//!   `CostModel`: memoized per-event energies (prefill, chunked prefill,
+//!   batched decode step) whose dynamic components come from the same
+//!   `simulate_graph` walk the arch plane uses, plus the static floor
+//!   (HBM refresh + leakage) integrated over wall-clock time;
+//! * [`thermal`] — a per-package RC thermal model with a TDP cap whose
+//!   throttle factor *feeds back into service time*, and a 2.5D coupling
+//!   term that pushes CiM-die heat into the HBM stacks, doubling refresh
+//!   power in the JEDEC hot band;
+//! * [`trace`] — windowed average/peak power timelines from the per-event
+//!   logs.
+//!
+//! A [`DevicePower`] instance attaches to one `sim::device::Device`
+//! (`Device::enable_power`) and is advanced by the device on every busy
+//! event; with tracking disabled the device's latency math is untouched
+//! (bit-identical replays — pinned by `tests/power_plane.rs`). The
+//! cluster plane aggregates per-device energy into fleet stats, and the
+//! `dse` plane scores `energy-per-token` / `edp` / `peak-power`
+//! objectives over a TDP axis. Surfaces: `halo power`,
+//! `halo report --fig power`.
+
+pub mod model;
+pub mod thermal;
+pub mod trace;
+
+pub use model::{EnergyBreakdown, EnergyModel};
+pub use thermal::{ThermalConfig, ThermalModel};
+pub use trace::{power_trace, PowerEvent, PowerTrace};
+
+/// Per-device power state: the energy model, optional thermal/TDP state,
+/// the accumulated energy breakdown, and the per-event log.
+pub struct DevicePower {
+    pub model: EnergyModel,
+    pub thermal: Option<ThermalModel>,
+    /// Accumulated energy of every busy event (dynamic + busy-time
+    /// static). Idle-time static is added at collection, where the
+    /// observer knows the replay makespan.
+    pub energy: EnergyBreakdown,
+    /// Busy-event log for windowed power traces.
+    pub events: Vec<PowerEvent>,
+    /// Highest mean event power seen, W.
+    pub peak_w: f64,
+    /// Extra service time added by thermal throttling, s.
+    pub throttled_s: f64,
+}
+
+impl DevicePower {
+    pub fn new(model: EnergyModel, thermal: Option<ThermalModel>) -> Self {
+        DevicePower {
+            model,
+            thermal,
+            energy: EnergyBreakdown::default(),
+            events: Vec::new(),
+            peak_w: 0.0,
+            throttled_s: 0.0,
+        }
+    }
+
+    /// Account one busy event starting at `start` with unthrottled
+    /// duration `raw_dt` and dynamic energy `dynamic`. Applies the
+    /// thermal throttle (stretching the event), charges busy-time static
+    /// power (doubled refresh when the HBM stacks are hot), heats the
+    /// package, and returns the actual duration the device clock must
+    /// advance by. Without a thermal model the duration is returned
+    /// untouched.
+    pub fn busy_event(&mut self, start: f64, raw_dt: f64, dynamic: EnergyBreakdown) -> f64 {
+        let idle_w = self.model.static_power(false);
+        let (dt, hot) = match &mut self.thermal {
+            None => (raw_dt, false),
+            Some(th) => {
+                th.advance_idle(start, idle_w);
+                (raw_dt / th.throttle_factor(), th.hbm_hot())
+            }
+        };
+        let mut e = dynamic;
+        e.e_static += self.model.static_power(hot) * dt;
+        let total = e.total();
+        let watts = total / dt.max(1e-30);
+        if let Some(th) = &mut self.thermal {
+            th.heat(dt, watts);
+        }
+        self.energy.add(&e);
+        self.peak_w = self.peak_w.max(watts);
+        self.throttled_s += dt - raw_dt;
+        self.events.push(PowerEvent { start, end: start + dt, joules: total });
+        dt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+    use crate::mapping::MappingKind;
+    use crate::model::LlmConfig;
+
+    fn meter(thermal: Option<ThermalConfig>) -> DevicePower {
+        let em = EnergyModel::new(&LlmConfig::llama2_7b(), &HwConfig::paper(), MappingKind::Halo1);
+        DevicePower::new(em, thermal.map(ThermalModel::new))
+    }
+
+    #[test]
+    fn untracked_thermal_keeps_duration_exact() {
+        let mut pw = meter(None);
+        let e = pw.model.prefill(256);
+        let raw = 0.0123456789f64;
+        let dt = pw.busy_event(1.0, raw, e);
+        assert_eq!(dt.to_bits(), raw.to_bits(), "no thermal model, no stretching");
+        assert_eq!(pw.throttled_s, 0.0);
+        assert_eq!(pw.events.len(), 1);
+        // event energy = dynamic + static floor over the event
+        let want = e.dynamic() + pw.model.static_power(false) * raw;
+        assert!((pw.events[0].joules - want).abs() < 1e-12 * want);
+        assert!(pw.peak_w > 0.0);
+    }
+
+    #[test]
+    fn hot_package_stretches_events_and_logs_throttle_time() {
+        // pre-heat far above a tiny TDP ceiling, then run an event
+        let mut pw = meter(Some(ThermalConfig::paper(20.0)));
+        pw.thermal.as_mut().unwrap().heat(100.0, 200.0);
+        let e = pw.model.decode_step(4, 1024);
+        let raw = 1e-3;
+        let dt = pw.busy_event(100.0, raw, e);
+        assert!(dt > raw * 2.0, "expected a strong throttle, got {}x", dt / raw);
+        assert!((pw.throttled_s - (dt - raw)).abs() < 1e-15);
+        let ev = pw.events[0];
+        // end - start loses a few ulps of `start`'s magnitude
+        assert!((ev.duration() - dt).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulated_energy_matches_event_log() {
+        let mut pw = meter(None);
+        let mut t = 0.0;
+        for l in [128usize, 256, 512] {
+            let e = pw.model.prefill(l);
+            let dt = pw.busy_event(t, 0.01, e);
+            t += dt;
+        }
+        let logged: f64 = pw.events.iter().map(|e| e.joules).sum();
+        assert!((pw.energy.total() - logged).abs() < 1e-9 * logged);
+    }
+}

@@ -1,0 +1,193 @@
+//! Package thermal model: RC junction dynamics, a TDP throttle, and the
+//! 2.5D co-packaging coupling into the HBM stacks.
+//!
+//! One HALO package is modeled as a single thermal RC node: junction
+//! temperature relaxes toward `ambient + theta * power` with time
+//! constant `tau`. The TDP cap maps to a temperature ceiling
+//! (`ambient + theta * tdp`); while the junction sits above it, device
+//! service is slowed by `ceiling_rise / actual_rise` — which makes the
+//! *delivered* power converge onto exactly the TDP (energy per event is
+//! fixed, so stretching an event by `1/f` scales its power by `f`). The
+//! feedback is live: throttled events take longer on the simulated clock,
+//! so throughput genuinely degrades as the cap tightens.
+//!
+//! 2.5D coupling: the CiM die and the HBM stacks share the interposer, so
+//! a fraction of the junction rise appears on the DRAM. Above the JEDEC
+//! hot threshold the refresh rate — and the refresh share of static power
+//! — doubles, which feeds back into package power and hence temperature.
+
+/// Thermal/TDP configuration of one package.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ThermalConfig {
+    /// Package TDP cap, W (the throttle target).
+    pub tdp_w: f64,
+    /// RC time constant of the package + heatsink, s.
+    pub tau_s: f64,
+    /// Junction-to-ambient thermal resistance, degC/W.
+    pub theta_c_per_w: f64,
+    pub ambient_c: f64,
+    /// Floor on the service-rate factor (worst-case slowdown bound).
+    pub min_throttle: f64,
+    /// Fraction of the junction rise that appears on the co-packaged HBM
+    /// stacks (2.5D coupling).
+    pub hbm_coupling: f64,
+    /// HBM temperature above which DRAM refresh doubles (JEDEC 2x band).
+    pub hbm_refresh_temp_c: f64,
+}
+
+impl ThermalConfig {
+    /// CALIBRATED package constants at a given TDP cap: 0.35 degC/W to
+    /// ambient through a 2.5D package heatsink, a 2 s thermal time
+    /// constant, 60% of the junction rise coupled into the stacks.
+    pub fn paper(tdp_w: f64) -> Self {
+        assert!(tdp_w > 0.0, "TDP cap must be positive");
+        ThermalConfig {
+            tdp_w,
+            tau_s: 2.0,
+            theta_c_per_w: 0.35,
+            ambient_c: 25.0,
+            min_throttle: 0.1,
+            hbm_coupling: 0.6,
+            hbm_refresh_temp_c: 85.0,
+        }
+    }
+}
+
+/// RC thermal state of one package, advanced event by event.
+#[derive(Debug, Clone)]
+pub struct ThermalModel {
+    pub cfg: ThermalConfig,
+    temp_c: f64,
+    /// Clock of the last update (device event time).
+    clock: f64,
+    /// High-water mark of the junction temperature.
+    pub max_temp_c: f64,
+}
+
+impl ThermalModel {
+    pub fn new(cfg: ThermalConfig) -> Self {
+        let ambient = cfg.ambient_c;
+        ThermalModel { cfg, temp_c: ambient, clock: 0.0, max_temp_c: ambient }
+    }
+
+    pub fn temp_c(&self) -> f64 {
+        self.temp_c
+    }
+
+    /// HBM stack temperature: ambient plus the coupled junction rise.
+    pub fn hbm_temp_c(&self) -> f64 {
+        self.cfg.ambient_c + self.cfg.hbm_coupling * (self.temp_c - self.cfg.ambient_c)
+    }
+
+    /// Whether the stacks sit in the 2x-refresh band right now.
+    pub fn hbm_hot(&self) -> bool {
+        self.hbm_temp_c() >= self.cfg.hbm_refresh_temp_c
+    }
+
+    /// Service-rate factor in `(0, 1]`: 1 while the junction sits at or
+    /// below the TDP temperature ceiling, `ceiling_rise / rise` above it
+    /// (clamped at `min_throttle`).
+    pub fn throttle_factor(&self) -> f64 {
+        let rise = self.temp_c - self.cfg.ambient_c;
+        let limit = self.cfg.theta_c_per_w * self.cfg.tdp_w;
+        if rise <= limit {
+            1.0
+        } else {
+            (limit / rise).max(self.cfg.min_throttle)
+        }
+    }
+
+    /// Cool toward the idle steady state over any gap between the last
+    /// event and `t` (idle power = the static floor).
+    pub fn advance_idle(&mut self, t: f64, idle_w: f64) {
+        if t > self.clock {
+            let dt = t - self.clock;
+            self.relax(dt, idle_w);
+            self.clock = t;
+        }
+    }
+
+    /// Heat over a busy event of duration `dt` at mean power `p_w`.
+    pub fn heat(&mut self, dt: f64, p_w: f64) {
+        self.relax(dt, p_w);
+        self.clock += dt;
+        self.max_temp_c = self.max_temp_c.max(self.temp_c);
+    }
+
+    fn relax(&mut self, dt: f64, p_w: f64) {
+        let t_ss = self.cfg.ambient_c + self.cfg.theta_c_per_w * p_w;
+        let a = (-dt / self.cfg.tau_s).exp();
+        self.temp_c = t_ss + (self.temp_c - t_ss) * a;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heats_toward_steady_state_and_cools_back() {
+        let mut th = ThermalModel::new(ThermalConfig::paper(100.0));
+        assert_eq!(th.throttle_factor(), 1.0);
+        // long burn at 200 W -> essentially steady state
+        th.heat(100.0, 200.0);
+        let t_ss = 25.0 + 0.35 * 200.0;
+        assert!((th.temp_c() - t_ss).abs() < 1e-6, "{}", th.temp_c());
+        assert!(th.max_temp_c >= th.temp_c());
+        // above the 100 W ceiling: throttle = tdp/power at steady state
+        assert!((th.throttle_factor() - 0.5).abs() < 1e-6, "{}", th.throttle_factor());
+        // long idle at a 16 W floor cools most of the way back
+        th.advance_idle(th.clock + 100.0, 16.0);
+        assert!(th.temp_c() < 25.0 + 0.35 * 16.0 + 1e-6);
+        assert_eq!(th.throttle_factor(), 1.0);
+    }
+
+    #[test]
+    fn rc_is_gradual_not_instant() {
+        let mut th = ThermalModel::new(ThermalConfig::paper(100.0));
+        th.heat(0.5, 200.0); // quarter of a time constant
+        let t_ss = 25.0 + 0.35 * 200.0;
+        assert!(th.temp_c() > 25.0 + 5.0 && th.temp_c() < t_ss - 5.0, "{}", th.temp_c());
+    }
+
+    #[test]
+    fn tighter_tdp_throttles_harder_at_equal_temperature() {
+        let mut hot = ThermalModel::new(ThermalConfig::paper(150.0));
+        hot.heat(100.0, 200.0);
+        let mut tight = ThermalModel::new(ThermalConfig::paper(75.0));
+        tight.heat(100.0, 200.0);
+        assert!((hot.temp_c() - tight.temp_c()).abs() < 1e-9);
+        assert!(tight.throttle_factor() < hot.throttle_factor());
+        assert!((tight.throttle_factor() / hot.throttle_factor() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn min_throttle_bounds_the_slowdown() {
+        let mut th = ThermalModel::new(ThermalConfig::paper(1.0));
+        th.heat(100.0, 500.0);
+        assert_eq!(th.throttle_factor(), 0.1);
+    }
+
+    #[test]
+    fn hbm_coupling_reaches_the_refresh_band_under_sustained_load() {
+        // junction at 200 W steady state = 95 C -> HBM at 25 + 0.6*70 = 67:
+        // below the default 85 C band...
+        let mut th = ThermalModel::new(ThermalConfig::paper(300.0));
+        th.heat(100.0, 200.0);
+        assert!(!th.hbm_hot());
+        // ...but a tighter refresh threshold (poorly cooled deployment)
+        // lands in the 2x band at the same load
+        let mut cfg = ThermalConfig::paper(300.0);
+        cfg.hbm_refresh_temp_c = 60.0;
+        let mut th = ThermalModel::new(cfg);
+        th.heat(100.0, 200.0);
+        assert!(th.hbm_hot());
+        assert!((th.hbm_temp_c() - (25.0 + 0.6 * 70.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn paper_config_rejects_nonpositive_tdp() {
+        ThermalConfig::paper(0.0);
+    }
+}

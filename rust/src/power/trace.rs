@@ -1,0 +1,163 @@
+//! Windowed per-device power traces extracted from replay event logs.
+//!
+//! Every busy event a power-tracked device executes is recorded as a
+//! `(start, end, joules)` triple; [`power_trace`] buckets that energy
+//! uniformly over each event's span into fixed wall-clock windows and
+//! adds the static floor over each window's idle remainder, yielding the
+//! average-power timeline (and its peak) that `halo power` and
+//! `report --fig power` print.
+
+/// One busy event on a device: energy `joules` delivered over
+/// `[start, end)` of the device clock (throttling already applied).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerEvent {
+    pub start: f64,
+    pub end: f64,
+    pub joules: f64,
+}
+
+impl PowerEvent {
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+
+    /// Mean power over the event, W.
+    pub fn watts(&self) -> f64 {
+        self.joules / self.duration().max(1e-30)
+    }
+}
+
+/// A fixed-window average-power timeline.
+#[derive(Debug, Clone)]
+pub struct PowerTrace {
+    /// Window length, s.
+    pub window_s: f64,
+    /// Average power per window, W, covering `[0, windows * window_s)`.
+    pub avg_w: Vec<f64>,
+}
+
+impl PowerTrace {
+    pub fn peak_w(&self) -> f64 {
+        self.avg_w.iter().fold(0.0f64, |a, &b| a.max(b))
+    }
+
+    pub fn mean_w(&self) -> f64 {
+        if self.avg_w.is_empty() {
+            0.0
+        } else {
+            self.avg_w.iter().sum::<f64>() / self.avg_w.len() as f64
+        }
+    }
+}
+
+/// Bucket `events` into `windows` equal windows over `[0, span_s)`.
+/// Event energy spreads uniformly over the event's span; `idle_floor_w`
+/// (the cold static floor) covers whatever part of each window no event
+/// occupies, so a fully idle window still reads the refresh+leakage
+/// floor. Events already include their own static share, so the floor is
+/// only applied to the *uncovered* remainder — no double counting.
+pub fn power_trace(
+    events: &[PowerEvent],
+    idle_floor_w: f64,
+    span_s: f64,
+    windows: usize,
+) -> PowerTrace {
+    if windows == 0 || span_s <= 0.0 {
+        return PowerTrace { window_s: 0.0, avg_w: Vec::new() };
+    }
+    let window = span_s / windows as f64;
+    let mut energy = vec![0.0f64; windows];
+    let mut busy = vec![0.0f64; windows];
+    for ev in events {
+        let dur = ev.duration();
+        if dur <= 0.0 {
+            continue;
+        }
+        let first = ((ev.start / window).floor() as usize).min(windows - 1);
+        let last = ((ev.end / window).ceil() as usize).clamp(first + 1, windows);
+        for (w, (e, b)) in energy
+            .iter_mut()
+            .zip(busy.iter_mut())
+            .enumerate()
+            .take(last)
+            .skip(first)
+        {
+            let lo = (w as f64 * window).max(ev.start);
+            let hi = ((w + 1) as f64 * window).min(ev.end);
+            let overlap = (hi - lo).max(0.0);
+            *e += ev.joules * overlap / dur;
+            *b += overlap;
+        }
+    }
+    let avg_w = energy
+        .iter()
+        .zip(&busy)
+        .map(|(&e, &b)| (e + idle_floor_w * (window - b).max(0.0)) / window)
+        .collect();
+    PowerTrace { window_s: window, avg_w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_event_lands_in_its_windows() {
+        // 10 J over [1, 3) of a 4 s span in 4 windows -> 5 W in w1 and w2
+        let ev = [PowerEvent { start: 1.0, end: 3.0, joules: 10.0 }];
+        let t = power_trace(&ev, 0.0, 4.0, 4);
+        assert_eq!(t.avg_w.len(), 4);
+        assert!((t.avg_w[0] - 0.0).abs() < 1e-12);
+        assert!((t.avg_w[1] - 5.0).abs() < 1e-12);
+        assert!((t.avg_w[2] - 5.0).abs() < 1e-12);
+        assert!((t.avg_w[3] - 0.0).abs() < 1e-12);
+        assert!((t.peak_w() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_floor_covers_uncovered_time_only() {
+        // event fills half of window 0; floor 2 W covers the other half
+        let ev = [PowerEvent { start: 0.0, end: 0.5, joules: 4.0 }];
+        let t = power_trace(&ev, 2.0, 2.0, 2);
+        // w0: 4 J + 2 W * 0.5 s = 5 J over 1 s
+        assert!((t.avg_w[0] - 5.0).abs() < 1e-12, "{:?}", t.avg_w);
+        // w1: pure floor
+        assert!((t.avg_w[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_is_conserved_across_windows() {
+        let evs = [
+            PowerEvent { start: 0.2, end: 1.7, joules: 3.0 },
+            PowerEvent { start: 2.1, end: 2.4, joules: 5.0 },
+            PowerEvent { start: 3.9, end: 4.0, joules: 1.0 },
+        ];
+        let t = power_trace(&evs, 0.0, 4.0, 8);
+        let total: f64 = t.avg_w.iter().map(|w| w * t.window_s).sum();
+        assert!((total - 9.0).abs() < 1e-9, "{total}");
+    }
+
+    #[test]
+    fn event_past_span_clamps_into_last_window() {
+        let ev = [PowerEvent { start: 3.5, end: 4.5, joules: 2.0 }];
+        let t = power_trace(&ev, 0.0, 4.0, 4);
+        // half of the event overlaps the span; the rest is dropped
+        assert!((t.avg_w[3] - 1.0).abs() < 1e-12, "{:?}", t.avg_w);
+    }
+
+    #[test]
+    fn degenerate_inputs_yield_empty_trace() {
+        assert!(power_trace(&[], 1.0, 0.0, 4).avg_w.is_empty());
+        assert!(power_trace(&[], 1.0, 4.0, 0).avg_w.is_empty());
+        let t = power_trace(&[], 3.0, 4.0, 2);
+        assert_eq!(t.avg_w, vec![3.0, 3.0]);
+        assert_eq!(t.mean_w(), 3.0);
+    }
+
+    #[test]
+    fn event_watts_accessor() {
+        let ev = PowerEvent { start: 1.0, end: 3.0, joules: 10.0 };
+        assert!((ev.watts() - 5.0).abs() < 1e-12);
+        assert!((ev.duration() - 2.0).abs() < 1e-12);
+    }
+}

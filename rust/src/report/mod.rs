@@ -2,10 +2,13 @@
 //! evaluation (Figs. 1, 4, 5, 6, 7, 8, 9, 10) and the headline geomean
 //! claims, as CSV + markdown. Cluster-plane tables (fleet scaling and
 //! router-policy comparisons) live in [`cluster`]; DSE-plane tables
-//! (Pareto frontiers, the §V-B 3-point search) live in [`dse`].
+//! (Pareto frontiers, the §V-B 3-point search) live in [`dse`];
+//! power-plane tables (energy per token, power over time, TDP
+//! throttling) live in [`power`].
 
 pub mod cluster;
 pub mod dse;
+pub mod power;
 
 use std::fmt::Write as _;
 use std::fs;

@@ -1,0 +1,272 @@
+//! Power-plane tables: the Fully-CiD / Fully-CiM / HALO energy-per-token
+//! comparison on a mixed workload, a power-over-time breakdown, and the
+//! TDP throttling sweep (`halo report --fig power`).
+
+use super::{f, Table};
+use crate::cluster::{Fleet, Interconnect, Mix, Router, SchedConfig};
+use crate::config::HwConfig;
+use crate::mapping::MappingKind;
+use crate::model::LlmConfig;
+use crate::power::{power_trace, ThermalConfig};
+use crate::sim::queueing::TraceRequest;
+
+const SLOTS: usize = 8;
+const N_REQ: usize = 96;
+
+/// The three §V-B mapping points every power table compares.
+pub fn extreme_mappings() -> [MappingKind; 3] {
+    [MappingKind::FullCid, MappingKind::FullCim, MappingKind::Halo1]
+}
+
+/// Replay `trace` on one power-tracked device running `mapping`.
+fn powered_replay(
+    hw: &HwConfig,
+    llm: &LlmConfig,
+    mapping: MappingKind,
+    thermal: Option<ThermalConfig>,
+    trace: &[TraceRequest],
+) -> (Fleet, crate::cluster::FleetResult) {
+    let mut fleet = Fleet::heterogeneous_with(
+        llm,
+        hw,
+        &[mapping],
+        SLOTS,
+        Interconnect::board(),
+        SchedConfig::default(),
+    );
+    fleet.enable_power(hw, thermal);
+    let mut router: Box<dyn Router> = crate::cluster::Policy::LeastLoaded.router();
+    let r = fleet.replay(trace, router.as_mut());
+    (fleet, r)
+}
+
+/// Energy-per-token on the mixed (interactive) workload: the paper's
+/// §V-B energy argument at serving granularity. The phase-aware mapping
+/// picks the cheaper engine per phase, so it must rank at or below both
+/// architectural extremes — the `rank_by_ept` column pins that.
+pub fn power_extremes(hw: &HwConfig) -> Table {
+    let t1 = super::cluster::single_device_capacity(
+        hw,
+        &LlmConfig::llama2_7b(),
+        Mix::Interactive,
+        SLOTS,
+    );
+    power_extremes_at(hw, t1)
+}
+
+/// [`power_extremes`] with the single-device capacity `t1` already
+/// measured (callers generating several power tables calibrate once).
+pub fn power_extremes_at(hw: &HwConfig, t1: f64) -> Table {
+    let llm = LlmConfig::llama2_7b();
+    let mix = Mix::Interactive;
+    let rate = 1.25 * t1;
+    let trace = mix.trace(51, N_REQ, rate);
+    let tokens: u64 = trace.iter().map(|q| q.l_out as u64).sum();
+    let mut t = Table::new(
+        "power_extremes",
+        &format!(
+            "Energy per token — Fully-CiD vs Fully-CiM vs HALO1, single device, \
+             {} mix, offered {rate:.2} req/s",
+            mix.name()
+        ),
+        &[
+            "mapping",
+            "energy_per_token_j",
+            "e_dram_j",
+            "e_compute_j",
+            "e_buffer_j",
+            "e_write_j",
+            "e_static_j",
+            "avg_power_w",
+            "peak_power_w",
+            "served_rps",
+            "rank_by_ept",
+        ],
+    );
+    let runs: Vec<_> = extreme_mappings()
+        .iter()
+        .map(|&mk| {
+            let (_, r) = powered_replay(hw, &llm, mk, None, &trace);
+            (mk, r)
+        })
+        .collect();
+    let mut order: Vec<usize> = (0..runs.len()).collect();
+    order.sort_by(|&a, &b| {
+        runs[a].1.energy_per_token(tokens).total_cmp(&runs[b].1.energy_per_token(tokens))
+    });
+    for (i, (mk, r)) in runs.iter().enumerate() {
+        let rank = order.iter().position(|&j| j == i).unwrap() + 1;
+        t.row(vec![
+            mk.name().into(),
+            f(r.energy_per_token(tokens)),
+            f(r.energy.e_dram),
+            f(r.energy.e_compute),
+            f(r.energy.e_buffer),
+            f(r.energy.e_write),
+            f(r.energy.e_static),
+            f(r.avg_power_w()),
+            f(r.peak_power_w),
+            f(r.throughput_rps()),
+            rank.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Windowed power-over-time breakdown of the same three replays: each
+/// mapping's makespan is split into 16 windows of average watts — the
+/// "power over time" panel of the energy comparison.
+pub fn power_timeline(hw: &HwConfig) -> Table {
+    let t1 = super::cluster::single_device_capacity(
+        hw,
+        &LlmConfig::llama2_7b(),
+        Mix::Interactive,
+        SLOTS,
+    );
+    power_timeline_at(hw, t1)
+}
+
+/// [`power_timeline`] with the single-device capacity already measured.
+pub fn power_timeline_at(hw: &HwConfig, t1: f64) -> Table {
+    const WINDOWS: usize = 16;
+    let llm = LlmConfig::llama2_7b();
+    let mix = Mix::Interactive;
+    let rate = 1.25 * t1;
+    let trace = mix.trace(51, N_REQ, rate);
+    let mut t = Table::new(
+        "power_timeline",
+        &format!(
+            "Power over time — {WINDOWS} windows per mapping, single device, {} mix",
+            mix.name()
+        ),
+        &["mapping", "window", "t_start_s", "t_end_s", "avg_w"],
+    );
+    for mk in extreme_mappings() {
+        let (fleet, r) = powered_replay(hw, &llm, mk, None, &trace);
+        let pw = fleet.devices[0].power().expect("power tracking enabled");
+        let trace_w = power_trace(&pw.events, pw.model.static_power(false), r.makespan, WINDOWS);
+        for (w, &avg) in trace_w.avg_w.iter().enumerate() {
+            t.row(vec![
+                mk.name().into(),
+                w.to_string(),
+                f(w as f64 * trace_w.window_s),
+                f((w + 1) as f64 * trace_w.window_s),
+                f(avg),
+            ]);
+        }
+    }
+    t
+}
+
+/// Saturated throughput vs TDP cap on one HALO1 device (burst trace, so
+/// served rate == capacity): the throttling feedback is live — tighter
+/// caps must cost real throughput, not just report a flag.
+pub fn tdp_throttling(hw: &HwConfig) -> Table {
+    tdp_throttling_at(hw, &[0.0, 150.0, 100.0, 60.0])
+}
+
+/// [`tdp_throttling`] over an explicit cap sweep (0 = uncapped),
+/// tightest last.
+pub fn tdp_throttling_at(hw: &HwConfig, caps_w: &[f64]) -> Table {
+    let llm = LlmConfig::llama2_7b();
+    let mix = Mix::Generation; // decode-heavy: the high-power phase
+    let trace = mix.trace(53, 64, 1.0e6);
+    let mut t = Table::new(
+        "power_tdp_throttling",
+        "Saturated throughput vs package TDP cap — single HALO1 device, generation mix",
+        &[
+            "tdp_w",
+            "served_rps",
+            "makespan_s",
+            "avg_power_w",
+            "peak_power_w",
+            "throttled_s",
+            "max_temp_c",
+        ],
+    );
+    for &cap in caps_w {
+        let thermal = (cap > 0.0).then(|| ThermalConfig::paper(cap));
+        let (fleet, r) = powered_replay(hw, &llm, MappingKind::Halo1, thermal, &trace);
+        let max_temp = fleet.devices[0]
+            .power()
+            .and_then(|pw| pw.thermal.as_ref())
+            .map_or(f64::NAN, |th| th.max_temp_c);
+        t.row(vec![
+            format!("{cap}"),
+            f(r.throughput_rps()),
+            f(r.makespan),
+            f(r.avg_power_w()),
+            f(r.peak_power_w),
+            f(r.throttled_s),
+            if max_temp.is_nan() { "-".into() } else { format!("{max_temp:.1}") },
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw() -> HwConfig {
+        HwConfig::paper()
+    }
+
+    #[test]
+    fn halo_ranks_at_or_below_both_extremes_on_energy_per_token() {
+        // acceptance: the phase-aware mapping wins the mixed-workload
+        // energy comparison deterministically
+        let t = power_extremes(&hw());
+        assert_eq!(t.rows.len(), 3);
+        let ept = t.col_f64("energy_per_token_j");
+        assert!(ept.iter().all(|&e| e > 0.0));
+        let halo = t.rows.iter().position(|r| r[0] == "HALO1").unwrap();
+        for (i, r) in t.rows.iter().enumerate() {
+            if i != halo {
+                assert!(
+                    ept[halo] <= ept[i],
+                    "HALO1 ept {} above {} ({})",
+                    ept[halo],
+                    ept[i],
+                    r[0]
+                );
+            }
+        }
+        let rank: usize = t.rows[halo][10].parse().unwrap();
+        assert_eq!(rank, 1, "HALO1 must rank first by energy per token");
+        // component columns sum to less than the total energy budget
+        // implied by avg power (static included)
+        let avg_w = t.col_f64("avg_power_w");
+        assert!(avg_w.iter().all(|&w| w > 0.0));
+    }
+
+    #[test]
+    fn timeline_has_positive_power_in_every_window() {
+        let t = power_timeline(&hw());
+        assert_eq!(t.rows.len(), 3 * 16);
+        let avg = t.col_f64("avg_w");
+        // every window carries at least the static floor
+        let floor = hw().power.static_w(hw().hbm.stacks, false);
+        assert!(avg.iter().all(|&w| w >= floor * 0.99), "window under the static floor");
+        // the decode-heavy CiD rows must show real dynamic power somewhere
+        assert!(avg.iter().any(|&w| w > 2.0 * floor));
+    }
+
+    #[test]
+    fn throughput_degrades_monotonically_as_tdp_tightens() {
+        // acceptance: live throttling feedback, not a cosmetic flag
+        let t = tdp_throttling(&hw());
+        assert_eq!(t.rows.len(), 4);
+        let rps = t.col_f64("served_rps");
+        for w in rps.windows(2) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-9), "tighter cap raised throughput: {rps:?}");
+        }
+        assert!(
+            rps[3] < rps[0] * 0.95,
+            "the tightest cap must cost real throughput: {rps:?}"
+        );
+        let throttled = t.col_f64("throttled_s");
+        assert_eq!(throttled[0], 0.0, "uncapped run never throttles");
+        assert!(throttled[3] > throttled[1], "{throttled:?}");
+    }
+}

@@ -41,6 +41,7 @@ use super::{simulate_graph, EngineSet};
 use crate::config::HwConfig;
 use crate::mapping::MappingKind;
 use crate::model::{build_decode_graph, build_prefill_graph, LlmConfig};
+use crate::power::{DevicePower, EnergyModel, ThermalConfig, ThermalModel};
 
 /// Memoized analytical cost curves for one (model, hardware, mapping)
 /// triple: prefill latency per distinct prompt length, and decode-step
@@ -358,6 +359,10 @@ pub struct Device {
     pub recompute_tokens: u64,
     /// High-water mark of resident KV bytes, sampled at cycle boundaries.
     pub kv_peak: u64,
+    /// Optional per-event energy attribution + thermal/TDP state. `None`
+    /// (the default) keeps every latency computation bit-identical to the
+    /// untracked device.
+    power: Option<DevicePower>,
 }
 
 impl Device {
@@ -401,6 +406,49 @@ impl Device {
             evictions: 0,
             recompute_tokens: 0,
             kv_peak: 0,
+            power: None,
+        }
+    }
+
+    /// Attach per-event energy attribution (and, with a [`ThermalConfig`],
+    /// live TDP throttling) to this device. Call before pushing work.
+    /// Without a thermal cap the replay's latency results stay
+    /// bit-identical to the untracked device.
+    pub fn enable_power(&mut self, llm: &LlmConfig, hw: &HwConfig, thermal: Option<ThermalConfig>) {
+        self.power = Some(DevicePower::new(
+            EnergyModel::new(llm, hw, self.mapping),
+            thermal.map(ThermalModel::new),
+        ));
+    }
+
+    /// The power/thermal state, if tracking is enabled.
+    pub fn power(&self) -> Option<&DevicePower> {
+        self.power.as_ref()
+    }
+
+    /// Attribute a prefill (or prefill-chunk) busy event starting at
+    /// `start` and return its actual duration: `raw` untouched when power
+    /// tracking is off, possibly stretched by the thermal throttle when
+    /// it is on.
+    fn charge_prefill(&mut self, start: f64, raw: f64, offset: usize, tokens: usize) -> f64 {
+        match &mut self.power {
+            None => raw,
+            Some(pw) => {
+                let e = pw.model.prefill_chunk(offset, tokens);
+                pw.busy_event(start, raw, e)
+            }
+        }
+    }
+
+    /// Attribute a batched decode-step busy event (see
+    /// [`Self::charge_prefill`]).
+    fn charge_decode(&mut self, start: f64, raw: f64, batch: usize, ctx: usize) -> f64 {
+        match &mut self.power {
+            None => raw,
+            Some(pw) => {
+                let e = pw.model.decode_step(batch, ctx);
+                pw.busy_event(start, raw, e)
+            }
         }
     }
 
@@ -616,6 +664,7 @@ impl Device {
                     DeviceJob::Full { arrival, ready, l_in, l_out } => {
                         let p = self.cost.prefill(l_in);
                         let start = self.now.max(ready);
+                        let p = self.charge_prefill(start, p, 0, l_in);
                         self.now = start + p;
                         self.busy += p;
                         self.last_active = self.now;
@@ -636,6 +685,7 @@ impl Device {
                         // decoding; TTFT was already earned
                         let p = self.cost.prefill(ctx);
                         let start = self.now.max(ready);
+                        let p = self.charge_prefill(start, p, 0, ctx);
                         self.now = start + p;
                         self.busy += p;
                         self.last_active = self.now;
@@ -649,6 +699,7 @@ impl Device {
                     DeviceJob::PrefillOnly { arrival, ready, l_in, l_out, decode_dev } => {
                         let p = self.cost.prefill(l_in);
                         let start = self.now.max(ready);
+                        let p = self.charge_prefill(start, p, 0, l_in);
                         self.now = start + p;
                         self.busy += p;
                         self.last_active = self.now;
@@ -737,6 +788,7 @@ impl Device {
             let offset = self.prefilling[i].offset;
             let take = chunk.min(self.prefilling[i].l_in - offset);
             let dt = self.cost.prefill_chunk(offset, take);
+            let dt = self.charge_prefill(self.now, dt, offset, take);
             self.now += dt;
             self.busy += dt;
             self.last_active = self.now;
@@ -825,6 +877,7 @@ impl Device {
         }
         let mean_ctx = self.active.iter().flatten().map(|s| s.ctx).sum::<usize>() / batch;
         let dt = self.cost.decode_step(batch, mean_ctx);
+        let dt = self.charge_decode(self.now, dt, batch, mean_ctx);
         self.now += dt;
         self.busy += dt;
         self.last_active = self.now;
@@ -1205,6 +1258,67 @@ mod tests {
         assert!(d.last_active <= d.now() + 1e-12);
         assert!(d.busy <= d.last_active + 1e-12);
         assert!(d.last_active > 0.0);
+    }
+
+    #[test]
+    fn power_tracking_without_tdp_is_bit_identical() {
+        let jobs = |d: &mut Device| {
+            for i in 0..5 {
+                d.push(DeviceJob::Full {
+                    arrival: i as f64 * 0.02,
+                    ready: i as f64 * 0.02,
+                    l_in: 128 + 64 * i,
+                    l_out: 6,
+                });
+            }
+        };
+        let mut plain = dev(2);
+        jobs(&mut plain);
+        drain(&mut plain);
+        let mut tracked = dev(2);
+        tracked.enable_power(&LlmConfig::llama2_7b(), &HwConfig::paper(), None);
+        jobs(&mut tracked);
+        drain(&mut tracked);
+        assert_eq!(plain.now().to_bits(), tracked.now().to_bits());
+        assert_eq!(plain.busy.to_bits(), tracked.busy.to_bits());
+        for (a, b) in plain.served.iter().zip(&tracked.served) {
+            assert_eq!(a.ttft.to_bits(), b.ttft.to_bits());
+            assert_eq!(a.e2e.to_bits(), b.e2e.to_bits());
+        }
+        // and the tracked replay actually attributed energy per event
+        let pw = tracked.power().unwrap();
+        assert!(pw.energy.total() > 0.0);
+        assert_eq!(pw.events.len() as u64, tracked.prefills + tracked.decode_steps);
+        assert_eq!(pw.throttled_s, 0.0);
+    }
+
+    #[test]
+    fn tdp_cap_stretches_service_time() {
+        let run = |thermal: Option<ThermalConfig>| {
+            let mut d = dev(4);
+            d.enable_power(&LlmConfig::llama2_7b(), &HwConfig::paper(), thermal);
+            for _ in 0..4 {
+                d.push(DeviceJob::Full { arrival: 0.0, ready: 0.0, l_in: 512, l_out: 256 });
+            }
+            drain(&mut d);
+            d
+        };
+        let free = run(None);
+        // short replay: shrink the thermal time constant so the package
+        // reaches its throttling band within the test's busy time
+        let mut cfg = ThermalConfig::paper(40.0);
+        cfg.tau_s = 0.05;
+        let capped = run(Some(cfg));
+        assert!(
+            capped.now() > free.now() * 1.2,
+            "40 W cap must visibly stretch the replay: {} vs {}",
+            capped.now(),
+            free.now()
+        );
+        let pw = capped.power().unwrap();
+        assert!(pw.throttled_s > 0.0);
+        let th = pw.thermal.as_ref().unwrap();
+        assert!(th.max_temp_c > th.cfg.ambient_c);
     }
 
     impl Device {

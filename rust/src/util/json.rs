@@ -176,10 +176,17 @@ impl<'a> Parser<'a> {
                         b'b' => out.push('\u{8}'),
                         b'f' => out.push('\u{c}'),
                         b'u' => {
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                            // bounds-checked: a truncated `\uXX` at end of
+                            // input is a parse error, not a slice panic
+                            let end = self
+                                .i
+                                .checked_add(4)
+                                .filter(|&e| e <= self.b.len())
+                                .ok_or("truncated \\u escape")?;
+                            let hex = std::str::from_utf8(&self.b[self.i..end])
                                 .map_err(|_| "bad \\u")?;
                             let cp = u32::from_str_radix(hex, 16).map_err(|_| "bad \\u")?;
-                            self.i += 4;
+                            self.i = end;
                             out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                         }
                         _ => return Err(format!("bad escape \\{}", c as char)),
@@ -349,6 +356,16 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("nulll").is_err());
+    }
+
+    #[test]
+    fn truncated_unicode_escape_errors_instead_of_panicking() {
+        // regression: these used to slice out of bounds on user input
+        assert!(Json::parse(r#""\u"#).is_err());
+        assert!(Json::parse(r#""\u00"#).is_err());
+        assert!(Json::parse(r#""\u12"#).is_err());
+        // a complete escape still parses
+        assert_eq!(Json::parse(r#""A""#).unwrap(), Json::Str("A".into()));
     }
 
     #[test]
