@@ -10,7 +10,7 @@ use halo::config::HwConfig;
 use halo::dse::{explore, DseConfig, Exhaustive, Objective, SearchSpace};
 use halo::mapping::MappingKind;
 use halo::model::LlmConfig;
-use halo::power::ThermalConfig;
+use halo::power::{DvfsConfig, ThermalConfig};
 use halo::report::dse::frontier_table;
 use halo::util::fmt_joules;
 
@@ -55,6 +55,25 @@ fn main() {
             r.throughput_rps(),
             r.avg_power_w(),
             r.throttled_s
+        );
+    }
+
+    println!("\n== per-phase DVFS on one HALO1 device (generation burst) ==");
+    let gen = Mix::Generation.trace(65, 32, 1.0e6);
+    let gen_tokens: u64 = gen.iter().map(|q| q.l_out as u64).sum();
+    let eco = hw.power.dvfs_points.len() - 1;
+    for (label, pre, dec) in [("nominal", 0, 0), ("eco-decode", 0, eco), ("eco", eco, eco)] {
+        let mut fleet = Fleet::unified(&llm, &hw, 1, 8, Interconnect::board());
+        fleet.enable_power(&hw, None);
+        fleet.set_dvfs(DvfsConfig::with_indices(&hw.power, pre, dec));
+        let mut router = Policy::LeastLoaded.router();
+        let r = fleet.replay(&gen, router.as_mut());
+        println!(
+            "  {label:>10}: {}/token  {:5.1} W avg  {:5.1} W peak  {:6.1} tok/s",
+            fmt_joules(r.energy_per_token(gen_tokens)),
+            r.avg_power_w(),
+            r.peak_power_w,
+            gen_tokens as f64 / r.makespan.max(1e-12)
         );
     }
 

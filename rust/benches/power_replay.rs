@@ -6,7 +6,7 @@
 use halo::cluster::{Fleet, Interconnect, Mix, Policy};
 use halo::config::HwConfig;
 use halo::model::LlmConfig;
-use halo::power::{power_trace, ThermalConfig};
+use halo::power::{power_trace, DvfsConfig, ThermalConfig};
 use halo::util::bench::{bb, BenchSuite};
 
 fn main() {
@@ -36,13 +36,21 @@ fn main() {
         bb(fleet.replay(&trace, router.as_mut()));
     });
 
+    s.bench_throughput("fleet4_replay_dvfs_governor", trace.len() as f64, || {
+        let (mut fleet, mut router) =
+            Policy::LeastLoaded.build(&llm, &hw, 4, 8, 0.5, Interconnect::board());
+        fleet.enable_power(&hw, Some(ThermalConfig::paper(100.0)));
+        fleet.set_dvfs(DvfsConfig::governed(&hw.power));
+        bb(fleet.replay(&trace, router.as_mut()));
+    });
+
     // trace extraction over a realistic event log
     let mut fleet = Fleet::unified(&llm, &hw, 1, 8, Interconnect::board());
     fleet.enable_power(&hw, None);
     let mut router = Policy::LeastLoaded.router();
     let r = fleet.replay(&trace, router.as_mut());
     let pw = fleet.devices[0].power().expect("tracked");
-    let floor = pw.model.static_power(false);
+    let floor = pw.static_power(false);
     s.bench("power_trace_64_windows", || {
         bb(power_trace(&pw.events, floor, r.makespan, 64));
     });

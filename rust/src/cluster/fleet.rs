@@ -12,7 +12,7 @@ use super::router::Router;
 use crate::config::HwConfig;
 use crate::mapping::MappingKind;
 use crate::model::LlmConfig;
-use crate::power::{EnergyBreakdown, ThermalConfig};
+use crate::power::{DvfsConfig, EnergyBreakdown, ThermalConfig};
 use crate::sim::device::{Device, DeviceJob, SchedConfig};
 use crate::sim::queueing::{
     e2e_percentile, served_rate, ttft_percentile, ServedRequest, TraceRequest,
@@ -196,12 +196,29 @@ impl Fleet {
     /// Attach per-event energy attribution to every device — and, with a
     /// [`ThermalConfig`], a live per-package TDP throttle. Call before
     /// [`Fleet::replay`]. Without a thermal cap the replay's latency
-    /// results stay bit-identical to the untracked fleet.
+    /// results stay bit-identical to the untracked fleet: the energy
+    /// charged per event is the energy half of the same joint
+    /// [`PhaseCost`](crate::sim::device::PhaseCost) that advances the
+    /// clock, so tracking adds no `simulate_graph` walks.
     pub fn enable_power(&mut self, hw: &HwConfig, thermal: Option<ThermalConfig>) {
-        let llm = self.llm.clone();
         for d in &mut self.devices {
-            d.enable_power(&llm, hw, thermal.clone());
+            d.enable_power(hw, thermal.clone());
         }
+    }
+
+    /// Pin every device to the same per-phase DVFS configuration (static
+    /// operating points, optionally the thermal stepped governor — the
+    /// governor engages only on power-tracked devices with a TDP cap).
+    pub fn set_dvfs(&mut self, dvfs: DvfsConfig) {
+        for d in &mut self.devices {
+            d.set_dvfs(dvfs.clone());
+        }
+    }
+
+    /// Total `simulate_graph` walks performed by the fleet's cost
+    /// oracles (the one-walk-per-point guarantee's observable).
+    pub fn cost_walks(&self) -> u64 {
+        self.devices.iter().map(|d| d.cost_walks()).sum()
     }
 
     /// Decode-side load of a device as a router should see it: queued +
@@ -332,7 +349,7 @@ impl Fleet {
                 Some(pw) => {
                     power_tracked = true;
                     let mut e = pw.energy;
-                    e.e_static += pw.model.static_power(false) * (makespan - d.busy).max(0.0);
+                    e.e_static += pw.static_power(false) * (makespan - d.busy).max(0.0);
                     (e, pw.peak_w, pw.throttled_s)
                 }
                 None => (EnergyBreakdown::default(), 0.0, 0.0),
@@ -483,9 +500,15 @@ impl FleetResult {
         self.energy.total()
     }
     /// Fleet energy per generated token, J (`tokens` = the trace's total
-    /// output tokens).
+    /// output tokens). 0.0 on a zero-token trace — an empty or fully
+    /// rejected replay must not push inf/NaN into DSE rankings or report
+    /// tables.
     pub fn energy_per_token(&self, tokens: u64) -> f64 {
-        self.energy_j() / tokens.max(1) as f64
+        if tokens == 0 {
+            0.0
+        } else {
+            self.energy_j() / tokens as f64
+        }
     }
     /// Mean fleet power over the makespan, W.
     pub fn avg_power_w(&self) -> f64 {
@@ -622,6 +645,33 @@ mod tests {
         let tokens: u64 = tr.iter().map(|q| q.l_out as u64).sum();
         assert!(r.energy_per_token(tokens) > 0.0);
         assert!((r.avg_power_w() - r.energy_j() / r.makespan).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_dvfs_slows_replay_and_stays_latency_identical_when_tracked() {
+        // saturating burst: makespan is busy-time-driven, so the eco
+        // point's 1/f stretch shows up whole
+        let tr = poisson_trace(29, 30, 1.0e6, (64, 512), 16);
+        let hw = hw();
+        let eco = hw.power.dvfs_points.len() - 1;
+        let run = |idx: usize, power: bool| {
+            let mut fleet = Fleet::unified(&llm(), &hw, 2, 4, Interconnect::board());
+            if power {
+                fleet.enable_power(&hw, None);
+            }
+            fleet.set_dvfs(DvfsConfig::with_indices(&hw.power, idx, idx));
+            let r = fleet.replay(&tr, &mut LeastLoaded);
+            (r, fleet.cost_walks())
+        };
+        let (nominal, _) = run(0, false);
+        let (plain_eco, plain_walks) = run(eco, false);
+        let (tracked_eco, tracked_walks) = run(eco, true);
+        // a lower operating point costs real wall-clock time
+        assert!(plain_eco.makespan > nominal.makespan * 1.05);
+        // power tracking observes without perturbing, at any point
+        assert_eq!(plain_eco.makespan.to_bits(), tracked_eco.makespan.to_bits());
+        assert_eq!(plain_walks, tracked_walks, "tracking must not add graph walks");
+        assert!(tracked_eco.power_tracked && tracked_eco.energy_j() > 0.0);
     }
 
     #[test]

@@ -34,10 +34,14 @@
 //! plane searches over all of these knobs at once.
 //!
 //! Energy: [`Fleet::enable_power`] attaches the [`crate::power`] plane —
-//! per-event energy attribution on every device, optional per-package
-//! TDP throttling — and KV transfers across the [`Interconnect`] are
-//! charged joules per byte alongside their latency; both surface in the
-//! per-device and fleet-level replay stats.
+//! per-event energy accounting on every device (read off the same joint
+//! [`sim::cost::PhaseCost`](crate::sim::cost) that advances each device
+//! clock, so tracking adds no graph walks), optional per-package TDP
+//! throttling — and KV transfers across the [`Interconnect`] are charged
+//! joules per byte alongside their latency; both surface in the
+//! per-device and fleet-level replay stats. [`Fleet::set_dvfs`] pins
+//! per-phase DVFS operating points fleet-wide (or arms the thermal
+//! stepped governor).
 
 pub mod fleet;
 pub mod interconnect;

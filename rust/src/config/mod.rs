@@ -330,9 +330,53 @@ impl LogicDieConfig {
     }
 }
 
+/// One voltage-frequency operating point of the package DVFS ladder.
+///
+/// Scales are relative to the nominal Table-I clocks: every timed phase
+/// (CiD `t_ccd` streaming cadence, CiM bit-phases and row writes,
+/// logic-die clocks) stretches as `1/f_scale`, and dynamic CV^2
+/// switching energy scales as `v_scale^2`. The static floor does not
+/// scale — refresh is temperature-driven, and the leakage delta over
+/// these shallow voltage steps is inside the calibration noise.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DvfsPoint {
+    pub name: &'static str,
+    /// Clock frequency relative to nominal (1.0 = Table I).
+    pub f_scale: f64,
+    /// Supply voltage relative to nominal.
+    pub v_scale: f64,
+}
+
+impl DvfsPoint {
+    pub fn nominal() -> Self {
+        DvfsPoint { name: "nominal", f_scale: 1.0, v_scale: 1.0 }
+    }
+
+    /// Latency multiplier of a timed phase at this point (`1/f`).
+    pub fn time_scale(&self) -> f64 {
+        1.0 / self.f_scale
+    }
+
+    /// Dynamic-energy multiplier at this point (`V^2`).
+    pub fn energy_scale(&self) -> f64 {
+        self.v_scale * self.v_scale
+    }
+
+    /// Mean-power multiplier of a fixed unit of work (`f * V^2`): the
+    /// energy shrinks by `V^2` while the time stretches by `1/f`.
+    pub fn power_scale(&self) -> f64 {
+        self.f_scale * self.energy_scale()
+    }
+
+    pub fn is_nominal(&self) -> bool {
+        self.f_scale == 1.0 && self.v_scale == 1.0
+    }
+}
+
 /// Package-level power constants for the `power` plane: background
-/// (static) power integrated over wall-clock time, plus the default
-/// thermal design power of one HALO package.
+/// (static) power integrated over wall-clock time, the default thermal
+/// design power of one HALO package, and the DVFS operating-point
+/// ladder.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PowerConfig {
     /// HBM refresh background power per stack, W. CALIBRATED: ~1.2 W for
@@ -348,11 +392,27 @@ pub struct PowerConfig {
     /// dynamic + static floor) so the paper-point config runs unthrottled
     /// at nominal load but a tighter cap bites immediately.
     pub tdp_w: f64,
+    /// Voltage-frequency operating points, fastest first; index 0 must be
+    /// nominal. CALIBRATED: the voltage steps are shallow (the 2.5D
+    /// package is IR-drop limited), so stepping down trades real latency
+    /// for modest CV^2 savings — memory-bound decode, whose streaming
+    /// power dwarfs the static floor, profits on energy per token, while
+    /// compute-bound prefill pays the stretched static-time penalty.
+    pub dvfs_points: Vec<DvfsPoint>,
 }
 
 impl PowerConfig {
     pub fn paper() -> Self {
-        PowerConfig { refresh_w_per_stack: 1.2, leakage_w: 10.0, tdp_w: 180.0 }
+        PowerConfig {
+            refresh_w_per_stack: 1.2,
+            leakage_w: 10.0,
+            tdp_w: 180.0,
+            dvfs_points: vec![
+                DvfsPoint::nominal(),
+                DvfsPoint { name: "balanced", f_scale: 0.8, v_scale: 0.97 },
+                DvfsPoint { name: "eco", f_scale: 0.6, v_scale: 0.93 },
+            ],
+        }
     }
 
     /// Background (static) power floor of one package, W: refresh across
@@ -360,6 +420,11 @@ impl PowerConfig {
     pub fn static_w(&self, stacks: usize, hot_refresh: bool) -> f64 {
         let refresh = self.refresh_w_per_stack * stacks as f64;
         self.leakage_w + if hot_refresh { 2.0 * refresh } else { refresh }
+    }
+
+    /// Ladder position of a named operating point (case-insensitive).
+    pub fn dvfs_index(&self, name: &str) -> Option<usize> {
+        self.dvfs_points.iter().position(|p| p.name.eq_ignore_ascii_case(name))
     }
 }
 
@@ -545,6 +610,27 @@ mod tests {
         assert!((hot - cold - 5.0 * 1.2).abs() < 1e-12, "{hot}");
         // the static floor is well under the default TDP
         assert!(cold < hw.power.tdp_w / 5.0);
+    }
+
+    #[test]
+    fn dvfs_ladder_is_ordered_and_monotone() {
+        let p = PowerConfig::paper();
+        assert!(p.dvfs_points.len() >= 3, "need at least 3 operating points");
+        assert!(p.dvfs_points[0].is_nominal(), "index 0 must be nominal");
+        for w in p.dvfs_points.windows(2) {
+            // fastest first: frequency and voltage fall down the ladder
+            assert!(w[1].f_scale < w[0].f_scale);
+            assert!(w[1].v_scale <= w[0].v_scale);
+            // lower points strictly stretch time and strictly cut the
+            // mean power of a fixed unit of work
+            assert!(w[1].time_scale() > w[0].time_scale());
+            assert!(w[1].power_scale() < w[0].power_scale());
+            // dynamic energy per op never grows going down
+            assert!(w[1].energy_scale() <= w[0].energy_scale());
+        }
+        assert_eq!(p.dvfs_index("ECO"), Some(p.dvfs_points.len() - 1));
+        assert_eq!(p.dvfs_index("nominal"), Some(0));
+        assert_eq!(p.dvfs_index("warp"), None);
     }
 
     #[test]

@@ -7,8 +7,9 @@
 //!
 //! * [`space`] — the searchable cross product: router policy, fleet
 //!   composition (uniform or heterogeneous HALO1/HALO2/SA), device count,
-//!   pool split, scheduler knobs (chunk / admission / KV budget), and
-//!   hardware knobs (CiM tile mesh, interposer bandwidth);
+//!   pool split, scheduler knobs (chunk / admission / KV budget),
+//!   hardware knobs (CiM tile mesh, interposer bandwidth), and the power
+//!   knobs (per-package TDP cap, per-phase DVFS operating points);
 //! * [`strategy`] — pluggable, seeded, deterministic search drivers:
 //!   exhaustive grid, random sampling, steepest hill-climb with restarts;
 //! * [`objective`] — multi-objective scoring (TTFT p50/p99, decode
@@ -338,6 +339,90 @@ mod tests {
             "a 40 W cap must cost throughput: {} vs {}",
             capped.metrics.throughput_rps,
             free.metrics.throughput_rps
+        );
+    }
+
+    #[test]
+    fn empty_trace_yields_finite_zero_metrics() {
+        // regression: energy_per_token / decode_tok_per_s on an empty
+        // trace used to flow inf/NaN (or panic in the percentile helper)
+        // into total_cmp rankings and report tables
+        let trace = Mix::Interactive.trace(1, 0, 5.0);
+        assert!(trace.is_empty());
+        let space = SearchSpace::paper_point().with_devices(vec![1]);
+        let cand = space.decode(&space.first_index());
+        let hw = HwConfig::paper();
+        let (mut fleet, mut router) = cand.build_fleet(
+            &LlmConfig::llama2_7b(),
+            &hw,
+            4,
+            Interconnect::board(),
+        );
+        let r = fleet.replay(&trace, router.as_mut());
+        assert!(r.served.is_empty());
+        let m = Metrics::collect(&cand, &trace, &r, None);
+        for v in [
+            m.ttft_p50,
+            m.ttft_p99,
+            m.e2e_p50,
+            m.e2e_p99,
+            m.throughput_rps,
+            m.decode_tok_per_s,
+            m.energy_per_token_j,
+            m.total_energy_j,
+            m.peak_power_w,
+            m.edp,
+            m.worst_tenant_ttft_p99,
+            m.slo_attainment,
+        ] {
+            assert!(v.is_finite(), "{m:?}");
+        }
+        assert_eq!(m.energy_per_token_j, 0.0);
+        assert_eq!(m.decode_tok_per_s, 0.0);
+        assert_eq!(m.edp, 0.0);
+        // and every objective still produces a rankable (non-NaN) score
+        for o in Objective::all() {
+            assert!(!o.score(&m).is_nan(), "{}", o.name());
+        }
+    }
+
+    #[test]
+    fn dvfs_axis_trades_peak_power_onto_the_edp_frontier() {
+        // acceptance: a decode-heavy mix searched over the DVFS ladder
+        // keeps a non-nominal point on the EDP frontier — low-frequency
+        // decode cuts both energy per token and peak power there
+        let mut cfg = DseConfig::new(LlmConfig::llama2_7b(), Mix::Generation);
+        cfg.requests = 32;
+        cfg.seed = 11;
+        cfg.objectives =
+            vec![Objective::Edp, Objective::EnergyPerToken, Objective::PeakPower];
+        let space = SearchSpace::paper_point()
+            .with_devices(vec![1])
+            .with_dvfs(vec![(0, 0), (1, 1), (0, 2), (2, 2)]);
+        let res = explore(&space, &mut Exhaustive, &cfg);
+        assert_eq!(res.evaluated.len(), 4);
+        let by_dvfs = |d: (usize, usize)| {
+            &res.evaluated.iter().find(|e| e.candidate.dvfs == d).unwrap().metrics
+        };
+        // peak power falls strictly down the ladder
+        let (nom, bal, eco) = (by_dvfs((0, 0)), by_dvfs((1, 1)), by_dvfs((2, 2)));
+        assert!(bal.peak_power_w < nom.peak_power_w, "{} vs {}", bal.peak_power_w, nom.peak_power_w);
+        assert!(eco.peak_power_w < bal.peak_power_w);
+        // decode-heavy: eco decode spends fewer joules per token than
+        // nominal (streaming power dwarfs the static-time penalty)
+        let split = by_dvfs((0, 2));
+        assert!(
+            split.energy_per_token_j < nom.energy_per_token_j,
+            "{} vs {}",
+            split.energy_per_token_j,
+            nom.energy_per_token_j
+        );
+        // ...so the frontier retains at least one non-nominal point
+        let frontier_dvfs: Vec<(usize, usize)> =
+            res.frontier_points().iter().map(|e| e.candidate.dvfs).collect();
+        assert!(
+            frontier_dvfs.iter().any(|&d| d != (0, 0)),
+            "EDP frontier lost every non-nominal DVFS point: {frontier_dvfs:?}"
         );
     }
 

@@ -68,13 +68,20 @@ impl Metrics {
             }
         };
         let energy_per_token_j = r.energy_per_token(total_tokens);
+        // an empty (or fully rejected) trace must yield finite zeros, not
+        // inf/NaN that poison `total_cmp` rankings and report tables
+        let decode_tok_per_s = if r.served.is_empty() {
+            0.0
+        } else {
+            total_tokens as f64 / r.makespan.max(1e-12)
+        };
         Metrics {
             ttft_p50: r.ttft_p50(),
             ttft_p99: r.ttft_p99(),
             e2e_p50: r.e2e_p50(),
             e2e_p99: r.e2e_p99(),
             throughput_rps: r.throughput_rps(),
-            decode_tok_per_s: total_tokens as f64 / r.makespan.max(1e-12),
+            decode_tok_per_s,
             utilization: r.utilization(),
             evictions: r.evictions as f64,
             recompute_tokens: r.recompute_tokens as f64,

@@ -6,21 +6,24 @@
 //! (chunk size, admission, KV budget), hardware knobs (CiM tile mesh,
 //! interposer bandwidth — the CiM *wordline* knob rides on the mapping
 //! choice, HALO1 vs HALO2, because the engine set pins wordlines per
-//! Table II), and a per-package TDP cap (0 = uncapped) that engages the
-//! power plane's thermal throttle. A point in the space is an [`Index`] (one position per
-//! axis); [`SearchSpace::decode`] turns it into a concrete [`Candidate`]
-//! that knows how to build its own [`HwConfig`] and fleet.
+//! Table II), a per-package TDP cap (0 = uncapped) that engages the
+//! power plane's thermal throttle, and per-phase DVFS operating points
+//! (prefill/decode ladder indices) so energy-per-token/EDP searches can
+//! trade frequency against TTFT SLOs. A point in the space is an
+//! [`Index`] (one position per axis); [`SearchSpace::decode`] turns it
+//! into a concrete [`Candidate`] that knows how to build its own
+//! [`HwConfig`] and fleet.
 
 use crate::cluster::{Fleet, Interconnect, Policy, Router, SchedConfig};
-use crate::config::HwConfig;
+use crate::config::{HwConfig, PowerConfig};
 use crate::mapping::MappingKind;
 use crate::model::LlmConfig;
-use crate::power::ThermalConfig;
+use crate::power::{DvfsConfig, ThermalConfig};
 use crate::sim::device::AdmissionPolicy;
 use crate::util::Rng;
 
 /// Number of axes in the space (fixed; see [`SearchSpace`] fields).
-pub const AXES: usize = 10;
+pub const AXES: usize = 11;
 
 /// One point of the space: a per-axis position vector.
 pub type Index = [usize; AXES];
@@ -89,6 +92,9 @@ pub struct Candidate {
     pub interposer_scale: f64,
     /// Per-package TDP cap in W (0 = uncapped, no thermal throttle).
     pub tdp_w: f64,
+    /// Per-phase DVFS ladder indices `(prefill, decode)` into
+    /// [`PowerConfig::dvfs_points`] ((0, 0) = nominal).
+    pub dvfs: (usize, usize),
 }
 
 impl Candidate {
@@ -155,6 +161,7 @@ impl Candidate {
             )
         };
         fleet.enable_power(hw, self.thermal());
+        fleet.set_dvfs(DvfsConfig::with_indices(&hw.power, self.dvfs.0, self.dvfs.1));
         (fleet, self.policy.router())
     }
 
@@ -175,8 +182,19 @@ impl Candidate {
         } else {
             "inf".to_string()
         };
+        // names come from the paper ladder (a Candidate is hw-agnostic);
+        // indices beyond a custom ladder's names print as `pN`
+        let ladder = PowerConfig::paper().dvfs_points;
+        let point = |i: usize| {
+            ladder.get(i).map(|p| p.name.to_string()).unwrap_or_else(|| format!("p{i}"))
+        };
+        let dvfs = if self.dvfs.0 == self.dvfs.1 {
+            point(self.dvfs.0)
+        } else {
+            format!("{}/{}", point(self.dvfs.0), point(self.dvfs.1))
+        };
         format!(
-            "{} {} chunk={} {} kv={} tiles=x{} bw=x{:.2} tdp={}",
+            "{} {} chunk={} {} kv={} tiles=x{} bw=x{:.2} tdp={} dvfs={}",
             self.policy.name(),
             fleet,
             self.chunk,
@@ -184,7 +202,8 @@ impl Candidate {
             kv,
             self.tile_scale,
             self.interposer_scale,
-            tdp
+            tdp,
+            dvfs
         )
     }
 }
@@ -204,6 +223,9 @@ pub struct SearchSpace {
     pub interposer_scales: Vec<f64>,
     /// Per-package TDP caps in W (0 = uncapped).
     pub tdp_caps_w: Vec<f64>,
+    /// Per-phase DVFS points as `(prefill, decode)` ladder indices into
+    /// [`PowerConfig::dvfs_points`] ((0, 0) = nominal).
+    pub dvfs: Vec<(usize, usize)>,
 }
 
 impl SearchSpace {
@@ -221,6 +243,7 @@ impl SearchSpace {
             tile_scales: vec![1],
             interposer_scales: vec![1.0],
             tdp_caps_w: vec![0.0],
+            dvfs: vec![(0, 0)],
         }
     }
 
@@ -284,6 +307,12 @@ impl SearchSpace {
         self
     }
 
+    pub fn with_dvfs(mut self, v: Vec<(usize, usize)>) -> Self {
+        assert!(!v.is_empty());
+        self.dvfs = v;
+        self
+    }
+
     /// Per-axis cardinalities, in [`Index`] order.
     pub fn dims(&self) -> Index {
         [
@@ -297,6 +326,7 @@ impl SearchSpace {
             self.tile_scales.len(),
             self.interposer_scales.len(),
             self.tdp_caps_w.len(),
+            self.dvfs.len(),
         ]
     }
 
@@ -377,6 +407,7 @@ impl SearchSpace {
             tile_scale: self.tile_scales[idx[7]],
             interposer_scale: self.interposer_scales[idx[8]],
             tdp_w: self.tdp_caps_w[idx[9]],
+            dvfs: self.dvfs[idx[10]],
         }
     }
 
@@ -441,9 +472,10 @@ impl SearchSpace {
         ])
     }
 
-    /// Energy/TDP space: the architectural extremes and phase-aware
-    /// points under tightening package power caps on small unified
-    /// fleets — the `energy-per-token` / `edp` search territory.
+    /// Energy/TDP/DVFS space: the architectural extremes and phase-aware
+    /// points under tightening package power caps and down the DVFS
+    /// ladder (uniform points plus a decode-only eco split) on small
+    /// unified fleets — the `energy-per-token` / `edp` search territory.
     pub fn power() -> Self {
         Self::paper_point()
             .with_devices(vec![1, 2])
@@ -454,6 +486,7 @@ impl SearchSpace {
                 Composition::Uniform(MappingKind::Halo2),
             ])
             .with_tdp_caps_w(vec![0.0, 120.0, 60.0])
+            .with_dvfs(vec![(0, 0), (1, 1), (0, 2), (2, 2)])
     }
 
     /// Everything at once (~20k points) — random/hill-climb territory.
@@ -474,6 +507,7 @@ impl SearchSpace {
             .with_tile_scales(vec![1, 2])
             .with_interposer_scales(vec![0.5, 1.0, 2.0])
             .with_tdp_caps_w(vec![0.0, 120.0])
+            .with_dvfs(vec![(0, 0), (2, 2)])
     }
 
     pub fn preset(name: &str) -> Option<Self> {
@@ -626,6 +660,27 @@ mod tests {
         let p = SearchSpace::power();
         assert!(p.len() >= 12);
         assert_eq!(SearchSpace::preset("power").unwrap().len(), p.len());
+    }
+
+    #[test]
+    fn dvfs_axis_decodes_and_spans_the_ladder_in_the_power_preset() {
+        let s = SearchSpace::paper_point().with_dvfs(vec![(0, 0), (0, 2), (2, 2)]);
+        assert_eq!(s.len(), 3);
+        let mut idx = s.first_index();
+        assert_eq!(s.decode(&idx).dvfs, (0, 0));
+        idx[10] = 1;
+        let split = s.decode(&idx);
+        assert_eq!(split.dvfs, (0, 2));
+        assert!(split.label().contains("dvfs=nominal/eco"), "{}", split.label());
+        idx[10] = 2;
+        assert!(s.decode(&idx).label().contains("dvfs=eco"));
+        // acceptance: the power preset searches at least 3 DVFS points
+        let p = SearchSpace::power();
+        assert!(p.dvfs.len() >= 3, "power preset must span the DVFS ladder");
+        let distinct: std::collections::BTreeSet<(usize, usize)> =
+            p.dvfs.iter().copied().collect();
+        assert!(distinct.len() >= 3);
+        assert!(p.dvfs.contains(&(0, 0)), "nominal must stay searchable");
     }
 
     #[test]

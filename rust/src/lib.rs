@@ -47,19 +47,27 @@
 //!   Fully-CiM / HALO comparison falls out as a degenerate 3-point
 //!   search.
 //!
-//! * **Power plane** — per-event energy attribution and thermal/TDP
-//!   feedback ([`power`]): an [`power::EnergyModel`] (the energy twin of
-//!   the device cost model, calibrated against the arch plane's per-op
-//!   joules) attributes CiD DRAM/MAC, CiM DAC/ADC/write, systolic,
-//!   interposer-link, and static refresh/leakage energy to every
-//!   simulated event; a per-package RC thermal model with a TDP cap
-//!   throttles device service when over budget (with a 2.5D coupling
-//!   term that doubles HBM refresh when the CiM die runs hot), and
-//!   windowed power traces expose avg/peak watts over time. Threaded
-//!   through fleet stats (per-device energy/utilization, KV-transfer
-//!   energy) and the DSE objectives (`energy-per-token`, `edp`,
-//!   `peak-power`, TDP as a search axis). Surfaces: `halo power`,
-//!   `halo report --fig power`, `halo cluster --power/--tdp`.
+//! * **Power plane** — per-event energy accounting and thermal/TDP/DVFS
+//!   feedback ([`power`]). Latency and energy come out of *one* joint
+//!   oracle ([`sim::cost::CostModel`]): each distinct (prefill-length /
+//!   decode-batch / chunk) point walks `simulate_graph` exactly once and
+//!   yields a [`sim::cost::PhaseCost`] whose latency advances the device
+//!   clock and whose [`sim::cost::EnergyBreakdown`] (CiD DRAM/MAC, CiM
+//!   DAC/ADC/write, systolic, buffers) is charged for the same busy
+//!   event — the planes agree bit-for-bit by construction, and power
+//!   tracking adds zero walks. On top, [`power`] keeps what a walk
+//!   cannot see: the static refresh/leakage floor over wall-clock time,
+//!   a per-package RC thermal model whose TDP cap throttles service
+//!   (with a 2.5D coupling term that doubles HBM refresh when the CiM
+//!   die runs hot), per-phase DVFS ([`power::DvfsConfig`]: a
+//!   voltage-frequency ladder scaling latency by `1/f` and dynamic
+//!   energy by `V^2`, selectable per phase statically or stepped by the
+//!   thermal governor under a TDP cap), and windowed power traces.
+//!   Threaded through fleet stats (per-device energy/utilization,
+//!   KV-transfer energy) and the DSE objectives (`energy-per-token`,
+//!   `edp`, `peak-power`, with TDP and DVFS as search axes). Surfaces:
+//!   `halo power`, `halo report --fig power`,
+//!   `halo cluster --power/--tdp/--dvfs`.
 //!
 //! Quickstart:
 //! ```no_run

@@ -23,7 +23,7 @@ use halo::coordinator::{InferenceEngine, Request, Server};
 use halo::dse::{self, DseConfig, Objective, SearchSpace, SloSpec};
 use halo::mapping::MappingKind;
 use halo::model::LlmConfig;
-use halo::power::{power_trace, ThermalConfig};
+use halo::power::{power_trace, DvfsConfig, ThermalConfig};
 use halo::report;
 use halo::runtime::Runtime;
 use halo::sim::{simulate_e2e, Scenario};
@@ -41,7 +41,7 @@ USAGE:
                 [--model llama2-7b|qwen3-8b] [--requests N] [--rate R] [--slots N] [--link board|pcie|eth|wan]
                 [--prefill-frac F] [--seed S] [--tenants N]
                 [--chunk TOKENS] [--admission fifo|spf|priority] [--kv-cap GB|auto]
-                [--power] [--tdp W|auto]
+                [--power] [--tdp W|auto] [--dvfs SPEC] [--smoke]
                   --chunk     prefill chunk size (0 = serialized monolithic prefill, the default)
                   --admission ready-queue order: fifo (default), spf (shortest prompt first),
                               priority (interactive prompts <= 512 tokens first)
@@ -52,6 +52,11 @@ USAGE:
                   --tdp       per-package TDP cap in W (implies --power): device service
                               throttles when the RC thermal model runs over cap;
                               `auto` uses the calibrated package TDP
+                  --dvfs      per-phase DVFS: `nominal|balanced|eco` pins both phases,
+                              `PRE,DEC` pins prefill/decode separately, `governor` steps
+                              the ladder under the TDP cap instead of the scalar throttle
+                              (requires --tdp; static points work even without --power)
+                  --smoke     tiny CI run: 2 devices, 32 requests
   halo dse      [--space smoke|sched|fleet|hw|mapping|power|full] [--strategy grid|random|hillclimb]
                 [--model llama2-7b|qwen3-8b] [--mix chat|summarization|generation|interactive]
                 [--requests N] [--seed S] [--slots N] [--link board|pcie|eth|wan]
@@ -63,7 +68,8 @@ USAGE:
                   --objectives comma list of ttft-p50,ttft-p99,e2e-p50,e2e-p99,throughput,
                                decode-tput,evictions,cost,slo,tenant-ttft,
                                energy-per-token,edp,peak-power
-                               (default ttft-p50,ttft-p99,throughput,cost)
+                               (default ttft-p50,ttft-p99,throughput,cost; the `power`
+                               space also sweeps TDP caps and per-phase DVFS points)
                   --ttft-slo   auto-tune mode: also report the cheapest config whose TTFT at
                                --slo-pct (default p50) meets this many milliseconds
                   --rate       absolute offered load in req/s; --rate-scale multiplies one
@@ -227,6 +233,8 @@ fn cmd_report(f: &HashMap<String, String>) -> Result<()> {
                     report::power::power_extremes_at(&hw, t1),
                     report::power::power_timeline_at(&hw, t1),
                     report::power::tdp_throttling(&hw),
+                    report::power::dvfs_ladder(&hw),
+                    report::power::dvfs_phase_split(&hw),
                 ]
             }
             other => bail!("unknown figure {other}"),
@@ -253,9 +261,10 @@ fn cmd_roofline(f: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
     let hw = HwConfig::paper();
+    let smoke = f.contains_key("smoke");
     let model = f.get("model").map(String::as_str).unwrap_or("llama2-7b");
     let llm = LlmConfig::by_name(model).ok_or_else(|| anyhow!("unknown model {model}"))?;
-    let devices = flag_usize(f, "devices", 8);
+    let devices = flag_usize(f, "devices", if smoke { 2 } else { 8 });
     let policy = {
         let name = f.get("policy").map(String::as_str).unwrap_or("disaggregated");
         Policy::by_name(name).ok_or_else(|| anyhow!("unknown policy {name}"))?
@@ -278,7 +287,7 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
     if slots == 0 {
         bail!("--slots must be at least 1");
     }
-    let n_req = flag_usize(f, "requests", 160);
+    let n_req = flag_usize(f, "requests", if smoke { 32 } else { 160 });
     let seed = flag_usize(f, "seed", 42) as u64;
     let prefill_frac = flag_f64(f, "prefill-frac", 0.5);
     if !(prefill_frac > 0.0 && prefill_frac < 1.0) {
@@ -307,6 +316,13 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
     }
     let tdp = flag_tdp(f, &hw)?;
     let track_power = f.contains_key("power") || tdp.is_some();
+    let dvfs = f
+        .get("dvfs")
+        .map(|spec| DvfsConfig::parse(&hw.power, spec).map_err(|e| anyhow!(e)))
+        .transpose()?;
+    if dvfs.as_ref().is_some_and(|d| d.governor) && tdp.is_none() {
+        bail!("--dvfs governor steps the ladder against a TDP cap; add --tdp W|auto");
+    }
     // default offered load: 3x one monolithic device's measured capacity
     let rate = match f.get("rate").and_then(|v| v.parse::<f64>().ok()) {
         Some(r) => r,
@@ -341,6 +357,18 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
         } else {
             println!("power    : tracked, no TDP cap");
         }
+    }
+    if let Some(d) = dvfs {
+        println!(
+            "dvfs     : {} ({})",
+            d.label(),
+            if d.governor {
+                "thermal stepped governor replaces the scalar throttle"
+            } else {
+                "static per-phase operating points"
+            }
+        );
+        fleet.set_dvfs(d);
     }
     let r = fleet.replay(&trace, router.as_mut());
 
@@ -687,7 +715,7 @@ fn cmd_power(f: &HashMap<String, String>) -> Result<()> {
             for d in &fleet.devices {
                 let Some(pw) = d.power() else { continue };
                 let tr =
-                    power_trace(&pw.events, pw.model.static_power(false), r.makespan, windows);
+                    power_trace(&pw.events, pw.static_power(false), r.makespan, windows);
                 window_s = tr.window_s;
                 for (acc, &avg) in fleet_avg.iter_mut().zip(&tr.avg_w) {
                     *acc += avg;

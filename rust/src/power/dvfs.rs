@@ -1,0 +1,253 @@
+//! Per-phase DVFS: a ladder of voltage-frequency operating points
+//! ([`PowerConfig::dvfs_points`]) selectable independently for prefill
+//! and decode, plus a thermal *stepped governor* that walks the ladder
+//! under a TDP cap instead of the scalar throttle factor.
+//!
+//! Latency scales linearly in `1/f` and dynamic energy quadratically in
+//! `V` (see [`DvfsPoint`]); the scaling applies to the memoized nominal
+//! [`PhaseCost`](crate::sim::cost::PhaseCost) at charge time, so DVFS
+//! adds no `simulate_graph` walks. Static point selection is a plain
+//! performance knob and works with or without power tracking; the
+//! governor reads the RC thermal state and therefore needs power
+//! tracking with a TDP cap. The governor never boosts above the
+//! configured static point — it only steps further down the ladder.
+
+use super::thermal::ThermalModel;
+use crate::config::{DvfsPoint, PowerConfig};
+use crate::model::Phase;
+
+/// Hysteresis band of the stepped governor: it steps back up only once
+/// the junction rise falls below this fraction of the TDP temperature
+/// ceiling (stepping down triggers at the ceiling itself).
+pub const GOVERNOR_STEP_UP_FRACTION: f64 = 0.9;
+
+/// Per-device DVFS selection: the ladder, one static operating point per
+/// phase, and the optional thermal stepped governor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DvfsConfig {
+    ladder: Vec<DvfsPoint>,
+    /// Static ladder index for prefill (and recompute) events.
+    pub prefill_idx: usize,
+    /// Static ladder index for batched decode steps.
+    pub decode_idx: usize,
+    /// Thermal stepped governor: under a TDP cap, walk the ladder one
+    /// rung per busy event — down while the junction sits over the TDP
+    /// temperature ceiling, up below the hysteresis band — instead of
+    /// applying the scalar throttle factor. Once the ladder is exhausted
+    /// and the junction still sits over the ceiling, the scalar throttle
+    /// takes over as a backstop, so arbitrarily tight caps still
+    /// converge onto their TDP.
+    pub governor: bool,
+}
+
+impl Default for DvfsConfig {
+    fn default() -> Self {
+        DvfsConfig::nominal(&PowerConfig::paper())
+    }
+}
+
+impl DvfsConfig {
+    /// Both phases at the nominal point, no governor (the exact-identity
+    /// default: every scale is 1.0).
+    pub fn nominal(power: &PowerConfig) -> Self {
+        Self::with_indices(power, 0, 0)
+    }
+
+    /// Explicit per-phase ladder indices (0 = nominal).
+    pub fn with_indices(power: &PowerConfig, prefill_idx: usize, decode_idx: usize) -> Self {
+        let ladder = power.dvfs_points.clone();
+        assert!(!ladder.is_empty(), "empty DVFS ladder");
+        assert!(ladder[0].is_nominal(), "ladder index 0 must be the nominal point");
+        assert!(
+            prefill_idx < ladder.len() && decode_idx < ladder.len(),
+            "DVFS index out of range: ({prefill_idx}, {decode_idx}) on a {}-point ladder",
+            ladder.len()
+        );
+        DvfsConfig { ladder, prefill_idx, decode_idx, governor: false }
+    }
+
+    /// Nominal static points with the thermal stepped governor armed.
+    pub fn governed(power: &PowerConfig) -> Self {
+        let mut d = Self::nominal(power);
+        d.governor = true;
+        d
+    }
+
+    /// Parse a CLI spec against a ladder: `NAME` pins both phases,
+    /// `PRE,DEC` pins them separately, and the token `governor` (alone
+    /// or as an extra comma term) arms the thermal stepped governor.
+    pub fn parse(power: &PowerConfig, spec: &str) -> Result<Self, String> {
+        let mut governor = false;
+        let mut names: Vec<&str> = Vec::new();
+        for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            if tok.eq_ignore_ascii_case("governor") || tok.eq_ignore_ascii_case("gov") {
+                governor = true;
+            } else {
+                names.push(tok);
+            }
+        }
+        let known: Vec<&str> = power.dvfs_points.iter().map(|p| p.name).collect();
+        let resolve = |n: &str| {
+            power
+                .dvfs_index(n)
+                .ok_or_else(|| format!("unknown DVFS point `{n}` (one of {known:?}, governor)"))
+        };
+        let (prefill_idx, decode_idx) = match names.as_slice() {
+            &[] => (0, 0),
+            &[both] => {
+                let i = resolve(both)?;
+                (i, i)
+            }
+            &[pre, dec] => (resolve(pre)?, resolve(dec)?),
+            _ => {
+                return Err(format!(
+                    "expected at most two DVFS points (prefill,decode), got {}",
+                    names.len()
+                ))
+            }
+        };
+        let mut d = Self::with_indices(power, prefill_idx, decode_idx);
+        d.governor = governor;
+        Ok(d)
+    }
+
+    pub fn ladder(&self) -> &[DvfsPoint] {
+        &self.ladder
+    }
+
+    /// The static ladder index configured for `phase`.
+    pub fn index(&self, phase: Phase) -> usize {
+        match phase {
+            Phase::Prefill => self.prefill_idx,
+            Phase::Decode => self.decode_idx,
+        }
+    }
+
+    /// The static operating point configured for `phase`.
+    pub fn point(&self, phase: Phase) -> &DvfsPoint {
+        &self.ladder[self.index(phase)]
+    }
+
+    /// Ladder index of the effective point for `phase` when the governor
+    /// currently sits at `gov_idx`: the deeper (slower) of the two rungs
+    /// — the governor never boosts above the configured static point.
+    /// Out-of-range governor positions clamp to the ladder bottom.
+    pub fn effective_index(&self, phase: Phase, gov_idx: usize) -> usize {
+        self.index(phase).max(gov_idx.min(self.ladder.len() - 1))
+    }
+
+    /// The effective operating point (see [`Self::effective_index`]).
+    pub fn effective(&self, phase: Phase, gov_idx: usize) -> &DvfsPoint {
+        &self.ladder[self.effective_index(phase, gov_idx)]
+    }
+
+    /// Whether every event runs at the exact-identity nominal point.
+    pub fn is_nominal(&self) -> bool {
+        self.prefill_idx == 0 && self.decode_idx == 0 && !self.governor
+    }
+
+    /// One governor step against the current thermal state: down a rung
+    /// while the junction rise exceeds the TDP temperature ceiling, up a
+    /// rung below the hysteresis band, unchanged in between.
+    pub fn step_governor(&self, cur: usize, th: &ThermalModel) -> usize {
+        let rise = th.temp_c() - th.cfg.ambient_c;
+        let limit = th.cfg.theta_c_per_w * th.cfg.tdp_w;
+        if rise > limit {
+            (cur + 1).min(self.ladder.len() - 1)
+        } else if rise < GOVERNOR_STEP_UP_FRACTION * limit {
+            cur.saturating_sub(1)
+        } else {
+            cur
+        }
+    }
+
+    /// Compact label for tables and CLI echoes, e.g. `nominal`,
+    /// `nominal/eco`, `eco+gov`.
+    pub fn label(&self) -> String {
+        let base = if self.prefill_idx == self.decode_idx {
+            self.ladder[self.prefill_idx].name.to_string()
+        } else {
+            format!(
+                "{}/{}",
+                self.ladder[self.prefill_idx].name, self.ladder[self.decode_idx].name
+            )
+        };
+        if self.governor {
+            format!("{base}+gov")
+        } else {
+            base
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::ThermalConfig;
+
+    fn power() -> PowerConfig {
+        PowerConfig::paper()
+    }
+
+    #[test]
+    fn default_is_the_exact_identity() {
+        let d = DvfsConfig::default();
+        assert!(d.is_nominal());
+        assert_eq!(d.point(Phase::Prefill).time_scale(), 1.0);
+        assert_eq!(d.point(Phase::Decode).energy_scale(), 1.0);
+        assert_eq!(d.label(), "nominal");
+    }
+
+    #[test]
+    fn parse_accepts_single_pair_and_governor_forms() {
+        let p = power();
+        let eco = DvfsConfig::parse(&p, "eco").unwrap();
+        assert_eq!((eco.prefill_idx, eco.decode_idx, eco.governor), (2, 2, false));
+        let split = DvfsConfig::parse(&p, "nominal,eco").unwrap();
+        assert_eq!((split.prefill_idx, split.decode_idx), (0, 2));
+        assert_eq!(split.label(), "nominal/eco");
+        let gov = DvfsConfig::parse(&p, "governor").unwrap();
+        assert!(gov.governor && gov.prefill_idx == 0 && gov.decode_idx == 0);
+        assert_eq!(gov.label(), "nominal+gov");
+        let both = DvfsConfig::parse(&p, "balanced,governor").unwrap();
+        assert!(both.governor);
+        assert_eq!((both.prefill_idx, both.decode_idx), (1, 1));
+        assert!(DvfsConfig::parse(&p, "warp").is_err());
+        assert!(DvfsConfig::parse(&p, "eco,eco,eco").is_err());
+    }
+
+    #[test]
+    fn effective_point_never_boosts_above_the_static_choice() {
+        let p = power();
+        let d = DvfsConfig::with_indices(&p, 2, 0);
+        // governor at nominal: prefill stays pinned at its slow point
+        assert_eq!(d.effective(Phase::Prefill, 0).name, "eco");
+        assert_eq!(d.effective(Phase::Decode, 0).name, "nominal");
+        // governor deep: both phases follow it down
+        assert_eq!(d.effective(Phase::Decode, 1).name, "balanced");
+        assert_eq!(d.effective(Phase::Prefill, 1).name, "eco");
+        // out-of-range governor indices clamp to the ladder bottom
+        assert_eq!(d.effective(Phase::Decode, 99).name, "eco");
+    }
+
+    #[test]
+    fn governor_steps_down_over_the_ceiling_and_back_up_below_it() {
+        let p = power();
+        let d = DvfsConfig::governed(&p);
+        let mut th = ThermalModel::new(ThermalConfig::paper(100.0));
+        // cold package: stays at (or returns to) the top
+        assert_eq!(d.step_governor(0, &th), 0);
+        assert_eq!(d.step_governor(2, &th), 1);
+        // burn far over the 100 W ceiling: steps down one rung at a time
+        th.heat(100.0, 300.0);
+        assert_eq!(d.step_governor(0, &th), 1);
+        assert_eq!(d.step_governor(1, &th), 2);
+        assert_eq!(d.step_governor(2, &th), 2, "clamped at the ladder bottom");
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_static_index_panics() {
+        DvfsConfig::with_indices(&power(), 0, 99);
+    }
+}

@@ -1,42 +1,61 @@
-//! Power plane: per-event energy attribution, TDP/thermal throttling, and
-//! windowed power traces for the event-driven simulator.
+//! Power plane: per-event energy accounting, TDP/thermal feedback,
+//! per-phase DVFS, and windowed power traces for the event-driven
+//! simulator.
 //!
-//! The analytical `arch` plane has always computed per-op joules; this
-//! plane threads that energy through everything built on top of it:
+//! The joint latency/energy curves themselves live in
+//! [`sim::cost`](crate::sim::cost) — one memoized `simulate_graph` walk
+//! per distinct point feeds both the device clock and the energy meter,
+//! so the planes agree by construction and power tracking adds no walks.
+//! What stays here is everything a graph walk cannot see:
 //!
-//! * [`model`] — [`EnergyModel`], the energy twin of the device
-//!   `CostModel`: memoized per-event energies (prefill, chunked prefill,
-//!   batched decode step) whose dynamic components come from the same
-//!   `simulate_graph` walk the arch plane uses, plus the static floor
-//!   (HBM refresh + leakage) integrated over wall-clock time;
+//! * [`model`] — [`EnergyModel`], the thin energy view over the joint
+//!   oracle plus the static floor (HBM refresh + leakage) integrated
+//!   over wall-clock time;
 //! * [`thermal`] — a per-package RC thermal model with a TDP cap whose
-//!   throttle factor *feeds back into service time*, and a 2.5D coupling
-//!   term that pushes CiM-die heat into the HBM stacks, doubling refresh
+//!   throttle *feeds back into service time*, and a 2.5D coupling term
+//!   that pushes CiM-die heat into the HBM stacks, doubling refresh
 //!   power in the JEDEC hot band;
-//! * [`trace`] — windowed average/peak power timelines from the per-event
-//!   logs.
+//! * [`dvfs`] — the voltage-frequency operating-point ladder
+//!   ([`crate::config::PowerConfig::dvfs_points`]), selectable per phase
+//!   (prefill vs decode) as a static knob (`halo cluster --dvfs`), or
+//!   driven by the thermal model as a *stepped governor* that replaces
+//!   the scalar throttle factor under a TDP cap;
+//! * [`trace`] — windowed average/peak power timelines from the
+//!   per-event logs.
 //!
 //! A [`DevicePower`] instance attaches to one `sim::device::Device`
-//! (`Device::enable_power`) and is advanced by the device on every busy
-//! event; with tracking disabled the device's latency math is untouched
-//! (bit-identical replays — pinned by `tests/power_plane.rs`). The
-//! cluster plane aggregates per-device energy into fleet stats, and the
-//! `dse` plane scores `energy-per-token` / `edp` / `peak-power`
-//! objectives over a TDP axis. Surfaces: `halo power`,
+//! (`Device::enable_power`) and meters every busy event; with tracking
+//! disabled, or tracking on without a TDP cap at nominal DVFS, the
+//! device's latency math is bit-identical to the untracked device
+//! (pinned by `tests/power_plane.rs`). The cluster plane aggregates
+//! per-device energy into fleet stats, and the `dse` plane scores
+//! `energy-per-token` / `edp` / `peak-power` objectives over TDP and
+//! DVFS axes. Surfaces: `halo power`, `halo cluster --power/--tdp/--dvfs`,
 //! `halo report --fig power`.
 
+pub mod dvfs;
 pub mod model;
 pub mod thermal;
 pub mod trace;
 
+pub use crate::config::DvfsPoint;
+pub use dvfs::DvfsConfig;
 pub use model::{EnergyBreakdown, EnergyModel};
 pub use thermal::{ThermalConfig, ThermalModel};
 pub use trace::{power_trace, PowerEvent, PowerTrace};
 
-/// Per-device power state: the energy model, optional thermal/TDP state,
-/// the accumulated energy breakdown, and the per-event log.
+use crate::config::HwConfig;
+use crate::model::Phase;
+use crate::sim::cost::PhaseCost;
+
+/// Per-device power state: the static floor, optional thermal/TDP state,
+/// the accumulated energy breakdown, the per-event log, and the DVFS
+/// governor position. Dynamic energy arrives with each event as the
+/// energy half of the same [`PhaseCost`] that advances the device clock.
 pub struct DevicePower {
-    pub model: EnergyModel,
+    /// Static floor at normal / hot-refresh DRAM temperature, W.
+    static_cold_w: f64,
+    static_hot_w: f64,
     pub thermal: Option<ThermalModel>,
     /// Accumulated energy of every busy event (dynamic + busy-time
     /// static). Idle-time static is added at collection, where the
@@ -46,40 +65,85 @@ pub struct DevicePower {
     pub events: Vec<PowerEvent>,
     /// Highest mean event power seen, W.
     pub peak_w: f64,
-    /// Extra service time added by thermal throttling, s.
+    /// Extra service time added by thermal throttling (scalar or
+    /// governor) beyond the configured DVFS point, s.
     pub throttled_s: f64,
+    /// Current rung of the stepped DVFS governor (0 unless governing).
+    gov_idx: usize,
+    /// Deepest governor rung engaged during the replay.
+    pub max_gov_idx: usize,
 }
 
 impl DevicePower {
-    pub fn new(model: EnergyModel, thermal: Option<ThermalModel>) -> Self {
+    pub fn new(hw: &HwConfig, thermal: Option<ThermalModel>) -> Self {
         DevicePower {
-            model,
+            static_cold_w: hw.power.static_w(hw.hbm.stacks, false),
+            static_hot_w: hw.power.static_w(hw.hbm.stacks, true),
             thermal,
             energy: EnergyBreakdown::default(),
             events: Vec::new(),
             peak_w: 0.0,
             throttled_s: 0.0,
+            gov_idx: 0,
+            max_gov_idx: 0,
         }
     }
 
-    /// Account one busy event starting at `start` with unthrottled
-    /// duration `raw_dt` and dynamic energy `dynamic`. Applies the
-    /// thermal throttle (stretching the event), charges busy-time static
-    /// power (doubled refresh when the HBM stacks are hot), heats the
-    /// package, and returns the actual duration the device clock must
-    /// advance by. Without a thermal model the duration is returned
-    /// untouched.
-    pub fn busy_event(&mut self, start: f64, raw_dt: f64, dynamic: EnergyBreakdown) -> f64 {
-        let idle_w = self.model.static_power(false);
-        let (dt, hot) = match &mut self.thermal {
-            None => (raw_dt, false),
+    /// Background power floor, W (`hot_refresh` doubles the DRAM refresh
+    /// share — the 2.5D coupling penalty when the stacks run hot).
+    pub fn static_power(&self, hot_refresh: bool) -> f64 {
+        if hot_refresh {
+            self.static_hot_w
+        } else {
+            self.static_cold_w
+        }
+    }
+
+    /// Account one busy event of `phase` starting at `start` whose
+    /// *nominal* joint cost is `nominal`. Applies the phase's static
+    /// DVFS point (latency times `1/f`, dynamic energy times `V^2`),
+    /// then the thermal response — the scalar throttle, or one step of
+    /// the DVFS governor when armed (with the scalar throttle as a
+    /// backstop once the ladder is exhausted) — charges busy-time static
+    /// power
+    /// (doubled refresh when the HBM stacks are hot), heats the package,
+    /// and returns the actual duration the device clock must advance by.
+    /// Without a thermal model the configured-point duration is returned
+    /// untouched (at nominal DVFS: bit-identical to the raw latency).
+    pub fn busy_event(
+        &mut self,
+        start: f64,
+        nominal: PhaseCost,
+        dvfs: &DvfsConfig,
+        phase: Phase,
+    ) -> f64 {
+        let idle_w = self.static_power(false);
+        let cfg_idx = dvfs.index(phase);
+        let cfg_dt = nominal.latency * dvfs.ladder()[cfg_idx].time_scale();
+        let (eff_idx, dt, hot) = match &mut self.thermal {
+            None => (cfg_idx, cfg_dt, false),
             Some(th) => {
                 th.advance_idle(start, idle_w);
-                (raw_dt / th.throttle_factor(), th.hbm_hot())
+                if dvfs.governor {
+                    self.gov_idx = dvfs.step_governor(self.gov_idx, th);
+                    let eff = dvfs.effective_index(phase, self.gov_idx);
+                    let mut gdt = nominal.latency * dvfs.ladder()[eff].time_scale();
+                    // ladder exhausted but the junction still over the
+                    // ceiling: the scalar throttle takes over as a
+                    // backstop (factor is 1.0 at or below the ceiling),
+                    // so arbitrarily tight caps still converge onto TDP
+                    if eff + 1 == dvfs.ladder().len() {
+                        gdt /= th.throttle_factor();
+                    }
+                    (eff, gdt, th.hbm_hot())
+                } else {
+                    (cfg_idx, cfg_dt / th.throttle_factor(), th.hbm_hot())
+                }
             }
         };
-        let mut e = dynamic;
-        e.e_static += self.model.static_power(hot) * dt;
+        self.max_gov_idx = self.max_gov_idx.max(self.gov_idx);
+        let mut e = nominal.energy.scaled_dynamic(dvfs.ladder()[eff_idx].energy_scale());
+        e.e_static += self.static_power(hot) * dt;
         let total = e.total();
         let watts = total / dt.max(1e-30);
         if let Some(th) = &mut self.thermal {
@@ -87,7 +151,7 @@ impl DevicePower {
         }
         self.energy.add(&e);
         self.peak_w = self.peak_w.max(watts);
-        self.throttled_s += dt - raw_dt;
+        self.throttled_s += dt - cfg_dt;
         self.events.push(PowerEvent { start, end: start + dt, joules: total });
         dt
     }
@@ -99,23 +163,28 @@ mod tests {
     use crate::config::HwConfig;
     use crate::mapping::MappingKind;
     use crate::model::LlmConfig;
+    use crate::sim::cost::CostModel;
 
     fn meter(thermal: Option<ThermalConfig>) -> DevicePower {
-        let em = EnergyModel::new(&LlmConfig::llama2_7b(), &HwConfig::paper(), MappingKind::Halo1);
-        DevicePower::new(em, thermal.map(ThermalModel::new))
+        DevicePower::new(&HwConfig::paper(), thermal.map(ThermalModel::new))
+    }
+
+    fn oracle() -> CostModel {
+        CostModel::new(&LlmConfig::llama2_7b(), &HwConfig::paper(), MappingKind::Halo1)
     }
 
     #[test]
     fn untracked_thermal_keeps_duration_exact() {
         let mut pw = meter(None);
-        let e = pw.model.prefill(256);
+        let mut cm = oracle();
         let raw = 0.0123456789f64;
-        let dt = pw.busy_event(1.0, raw, e);
+        let c = PhaseCost { latency: raw, energy: cm.prefill(256).energy };
+        let dt = pw.busy_event(1.0, c, &DvfsConfig::default(), Phase::Prefill);
         assert_eq!(dt.to_bits(), raw.to_bits(), "no thermal model, no stretching");
         assert_eq!(pw.throttled_s, 0.0);
         assert_eq!(pw.events.len(), 1);
         // event energy = dynamic + static floor over the event
-        let want = e.dynamic() + pw.model.static_power(false) * raw;
+        let want = c.energy.dynamic() + pw.static_power(false) * raw;
         assert!((pw.events[0].joules - want).abs() < 1e-12 * want);
         assert!(pw.peak_w > 0.0);
     }
@@ -125,9 +194,10 @@ mod tests {
         // pre-heat far above a tiny TDP ceiling, then run an event
         let mut pw = meter(Some(ThermalConfig::paper(20.0)));
         pw.thermal.as_mut().unwrap().heat(100.0, 200.0);
-        let e = pw.model.decode_step(4, 1024);
+        let mut cm = oracle();
         let raw = 1e-3;
-        let dt = pw.busy_event(100.0, raw, e);
+        let c = PhaseCost { latency: raw, energy: cm.decode_step(4, 1024).energy };
+        let dt = pw.busy_event(100.0, c, &DvfsConfig::default(), Phase::Decode);
         assert!(dt > raw * 2.0, "expected a strong throttle, got {}x", dt / raw);
         assert!((pw.throttled_s - (dt - raw)).abs() < 1e-15);
         let ev = pw.events[0];
@@ -136,12 +206,63 @@ mod tests {
     }
 
     #[test]
+    fn static_dvfs_point_scales_time_and_dynamic_energy() {
+        let hw = HwConfig::paper();
+        let mut pw = meter(None);
+        let mut cm = oracle();
+        let c = cm.decode_step(2, 512);
+        let eco = hw.power.dvfs_points.len() - 1;
+        let dvfs = DvfsConfig::with_indices(&hw.power, eco, eco);
+        let p = dvfs.point(Phase::Decode);
+        let dt = pw.busy_event(0.0, c, &dvfs, Phase::Decode);
+        assert!((dt - c.latency * p.time_scale()).abs() < 1e-15 * dt);
+        // logged joules = V^2-scaled dynamic + static over the longer event
+        let want = c.energy.dynamic() * p.energy_scale() + pw.static_power(false) * dt;
+        assert!((pw.events[0].joules - want).abs() < 1e-12 * want);
+        // a configured point books no throttling
+        assert_eq!(pw.throttled_s, 0.0);
+        // peak power strictly below the nominal event's power
+        let nominal_w = (c.energy.dynamic() + pw.static_power(false) * c.latency) / c.latency;
+        assert!(pw.peak_w < nominal_w);
+    }
+
+    #[test]
+    fn governor_walks_the_ladder_under_heat_and_books_throttle_time() {
+        let hw = HwConfig::paper();
+        let mut pw = meter(Some(ThermalConfig::paper(30.0)));
+        // pre-heat over the 30 W ceiling so the governor must step down
+        pw.thermal.as_mut().unwrap().heat(100.0, 200.0);
+        let mut cm = oracle();
+        let c = cm.decode_step(4, 1024);
+        let dvfs = DvfsConfig::governed(&hw.power);
+        let d1 = pw.busy_event(100.0, c, &dvfs, Phase::Decode);
+        assert!((d1 - c.latency * dvfs.ladder()[1].time_scale()).abs() < 1e-15 * d1);
+        assert_eq!(pw.max_gov_idx, 1);
+        // still hot (tiny events barely cool it): next event steps to the
+        // ladder bottom, where the scalar backstop stretches it further
+        // (the junction is still far over the 30 W ceiling)
+        let d2 = pw.busy_event(100.0 + d1, c, &dvfs, Phase::Decode);
+        assert!(d2 > c.latency * dvfs.ladder()[2].time_scale(), "backstop must engage");
+        assert_eq!(pw.max_gov_idx, 2);
+        assert!(d2 > d1);
+        assert!(pw.throttled_s > 0.0);
+        // governed events scale dynamic energy by the rung's V^2
+        let e1 = pw.events[0].joules - pw.static_power(false) * d1;
+        let want1 = c.energy.dynamic() * dvfs.ladder()[1].energy_scale();
+        assert!((e1 - want1).abs() < 1e-9 * want1, "{e1} vs {want1}");
+        let e2 = pw.events[1].joules - pw.static_power(false) * d2;
+        let want2 = c.energy.dynamic() * dvfs.ladder()[2].energy_scale();
+        assert!((e2 - want2).abs() < 1e-9 * want2, "{e2} vs {want2}");
+    }
+
+    #[test]
     fn accumulated_energy_matches_event_log() {
         let mut pw = meter(None);
+        let mut cm = oracle();
         let mut t = 0.0;
         for l in [128usize, 256, 512] {
-            let e = pw.model.prefill(l);
-            let dt = pw.busy_event(t, 0.01, e);
+            let c = PhaseCost { latency: 0.01, energy: cm.prefill(l).energy };
+            let dt = pw.busy_event(t, c, &DvfsConfig::default(), Phase::Prefill);
             t += dt;
         }
         let logged: f64 = pw.events.iter().map(|e| e.joules).sum();

@@ -1,119 +1,41 @@
-//! Per-event energy attribution, calibrated against the analytical plane.
+//! Thin energy view over the joint cost oracle.
 //!
-//! [`EnergyModel`] is the energy twin of [`sim::device::CostModel`]: the
-//! same memoized analytical curves, but returning an [`EnergyBreakdown`]
-//! instead of a latency. Every joule it reports comes from the *same*
-//! `simulate_graph` walk the arch plane uses — CiD DRAM activation/IO and
-//! in-DRAM MACs, CiM DAC/ADC/array and crossbar weight programming,
-//! systolic MAC + SRAM, logic-die vector/exponent work — so the
-//! event-driven planes (`sim`, `cluster`, `dse`) and the analytical
-//! `arch` plane agree on dynamic energy by construction (the cross-plane
-//! property test in `tests/power_plane.rs` pins this).
-//!
-//! On top of the dynamic components the model carries the two terms the
-//! per-op costs cannot see: interposer/interconnect link energy for KV
-//! handoffs (charged by the fleet per transferred byte) and the static
-//! floor — HBM refresh plus package leakage — integrated over wall-clock
-//! time (with the refresh share doubling when the co-packaged stacks run
-//! hot, see [`super::thermal`]).
-
-use std::collections::BTreeMap;
+//! The energy plane used to keep its own memoized curves here — an
+//! `EnergyModel` walking `simulate_graph` in parallel with the latency
+//! `CostModel` and held consistent only by a 5% cross-plane agreement
+//! test. Both now read off one [`sim::cost::CostModel`](crate::sim::cost)
+//! walk per distinct point: [`EnergyModel`] is a view that projects the
+//! energy half of each [`PhaseCost`](crate::sim::cost::PhaseCost) and
+//! carries the one term a graph walk cannot see — the static floor (HBM
+//! refresh + package leakage) integrated over wall-clock time, with the
+//! refresh share doubling when the co-packaged stacks run hot (see
+//! [`super::thermal`]). Interconnect KV-transfer energy is charged by
+//! the fleet per transferred byte, also outside the walk.
 
 use crate::config::HwConfig;
 use crate::mapping::MappingKind;
-use crate::model::{build_decode_graph, build_prefill_graph, LlmConfig};
-use crate::sim::{simulate_graph, EngineSet, PhaseResult};
+use crate::model::LlmConfig;
+use crate::sim::cost::CostModel;
 
-/// Energy of one simulated event (or an accumulated total), decomposed
-/// into the components the arch plane's [`crate::arch::OpCost`] tracks
-/// plus the two plane-level terms (link transfers, static floor).
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
-pub struct EnergyBreakdown {
-    /// DRAM bank/IO activity: CiD weight streaming, HBM reads feeding the
-    /// CiM/SA fill pipelines, logic-die activation streaming.
-    pub e_dram: f64,
-    /// Compute: in-DRAM MACs, ADC conversions + analog array, systolic
-    /// MACs, vector/exponent ops.
-    pub e_compute: f64,
-    /// On-chip buffers and NoC (bank SRAM, GB/IB/WB/OB, accumulators).
-    pub e_buffer: f64,
-    /// Weight programming: crossbar cell writes (and SA loads).
-    pub e_write: f64,
-    /// Interposer / fleet-interconnect bytes (KV handoffs).
-    pub e_link: f64,
-    /// Static floor integrated over time: HBM refresh + leakage.
-    pub e_static: f64,
-}
+pub use crate::sim::cost::EnergyBreakdown;
 
-impl EnergyBreakdown {
-    pub fn total(&self) -> f64 {
-        self.e_dram + self.e_compute + self.e_buffer + self.e_write + self.e_link + self.e_static
-    }
-
-    /// Dynamic (activity-proportional) share: everything but the static
-    /// floor and link transfers — what the arch plane's per-op costs sum.
-    pub fn dynamic(&self) -> f64 {
-        self.e_dram + self.e_compute + self.e_buffer + self.e_write
-    }
-
-    pub fn add(&mut self, o: &EnergyBreakdown) {
-        self.e_dram += o.e_dram;
-        self.e_compute += o.e_compute;
-        self.e_buffer += o.e_buffer;
-        self.e_write += o.e_write;
-        self.e_link += o.e_link;
-        self.e_static += o.e_static;
-    }
-
-    /// `ca * a + cb * b`, componentwise (affine interpolation helper).
-    pub fn combine(a: &EnergyBreakdown, ca: f64, b: &EnergyBreakdown, cb: f64) -> EnergyBreakdown {
-        EnergyBreakdown {
-            e_dram: ca * a.e_dram + cb * b.e_dram,
-            e_compute: ca * a.e_compute + cb * b.e_compute,
-            e_buffer: ca * a.e_buffer + cb * b.e_buffer,
-            e_write: ca * a.e_write + cb * b.e_write,
-            e_link: ca * a.e_link + cb * b.e_link,
-            e_static: ca * a.e_static + cb * b.e_static,
-        }
-    }
-
-    fn from_phase(r: &PhaseResult) -> EnergyBreakdown {
-        EnergyBreakdown {
-            e_dram: r.total.e_dram,
-            e_compute: r.total.e_compute,
-            e_buffer: r.total.e_buffer,
-            e_write: r.total.e_write,
-            e_link: 0.0,
-            e_static: 0.0,
-        }
-    }
-}
-
-/// Memoized per-event energy curves for one (model, hardware, mapping)
-/// triple — the energy twin of `CostModel`: prefill energy per distinct
-/// prompt length, decode-step energy as an affine function of context per
-/// batch size, plus the package static-power floor.
+/// Energy projection of the joint cost curves for one (model, hardware,
+/// mapping) triple, plus the package static-power floor. Every joule it
+/// reports comes from the same `simulate_graph` walk the latency plane
+/// uses — the planes agree by construction.
 pub struct EnergyModel {
-    llm: LlmConfig,
-    mapping: MappingKind,
-    engines: EngineSet,
+    cost: CostModel,
     /// Static floor at normal / hot-refresh DRAM temperature, W.
     static_cold_w: f64,
     static_hot_w: f64,
-    prefill_cache: BTreeMap<usize, EnergyBreakdown>,
-    dec_coef: BTreeMap<usize, (EnergyBreakdown, EnergyBreakdown)>,
 }
 
 impl EnergyModel {
     pub fn new(llm: &LlmConfig, hw: &HwConfig, mapping: MappingKind) -> Self {
         EnergyModel {
-            llm: llm.clone(),
-            mapping,
-            engines: EngineSet::new(hw, mapping),
+            cost: CostModel::new(llm, hw, mapping),
             static_cold_w: hw.power.static_w(hw.hbm.stacks, false),
             static_hot_w: hw.power.static_w(hw.hbm.stacks, true),
-            prefill_cache: BTreeMap::new(),
-            dec_coef: BTreeMap::new(),
         }
     }
 
@@ -127,62 +49,26 @@ impl EnergyModel {
         }
     }
 
+    /// `simulate_graph` walks performed by the underlying joint oracle.
+    pub fn walks(&self) -> u64 {
+        self.cost.walks()
+    }
+
     /// Dynamic energy of a monolithic prefill of `l_in` tokens (batch 1).
     /// Identical to the arch plane's prefill-graph energy by construction.
     pub fn prefill(&mut self, l_in: usize) -> EnergyBreakdown {
-        let (llm, engines, mapping) = (&self.llm, &self.engines, self.mapping);
-        *self.prefill_cache.entry(l_in).or_insert_with(|| {
-            EnergyBreakdown::from_phase(&simulate_graph(
-                &build_prefill_graph(llm, l_in, 1),
-                engines,
-                mapping,
-            ))
-        })
+        self.cost.prefill(l_in).energy
     }
 
     /// Dynamic energy of prefilling `chunk` new tokens over `offset`
-    /// cached ones: the larger (by total) of the incremental energy
-    /// `prefill(offset+chunk) - prefill(offset)` and the fresh-pass floor
-    /// `prefill(chunk)` — mirroring `CostModel::prefill_chunk`, because a
-    /// chunk still re-streams the full weight set regardless of how much
-    /// prefix is cached.
+    /// cached ones (see [`CostModel::prefill_chunk`]).
     pub fn prefill_chunk(&mut self, offset: usize, chunk: usize) -> EnergyBreakdown {
-        assert!(chunk > 0, "empty prefill chunk");
-        if offset == 0 {
-            return self.prefill(chunk);
-        }
-        let whole = self.prefill(offset + chunk);
-        let prefix = self.prefill(offset);
-        let inc = EnergyBreakdown::combine(&whole, 1.0, &prefix, -1.0);
-        let fresh = self.prefill(chunk);
-        if inc.total() >= fresh.total() {
-            inc
-        } else {
-            fresh
-        }
+        self.cost.prefill_chunk(offset, chunk).energy
     }
 
-    /// Dynamic energy of one batched decode step at (batch, context):
-    /// affine in ctx — two samples per batch size, interpolated
-    /// componentwise (the same two points `CostModel` samples).
+    /// Dynamic energy of one batched decode step at (batch, context).
     pub fn decode_step(&mut self, batch: usize, ctx: usize) -> EnergyBreakdown {
-        let (llm, engines, mapping) = (&self.llm, &self.engines, self.mapping);
-        let (base, slope) = *self.dec_coef.entry(batch).or_insert_with(|| {
-            let b1 = EnergyBreakdown::from_phase(&simulate_graph(
-                &build_decode_graph(llm, 512, batch),
-                engines,
-                mapping,
-            ));
-            let b2 = EnergyBreakdown::from_phase(&simulate_graph(
-                &build_decode_graph(llm, 1024, batch),
-                engines,
-                mapping,
-            ));
-            let slope = EnergyBreakdown::combine(&b2, 1.0 / 512.0, &b1, -1.0 / 512.0);
-            let base = EnergyBreakdown::combine(&b1, 1.0, &slope, -512.0);
-            (base, slope)
-        });
-        EnergyBreakdown::combine(&base, 1.0, &slope, ctx.max(1) as f64)
+        self.cost.decode_step(batch, ctx).energy
     }
 }
 
@@ -214,65 +100,14 @@ mod tests {
     }
 
     #[test]
-    fn decode_interpolation_exact_at_sampled_points() {
+    fn view_is_bit_identical_to_the_joint_oracle() {
         let mut em = model(MappingKind::Halo1);
-        let direct = simulate_phase(
-            &LlmConfig::llama2_7b(),
-            &HwConfig::paper(),
-            MappingKind::Halo1,
-            Phase::Decode,
-            512,
-            3,
-        );
-        let e = em.decode_step(3, 512).dynamic();
-        assert!((e / direct.energy - 1.0).abs() < 1e-12, "{} vs {}", e, direct.energy);
-    }
-
-    #[test]
-    fn energy_monotone_in_tokens_context_and_batch() {
-        let mut em = model(MappingKind::Halo1);
-        assert!(em.prefill(256).dynamic() < em.prefill(512).dynamic());
-        assert!(em.prefill(512).dynamic() < em.prefill(2048).dynamic());
-        assert!(em.decode_step(1, 512).dynamic() <= em.decode_step(1, 2048).dynamic());
-        assert!(em.decode_step(1, 512).dynamic() < em.decode_step(8, 512).dynamic());
-    }
-
-    #[test]
-    fn chunked_prefill_energy_covers_monolithic() {
-        let mut em = model(MappingKind::Halo1);
-        let total = 2048usize;
-        for chunk in [256usize, 512, 1024] {
-            let mut sum = 0.0;
-            let mut off = 0;
-            while off < total {
-                let take = chunk.min(total - off);
-                sum += em.prefill_chunk(off, take).dynamic();
-                off += take;
-            }
-            let mono = em.prefill(total).dynamic();
-            assert!(sum >= mono * (1.0 - 1e-9), "chunk {chunk}: {sum} < {mono}");
-            assert!(sum <= mono * 8.0, "chunk {chunk}: {sum} vs {mono}");
-        }
-    }
-
-    #[test]
-    fn halo_prefill_cheaper_than_cid_decode_cheaper_than_cim() {
-        // the §V-B energy asymmetry seen through the event model
-        let mut cid = model(MappingKind::FullCid);
-        let mut cim = model(MappingKind::FullCim);
-        assert!(cim.prefill(2048).dynamic() < cid.prefill(2048).dynamic());
-        assert!(cid.decode_step(1, 2048).dynamic() < cim.decode_step(1, 2048).dynamic());
-    }
-
-    #[test]
-    fn combine_is_componentwise_affine() {
-        let a = EnergyBreakdown { e_dram: 1.0, e_compute: 2.0, ..Default::default() };
-        let b = EnergyBreakdown { e_dram: 3.0, e_static: 4.0, ..Default::default() };
-        let c = EnergyBreakdown::combine(&a, 2.0, &b, 0.5);
-        assert_eq!(c.e_dram, 3.5);
-        assert_eq!(c.e_compute, 4.0);
-        assert_eq!(c.e_static, 2.0);
-        assert!((c.total() - (3.5 + 4.0 + 2.0)).abs() < 1e-12);
+        let mut cm = CostModel::new(&LlmConfig::llama2_7b(), &HwConfig::paper(), MappingKind::Halo1);
+        assert_eq!(em.prefill(1024), cm.prefill(1024).energy);
+        assert_eq!(em.decode_step(3, 700), cm.decode_step(3, 700).energy);
+        assert_eq!(em.prefill_chunk(512, 256), cm.prefill_chunk(512, 256).energy);
+        // the view performs exactly the oracle's walks, nothing extra
+        assert_eq!(em.walks(), cm.walks());
     }
 
     #[test]

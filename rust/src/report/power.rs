@@ -7,7 +7,7 @@ use crate::cluster::{Fleet, Interconnect, Mix, Router, SchedConfig};
 use crate::config::HwConfig;
 use crate::mapping::MappingKind;
 use crate::model::LlmConfig;
-use crate::power::{power_trace, ThermalConfig};
+use crate::power::{power_trace, DvfsConfig, ThermalConfig};
 use crate::sim::queueing::TraceRequest;
 
 const SLOTS: usize = 8;
@@ -144,7 +144,7 @@ pub fn power_timeline_at(hw: &HwConfig, t1: f64) -> Table {
     for mk in extreme_mappings() {
         let (fleet, r) = powered_replay(hw, &llm, mk, None, &trace);
         let pw = fleet.devices[0].power().expect("power tracking enabled");
-        let trace_w = power_trace(&pw.events, pw.model.static_power(false), r.makespan, WINDOWS);
+        let trace_w = power_trace(&pw.events, pw.static_power(false), r.makespan, WINDOWS);
         for (w, &avg) in trace_w.avg_w.iter().enumerate() {
             t.row(vec![
                 mk.name().into(),
@@ -204,6 +204,106 @@ pub fn tdp_throttling_at(hw: &HwConfig, caps_w: &[f64]) -> Table {
     t
 }
 
+/// Replay a saturating burst on one power-tracked HALO1 device at the
+/// given per-phase DVFS point.
+fn dvfs_replay(
+    hw: &HwConfig,
+    trace: &[TraceRequest],
+    prefill_idx: usize,
+    decode_idx: usize,
+) -> crate::cluster::FleetResult {
+    let llm = LlmConfig::llama2_7b();
+    let mut fleet = Fleet::heterogeneous_with(
+        &llm,
+        hw,
+        &[MappingKind::Halo1],
+        SLOTS,
+        Interconnect::board(),
+        SchedConfig::default(),
+    );
+    fleet.enable_power(hw, None);
+    fleet.set_dvfs(DvfsConfig::with_indices(&hw.power, prefill_idx, decode_idx));
+    let mut router: Box<dyn Router> = crate::cluster::Policy::LeastLoaded.router();
+    fleet.replay(trace, router.as_mut())
+}
+
+/// The DVFS ladder on the prefill-dominated summarization mix (both
+/// phases pinned to the same point): stepping down strictly cuts peak
+/// power but cannot cut energy per token — compute-bound prefill pays
+/// the stretched static-time penalty for a modest CV^2 saving.
+pub fn dvfs_ladder(hw: &HwConfig) -> Table {
+    let trace = Mix::Summarization.trace(57, 24, 1.0e6);
+    let tokens: u64 = trace.iter().map(|q| q.l_out as u64).sum();
+    let mut t = Table::new(
+        "power_dvfs_ladder",
+        "DVFS ladder — single HALO1 device, summarization burst (prefill-dominated): \
+         lower points cut peak power, never energy per token",
+        &[
+            "dvfs",
+            "f_scale",
+            "v_scale",
+            "energy_per_token_j",
+            "avg_power_w",
+            "peak_power_w",
+            "ttft_p50_s",
+            "served_rps",
+        ],
+    );
+    for (i, p) in hw.power.dvfs_points.iter().enumerate() {
+        let r = dvfs_replay(hw, &trace, i, i);
+        t.row(vec![
+            p.name.into(),
+            f(p.f_scale),
+            f(p.v_scale),
+            f(r.energy_per_token(tokens)),
+            f(r.avg_power_w()),
+            f(r.peak_power_w),
+            f(r.ttft_p50()),
+            f(r.throughput_rps()),
+        ]);
+    }
+    t
+}
+
+/// Per-phase DVFS split on the decode-dominated generation mix: pinning
+/// only decode to the eco point cuts energy per token below nominal
+/// (CiD's streaming power dwarfs the static floor), the HALO asymmetry
+/// exploited per phase rather than per device.
+pub fn dvfs_phase_split(hw: &HwConfig) -> Table {
+    let trace = Mix::Generation.trace(59, 32, 1.0e6);
+    let tokens: u64 = trace.iter().map(|q| q.l_out as u64).sum();
+    let eco = hw.power.dvfs_points.len() - 1;
+    let mut t = Table::new(
+        "power_dvfs_phase_split",
+        "Per-phase DVFS — single HALO1 device, generation burst (decode-dominated): \
+         eco decode beats nominal on energy per token",
+        &[
+            "dvfs",
+            "energy_per_token_j",
+            "avg_power_w",
+            "peak_power_w",
+            "tok_per_s",
+            "makespan_s",
+        ],
+    );
+    for (label, pre, dec) in [
+        ("nominal", 0, 0),
+        ("eco-decode", 0, eco),
+        ("eco", eco, eco),
+    ] {
+        let r = dvfs_replay(hw, &trace, pre, dec);
+        t.row(vec![
+            label.into(),
+            f(r.energy_per_token(tokens)),
+            f(r.avg_power_w()),
+            f(r.peak_power_w),
+            f(tokens as f64 / r.makespan.max(1e-12)),
+            f(r.makespan),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,6 +350,42 @@ mod tests {
         assert!(avg.iter().all(|&w| w >= floor * 0.99), "window under the static floor");
         // the decode-heavy CiD rows must show real dynamic power somewhere
         assert!(avg.iter().any(|&w| w > 2.0 * floor));
+    }
+
+    #[test]
+    fn dvfs_ladder_cuts_peak_power_never_prefill_energy_per_token() {
+        // satellite acceptance: lower frequency points never reduce
+        // energy per token on compute-bound prefill while strictly
+        // reducing peak power
+        let t = dvfs_ladder(&hw());
+        assert_eq!(t.rows.len(), hw().power.dvfs_points.len());
+        let ept = t.col_f64("energy_per_token_j");
+        let peak = t.col_f64("peak_power_w");
+        let ttft = t.col_f64("ttft_p50_s");
+        for w in peak.windows(2) {
+            assert!(w[1] < w[0], "peak power must fall down the ladder: {peak:?}");
+        }
+        for w in ept.windows(2) {
+            assert!(
+                w[1] >= w[0] * (1.0 - 1e-9),
+                "a lower point reduced prefill energy per token: {ept:?}"
+            );
+        }
+        for w in ttft.windows(2) {
+            assert!(w[1] > w[0], "lower points must stretch TTFT: {ttft:?}");
+        }
+    }
+
+    #[test]
+    fn eco_decode_beats_nominal_energy_per_token_on_generation() {
+        let t = dvfs_phase_split(&hw());
+        assert_eq!(t.rows.len(), 3);
+        let ept = t.col_f64("energy_per_token_j");
+        let peak = t.col_f64("peak_power_w");
+        // rows: nominal, eco-decode, eco
+        assert!(ept[1] < ept[0], "eco decode must save joules per token: {ept:?}");
+        assert!(peak[1] < peak[0], "{peak:?}");
+        assert!(peak[2] <= peak[1] * (1.0 + 1e-9), "{peak:?}");
     }
 
     #[test]

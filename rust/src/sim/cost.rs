@@ -1,0 +1,396 @@
+//! Joint latency/energy cost oracle: one memoized `simulate_graph` walk
+//! per distinct evaluation point serves both planes.
+//!
+//! The serving simulator used to keep two parallel analytical planes — a
+//! latency `CostModel` here in `sim` and an energy `EnergyModel` in
+//! `power::model` — each walking `simulate_graph` for every distinct
+//! (prefill-length / decode-batch) point, held consistent only by a
+//! cross-plane agreement test. HALO's phase-aware mapping argument rests
+//! on latency *and* energy moving together per op (CiM's high-throughput
+//! prefill vs CiD's low-data-movement decode), so both quantities now
+//! come out of a single walk as one [`PhaseCost`]: the latency that
+//! advances a device clock and the [`EnergyBreakdown`] charged for the
+//! same busy event agree by construction, and a power-tracked replay
+//! performs exactly as many graph walks as a latency-only replay (pinned
+//! by the walk counters below and `tests/power_plane.rs`).
+//!
+//! The static floor (HBM refresh + leakage), the thermal/TDP machinery,
+//! and the DVFS ladder stay in [`crate::power`]: they are properties of
+//! wall-clock time and package state, not of a graph walk.
+
+use std::collections::BTreeMap;
+
+use super::{simulate_graph, EngineSet, PhaseResult};
+use crate::config::HwConfig;
+use crate::mapping::MappingKind;
+use crate::model::{build_decode_graph, build_prefill_graph, LlmConfig, OpGraph};
+
+/// Energy of one simulated event (or an accumulated total), decomposed
+/// into the components the arch plane's [`crate::arch::OpCost`] tracks
+/// plus the two plane-level terms (link transfers, static floor).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// DRAM bank/IO activity: CiD weight streaming, HBM reads feeding the
+    /// CiM/SA fill pipelines, logic-die activation streaming.
+    pub e_dram: f64,
+    /// Compute: in-DRAM MACs, ADC conversions + analog array, systolic
+    /// MACs, vector/exponent ops.
+    pub e_compute: f64,
+    /// On-chip buffers and NoC (bank SRAM, GB/IB/WB/OB, accumulators).
+    pub e_buffer: f64,
+    /// Weight programming: crossbar cell writes (and SA loads).
+    pub e_write: f64,
+    /// Interposer / fleet-interconnect bytes (KV handoffs).
+    pub e_link: f64,
+    /// Static floor integrated over time: HBM refresh + leakage.
+    pub e_static: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.e_dram + self.e_compute + self.e_buffer + self.e_write + self.e_link + self.e_static
+    }
+
+    /// Dynamic (activity-proportional) share: everything but the static
+    /// floor and link transfers — what the arch plane's per-op costs sum.
+    pub fn dynamic(&self) -> f64 {
+        self.e_dram + self.e_compute + self.e_buffer + self.e_write
+    }
+
+    pub fn add(&mut self, o: &EnergyBreakdown) {
+        self.e_dram += o.e_dram;
+        self.e_compute += o.e_compute;
+        self.e_buffer += o.e_buffer;
+        self.e_write += o.e_write;
+        self.e_link += o.e_link;
+        self.e_static += o.e_static;
+    }
+
+    /// `ca * a + cb * b`, componentwise (affine interpolation helper).
+    pub fn combine(a: &EnergyBreakdown, ca: f64, b: &EnergyBreakdown, cb: f64) -> EnergyBreakdown {
+        EnergyBreakdown {
+            e_dram: ca * a.e_dram + cb * b.e_dram,
+            e_compute: ca * a.e_compute + cb * b.e_compute,
+            e_buffer: ca * a.e_buffer + cb * b.e_buffer,
+            e_write: ca * a.e_write + cb * b.e_write,
+            e_link: ca * a.e_link + cb * b.e_link,
+            e_static: ca * a.e_static + cb * b.e_static,
+        }
+    }
+
+    /// The dynamic components scaled by `k` (a DVFS voltage square);
+    /// link bytes and the static floor are charged elsewhere and pass
+    /// through untouched.
+    pub fn scaled_dynamic(&self, k: f64) -> EnergyBreakdown {
+        EnergyBreakdown {
+            e_dram: k * self.e_dram,
+            e_compute: k * self.e_compute,
+            e_buffer: k * self.e_buffer,
+            e_write: k * self.e_write,
+            e_link: self.e_link,
+            e_static: self.e_static,
+        }
+    }
+
+    pub fn from_phase(r: &PhaseResult) -> EnergyBreakdown {
+        EnergyBreakdown {
+            e_dram: r.total.e_dram,
+            e_compute: r.total.e_compute,
+            e_buffer: r.total.e_buffer,
+            e_write: r.total.e_write,
+            e_link: 0.0,
+            e_static: 0.0,
+        }
+    }
+}
+
+/// Joint cost of one simulated phase event — a prefill, a prefill chunk,
+/// or one batched decode step: the latency that advances the device
+/// clock and the dynamic energy charged for that same event, both read
+/// off a single `simulate_graph` walk.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseCost {
+    pub latency: f64,
+    pub energy: EnergyBreakdown,
+}
+
+impl PhaseCost {
+    pub fn from_phase(r: &PhaseResult) -> PhaseCost {
+        PhaseCost { latency: r.latency, energy: EnergyBreakdown::from_phase(r) }
+    }
+
+    /// `ca * a + cb * b` on latency and every energy component alike.
+    pub fn combine(a: &PhaseCost, ca: f64, b: &PhaseCost, cb: f64) -> PhaseCost {
+        PhaseCost {
+            latency: ca * a.latency + cb * b.latency,
+            energy: EnergyBreakdown::combine(&a.energy, ca, &b.energy, cb),
+        }
+    }
+}
+
+/// Memoized joint analytical cost curves for one (model, hardware,
+/// mapping) triple: prefill [`PhaseCost`] per distinct prompt length, and
+/// decode-step cost as an affine function of context per batch size
+/// (both latency and every energy component are affine in context, so
+/// two samples per batch size suffice). Each distinct point walks
+/// `simulate_graph` exactly once — whether or not anyone reads the
+/// energy half ([`CostModel::walks`] counts the walks).
+pub struct CostModel {
+    llm: LlmConfig,
+    mapping: MappingKind,
+    engines: EngineSet,
+    prefill_cache: BTreeMap<usize, PhaseCost>,
+    dec_coef: BTreeMap<usize, (PhaseCost, PhaseCost)>,
+    walks: u64,
+}
+
+impl CostModel {
+    pub fn new(llm: &LlmConfig, hw: &HwConfig, mapping: MappingKind) -> Self {
+        CostModel {
+            llm: llm.clone(),
+            mapping,
+            engines: EngineSet::new(hw, mapping),
+            prefill_cache: BTreeMap::new(),
+            dec_coef: BTreeMap::new(),
+            walks: 0,
+        }
+    }
+
+    /// `simulate_graph` walks this model has performed (memo misses
+    /// only) — the one-walk-per-point guarantee's observable.
+    pub fn walks(&self) -> u64 {
+        self.walks
+    }
+
+    fn walk(&mut self, graph: &OpGraph) -> PhaseCost {
+        self.walks += 1;
+        PhaseCost::from_phase(&simulate_graph(graph, &self.engines, self.mapping))
+    }
+
+    /// Joint prefill cost for a prompt of `l_in` tokens (batch 1).
+    pub fn prefill(&mut self, l_in: usize) -> PhaseCost {
+        if let Some(&c) = self.prefill_cache.get(&l_in) {
+            return c;
+        }
+        let graph = build_prefill_graph(&self.llm, l_in, 1);
+        let c = self.walk(&graph);
+        self.prefill_cache.insert(l_in, c);
+        c
+    }
+
+    /// Chunked-prefill cost: prefilling `chunk` new prompt tokens when
+    /// `offset` tokens of the prompt are already cached.
+    ///
+    /// Distinct from `prefill(chunk)`: the chunk's attention attends over
+    /// all `offset + chunk` cached tokens. Modeled as the larger of two
+    /// lower bounds, both read off the memoized monolithic curve:
+    ///
+    /// * the *incremental* cost `prefill(offset + chunk) - prefill(offset)`
+    ///   (the attention/FFN work the extended prefix adds), and
+    /// * the *fresh-pass* cost `prefill(chunk)` (a chunk is still a full
+    ///   forward pass — per-pass overheads such as weight streaming do not
+    ///   shrink with the cached prefix).
+    ///
+    /// The max makes a chunked prefill sum to at least the monolithic
+    /// `prefill(total)` (the incremental terms telescope), so chunking
+    /// trades aggregate prefill throughput for interleaving. Latency and
+    /// energy take the max independently (latency by latency, energy by
+    /// total joules), preserving both curves' telescoping bound even in
+    /// the rare regime where the two bounds disagree on the winner.
+    pub fn prefill_chunk(&mut self, offset: usize, chunk: usize) -> PhaseCost {
+        assert!(chunk > 0, "empty prefill chunk");
+        if offset == 0 {
+            return self.prefill(chunk);
+        }
+        let whole = self.prefill(offset + chunk);
+        let prefix = self.prefill(offset);
+        let fresh = self.prefill(chunk);
+        let inc_latency = (whole.latency - prefix.latency).max(0.0);
+        let inc_energy = EnergyBreakdown::combine(&whole.energy, 1.0, &prefix.energy, -1.0);
+        PhaseCost {
+            latency: inc_latency.max(fresh.latency),
+            energy: if inc_energy.total() >= fresh.energy.total() {
+                inc_energy
+            } else {
+                fresh.energy
+            },
+        }
+    }
+
+    /// Joint batched decode-step cost at (batch, context): affine in ctx
+    /// — sample two points per batch size and interpolate componentwise.
+    pub fn decode_step(&mut self, batch: usize, ctx: usize) -> PhaseCost {
+        if !self.dec_coef.contains_key(&batch) {
+            let g1 = build_decode_graph(&self.llm, 512, batch);
+            let c1 = self.walk(&g1);
+            let g2 = build_decode_graph(&self.llm, 1024, batch);
+            let c2 = self.walk(&g2);
+            let slope = PhaseCost::combine(&c2, 1.0 / 512.0, &c1, -1.0 / 512.0);
+            let base = PhaseCost::combine(&c1, 1.0, &slope, -512.0);
+            self.dec_coef.insert(batch, (base, slope));
+        }
+        let (base, slope) = self.dec_coef[&batch];
+        PhaseCost::combine(&base, 1.0, &slope, ctx.max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Phase;
+    use crate::sim::simulate_phase;
+
+    fn model(mapping: MappingKind) -> CostModel {
+        CostModel::new(&LlmConfig::llama2_7b(), &HwConfig::paper(), mapping)
+    }
+
+    #[test]
+    fn prefill_matches_direct_simulation_on_both_axes() {
+        let mut cm = model(MappingKind::Halo1);
+        let direct = simulate_phase(
+            &LlmConfig::llama2_7b(),
+            &HwConfig::paper(),
+            MappingKind::Halo1,
+            Phase::Prefill,
+            777,
+            1,
+        );
+        let c = cm.prefill(777);
+        assert_eq!(c.latency, direct.latency);
+        assert_eq!(c.energy.dynamic(), direct.energy);
+        assert_eq!(c.energy.e_link, 0.0);
+        assert_eq!(c.energy.e_static, 0.0);
+    }
+
+    #[test]
+    fn decode_interpolation_exact_at_sampled_points() {
+        let mut cm = model(MappingKind::Halo1);
+        let direct = simulate_phase(
+            &LlmConfig::llama2_7b(),
+            &HwConfig::paper(),
+            MappingKind::Halo1,
+            Phase::Decode,
+            512,
+            3,
+        );
+        let c = cm.decode_step(3, 512);
+        assert!(
+            (c.latency - direct.latency).abs() < 1e-15 * direct.latency.max(1.0),
+            "{} vs {}",
+            c.latency,
+            direct.latency
+        );
+        assert!(
+            (c.energy.dynamic() / direct.energy - 1.0).abs() < 1e-12,
+            "{} vs {}",
+            c.energy.dynamic(),
+            direct.energy
+        );
+    }
+
+    #[test]
+    fn one_walk_per_distinct_point() {
+        let mut cm = model(MappingKind::Halo1);
+        assert_eq!(cm.walks(), 0);
+        cm.prefill(512);
+        assert_eq!(cm.walks(), 1);
+        cm.prefill(512);
+        assert_eq!(cm.walks(), 1, "memo hit must not re-walk");
+        // a decode batch samples its two affine points once...
+        cm.decode_step(4, 777);
+        assert_eq!(cm.walks(), 3);
+        cm.decode_step(4, 9000);
+        assert_eq!(cm.walks(), 3, "any context interpolates for free");
+        // ...and chunk costs reuse the prefill memo
+        cm.prefill_chunk(512, 256);
+        assert_eq!(cm.walks(), 5, "prefill(768) + prefill(256); prefill(512) cached");
+        cm.prefill_chunk(512, 256);
+        assert_eq!(cm.walks(), 5);
+    }
+
+    #[test]
+    fn chunked_prefill_covers_monolithic_on_both_axes() {
+        let mut cm = model(MappingKind::Halo1);
+        let total = 2048usize;
+        for chunk in [256usize, 512, 1024] {
+            let mut lat = 0.0;
+            let mut dyn_e = 0.0;
+            let mut off = 0;
+            while off < total {
+                let take = chunk.min(total - off);
+                let c = cm.prefill_chunk(off, take);
+                lat += c.latency;
+                dyn_e += c.energy.dynamic();
+                off += take;
+            }
+            let mono = cm.prefill(total);
+            assert!(lat >= mono.latency * (1.0 - 1e-12), "chunk {chunk}: {lat}");
+            assert!(lat <= mono.latency * 8.0, "chunk {chunk}: {lat}");
+            let mono_e = mono.energy.dynamic();
+            assert!(dyn_e >= mono_e * (1.0 - 1e-9), "chunk {chunk}: {dyn_e} < {mono_e}");
+            assert!(dyn_e <= mono_e * 8.0, "chunk {chunk}: {dyn_e} vs {mono_e}");
+        }
+        // later chunks cost at least as much as a fresh pass of their size
+        let fresh = cm.prefill(256);
+        let late = cm.prefill_chunk(4096, 256);
+        assert!(late.latency >= fresh.latency);
+        assert!(late.energy.total() >= fresh.energy.total());
+    }
+
+    #[test]
+    fn energy_monotone_in_tokens_context_and_batch() {
+        let mut cm = model(MappingKind::Halo1);
+        assert!(cm.prefill(256).energy.dynamic() < cm.prefill(512).energy.dynamic());
+        assert!(cm.prefill(512).energy.dynamic() < cm.prefill(2048).energy.dynamic());
+        assert!(cm.decode_step(1, 512).energy.dynamic() <= cm.decode_step(1, 2048).energy.dynamic());
+        assert!(cm.decode_step(1, 512).energy.dynamic() < cm.decode_step(8, 512).energy.dynamic());
+    }
+
+    #[test]
+    fn halo_prefill_cheaper_than_cid_decode_cheaper_than_cim() {
+        // the §V-B energy asymmetry seen through the joint model
+        let mut cid = model(MappingKind::FullCid);
+        let mut cim = model(MappingKind::FullCim);
+        assert!(cim.prefill(2048).energy.dynamic() < cid.prefill(2048).energy.dynamic());
+        assert!(
+            cid.decode_step(1, 2048).energy.dynamic() < cim.decode_step(1, 2048).energy.dynamic()
+        );
+        // and latency moves the same way (the joint struct's raison d'etre)
+        assert!(cim.prefill(2048).latency < cid.prefill(2048).latency);
+        assert!(cid.decode_step(1, 2048).latency < cim.decode_step(1, 2048).latency);
+    }
+
+    #[test]
+    fn combine_is_componentwise_affine() {
+        let a = EnergyBreakdown { e_dram: 1.0, e_compute: 2.0, ..Default::default() };
+        let b = EnergyBreakdown { e_dram: 3.0, e_static: 4.0, ..Default::default() };
+        let c = EnergyBreakdown::combine(&a, 2.0, &b, 0.5);
+        assert_eq!(c.e_dram, 3.5);
+        assert_eq!(c.e_compute, 4.0);
+        assert_eq!(c.e_static, 2.0);
+        assert!((c.total() - (3.5 + 4.0 + 2.0)).abs() < 1e-12);
+        let pa = PhaseCost { latency: 1.0, energy: a };
+        let pb = PhaseCost { latency: 3.0, energy: b };
+        let pc = PhaseCost::combine(&pa, 2.0, &pb, 0.5);
+        assert_eq!(pc.latency, 3.5);
+        assert_eq!(pc.energy.e_dram, 3.5);
+    }
+
+    #[test]
+    fn scaled_dynamic_touches_only_dynamic_components() {
+        let e = EnergyBreakdown {
+            e_dram: 1.0,
+            e_compute: 2.0,
+            e_buffer: 3.0,
+            e_write: 4.0,
+            e_link: 5.0,
+            e_static: 6.0,
+        };
+        let s = e.scaled_dynamic(0.5);
+        assert_eq!(s.dynamic(), 5.0);
+        assert_eq!(s.e_link, 5.0);
+        assert_eq!(s.e_static, 6.0);
+        // unit scale is the exact identity (nominal DVFS stays bit-clean)
+        assert_eq!(e.scaled_dynamic(1.0), e);
+    }
+}

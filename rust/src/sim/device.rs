@@ -1,10 +1,16 @@
 //! Reusable single-device serving state machine.
 //!
 //! Extracted from `sim::queueing::replay_trace` so that the single-device
-//! replay and the `cluster` fleet simulator share one core: a [`CostModel`]
-//! (memoized analytical prefill/decode-step cost curves) plus a [`Device`]
+//! replay and the `cluster` fleet simulator share one core: a
+//! [`CostModel`] (the joint latency/energy oracle of [`super::cost`] —
+//! memoized prefill/decode-step [`PhaseCost`] curves) plus a [`Device`]
 //! (slot-based continuous batching), steppable in event time one
-//! scheduling cycle at a time.
+//! scheduling cycle at a time. Every busy event advances the clock by the
+//! latency half of one `PhaseCost` and — when power tracking is attached —
+//! charges the energy half of the *same* cost, so the two planes cannot
+//! drift. A per-phase [`DvfsConfig`] scales event latency by `1/f` and
+//! dynamic energy by `V^2` (nominal by default, which is the exact
+//! identity).
 //!
 //! Admission scheduling is pluggable via [`SchedConfig`]:
 //!
@@ -34,85 +40,15 @@
 //! instead of decoding) and [`DeviceJob::DecodeOnly`] (continue a sequence
 //! whose prefill ran on another device).
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::VecDeque;
 
 use super::queueing::{ServedRequest, TraceRequest};
-use super::{simulate_graph, EngineSet};
 use crate::config::HwConfig;
 use crate::mapping::MappingKind;
-use crate::model::{build_decode_graph, build_prefill_graph, LlmConfig};
-use crate::power::{DevicePower, EnergyModel, ThermalConfig, ThermalModel};
+use crate::model::{LlmConfig, Phase};
+use crate::power::{DevicePower, DvfsConfig, ThermalConfig, ThermalModel};
 
-/// Memoized analytical cost curves for one (model, hardware, mapping)
-/// triple: prefill latency per distinct prompt length, and decode-step
-/// latency as an affine function of context per batch size (costs are
-/// affine in context, so two samples per batch size suffice).
-pub struct CostModel {
-    llm: LlmConfig,
-    mapping: MappingKind,
-    engines: EngineSet,
-    prefill_cache: BTreeMap<usize, f64>,
-    dec_coef: BTreeMap<usize, (f64, f64)>,
-}
-
-impl CostModel {
-    pub fn new(llm: &LlmConfig, hw: &HwConfig, mapping: MappingKind) -> Self {
-        CostModel {
-            llm: llm.clone(),
-            mapping,
-            engines: EngineSet::new(hw, mapping),
-            prefill_cache: BTreeMap::new(),
-            dec_coef: BTreeMap::new(),
-        }
-    }
-
-    /// Prefill latency for a prompt of `l_in` tokens (batch 1).
-    pub fn prefill(&mut self, l_in: usize) -> f64 {
-        let (llm, engines, mapping) = (&self.llm, &self.engines, self.mapping);
-        *self.prefill_cache.entry(l_in).or_insert_with(|| {
-            simulate_graph(&build_prefill_graph(llm, l_in, 1), engines, mapping).latency
-        })
-    }
-
-    /// Chunked-prefill latency: cost of prefilling `chunk` new prompt
-    /// tokens when `offset` tokens of the prompt are already cached.
-    ///
-    /// Distinct from `prefill(chunk)`: the chunk's attention attends over
-    /// all `offset + chunk` cached tokens. Modeled as the larger of two
-    /// lower bounds, both read off the memoized monolithic curve:
-    ///
-    /// * the *incremental* cost `prefill(offset + chunk) - prefill(offset)`
-    ///   (the attention/FFN work the extended prefix adds), and
-    /// * the *fresh-pass* cost `prefill(chunk)` (a chunk is still a full
-    ///   forward pass — per-pass overheads such as weight streaming do not
-    ///   shrink with the cached prefix).
-    ///
-    /// The max makes a chunked prefill sum to at least the monolithic
-    /// `prefill(total)` (the incremental terms telescope), so chunking
-    /// trades aggregate prefill throughput for interleaving.
-    pub fn prefill_chunk(&mut self, offset: usize, chunk: usize) -> f64 {
-        assert!(chunk > 0, "empty prefill chunk");
-        if offset == 0 {
-            return self.prefill(chunk);
-        }
-        let inc = (self.prefill(offset + chunk) - self.prefill(offset)).max(0.0);
-        inc.max(self.prefill(chunk))
-    }
-
-    /// Batched decode-step latency at (batch, context): affine in ctx —
-    /// sample two points per batch size and interpolate.
-    pub fn decode_step(&mut self, batch: usize, ctx: usize) -> f64 {
-        let (llm, engines, mapping) = (&self.llm, &self.engines, self.mapping);
-        let (a, b) = *self.dec_coef.entry(batch).or_insert_with(|| {
-            let t1 = simulate_graph(&build_decode_graph(llm, 512, batch), engines, mapping).latency;
-            let t2 =
-                simulate_graph(&build_decode_graph(llm, 1024, batch), engines, mapping).latency;
-            let slope = (t2 - t1) / 512.0;
-            (t1 - slope * 512.0, slope)
-        });
-        a + b * ctx.max(1) as f64
-    }
-}
+pub use super::cost::{CostModel, PhaseCost};
 
 /// Prompt length at or below which a request counts as interactive for
 /// [`AdmissionPolicy::Interactive`] (the chat band of the workload mixes).
@@ -363,6 +299,11 @@ pub struct Device {
     /// (the default) keeps every latency computation bit-identical to the
     /// untracked device.
     power: Option<DevicePower>,
+    /// Per-phase DVFS operating points (nominal by default, the exact
+    /// identity). Static points apply with or without power tracking;
+    /// the thermal stepped governor additionally needs power tracking
+    /// with a TDP cap.
+    dvfs: DvfsConfig,
 }
 
 impl Device {
@@ -407,18 +348,18 @@ impl Device {
             recompute_tokens: 0,
             kv_peak: 0,
             power: None,
+            dvfs: DvfsConfig::nominal(&hw.power),
         }
     }
 
     /// Attach per-event energy attribution (and, with a [`ThermalConfig`],
     /// live TDP throttling) to this device. Call before pushing work.
     /// Without a thermal cap the replay's latency results stay
-    /// bit-identical to the untracked device.
-    pub fn enable_power(&mut self, llm: &LlmConfig, hw: &HwConfig, thermal: Option<ThermalConfig>) {
-        self.power = Some(DevicePower::new(
-            EnergyModel::new(llm, hw, self.mapping),
-            thermal.map(ThermalModel::new),
-        ));
+    /// bit-identical to the untracked device — the energy charged per
+    /// event is the energy half of the same [`PhaseCost`] that advances
+    /// the clock, so attribution adds no extra `simulate_graph` walks.
+    pub fn enable_power(&mut self, hw: &HwConfig, thermal: Option<ThermalConfig>) {
+        self.power = Some(DevicePower::new(hw, thermal.map(ThermalModel::new)));
     }
 
     /// The power/thermal state, if tracking is enabled.
@@ -426,29 +367,30 @@ impl Device {
         self.power.as_ref()
     }
 
-    /// Attribute a prefill (or prefill-chunk) busy event starting at
-    /// `start` and return its actual duration: `raw` untouched when power
-    /// tracking is off, possibly stretched by the thermal throttle when
-    /// it is on.
-    fn charge_prefill(&mut self, start: f64, raw: f64, offset: usize, tokens: usize) -> f64 {
-        match &mut self.power {
-            None => raw,
-            Some(pw) => {
-                let e = pw.model.prefill_chunk(offset, tokens);
-                pw.busy_event(start, raw, e)
-            }
-        }
+    /// Override the per-phase DVFS operating points (nominal by default).
+    pub fn set_dvfs(&mut self, dvfs: DvfsConfig) {
+        self.dvfs = dvfs;
     }
 
-    /// Attribute a batched decode-step busy event (see
-    /// [`Self::charge_prefill`]).
-    fn charge_decode(&mut self, start: f64, raw: f64, batch: usize, ctx: usize) -> f64 {
+    pub fn dvfs(&self) -> &DvfsConfig {
+        &self.dvfs
+    }
+
+    /// `simulate_graph` walks this device's cost oracle has performed.
+    pub fn cost_walks(&self) -> u64 {
+        self.cost.walks()
+    }
+
+    /// Charge one busy event of the given phase starting at `start` and
+    /// return the duration the clock must advance by: the nominal
+    /// latency scaled by the phase's DVFS point, then — with power
+    /// tracking on — stretched by the thermal scalar throttle or the
+    /// stepped governor, with the event's energy attributed from the
+    /// same joint cost.
+    fn charge(&mut self, start: f64, nominal: PhaseCost, phase: Phase) -> f64 {
         match &mut self.power {
-            None => raw,
-            Some(pw) => {
-                let e = pw.model.decode_step(batch, ctx);
-                pw.busy_event(start, raw, e)
-            }
+            None => nominal.latency * self.dvfs.point(phase).time_scale(),
+            Some(pw) => pw.busy_event(start, nominal, &self.dvfs, phase),
         }
     }
 
@@ -662,9 +604,9 @@ impl Device {
                 }
                 match self.queue.remove(idx).unwrap() {
                     DeviceJob::Full { arrival, ready, l_in, l_out } => {
-                        let p = self.cost.prefill(l_in);
+                        let c = self.cost.prefill(l_in);
                         let start = self.now.max(ready);
-                        let p = self.charge_prefill(start, p, 0, l_in);
+                        let p = self.charge(start, c, Phase::Prefill);
                         self.now = start + p;
                         self.busy += p;
                         self.last_active = self.now;
@@ -683,9 +625,9 @@ impl Device {
                     DeviceJob::Resume { arrival, ready, first_token_at, ctx, remaining } => {
                         // recompute the evicted KV prefix, then resume
                         // decoding; TTFT was already earned
-                        let p = self.cost.prefill(ctx);
+                        let c = self.cost.prefill(ctx);
                         let start = self.now.max(ready);
-                        let p = self.charge_prefill(start, p, 0, ctx);
+                        let p = self.charge(start, c, Phase::Prefill);
                         self.now = start + p;
                         self.busy += p;
                         self.last_active = self.now;
@@ -697,9 +639,9 @@ impl Device {
             } else {
                 match self.queue.remove(idx).unwrap() {
                     DeviceJob::PrefillOnly { arrival, ready, l_in, l_out, decode_dev } => {
-                        let p = self.cost.prefill(l_in);
+                        let c = self.cost.prefill(l_in);
                         let start = self.now.max(ready);
-                        let p = self.charge_prefill(start, p, 0, l_in);
+                        let p = self.charge(start, c, Phase::Prefill);
                         self.now = start + p;
                         self.busy += p;
                         self.last_active = self.now;
@@ -787,8 +729,8 @@ impl Device {
         while i < self.prefilling.len() {
             let offset = self.prefilling[i].offset;
             let take = chunk.min(self.prefilling[i].l_in - offset);
-            let dt = self.cost.prefill_chunk(offset, take);
-            let dt = self.charge_prefill(self.now, dt, offset, take);
+            let c = self.cost.prefill_chunk(offset, take);
+            let dt = self.charge(self.now, c, Phase::Prefill);
             self.now += dt;
             self.busy += dt;
             self.last_active = self.now;
@@ -876,8 +818,8 @@ impl Device {
             return;
         }
         let mean_ctx = self.active.iter().flatten().map(|s| s.ctx).sum::<usize>() / batch;
-        let dt = self.cost.decode_step(batch, mean_ctx);
-        let dt = self.charge_decode(self.now, dt, batch, mean_ctx);
+        let c = self.cost.decode_step(batch, mean_ctx);
+        let dt = self.charge(self.now, c, Phase::Decode);
         self.now += dt;
         self.busy += dt;
         self.last_active = self.now;
@@ -1008,46 +950,6 @@ mod tests {
     }
 
     #[test]
-    fn cost_model_matches_direct_simulation() {
-        let llm = LlmConfig::llama2_7b();
-        let hw = HwConfig::paper();
-        let mut cm = CostModel::new(&llm, &hw, MappingKind::Halo1);
-        let engines = EngineSet::new(&hw, MappingKind::Halo1);
-        let direct =
-            simulate_graph(&build_prefill_graph(&llm, 777, 1), &engines, MappingKind::Halo1)
-                .latency;
-        assert_eq!(cm.prefill(777), direct);
-        // affine interpolation is exact at the sampled points
-        let d512 = simulate_graph(&build_decode_graph(&llm, 512, 3), &engines, MappingKind::Halo1)
-            .latency;
-        assert!((cm.decode_step(3, 512) - d512).abs() < 1e-15 * d512.max(1.0));
-    }
-
-    #[test]
-    fn chunked_prefill_total_covers_monolithic() {
-        let llm = LlmConfig::llama2_7b();
-        let hw = HwConfig::paper();
-        let mut cm = CostModel::new(&llm, &hw, MappingKind::Halo1);
-        let total = 2048usize;
-        for chunk in [128usize, 512, 1024] {
-            let mut sum = 0.0;
-            let mut off = 0;
-            while off < total {
-                let take = chunk.min(total - off);
-                sum += cm.prefill_chunk(off, take);
-                off += take;
-            }
-            let mono = cm.prefill(total);
-            assert!(sum >= mono * (1.0 - 1e-12), "chunk {chunk}: {sum} < {mono}");
-            // and chunking is not absurdly more expensive either
-            assert!(sum <= mono * 8.0, "chunk {chunk}: {sum} vs {mono}");
-        }
-        // later chunks cost at least as much as a fresh pass of their size
-        let fresh = cm.prefill(256);
-        assert!(cm.prefill_chunk(4096, 256) >= fresh);
-    }
-
-    #[test]
     fn default_sched_is_serialized_fifo_unlimited() {
         let d = dev(2);
         assert_eq!(*d.sched(), SchedConfig::default());
@@ -1079,7 +981,7 @@ mod tests {
         assert_eq!(d.prefills, 2);
         // chunking never undercuts the monolithic prefill cost
         let mut cm = cost_model();
-        assert!(d.busy >= cm.prefill(1024) + cm.prefill(64));
+        assert!(d.busy >= cm.prefill(1024).latency + cm.prefill(64).latency);
     }
 
     #[test]
@@ -1105,7 +1007,7 @@ mod tests {
         // the short prompt (pushed second) completes first under SPF
         assert_eq!(d.served[0].arrival, 0.0);
         let mut cm = cost_model();
-        assert!((d.served[0].ttft - cm.prefill(64)).abs() < 1e-12, "{}", d.served[0].ttft);
+        assert!((d.served[0].ttft - cm.prefill(64).latency).abs() < 1e-12, "{}", d.served[0].ttft);
     }
 
     #[test]
@@ -1120,11 +1022,11 @@ mod tests {
         drain(&mut d);
         assert_eq!(d.served.len(), 3);
         let mut cm = cost_model();
-        let p100 = cm.prefill(100);
+        let p100 = cm.prefill(100).latency;
         assert!((d.served[0].ttft - p100).abs() < 1e-12, "interactive prompt first");
         // second served is the 5000-token prompt (FIFO within the
         // non-interactive class): its prefill started after 100's
-        let p5000 = cm.prefill(5000);
+        let p5000 = cm.prefill(5000).latency;
         assert!((d.served[1].ttft - (p100 + d.cost_decode_probe() + p5000)).abs() < 1e-9);
     }
 
@@ -1276,7 +1178,7 @@ mod tests {
         jobs(&mut plain);
         drain(&mut plain);
         let mut tracked = dev(2);
-        tracked.enable_power(&LlmConfig::llama2_7b(), &HwConfig::paper(), None);
+        tracked.enable_power(&HwConfig::paper(), None);
         jobs(&mut tracked);
         drain(&mut tracked);
         assert_eq!(plain.now().to_bits(), tracked.now().to_bits());
@@ -1286,17 +1188,19 @@ mod tests {
             assert_eq!(a.e2e.to_bits(), b.e2e.to_bits());
         }
         // and the tracked replay actually attributed energy per event
+        // without a single extra graph walk
         let pw = tracked.power().unwrap();
         assert!(pw.energy.total() > 0.0);
         assert_eq!(pw.events.len() as u64, tracked.prefills + tracked.decode_steps);
         assert_eq!(pw.throttled_s, 0.0);
+        assert_eq!(plain.cost_walks(), tracked.cost_walks());
     }
 
     #[test]
     fn tdp_cap_stretches_service_time() {
         let run = |thermal: Option<ThermalConfig>| {
             let mut d = dev(4);
-            d.enable_power(&LlmConfig::llama2_7b(), &HwConfig::paper(), thermal);
+            d.enable_power(&HwConfig::paper(), thermal);
             for _ in 0..4 {
                 d.push(DeviceJob::Full { arrival: 0.0, ready: 0.0, l_in: 512, l_out: 256 });
             }
@@ -1321,12 +1225,49 @@ mod tests {
         assert!(th.max_temp_c > th.cfg.ambient_c);
     }
 
+    #[test]
+    fn static_dvfs_scales_latency_identically_tracked_or_not() {
+        let hw = HwConfig::paper();
+        let eco = hw.power.dvfs_points.len() - 1;
+        // burst arrivals: the admission order (hence the busy-event set)
+        // is speed-independent, so busy time must scale exactly by 1/f
+        let jobs = |d: &mut Device| {
+            for _ in 0..4 {
+                d.push(DeviceJob::Full { arrival: 0.0, ready: 0.0, l_in: 256, l_out: 6 });
+            }
+        };
+        let run = |dvfs_idx: usize, power: bool| {
+            let mut d = dev(2);
+            if power {
+                d.enable_power(&hw, None);
+            }
+            d.set_dvfs(DvfsConfig::with_indices(&hw.power, dvfs_idx, dvfs_idx));
+            jobs(&mut d);
+            drain(&mut d);
+            d
+        };
+        // the static point is a performance knob: it applies with or
+        // without power tracking, bit-identically
+        let plain_eco = run(eco, false);
+        let tracked_eco = run(eco, true);
+        assert_eq!(plain_eco.now().to_bits(), tracked_eco.now().to_bits());
+        assert_eq!(plain_eco.busy.to_bits(), tracked_eco.busy.to_bits());
+        // and a lower point slows the device by exactly its 1/f stretch
+        let nominal = run(0, false);
+        let f = hw.power.dvfs_points[eco].f_scale;
+        assert!(f < 1.0);
+        let ratio = plain_eco.busy / nominal.busy;
+        assert!((ratio - 1.0 / f).abs() < 1e-9, "busy stretch {ratio} vs 1/f {}", 1.0 / f);
+        // no throttling is booked for a *configured* slowdown
+        assert_eq!(tracked_eco.power().unwrap().throttled_s, 0.0);
+    }
+
     impl Device {
         /// Test helper: decode-step latency probe at batch 1, context 100
         /// — the step that completes the interactive request and frees
         /// its slot for the next admission.
         fn cost_decode_probe(&mut self) -> f64 {
-            self.cost.decode_step(1, 100)
+            self.cost.decode_step(1, 100).latency
         }
     }
 }

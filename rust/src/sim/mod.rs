@@ -1,17 +1,21 @@
 //! Simulation engine: walks an operator graph, costs each op on the
 //! engine chosen by the mapping, and aggregates phase and end-to-end
-//! latency/energy with per-kind and per-component breakdowns.
+//! latency/energy with per-kind and per-component breakdowns. The
+//! [`cost`] module memoizes those walks into joint latency/energy
+//! [`cost::PhaseCost`] curves for the event-driven planes.
 //!
 //! Decode steps are costed at the mid-generation context length
 //! (`l_in + l_out/2`); every decode cost component is affine in the
 //! context length (attention GEMVs and softmax scale linearly, everything
 //! else is constant), so the midpoint equals the exact per-step average.
 
+pub mod cost;
 pub mod device;
 pub mod queueing;
 pub mod roofline;
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::arch::cid::CidEngine;
 use crate::arch::cim::CimEngine;
@@ -138,8 +142,20 @@ impl EngineSet {
     }
 }
 
+/// Process-wide count of [`simulate_graph`] walks, monotonically
+/// increasing. Test instrumentation for the one-walk-per-point guarantee
+/// of [`cost::CostModel`]; tests running in parallel share it, so assert
+/// on deltas being at least (never exactly) the walks you triggered.
+static GRAPH_WALKS: AtomicU64 = AtomicU64::new(0);
+
+/// Read the process-wide [`simulate_graph`] walk counter.
+pub fn graph_walks() -> u64 {
+    GRAPH_WALKS.load(Ordering::Relaxed)
+}
+
 /// Cost a whole graph under a mapping.
 pub fn simulate_graph(graph: &OpGraph, engines: &EngineSet, mapping: MappingKind) -> PhaseResult {
+    GRAPH_WALKS.fetch_add(1, Ordering::Relaxed);
     let mut res = PhaseResult::default();
     for op in &graph.ops {
         let sel = mapping.assign(op, graph.phase);

@@ -102,13 +102,21 @@ pub struct ServedRequest {
 }
 
 /// p-th TTFT percentile over a served set (shared by the single-device
-/// [`QueueingResult`] and the fleet result type).
+/// [`QueueingResult`] and the fleet result type). 0.0 on an empty set —
+/// an empty or fully rejected trace must yield finite zero metrics, not
+/// a panic or NaN poisoning downstream `total_cmp` rankings.
 pub fn ttft_percentile(served: &[ServedRequest], p: f64) -> f64 {
+    if served.is_empty() {
+        return 0.0;
+    }
     percentile(&served.iter().map(|r| r.ttft).collect::<Vec<_>>(), p)
 }
 
-/// p-th end-to-end-latency percentile over a served set.
+/// p-th end-to-end-latency percentile over a served set (0.0 on empty).
 pub fn e2e_percentile(served: &[ServedRequest], p: f64) -> f64 {
+    if served.is_empty() {
+        return 0.0;
+    }
     percentile(&served.iter().map(|r| r.e2e).collect::<Vec<_>>(), p)
 }
 

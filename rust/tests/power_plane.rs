@@ -1,15 +1,20 @@
 //! Power-plane integration tests: cross-plane energy agreement (the
-//! event-driven replay must accumulate the same joules the analytical
-//! `arch` plane computes), monotonicity of energy in workload size, the
-//! zero-overhead guarantee (power tracking off or uncapped changes no
-//! latency bit), interconnect KV-transfer energy accounting, and the
-//! live TDP throttling feedback (tighter caps cost real throughput).
+//! event-driven replay charges exactly the joules the joint cost oracle
+//! computes — bit-for-bit, since both halves come from one
+//! `simulate_graph` walk), the one-walk-per-point guarantee (power
+//! tracking adds no graph walks), monotonicity of energy in workload
+//! size, the zero-overhead guarantee (power tracking off or uncapped
+//! changes no latency bit), interconnect KV-transfer energy accounting,
+//! the live TDP throttling feedback (tighter caps cost real throughput),
+//! and the per-phase DVFS plane (ladder monotonicity, stepped governor
+//! convergence).
 
 use halo::cluster::{Fleet, Interconnect, Mix, Policy};
 use halo::config::HwConfig;
 use halo::mapping::MappingKind;
 use halo::model::LlmConfig;
-use halo::power::ThermalConfig;
+use halo::power::{DvfsConfig, ThermalConfig};
+use halo::sim::cost::CostModel;
 use halo::sim::queueing::TraceRequest;
 use halo::sim::{simulate_e2e, Scenario};
 
@@ -34,6 +39,56 @@ fn powered_replay(
 
 fn single_request(l_in: usize, l_out: usize) -> Vec<TraceRequest> {
     vec![TraceRequest { arrival: 0.0, l_in, l_out, tenant: 0 }]
+}
+
+#[test]
+fn replay_energy_equals_the_joint_oracle_bit_for_bit() {
+    // acceptance: both planes share one walk, so the agreement is exact
+    // equality, not a 5% band. A single-request replay runs one prefill
+    // at l_in and l_out decode steps at contexts l_in .. l_in+l_out-1
+    // (batch 1); accumulating the same curves in the same order must
+    // reproduce the replay's dynamic energy to the last bit.
+    for (l_in, l_out) in [(512usize, 16usize), (1024, 8)] {
+        let r = powered_replay(&single_request(l_in, l_out), None);
+        let mut cm = CostModel::new(&llm(), &hw(), MappingKind::Halo1);
+        let mut want = cm.prefill(l_in).energy;
+        for k in 0..l_out {
+            want.add(&cm.decode_step(1, l_in + k).energy);
+        }
+        assert_eq!(r.energy.e_dram.to_bits(), want.e_dram.to_bits(), "({l_in},{l_out})");
+        assert_eq!(r.energy.e_compute.to_bits(), want.e_compute.to_bits());
+        assert_eq!(r.energy.e_buffer.to_bits(), want.e_buffer.to_bits());
+        assert_eq!(r.energy.e_write.to_bits(), want.e_write.to_bits());
+        assert_eq!(r.energy.dynamic().to_bits(), want.dynamic().to_bits());
+    }
+}
+
+#[test]
+fn power_tracking_performs_no_extra_graph_walks() {
+    // acceptance: with power tracking enabled, each distinct
+    // (prefill-length / decode-batch / chunk) point walks simulate_graph
+    // exactly once — a power-tracked replay performs no more walks than
+    // the latency-only replay of the same trace
+    let trace = Mix::Interactive.trace(41, 48, 12.0);
+    let walks = |power: bool| {
+        let mut fleet = Fleet::unified(&llm(), &hw(), 2, 8, Interconnect::board());
+        if power {
+            fleet.enable_power(&hw(), None);
+        }
+        let mut router = Policy::LeastLoaded.router();
+        fleet.replay(&trace, router.as_mut());
+        fleet.cost_walks()
+    };
+    let plain = walks(false);
+    let tracked = walks(true);
+    assert!(plain > 0);
+    assert!(tracked <= plain, "power tracking added walks: {tracked} vs {plain}");
+    assert_eq!(tracked, plain, "same trace, same distinct points, same walks");
+    // and the process-wide counter on simulate_graph moves when a walk runs
+    let before = halo::sim::graph_walks();
+    let mut cm = CostModel::new(&llm(), &hw(), MappingKind::Halo1);
+    cm.prefill(333);
+    assert!(halo::sim::graph_walks() >= before + 1);
 }
 
 #[test]
@@ -153,6 +208,89 @@ fn kv_transfers_cost_joules_proportional_to_bytes() {
     let ratio = eth.kv_transfer_energy_j / board.kv_transfer_energy_j;
     let want_ratio = Interconnect::ethernet().e_per_byte / Interconnect::board().e_per_byte;
     assert!((ratio - want_ratio).abs() < 1e-9, "{ratio} vs {want_ratio}");
+}
+
+#[test]
+fn dvfs_ladder_monotone_on_compute_bound_prefill() {
+    // satellite acceptance: on compute-bound prefill, lower frequency
+    // points never reduce energy per token (the static-time penalty
+    // outweighs the shallow CV^2 saving) while strictly reducing peak
+    // power — and they strictly stretch the replay.
+    let trace: Vec<TraceRequest> = (0..12)
+        .map(|i| TraceRequest { arrival: i as f64 * 1e-3, l_in: 2048, l_out: 1, tenant: 0 })
+        .collect();
+    let ladder_len = hw().power.dvfs_points.len();
+    assert!(ladder_len >= 3);
+    let run = |idx: usize| {
+        let mut fleet = Fleet::unified(&llm(), &hw(), 1, 8, Interconnect::board());
+        fleet.enable_power(&hw(), None);
+        fleet.set_dvfs(DvfsConfig::with_indices(&hw().power, idx, idx));
+        let mut router = Policy::LeastLoaded.router();
+        fleet.replay(&trace, router.as_mut())
+    };
+    let runs: Vec<_> = (0..ladder_len).map(run).collect();
+    for w in runs.windows(2) {
+        assert!(
+            w[1].energy_j() >= w[0].energy_j() * (1.0 - 1e-9),
+            "a lower point reduced prefill energy: {} vs {}",
+            w[1].energy_j(),
+            w[0].energy_j()
+        );
+        assert!(
+            w[1].peak_power_w < w[0].peak_power_w,
+            "peak power must fall down the ladder: {} vs {}",
+            w[1].peak_power_w,
+            w[0].peak_power_w
+        );
+        assert!(w[1].makespan > w[0].makespan, "lower points must be slower");
+    }
+    // configured slowdowns book no throttle time
+    assert!(runs.iter().all(|r| r.throttled_s == 0.0));
+}
+
+#[test]
+fn dvfs_governor_converges_under_a_tdp_cap_like_the_scalar_throttle() {
+    // the stepped governor replaces the scalar throttle factor: under a
+    // TDP cap it must trade real throughput for power (monotonically in
+    // the cap) by walking the ladder, and do nothing uncapped
+    let trace = Mix::Generation.trace(39, 40, 1.0e6);
+    let run = |cap: Option<f64>| {
+        let mut fleet = Fleet::unified(&llm(), &hw(), 1, 8, Interconnect::board());
+        fleet.enable_power(
+            &hw(),
+            cap.map(|w| {
+                // short replay: shrink the thermal time constant so the
+                // package reaches its band within the test's busy time
+                let mut c = ThermalConfig::paper(w);
+                c.tau_s = 0.05;
+                c
+            }),
+        );
+        fleet.set_dvfs(DvfsConfig::governed(&hw().power));
+        let mut router = Policy::LeastLoaded.router();
+        let r = fleet.replay(&trace, router.as_mut());
+        let max_gov = fleet.devices[0].power().unwrap().max_gov_idx;
+        (r, max_gov)
+    };
+    let (free, free_gov) = run(None);
+    let (mid, mid_gov) = run(Some(120.0));
+    let (tight, tight_gov) = run(Some(60.0));
+    // no cap, no thermal model: the governor never engages
+    assert_eq!(free_gov, 0);
+    assert_eq!(free.throttled_s, 0.0);
+    // capped runs walk the ladder and pay real wall-clock time
+    assert!(tight_gov >= 1, "tight cap must step the governor down");
+    assert!(tight.throttled_s > 0.0);
+    assert!(
+        tight.makespan > free.makespan * 1.05,
+        "a 60 W cap must visibly stretch the replay: {} vs {}",
+        tight.makespan,
+        free.makespan
+    );
+    // tighter caps never run faster (small slack for rung hysteresis)
+    assert!(mid.makespan >= free.makespan * (1.0 - 1e-9));
+    assert!(tight.makespan >= mid.makespan * 0.999, "{} vs {}", tight.makespan, mid.makespan);
+    assert!(tight_gov >= mid_gov);
 }
 
 #[test]

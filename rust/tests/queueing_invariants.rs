@@ -62,7 +62,7 @@ fn ttft_covers_prefill_and_e2e_covers_ttft() {
                 // arrivals are unique, so they key the original request
                 let req =
                     tr.iter().find(|q| q.arrival == s.arrival).expect("served unknown arrival");
-                let p = cost.prefill(req.l_in);
+                let p = cost.prefill(req.l_in).latency;
                 s.ttft >= p - 1e-12 && s.e2e >= s.ttft - 1e-12
             })
         },
@@ -96,7 +96,7 @@ fn decode_interpolation_matches_direct_simulation_at_unsampled_points() {
         for (batch, ctx) in [(1usize, 777usize), (3, 768), (5, 600), (2, 900)] {
             let graph = build_decode_graph(&llm, ctx, batch);
             let direct = simulate_graph(&graph, &engines, mapping).latency;
-            let interp = cm.decode_step(batch, ctx);
+            let interp = cm.decode_step(batch, ctx).latency;
             assert!(
                 (interp - direct).abs() < 1e-6 * direct,
                 "{} batch {batch} ctx {ctx}: interp {interp} vs direct {direct}",
@@ -112,7 +112,7 @@ fn prefill_memoization_is_stable_across_repeat_calls() {
     let mut cm = CostModel::new(&llm, &hw(), MappingKind::Halo1);
     for l_in in [64usize, 777, 2048, 8192] {
         let first = cm.prefill(l_in);
-        assert!(first > 0.0);
+        assert!(first.latency > 0.0 && first.energy.dynamic() > 0.0);
         // bitwise-identical on every repeat call (memoized, no recompute
         // drift)
         for _ in 0..3 {
