@@ -12,11 +12,12 @@ use super::router::Router;
 use crate::config::HwConfig;
 use crate::mapping::MappingKind;
 use crate::model::LlmConfig;
+use crate::obs::{self, Span, SpanKind, Track};
 use crate::power::{DvfsConfig, EnergyBreakdown, ThermalConfig};
 use crate::sim::device::{Device, DeviceJob, SchedConfig};
-use crate::sim::queueing::{
-    e2e_percentile, served_rate, ttft_percentile, ServedRequest, TraceRequest,
-};
+use crate::sim::queueing::{served_rate, ServedRequest, TraceRequest};
+use crate::util::json::Json;
+use crate::util::percentile_sorted;
 
 /// A KV cache in flight between a prefill device and a decode device.
 #[derive(Debug, Clone)]
@@ -52,6 +53,9 @@ pub struct Fleet {
     /// (`(l_in + l_out) x bytes/token`), per device — what a
     /// capacity-aware router must subtract from the device headroom.
     pending_kv: Vec<u64>,
+    /// KV-handoff transfer spans for the trace's interconnect track
+    /// (`Some` once [`Fleet::enable_obs`] is called).
+    obs_kv: Option<Vec<Span>>,
 }
 
 impl Fleet {
@@ -92,6 +96,7 @@ impl Fleet {
             kv_energy_j: 0.0,
             pending_decode: vec![0; devices],
             pending_kv: vec![0; devices],
+            obs_kv: None,
         }
     }
 
@@ -125,6 +130,7 @@ impl Fleet {
             kv_energy_j: 0.0,
             pending_decode: vec![0; devices],
             pending_kv: vec![0; devices],
+            obs_kv: None,
         }
     }
 
@@ -184,6 +190,7 @@ impl Fleet {
             kv_energy_j: 0.0,
             pending_decode: vec![0; devices],
             pending_kv: vec![0; devices],
+            obs_kv: None,
         }
     }
 
@@ -206,6 +213,19 @@ impl Fleet {
         }
     }
 
+    /// Attach a request-lifecycle span recorder ([`crate::obs`]) to every
+    /// device and start collecting KV-transfer spans for the trace's
+    /// interconnect track. Pure observation: recording copies the same
+    /// `f64`s that advance the clocks, so an instrumented replay is
+    /// bit-identical to an untracked one. Call before [`Fleet::replay`];
+    /// export with [`Fleet::chrome_trace`] afterwards.
+    pub fn enable_obs(&mut self) {
+        for d in &mut self.devices {
+            d.enable_obs();
+        }
+        self.obs_kv = Some(Vec::new());
+    }
+
     /// Pin every device to the same per-phase DVFS configuration (static
     /// operating points, optionally the thermal stepped governor — the
     /// governor engages only on power-tracked devices with a TDP cap).
@@ -219,6 +239,12 @@ impl Fleet {
     /// oracles (the one-walk-per-point guarantee's observable).
     pub fn cost_walks(&self) -> u64 {
         self.devices.iter().map(|d| d.cost_walks()).sum()
+    }
+
+    /// Total cost-oracle lookups served from memo tables without a walk
+    /// (the other half of the one-walk-per-point guarantee).
+    pub fn cost_memo_hits(&self) -> u64 {
+        self.devices.iter().map(|d| d.cost_memo_hits()).sum()
     }
 
     /// Decode-side load of a device as a router should see it: queued +
@@ -317,8 +343,18 @@ impl Fleet {
                     self.kv_bytes += bytes;
                     self.transfers += 1;
                     self.kv_energy_j += self.interconnect.transfer_energy(bytes);
+                    let t_xfer = self.interconnect.transfer_time(bytes);
+                    if let Some(kv) = &mut self.obs_kv {
+                        kv.push(Span {
+                            kind: SpanKind::KvTransfer,
+                            start: done.done_at,
+                            dur: t_xfer,
+                            arrival: done.arrival,
+                            batch: 1,
+                        });
+                    }
                     inflight.push(InFlight {
-                        ready: done.done_at + self.interconnect.transfer_time(bytes),
+                        ready: done.done_at + t_xfer,
                         dev: done.decode_dev,
                         arrival: done.arrival,
                         first_token_at: done.done_at,
@@ -379,8 +415,17 @@ impl Fleet {
         }
         fleet_energy.e_link += self.kv_energy_j;
         debug_assert_eq!(served.len(), n_requests, "requests conserved");
+        // sorted once here, with util::percentile's exact comparator, so
+        // the percentile accessors stay bit-compatible with the legacy
+        // clone-and-sort helpers without re-sorting per call
+        let mut ttft_sorted: Vec<f64> = served.iter().map(|s| s.ttft).collect();
+        ttft_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut e2e_sorted: Vec<f64> = served.iter().map(|s| s.e2e).collect();
+        e2e_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         FleetResult {
             served,
+            ttft_sorted,
+            e2e_sorted,
             makespan,
             decode_steps: per_device.iter().map(|s| s.decode_steps).sum(),
             prefills: per_device.iter().map(|s| s.prefills).sum(),
@@ -395,6 +440,34 @@ impl Fleet {
             throttled_s,
             per_device,
         }
+    }
+
+    /// Export the recorded replay as a Chrome-trace/Perfetto JSON
+    /// document: one track per device plus an interconnect track for KV
+    /// handoffs. `None` unless [`Fleet::enable_obs`] was called before
+    /// the replay. Event order is deterministic, so the same seed always
+    /// produces a byte-identical trace.
+    pub fn chrome_trace(&self) -> Option<Json> {
+        let mut tracks = Vec::with_capacity(self.devices.len());
+        for d in &self.devices {
+            tracks.push(Track {
+                tid: d.id,
+                label: format!(
+                    "dev{} {} ({})",
+                    d.id,
+                    d.mapping.name(),
+                    role_of(d.id, &self.prefill_pool, &self.decode_pool)
+                ),
+                rec: d.obs()?,
+            });
+        }
+        let kv = self.obs_kv.as_deref().unwrap_or(&[]);
+        Some(obs::chrome_trace(&tracks, kv, "interconnect"))
+    }
+
+    /// Recorded KV-transfer spans (`None` unless obs is enabled).
+    pub fn kv_spans(&self) -> Option<&[Span]> {
+        self.obs_kv.as_deref()
     }
 }
 
@@ -450,6 +523,12 @@ impl DeviceSummary {
 #[derive(Debug, Clone)]
 pub struct FleetResult {
     pub served: Vec<ServedRequest>,
+    /// TTFTs of `served`, ascending — built once at collection so the
+    /// percentile accessors are cheap reads instead of a clone-and-sort
+    /// per call (DSE reads several per objective evaluation).
+    pub ttft_sorted: Vec<f64>,
+    /// End-to-end latencies of `served`, ascending (see `ttft_sorted`).
+    pub e2e_sorted: Vec<f64>,
     pub makespan: f64,
     pub decode_steps: u64,
     pub prefills: u64,
@@ -475,17 +554,35 @@ pub struct FleetResult {
 }
 
 impl FleetResult {
+    /// TTFT at percentile `p` off the cached sorted view —
+    /// bit-compatible with `ttft_percentile(&self.served, p)` without
+    /// the per-call clone-and-sort. 0.0 when nothing was served.
+    pub fn ttft_pct(&self, p: f64) -> f64 {
+        if self.ttft_sorted.is_empty() {
+            0.0
+        } else {
+            percentile_sorted(&self.ttft_sorted, p)
+        }
+    }
+    /// End-to-end latency at percentile `p` (see [`FleetResult::ttft_pct`]).
+    pub fn e2e_pct(&self, p: f64) -> f64 {
+        if self.e2e_sorted.is_empty() {
+            0.0
+        } else {
+            percentile_sorted(&self.e2e_sorted, p)
+        }
+    }
     pub fn ttft_p50(&self) -> f64 {
-        ttft_percentile(&self.served, 50.0)
+        self.ttft_pct(50.0)
     }
     pub fn ttft_p99(&self) -> f64 {
-        ttft_percentile(&self.served, 99.0)
+        self.ttft_pct(99.0)
     }
     pub fn e2e_p50(&self) -> f64 {
-        e2e_percentile(&self.served, 50.0)
+        self.e2e_pct(50.0)
     }
     pub fn e2e_p99(&self) -> f64 {
-        e2e_percentile(&self.served, 99.0)
+        self.e2e_pct(99.0)
     }
     pub fn throughput_rps(&self) -> f64 {
         served_rate(self.served.len(), self.makespan)
@@ -672,6 +769,18 @@ mod tests {
         assert_eq!(plain_eco.makespan.to_bits(), tracked_eco.makespan.to_bits());
         assert_eq!(plain_walks, tracked_walks, "tracking must not add graph walks");
         assert!(tracked_eco.power_tracked && tracked_eco.energy_j() > 0.0);
+    }
+
+    #[test]
+    fn cached_percentiles_match_legacy_helpers_bitwise() {
+        use crate::sim::queueing::{e2e_percentile, ttft_percentile};
+        let tr = poisson_trace(31, 50, 15.0, (64, 768), 16);
+        let mut fleet = Fleet::unified(&llm(), &hw(), 2, 4, Interconnect::board());
+        let r = fleet.replay(&tr, &mut LeastLoaded);
+        for p in [0.0, 17.0, 50.0, 83.0, 99.0, 100.0] {
+            assert_eq!(r.ttft_pct(p).to_bits(), ttft_percentile(&r.served, p).to_bits());
+            assert_eq!(r.e2e_pct(p).to_bits(), e2e_percentile(&r.served, p).to_bits());
+        }
     }
 
     #[test]

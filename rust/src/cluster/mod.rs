@@ -42,6 +42,14 @@
 //! per-device and fleet-level replay stats. [`Fleet::set_dvfs`] pins
 //! per-phase DVFS operating points fleet-wide (or arms the thermal
 //! stepped governor).
+//!
+//! Observability: [`Fleet::enable_obs`] attaches a request-lifecycle
+//! span recorder ([`crate::obs`]) to every device plus an interconnect
+//! track for KV handoffs — pure observation, bit-identical replays —
+//! exported as a Chrome-trace timeline via [`Fleet::chrome_trace`]
+//! (`halo trace`). Replay percentiles ([`FleetResult::ttft_pct`] /
+//! [`FleetResult::e2e_pct`]) read cached sorted views built once at
+//! collection instead of cloning and sorting per call.
 
 pub mod fleet;
 pub mod interconnect;

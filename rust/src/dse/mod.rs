@@ -39,6 +39,7 @@ pub use strategy::{Exhaustive, HillClimb, RandomSearch, Strategy};
 use crate::cluster::{Interconnect, Mix};
 use crate::config::HwConfig;
 use crate::model::LlmConfig;
+use crate::obs::SelfProfile;
 use crate::report::cluster::single_device_capacity;
 use crate::sim::queueing::TraceRequest;
 
@@ -126,6 +127,11 @@ pub struct DseResult {
     /// Index of the cheapest candidate meeting the SLO, if one was set
     /// and met.
     pub slo_choice: Option<usize>,
+    /// Self-profiling of the exploration itself: wall time and counts
+    /// per stage (candidate evals, memo hits, graph walks). Host
+    /// measurement metadata — excluded from the determinism guarantee,
+    /// which covers everything else in this struct.
+    pub profile: SelfProfile,
 }
 
 impl DseResult {
@@ -167,11 +173,18 @@ fn scalarize(cfg: &DseConfig, m: &Metrics) -> f64 {
     }
 }
 
-fn evaluate_candidate(cand: &Candidate, cfg: &DseConfig, trace: &[TraceRequest]) -> Metrics {
+/// Replay one candidate; returns its metrics plus the replay's graph
+/// walks and cost-oracle memo hits for the exploration's self-profile.
+fn evaluate_candidate(
+    cand: &Candidate,
+    cfg: &DseConfig,
+    trace: &[TraceRequest],
+) -> (Metrics, u64, u64) {
     let hw = cand.hw(&cfg.base_hw);
     let (mut fleet, mut router) = cand.build_fleet(&cfg.llm, &hw, cfg.slots, cfg.link.clone());
     let r = fleet.replay(trace, router.as_mut());
-    Metrics::collect(cand, trace, &r, cfg.slo.map(|s| (s.ttft, s.pct)))
+    let m = Metrics::collect(cand, trace, &r, cfg.slo.map(|s| (s.ttft, s.pct)));
+    (m, fleet.cost_walks(), fleet.cost_memo_hits())
 }
 
 /// Run one exploration: calibrate the offered load, drive `strategy`
@@ -185,10 +198,14 @@ pub fn explore(
 ) -> DseResult {
     assert!(!cfg.objectives.is_empty(), "need at least one objective");
     assert!(cfg.requests > 0 && cfg.slots > 0 && cfg.tenants > 0);
-    let rate = cfg.rate.unwrap_or_else(|| {
-        cfg.rate_scale * single_device_capacity(&cfg.base_hw, &cfg.llm, cfg.mix, cfg.slots)
+    let mut prof = SelfProfile::new();
+    let rate = prof.time("calibrate_rate", || {
+        cfg.rate.unwrap_or_else(|| {
+            cfg.rate_scale * single_device_capacity(&cfg.base_hw, &cfg.llm, cfg.mix, cfg.slots)
+        })
     });
-    let trace = cfg.mix.trace_tenants(cfg.seed, cfg.requests, rate, cfg.tenants);
+    let trace =
+        prof.time("trace_gen", || cfg.mix.trace_tenants(cfg.seed, cfg.requests, rate, cfg.tenants));
 
     let mut evaluated: Vec<Evaluated> = Vec::new();
     // memo keyed on the canonical index (axes a topology ignores are
@@ -199,14 +216,19 @@ pub fn explore(
         let mut eval = |idx: &Index| -> f64 {
             let key = space.canonical(idx);
             if let Some(&s) = memo.get(&key) {
+                prof.add("dse_memo_hits", 1);
                 return s;
             }
             let cand = space.decode(&key);
             if !cand.valid() {
+                prof.add("invalid_candidates", 1);
                 memo.insert(key, f64::INFINITY);
                 return f64::INFINITY;
             }
-            let metrics = evaluate_candidate(&cand, cfg, &trace);
+            let (metrics, walks, oracle_hits) =
+                prof.time("candidate_evals", || evaluate_candidate(&cand, cfg, &trace));
+            prof.add("graph_walks", walks);
+            prof.add("oracle_memo_hits", oracle_hits);
             let scalar = scalarize(cfg, &metrics);
             let scores = cfg.objectives.iter().map(|o| o.score(&metrics)).collect();
             evaluated.push(Evaluated { index: key, candidate: cand, metrics, scores });
@@ -231,6 +253,7 @@ pub fn explore(
         evaluated,
         frontier,
         slo_choice: None,
+        profile: prof,
     };
     if cfg.slo.is_some() {
         let mut best: Option<usize> = None;

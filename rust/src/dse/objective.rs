@@ -8,7 +8,7 @@
 
 use super::space::Candidate;
 use crate::cluster::{per_tenant_stats, FleetResult};
-use crate::sim::queueing::{ttft_percentile, TraceRequest};
+use crate::sim::queueing::TraceRequest;
 
 /// Everything the objectives can read about one evaluated candidate.
 #[derive(Debug, Clone, PartialEq)]
@@ -59,7 +59,7 @@ impl Metrics {
         let worst_tenant =
             tenants.iter().map(|t| t.ttft_p99).fold(0.0f64, f64::max);
         let pct = slo.map_or(50.0, |(_, p)| p);
-        let slo_ttft = ttft_percentile(&r.served, pct);
+        let slo_ttft = r.ttft_pct(pct);
         let slo_attainment = match slo {
             None => 1.0,
             Some((target, _)) => {

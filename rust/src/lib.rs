@@ -69,6 +69,24 @@
 //!   `halo power`, `halo report --fig power`,
 //!   `halo cluster --power/--tdp/--dvfs`.
 //!
+//! * **Observability plane** — request-lifecycle tracing, streaming
+//!   metrics, and the simulator's own perf trajectory ([`obs`]).
+//!   Opt-in span recorders ([`obs::Recorder`]) ride on every device and
+//!   copy the same `f64`s that advance the clock — an instrumented
+//!   replay is bit-identical to an untracked one, and recorded span
+//!   totals reconcile exactly with each device's busy accounting.
+//!   `halo trace` exports the timelines as Chrome-trace JSON (one track
+//!   per device plus a KV-transfer interconnect track; opens in
+//!   Perfetto). A fixed-memory log-bucketed histogram
+//!   ([`obs::LogHistogram`]) and counter/gauge registry feed versioned
+//!   `--json` snapshots on `halo cluster` and `halo dse`; replay
+//!   percentiles come off cached sorted views instead of a
+//!   clone-and-sort per call. [`obs::SelfProfile`] accounts the
+//!   simulator's own wall time (never mixed into simulated results),
+//!   and `halo bench` runs pinned workloads into a `halo.bench.v1`
+//!   artifact CI tracks commit over commit with a warn-only regression
+//!   gate.
+//!
 //! Quickstart:
 //! ```no_run
 //! use halo::config::HwConfig;
@@ -90,6 +108,7 @@ pub mod coordinator;
 pub mod dse;
 pub mod mapping;
 pub mod model;
+pub mod obs;
 pub mod power;
 pub mod report;
 pub mod runtime;

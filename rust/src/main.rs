@@ -5,8 +5,10 @@
 //!   report    — regenerate the paper's figures/tables (CSV + markdown)
 //!   roofline  — print the Fig. 1 roofline points
 //!   cluster   — fleet-scale serving simulation with routing policies
+//!   trace     — cluster replay with request-lifecycle spans -> Chrome-trace JSON
 //!   dse       — design-space exploration / SLO auto-tuning over the simulator
 //!   power     — per-event energy attribution and TDP throttling studies
+//!   bench     — pinned simulator benchmarks (the perf trajectory CI tracks)
 //!   serve     — functional serving demo over the AOT artifacts (PJRT)
 //!   validate  — replay the python test vectors through the Rust runtime
 
@@ -23,10 +25,13 @@ use halo::coordinator::{InferenceEngine, Request, Server};
 use halo::dse::{self, DseConfig, Objective, SearchSpace, SloSpec};
 use halo::mapping::MappingKind;
 use halo::model::LlmConfig;
+use halo::obs::{self, SelfProfile};
 use halo::power::{power_trace, DvfsConfig, ThermalConfig};
 use halo::report;
 use halo::runtime::Runtime;
+use halo::sim::queueing::TraceRequest;
 use halo::sim::{simulate_e2e, Scenario};
+use halo::util::json::Json;
 use halo::util::{fmt_joules, fmt_seconds, Rng};
 
 const USAGE: &str = "\
@@ -41,7 +46,7 @@ USAGE:
                 [--model llama2-7b|qwen3-8b] [--requests N] [--rate R] [--slots N] [--link board|pcie|eth|wan]
                 [--prefill-frac F] [--seed S] [--tenants N]
                 [--chunk TOKENS] [--admission fifo|spf|priority] [--kv-cap GB|auto]
-                [--power] [--tdp W|auto] [--dvfs SPEC] [--smoke]
+                [--power] [--tdp W|auto] [--dvfs SPEC] [--smoke] [--json]
                   --chunk     prefill chunk size (0 = serialized monolithic prefill, the default)
                   --admission ready-queue order: fifo (default), spf (shortest prompt first),
                               priority (interactive prompts <= 512 tokens first)
@@ -57,11 +62,19 @@ USAGE:
                               the ladder under the TDP cap instead of the scalar throttle
                               (requires --tdp; static points work even without --power)
                   --smoke     tiny CI run: 2 devices, 32 requests
+                  --json      print one `halo.cluster.v1` snapshot (metrics registry,
+                              per-device rows, self-profile) instead of the tables
+  halo trace    [same flags as cluster] [--out FILE]
+                  replay the cluster with request-lifecycle span recording on (queued,
+                  prefill chunks, KV handoffs, decode steps, evictions, throttling) and
+                  write a Chrome-trace JSON timeline — one track per device plus an
+                  interconnect track. Open in https://ui.perfetto.dev or chrome://tracing.
+                  --out       output file (default trace.json)
   halo dse      [--space smoke|sched|fleet|hw|mapping|power|full] [--strategy grid|random|hillclimb]
                 [--model llama2-7b|qwen3-8b] [--mix chat|summarization|generation|interactive]
                 [--requests N] [--seed S] [--slots N] [--link board|pcie|eth|wan]
                 [--rate R | --rate-scale X] [--tenants N] [--samples N] [--restarts N] [--steps N]
-                [--objectives csv] [--ttft-slo MS] [--slo-pct P] [--smoke] [--out DIR]
+                [--objectives csv] [--ttft-slo MS] [--slo-pct P] [--smoke] [--out DIR] [--json]
                   --space      candidate space preset (default sched; see dse::space presets)
                   --strategy   grid enumerates everything; random/hillclimb sample big spaces
                                (--samples, --restarts/--steps; seeded by --seed)
@@ -75,6 +88,17 @@ USAGE:
                   --rate       absolute offered load in req/s; --rate-scale multiplies one
                                device's measured capacity instead (default 1.5x)
                   --smoke      tiny CI grid: alias for --space smoke with 48 requests
+                  --json       print one `halo.dse.v1` snapshot (config, every evaluated
+                               candidate with metrics, frontier, self-profile)
+  halo bench    [--smoke] [--out FILE] [--baseline FILE] [--tolerance PCT] [--strict]
+                  pinned simulator benchmarks: fixed seeds and absolute request rates, so
+                  the simulated work is identical on every host. Reports wall time,
+                  cost-oracle graph walks and peak RSS — the simulator's own perf
+                  trajectory, tracked per commit by CI.
+                  --out       write the `halo.bench.v1` JSON artifact here
+                  --baseline  compare against a previous artifact (median wall time)
+                  --tolerance regression threshold in percent (default 25)
+                  --strict    exit nonzero on regression (default: warn only)
   halo power    [--model llama2-7b|qwen3-8b] [--mix chat|summarization|generation|interactive]
                 [--mappings csv] [--devices N] [--slots N] [--requests N] [--rate R]
                 [--tdp W|auto] [--windows N] [--seed S] [--smoke] [--out DIR]
@@ -139,8 +163,10 @@ fn main() -> Result<()> {
         "report" => cmd_report(&flags),
         "roofline" => cmd_roofline(&flags),
         "cluster" => cmd_cluster(&flags),
+        "trace" => cmd_trace(&flags),
         "dse" => cmd_dse(&flags),
         "power" => cmd_power(&flags),
+        "bench" => cmd_bench(&flags),
         "serve" => cmd_serve(&flags),
         "validate" => cmd_validate(&flags),
         _ => {
@@ -259,7 +285,28 @@ fn cmd_roofline(f: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
+/// Everything `halo cluster` and `halo trace` need to stage one fleet
+/// replay — parsed once so both subcommands accept identical flags.
+struct ClusterSetup {
+    hw: HwConfig,
+    llm: LlmConfig,
+    devices: usize,
+    policy: Policy,
+    mix: Mix,
+    link: Interconnect,
+    slots: usize,
+    n_req: usize,
+    seed: u64,
+    prefill_frac: f64,
+    sched: SchedConfig,
+    tenants: usize,
+    tdp: Option<f64>,
+    track_power: bool,
+    dvfs: Option<DvfsConfig>,
+    rate: f64,
+}
+
+fn parse_cluster_setup(f: &HashMap<String, String>) -> Result<ClusterSetup> {
     let hw = HwConfig::paper();
     let smoke = f.contains_key("smoke");
     let model = f.get("model").map(String::as_str).unwrap_or("llama2-7b");
@@ -328,49 +375,139 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
         Some(r) => r,
         None => 3.0 * report::cluster::single_device_capacity(&hw, &llm, mix, slots),
     };
+    Ok(ClusterSetup {
+        hw,
+        llm,
+        devices,
+        policy,
+        mix,
+        link,
+        slots,
+        n_req,
+        seed,
+        prefill_frac,
+        sched,
+        tenants,
+        tdp,
+        track_power,
+        dvfs,
+        rate,
+    })
+}
 
-    println!(
-        "fleet    : {devices}x HALO devices ({} policy, {} link, {slots} slots/device)",
-        policy.name(),
-        link.name
-    );
-    println!(
-        "scheduler: {} prefill, {} admission, KV budget {}",
-        match sched.chunk {
-            Some(c) => format!("chunked({c})"),
-            None => "serialized".into(),
-        },
-        sched.admission.name(),
-        match sched.kv_capacity {
-            Some(b) => format!("{:.1} GB/device", b as f64 / 1e9),
-            None => "unlimited".into(),
+impl ClusterSetup {
+    /// Generate the trace and assemble the fleet + router.
+    fn build(&self) -> (Vec<TraceRequest>, Fleet, Box<dyn Router>) {
+        let trace = self.mix.trace_tenants(self.seed, self.n_req, self.rate, self.tenants);
+        let (mut fleet, router) = self.policy.build_with(
+            &self.llm,
+            &self.hw,
+            self.devices,
+            self.slots,
+            self.prefill_frac,
+            self.link.clone(),
+            self.sched.clone(),
+        );
+        if self.track_power {
+            fleet.enable_power(&self.hw, self.tdp.map(ThermalConfig::paper));
         }
-    );
-    println!("workload : {} mix, {n_req} requests at {rate:.2} req/s (seed {seed})", mix.name());
-    let trace = mix.trace_tenants(seed, n_req, rate, tenants);
-    let (mut fleet, mut router) =
-        policy.build_with(&llm, &hw, devices, slots, prefill_frac, link, sched);
-    if track_power {
-        fleet.enable_power(&hw, tdp.map(ThermalConfig::paper));
-        if let Some(w) = tdp {
-            println!("power    : tracked, TDP cap {w:.0} W/package (thermal throttle live)");
-        } else {
-            println!("power    : tracked, no TDP cap");
+        if let Some(d) = &self.dvfs {
+            fleet.set_dvfs(d.clone());
         }
+        (trace, fleet, router)
     }
-    if let Some(d) = dvfs {
+
+    fn print_header(&self) {
         println!(
-            "dvfs     : {} ({})",
-            d.label(),
-            if d.governor {
-                "thermal stepped governor replaces the scalar throttle"
-            } else {
-                "static per-phase operating points"
+            "fleet    : {}x HALO devices ({} policy, {} link, {} slots/device)",
+            self.devices,
+            self.policy.name(),
+            self.link.name,
+            self.slots
+        );
+        println!(
+            "scheduler: {} prefill, {} admission, KV budget {}",
+            match self.sched.chunk {
+                Some(c) => format!("chunked({c})"),
+                None => "serialized".into(),
+            },
+            self.sched.admission.name(),
+            match self.sched.kv_capacity {
+                Some(b) => format!("{:.1} GB/device", b as f64 / 1e9),
+                None => "unlimited".into(),
             }
         );
-        fleet.set_dvfs(d);
+        println!(
+            "workload : {} mix, {} requests at {:.2} req/s (seed {})",
+            self.mix.name(),
+            self.n_req,
+            self.rate,
+            self.seed
+        );
+        if self.track_power {
+            match self.tdp {
+                Some(w) => {
+                    println!("power    : tracked, TDP cap {w:.0} W/package (thermal throttle live)")
+                }
+                None => println!("power    : tracked, no TDP cap"),
+            }
+        }
+        if let Some(d) = &self.dvfs {
+            println!(
+                "dvfs     : {} ({})",
+                d.label(),
+                if d.governor {
+                    "thermal stepped governor replaces the scalar throttle"
+                } else {
+                    "static per-phase operating points"
+                }
+            );
+        }
     }
-    let r = fleet.replay(&trace, router.as_mut());
+
+    /// The setup echoed into `--json` snapshots so artifacts are
+    /// self-contained.
+    fn config_json(&self) -> Json {
+        obs::jobj(vec![
+            ("model", Json::Str(self.llm.name.to_string())),
+            ("devices", Json::Num(self.devices as f64)),
+            ("policy", Json::Str(self.policy.name().to_string())),
+            ("mix", Json::Str(self.mix.name().to_string())),
+            ("link", Json::Str(self.link.name.to_string())),
+            ("slots", Json::Num(self.slots as f64)),
+            ("requests", Json::Num(self.n_req as f64)),
+            ("rate_rps", Json::Num(self.rate)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("tenants", Json::Num(self.tenants as f64)),
+            ("power_tracked", Json::Bool(self.track_power)),
+            ("tdp_w", self.tdp.map_or(Json::Null, Json::Num)),
+        ])
+    }
+}
+
+fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
+    let setup = parse_cluster_setup(f)?;
+    let json = f.contains_key("json");
+    if !json {
+        setup.print_header();
+    }
+    let tenants = setup.tenants;
+    let (trace, mut fleet, mut router) = setup.build();
+    let mut prof = SelfProfile::new();
+    let r = prof.time("fleet_replay", || fleet.replay(&trace, router.as_mut()));
+    prof.add("graph_walks", fleet.cost_walks());
+    prof.add("oracle_memo_hits", fleet.cost_memo_hits());
+    if json {
+        let snap = obs::cluster_snapshot(
+            &r,
+            fleet.cost_walks(),
+            fleet.cost_memo_hits(),
+            &prof,
+            setup.config_json(),
+        );
+        println!("{snap}");
+        return Ok(());
+    }
 
     let mut t = report::Table::new(
         "fleet_summary",
@@ -465,6 +602,124 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
             }
         );
     }
+    println!(
+        "profile    : replay {} wall, {} graph walks, {} oracle memo hits",
+        fmt_seconds(prof.wall_s("fleet_replay")),
+        prof.count("graph_walks"),
+        prof.count("oracle_memo_hits")
+    );
+    Ok(())
+}
+
+fn cmd_trace(f: &HashMap<String, String>) -> Result<()> {
+    let setup = parse_cluster_setup(f)?;
+    setup.print_header();
+    let (trace, mut fleet, mut router) = setup.build();
+    fleet.enable_obs();
+    let r = fleet.replay(&trace, router.as_mut());
+
+    // every recorded device timeline must reconcile exactly with the
+    // replay's own busy accounting — same f64s folded in the same order
+    for d in &r.per_device {
+        let rec = fleet.devices[d.id].obs().expect("obs enabled before replay");
+        if rec.busy_total().to_bits() != d.busy.to_bits() {
+            bail!(
+                "span/busy mismatch on dev{}: span total {} vs busy {}",
+                d.id,
+                rec.busy_total(),
+                d.busy
+            );
+        }
+        println!(
+            "dev{:<3}     : {} spans + {} events, busy {} (reconciled bit-exact)",
+            d.id,
+            rec.spans.len(),
+            rec.events.len(),
+            fmt_seconds(d.busy)
+        );
+    }
+    if let Some(kv) = fleet.kv_spans() {
+        println!("interconn. : {} KV-transfer spans", kv.len());
+    }
+
+    let doc = fleet.chrome_trace().expect("obs enabled before replay");
+    let out = f.get("out").map(String::as_str).unwrap_or("trace.json");
+    std::fs::write(out, doc.to_string())?;
+    let n_events = doc.path(&["traceEvents"]).and_then(Json::as_arr).map_or(0, <[Json]>::len);
+    println!("served     : {} requests in {}", r.served.len(), fmt_seconds(r.makespan));
+    println!(
+        "trace      : {n_events} events -> {out} (open in https://ui.perfetto.dev \
+         or chrome://tracing)"
+    );
+    Ok(())
+}
+
+fn cmd_bench(f: &HashMap<String, String>) -> Result<()> {
+    let smoke = f.contains_key("smoke");
+    println!(
+        "pinned simulator benchmarks ({} mode; wall time is host-dependent, graph walks \
+         are exact)",
+        if smoke { "smoke" } else { "full" }
+    );
+    let points = obs::run_pinned(smoke);
+    let mut t = report::Table::new(
+        "bench",
+        "Simulator perf trajectory — pinned workloads, fixed seeds and rates",
+        &["workload", "iters", "wall_mean_s", "wall_p50_s", "graph_walks", "items"],
+    );
+    for p in &points {
+        t.row(vec![
+            p.name.to_string(),
+            p.iters.to_string(),
+            format!("{:.4}", p.wall_s_mean),
+            format!("{:.4}", p.wall_s_p50),
+            p.graph_walks.to_string(),
+            p.items.to_string(),
+        ]);
+    }
+    println!("\n{}", t.to_markdown());
+    if let Some(rss) = obs::peak_rss_bytes() {
+        println!("peak RSS   : {:.1} MB", rss as f64 / 1e6);
+    }
+    let doc = obs::bench_json(&points, smoke);
+    if let Some(out) = f.get("out") {
+        std::fs::write(out, doc.to_string())?;
+        println!("bench JSON : {out}");
+    }
+    if let Some(base_path) = f.get("baseline") {
+        let text = std::fs::read_to_string(base_path)?;
+        let base =
+            Json::parse(&text).map_err(|e| anyhow!("bad baseline {base_path}: {e}"))?;
+        let tol = flag_f64(f, "tolerance", 25.0) / 100.0;
+        let mut regressed = 0;
+        for d in obs::compare(&doc, &base) {
+            let verdict = if d.delta_frac > tol {
+                regressed += 1;
+                "REGRESSED"
+            } else if d.delta_frac < -tol {
+                "improved"
+            } else {
+                "ok"
+            };
+            println!(
+                "compare    : {:<22} {:.4}s -> {:.4}s ({:+.1}%) {verdict}",
+                d.name,
+                d.base_s,
+                d.new_s,
+                d.delta_frac * 100.0
+            );
+        }
+        if regressed > 0 {
+            let pct = tol * 100.0;
+            if f.contains_key("strict") {
+                bail!("{regressed} workload(s) regressed beyond {pct:.0}%");
+            }
+            println!(
+                "WARNING    : {regressed} workload(s) slower than baseline beyond {pct:.0}% \
+                 (wall time is noisy; informational unless --strict)"
+            );
+        }
+    }
     Ok(())
 }
 
@@ -546,14 +801,31 @@ fn cmd_dse(f: &HashMap<String, String>) -> Result<()> {
         );
     }
 
-    println!(
-        "search   : {} over `{space_name}` ({} points, {} axes), seed {}",
-        strategy.name(),
-        space.len(),
-        halo::dse::AXES,
-        cfg.seed
-    );
+    let json = f.contains_key("json");
+    if !json {
+        println!(
+            "search   : {} over `{space_name}` ({} points, {} axes), seed {}",
+            strategy.name(),
+            space.len(),
+            halo::dse::AXES,
+            cfg.seed
+        );
+    }
     let res = dse::explore(&space, strategy.as_mut(), &cfg);
+    if json {
+        let cfg_json = obs::jobj(vec![
+            ("space", Json::Str(space_name.to_string())),
+            ("strategy", Json::Str(strategy.name().to_string())),
+            ("model", Json::Str(model.to_string())),
+            ("mix", Json::Str(cfg.mix.name().to_string())),
+            ("requests", Json::Num(cfg.requests as f64)),
+            ("seed", Json::Num(cfg.seed as f64)),
+            ("slots", Json::Num(cfg.slots as f64)),
+            ("tenants", Json::Num(cfg.tenants as f64)),
+        ]);
+        println!("{}", obs::dse_snapshot(&res, cfg_json));
+        return Ok(());
+    }
     println!(
         "workload : {} mix, {} requests at {:.2} req/s, {} tenant(s)",
         cfg.mix.name(),
@@ -562,10 +834,21 @@ fn cmd_dse(f: &HashMap<String, String>) -> Result<()> {
         cfg.tenants
     );
     println!(
-        "evaluated: {} candidates -> {} on the Pareto frontier over {:?}\n",
+        "evaluated: {} candidates -> {} on the Pareto frontier over {:?}",
         res.evaluated.len(),
         res.frontier.len(),
         res.objectives.iter().map(|o| o.name()).collect::<Vec<_>>()
+    );
+    let p = &res.profile;
+    println!(
+        "profile  : {} candidate evals in {} wall ({} graph walks, {} oracle memo hits, \
+         {} DSE memo hits, {} invalid)\n",
+        p.count("candidate_evals"),
+        fmt_seconds(p.wall_s("candidate_evals")),
+        p.count("graph_walks"),
+        p.count("oracle_memo_hits"),
+        p.count("dse_memo_hits"),
+        p.count("invalid_candidates")
     );
     let table = report::dse::frontier_table(
         &res,

@@ -1,0 +1,225 @@
+//! Pinned-workload benchmark harness for the simulator's own speed.
+//!
+//! `halo bench` runs a fixed set of workloads (fixed seeds, fixed
+//! absolute request rates — no capacity calibration, so the simulated
+//! work is identical on every host) and reports wall time, graph walks
+//! and peak RSS. CI stores the resulting `BENCH_sim.json` per commit: a
+//! self-profiled performance trajectory of the simulator, with a
+//! warn-only compare against the previous baseline.
+//!
+//! Wall times are host measurements and naturally noisy; the graph-walk
+//! counts are exact and must not drift without an intentional change.
+
+use super::jobj;
+use crate::cluster::router::{LeastLoaded, PhaseDisaggregated};
+use crate::cluster::{Fleet, Interconnect, Mix};
+use crate::config::HwConfig;
+use crate::dse::{explore, DseConfig, Exhaustive, SearchSpace};
+use crate::mapping::MappingKind;
+use crate::model::LlmConfig;
+use crate::sim::cost::CostModel;
+use crate::sim::device::SchedConfig;
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// One benchmarked workload: wall-time stats over its iterations plus
+/// the deterministic work counters of a single run.
+#[derive(Debug, Clone)]
+pub struct BenchPoint {
+    pub name: &'static str,
+    pub iters: usize,
+    pub wall_s_mean: f64,
+    pub wall_s_p50: f64,
+    /// Cost-oracle graph walks of one iteration (exact, host-independent).
+    pub graph_walks: u64,
+    /// Workload-defined size (requests replayed, points evaluated, ...).
+    pub items: u64,
+}
+
+/// Wall-time delta of one workload against a stored baseline.
+#[derive(Debug, Clone)]
+pub struct BenchDelta {
+    pub name: String,
+    pub base_s: f64,
+    pub new_s: f64,
+    /// `(new - base) / base`; positive = slower than the baseline.
+    pub delta_frac: f64,
+}
+
+fn run_point(
+    name: &'static str,
+    iters: usize,
+    mut f: impl FnMut() -> (u64, u64),
+) -> BenchPoint {
+    let mut walls: Vec<f64> = Vec::with_capacity(iters);
+    let (mut walks, mut items) = (0, 0);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let (w, n) = f();
+        walls.push(t0.elapsed().as_secs_f64());
+        walks = w;
+        items = n;
+    }
+    walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = walls.iter().sum::<f64>() / walls.len() as f64;
+    let p50 = walls[walls.len() / 2];
+    BenchPoint { name, iters, wall_s_mean: mean, wall_s_p50: p50, graph_walks: walks, items }
+}
+
+/// Run the pinned suite. `smoke` trims request counts and iterations so
+/// CI finishes in seconds; the workload *shapes* are identical.
+pub fn run_pinned(smoke: bool) -> Vec<BenchPoint> {
+    let iters = if smoke { 3 } else { 7 };
+    let n_req = if smoke { 96 } else { 384 };
+    let llm = LlmConfig::llama2_7b();
+    let hw = HwConfig::paper();
+
+    let unified = run_point("fleet_replay_unified", iters, || {
+        let trace = Mix::Interactive.trace(42, n_req, 24.0);
+        let mut fleet = Fleet::unified(&llm, &hw, 4, 8, Interconnect::board());
+        let r = fleet.replay(&trace, &mut LeastLoaded);
+        (fleet.cost_walks(), r.served.len() as u64)
+    });
+
+    let disagg = run_point("fleet_replay_disagg", iters, || {
+        let trace = Mix::Chat.trace(43, n_req, 16.0);
+        let mut fleet = Fleet::disaggregated_with(
+            &llm,
+            &hw,
+            4,
+            8,
+            0.5,
+            Interconnect::board(),
+            SchedConfig::chunked(256),
+        );
+        let r = fleet.replay(&trace, &mut PhaseDisaggregated);
+        (fleet.cost_walks(), r.served.len() as u64)
+    });
+
+    let oracle = run_point("cost_oracle_sweep", iters, || {
+        let mut cm = CostModel::new(&llm, &hw, MappingKind::Halo1);
+        let mut points = 0u64;
+        for l_in in (64..=4096).step_by(64) {
+            std::hint::black_box(cm.prefill(l_in));
+            points += 1;
+        }
+        for batch in 1..=8 {
+            for ctx in (256..=4096).step_by(256) {
+                std::hint::black_box(cm.decode_step(batch, ctx));
+                points += 1;
+            }
+        }
+        (cm.walks(), points)
+    });
+
+    let dse = run_point("dse_grid", iters, || {
+        let space = SearchSpace::preset("smoke").unwrap();
+        let mut cfg = DseConfig::new(llm.clone(), Mix::Interactive);
+        cfg.requests = if smoke { 48 } else { 128 };
+        cfg.rate = Some(24.0);
+        let res = explore(&space, &mut Exhaustive, &cfg);
+        (res.profile.count("graph_walks"), res.evaluated.len() as u64)
+    });
+
+    vec![unified, disagg, oracle, dse]
+}
+
+/// Peak resident set size of this process, bytes (`VmHWM` from
+/// `/proc/self/status`); `None` where procfs is unavailable.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
+/// Serialize a suite run as the `halo.bench.v1` artifact.
+pub fn bench_json(points: &[BenchPoint], smoke: bool) -> Json {
+    let workloads: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            jobj(vec![
+                ("name", Json::Str(p.name.to_string())),
+                ("iters", Json::Num(p.iters as f64)),
+                ("wall_s_mean", Json::Num(p.wall_s_mean)),
+                ("wall_s_p50", Json::Num(p.wall_s_p50)),
+                ("graph_walks", Json::Num(p.graph_walks as f64)),
+                ("items", Json::Num(p.items as f64)),
+            ])
+        })
+        .collect();
+    jobj(vec![
+        ("schema", Json::Str("halo.bench.v1".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "peak_rss_bytes",
+            peak_rss_bytes().map_or(Json::Null, |b| Json::Num(b as f64)),
+        ),
+        ("workloads", Json::Arr(workloads)),
+    ])
+}
+
+/// Compare a fresh `halo.bench.v1` document against a stored baseline by
+/// workload name (median wall time). Workloads missing on either side
+/// are skipped — the gate only judges common ground.
+pub fn compare(new: &Json, base: &Json) -> Vec<BenchDelta> {
+    let rows = |doc: &Json| -> Vec<(String, f64)> {
+        doc.path(&["workloads"])
+            .and_then(Json::as_arr)
+            .map(|ws| {
+                ws.iter()
+                    .filter_map(|w| {
+                        let name = w.get("name")?.as_str()?.to_string();
+                        let p50 = w.get("wall_s_p50")?.as_f64()?;
+                        Some((name, p50))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    let base_rows = rows(base);
+    rows(new)
+        .into_iter()
+        .filter_map(|(name, new_s)| {
+            let (_, base_s) = base_rows.iter().find(|(b, _)| *b == name)?;
+            let delta_frac = if *base_s > 0.0 { (new_s - base_s) / base_s } else { 0.0 };
+            Some(BenchDelta { name, base_s: *base_s, new_s, delta_frac })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compare_matches_by_name_and_signs_deltas() {
+        let mk = |p50: f64| {
+            bench_json(
+                &[BenchPoint {
+                    name: "w",
+                    iters: 1,
+                    wall_s_mean: p50,
+                    wall_s_p50: p50,
+                    graph_walks: 5,
+                    items: 2,
+                }],
+                true,
+            )
+        };
+        let deltas = compare(&mk(1.2), &mk(1.0));
+        assert_eq!(deltas.len(), 1);
+        assert!((deltas[0].delta_frac - 0.2).abs() < 1e-9);
+        // disjoint workload sets compare to nothing, not a panic
+        let other = bench_json(&[], true);
+        assert!(compare(&other, &mk(1.0)).is_empty());
+    }
+
+    #[test]
+    fn bench_artifact_shape() {
+        let j = bench_json(&[], true);
+        assert_eq!(j.path(&["schema"]).and_then(Json::as_str), Some("halo.bench.v1"));
+        assert_eq!(j.path(&["smoke"]), Some(&Json::Bool(true)));
+        assert!(j.path(&["workloads"]).and_then(Json::as_arr).is_some());
+    }
+}

@@ -1,0 +1,271 @@
+//! Fixed-memory log-bucketed latency histogram (HDR-style).
+//!
+//! The legacy percentile path (`ttft_percentile`) clones and sorts the
+//! full served vector on every call — O(n log n) per lookup and O(n)
+//! memory per retained population. [`LogHistogram`] bounds both: values
+//! land in one of [`N_BUCKETS`] log-spaced buckets (32 sub-buckets per
+//! power of two, so the bucket-midpoint representative is within ~1.6%
+//! relative error), recording is O(1), percentile lookup is a linear
+//! walk over a fixed array, and two histograms merge by adding counts —
+//! the property that lets per-device populations roll up into a fleet
+//! view without keeping raw samples. This is the bounded-memory metrics
+//! layer the ROADMAP's streaming event loop requires.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Sub-bucket resolution: 2^5 = 32 sub-buckets per octave.
+const SUB_BITS: u32 = 5;
+const SUBS: usize = 1 << SUB_BITS;
+/// Smallest tracked exponent: values below 2^-30 (~1 ns at seconds
+/// scale) collapse into the first bucket.
+const MIN_EXP: i32 = -30;
+/// Largest tracked exponent: values at or above 2^31 (~68 years)
+/// collapse into the last bucket.
+const MAX_EXP: i32 = 31;
+const OCTAVES: usize = (MAX_EXP - MIN_EXP) as usize;
+/// Bucket 0 holds zero / negative / NaN; the rest are log-spaced.
+pub const N_BUCKETS: usize = OCTAVES * SUBS + 1;
+
+/// Mergeable fixed-memory histogram over non-negative `f64` samples.
+///
+/// Alongside the bucket counts it tracks exact `n`, `sum`, `min` and
+/// `max`, so means and the extreme percentiles (p0/p100) are exact and
+/// only interior percentiles pay the ~1.6% bucket-quantization error.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram {
+            counts: vec![0; N_BUCKETS],
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Bucket index for a sample, derived from the IEEE-754 exponent and
+    /// the top [`SUB_BITS`] mantissa bits — no `ln()` on the hot path.
+    fn index(x: f64) -> usize {
+        if x.is_nan() || x <= 0.0 {
+            return 0;
+        }
+        let bits = x.to_bits();
+        let exp = ((bits >> 52) & 0x7ff) as i32 - 1023;
+        if exp < MIN_EXP {
+            return 1; // subnormals and tiny values share the first octave's floor
+        }
+        if exp >= MAX_EXP {
+            return N_BUCKETS - 1;
+        }
+        let sub = ((bits >> (52 - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+        1 + (exp - MIN_EXP) as usize * SUBS + sub
+    }
+
+    /// Midpoint representative of bucket `i` (`i >= 1`).
+    fn bucket_value(i: usize) -> f64 {
+        let j = i - 1;
+        let exp = MIN_EXP + (j / SUBS) as i32;
+        let sub = (j % SUBS) as f64;
+        (exp as f64).exp2() * (1.0 + (sub + 0.5) / SUBS as f64)
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.counts[Self::index(x)] += 1;
+        self.n += 1;
+        if x.is_finite() {
+            self.sum += x;
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+    }
+
+    /// Add another histogram's population into this one.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 || !self.min.is_finite() {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 || !self.max.is_finite() {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Approximate p-th percentile (0..=100): walks the cumulative
+    /// counts to the nearest order statistic and returns that bucket's
+    /// midpoint, clamped to the exact observed `[min, max]`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        if p <= 0.0 {
+            return self.min();
+        }
+        if p >= 100.0 {
+            return self.max();
+        }
+        let target = ((p / 100.0) * (self.n - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > target {
+                let v = if i == 0 { 0.0 } else { Self::bucket_value(i) };
+                return v.clamp(self.min(), self.max());
+            }
+        }
+        self.max()
+    }
+
+    /// Summary object (count/min/max/mean/p50/p90/p99) for snapshots.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("count".to_string(), Json::Num(self.n as f64));
+        m.insert("min".to_string(), Json::Num(self.min()));
+        m.insert("max".to_string(), Json::Num(self.max()));
+        m.insert("mean".to_string(), Json::Num(self.mean()));
+        m.insert("p50".to_string(), Json::Num(self.percentile(50.0)));
+        m.insert("p90".to_string(), Json::Num(self.percentile(90.0)));
+        m.insert("p99".to_string(), Json::Num(self.percentile(99.0)));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{percentile, Rng};
+
+    #[test]
+    fn empty_and_zero_are_safe() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        h.record(0.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn single_value_is_exact() {
+        let mut h = LogHistogram::new();
+        h.record(0.125);
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(p), 0.125);
+        }
+    }
+
+    #[test]
+    fn bucket_relative_error_is_bounded() {
+        // midpoint representative of the containing bucket is within
+        // half a bucket width: 1/(2*SUBS) relative
+        for &x in &[1e-6, 3.7e-3, 0.042, 1.0, 17.3, 900.0] {
+            let i = LogHistogram::index(x);
+            let rep = LogHistogram::bucket_value(i);
+            assert!((rep - x).abs() / x < 1.0 / SUBS as f64, "x={x} rep={rep}");
+        }
+    }
+
+    #[test]
+    fn percentiles_track_exact_within_bucket_error() {
+        let mut rng = Rng::new(9);
+        let mut h = LogHistogram::new();
+        let mut xs = Vec::new();
+        for _ in 0..20000 {
+            // log-uniform over ~6 decades, like latency populations
+            let x = 10f64.powf(rng.f64() * 6.0 - 4.0);
+            h.record(x);
+            xs.push(x);
+        }
+        for p in [1.0, 10.0, 50.0, 90.0, 99.0, 99.9] {
+            let exact = percentile(&xs, p);
+            let approx = h.percentile(p);
+            assert!(
+                (approx - exact).abs() / exact < 0.05,
+                "p{p}: exact {exact} approx {approx}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_equals_recording_into_one() {
+        let mut rng = Rng::new(4);
+        let (mut a, mut b, mut all) =
+            (LogHistogram::new(), LogHistogram::new(), LogHistogram::new());
+        for i in 0..5000 {
+            let x = rng.f64() * 3.0 + 1e-3;
+            if i % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+            all.record(x);
+        }
+        a.merge(&b);
+        // f64 sums are order-dependent, so compare sum approximately
+        assert_eq!(a.counts, all.counts);
+        assert_eq!(a.n, all.n);
+        assert_eq!(a.min, all.min);
+        assert_eq!(a.max, all.max);
+        assert!((a.sum - all.sum).abs() < 1e-9 * all.sum.abs());
+        for p in [10.0, 50.0, 95.0] {
+            assert_eq!(a.percentile(p), all.percentile(p));
+        }
+    }
+
+    #[test]
+    fn extremes_and_garbage_collapse_into_edge_buckets() {
+        let mut h = LogHistogram::new();
+        h.record(f64::NAN);
+        h.record(-3.0);
+        h.record(1e-200);
+        h.record(1e200);
+        assert_eq!(h.count(), 4);
+        assert_eq!(LogHistogram::index(f64::NAN), 0);
+        assert_eq!(LogHistogram::index(-3.0), 0);
+        assert_eq!(LogHistogram::index(1e-200), 1);
+        assert_eq!(LogHistogram::index(1e200), N_BUCKETS - 1);
+    }
+}

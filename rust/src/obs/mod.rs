@@ -1,0 +1,46 @@
+//! Observability plane: request-lifecycle tracing, streaming metrics,
+//! and the simulator's own performance trajectory.
+//!
+//! Three concerns, one module:
+//!
+//! - **Spans** ([`span`]): per-device request-lifecycle recording
+//!   (queued → prefill chunks → KV handoff → decode steps → done, plus
+//!   evictions and throttle events), exportable as a Chrome-trace /
+//!   Perfetto JSON timeline. Recording is strictly opt-in
+//!   (`Device::enable_obs` / `Fleet::enable_obs`) and copies the same
+//!   `f64`s that advance the simulation clock, so enabling it changes
+//!   no simulated result — bit for bit.
+//! - **Metrics** ([`registry`], [`hist`], [`snapshot`]): counters,
+//!   gauges and fixed-memory log-bucketed histograms behind one
+//!   registry, serialized as versioned snapshots for the CLI `--json`
+//!   surfaces.
+//! - **Self-profiling** ([`selfprof`], [`bench`]): host wall-time and
+//!   work counters for the simulator's own hot paths, plus the pinned
+//!   `halo bench` suite CI tracks commit over commit.
+//!
+//! Simulated quantities and host measurements never mix: wall times
+//! live only in [`SelfProfile`] / [`bench`] outputs and are excluded
+//! from every determinism guarantee.
+
+pub mod bench;
+pub mod hist;
+pub mod registry;
+pub mod selfprof;
+pub mod snapshot;
+pub mod span;
+
+pub use bench::{bench_json, compare, peak_rss_bytes, run_pinned, BenchDelta, BenchPoint};
+pub use hist::LogHistogram;
+pub use registry::{fleet_registry, Registry};
+pub use selfprof::SelfProfile;
+pub use snapshot::{cluster_snapshot, dse_snapshot, metrics_json};
+pub use span::{chrome_trace, Event, EventKind, Recorder, Span, SpanKind, Track};
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// A JSON object from `(key, value)` pairs — the snapshot builders'
+/// shorthand (`Json::Obj` wants an owned `BTreeMap<String, _>`).
+pub fn jobj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}

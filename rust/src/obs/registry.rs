@@ -1,0 +1,148 @@
+//! Streaming metrics registry: counters, gauges and mergeable
+//! [`LogHistogram`]s behind one snapshot serializer.
+//!
+//! This is the single place every CLI surface (`--json` flags, trace
+//! summaries, CI artifacts) gets its machine-readable numbers from, so
+//! the schema stays consistent across subcommands.
+
+use super::hist::LogHistogram;
+use crate::cluster::fleet::FleetResult;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, LogHistogram>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Histogram under `name`, created on first touch.
+    pub fn hist(&mut self, name: &str) -> &mut LogHistogram {
+        self.hists.entry(name.to_string()).or_default()
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&LogHistogram> {
+        self.hists.get(name)
+    }
+
+    /// Fold another registry into this one: counters add, gauges take
+    /// the other's value, histograms merge.
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.hists {
+            self.hists.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> =
+            self.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect();
+        let gauges: BTreeMap<String, Json> =
+            self.gauges.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect();
+        let hists: BTreeMap<String, Json> =
+            self.hists.iter().map(|(k, h)| (k.clone(), h.to_json())).collect();
+        let mut m = BTreeMap::new();
+        m.insert("counters".to_string(), Json::Obj(counters));
+        m.insert("gauges".to_string(), Json::Obj(gauges));
+        m.insert("histograms".to_string(), Json::Obj(hists));
+        Json::Obj(m)
+    }
+}
+
+/// The standard fleet-replay registry: every counter/gauge the cluster
+/// and DSE surfaces report, built from one [`FleetResult`].
+pub fn fleet_registry(r: &FleetResult, walks: u64, memo_hits: u64) -> Registry {
+    let mut reg = Registry::new();
+    reg.inc("requests_served", r.served.len() as u64);
+    reg.inc("prefills", r.prefills);
+    reg.inc("decode_steps", r.decode_steps);
+    reg.inc("evictions", r.evictions);
+    reg.inc("recompute_tokens", r.recompute_tokens);
+    reg.inc("kv_transfers", r.transfers);
+    reg.inc("kv_bytes_moved", r.kv_bytes);
+    reg.inc("graph_walks", walks);
+    reg.inc("oracle_memo_hits", memo_hits);
+    reg.gauge("makespan_s", r.makespan);
+    reg.gauge("throughput_rps", r.throughput_rps());
+    reg.gauge("utilization", r.utilization());
+    reg.gauge("ttft_p50_s", r.ttft_p50());
+    reg.gauge("ttft_p99_s", r.ttft_p99());
+    reg.gauge("e2e_p50_s", r.e2e_p50());
+    reg.gauge("e2e_p99_s", r.e2e_p99());
+    reg.gauge("energy_j", r.energy_j());
+    reg.gauge("kv_transfer_energy_j", r.kv_transfer_energy_j);
+    reg.gauge("avg_power_w", r.avg_power_w());
+    reg.gauge("peak_power_w", r.peak_power_w);
+    reg.gauge("throttled_s", r.throttled_s);
+    let h = reg.hist("ttft_s");
+    for s in &r.served {
+        h.record(s.ttft);
+    }
+    let h = reg.hist("e2e_s");
+    for s in &r.served {
+        h.record(s.e2e);
+    }
+    reg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_hists_roundtrip() {
+        let mut r = Registry::new();
+        r.inc("walks", 2);
+        r.inc("walks", 3);
+        r.gauge("util", 0.5);
+        r.hist("lat").record(0.25);
+        assert_eq!(r.counter("walks"), 5);
+        assert_eq!(r.gauge_value("util"), Some(0.5));
+        assert_eq!(r.histogram("lat").unwrap().count(), 1);
+        let j = r.to_json();
+        assert_eq!(j.path(&["counters", "walks"]).and_then(Json::as_f64), Some(5.0));
+        assert_eq!(j.path(&["histograms", "lat", "count"]).and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn merge_adds_counters_and_merges_hists() {
+        let mut a = Registry::new();
+        let mut b = Registry::new();
+        a.inc("n", 1);
+        b.inc("n", 2);
+        a.hist("lat").record(1.0);
+        b.hist("lat").record(2.0);
+        b.gauge("g", 9.0);
+        a.merge(&b);
+        assert_eq!(a.counter("n"), 3);
+        assert_eq!(a.histogram("lat").unwrap().count(), 2);
+        assert_eq!(a.gauge_value("g"), Some(9.0));
+    }
+}

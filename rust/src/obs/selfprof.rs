@@ -1,0 +1,75 @@
+//! Simulator self-profiling: wall-clock time and work counters per
+//! stage, so hot paths are measurable before they are optimized.
+//!
+//! Wall times are host measurements (`std::time::Instant`), never part
+//! of any simulated quantity — they live in a side struct precisely so
+//! determinism guarantees over simulation results are untouched.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Default)]
+pub struct SelfProfile {
+    wall: BTreeMap<&'static str, f64>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl SelfProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f`, accumulating its wall time under `key` and bumping the
+    /// same-named counter by one invocation.
+    pub fn time<R>(&mut self, key: &'static str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        *self.wall.entry(key).or_insert(0.0) += t0.elapsed().as_secs_f64();
+        *self.counts.entry(key).or_insert(0) += 1;
+        r
+    }
+
+    pub fn add(&mut self, key: &'static str, n: u64) {
+        *self.counts.entry(key).or_insert(0) += n;
+    }
+
+    pub fn wall_s(&self, key: &str) -> f64 {
+        self.wall.get(key).copied().unwrap_or(0.0)
+    }
+
+    pub fn count(&self, key: &str) -> u64 {
+        self.counts.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let wall: BTreeMap<String, Json> =
+            self.wall.iter().map(|(k, v)| (k.to_string(), Json::Num(*v))).collect();
+        let counts: BTreeMap<String, Json> =
+            self.counts.iter().map(|(k, v)| (k.to_string(), Json::Num(*v as f64))).collect();
+        let mut m = BTreeMap::new();
+        m.insert("wall_s".to_string(), Json::Obj(wall));
+        m.insert("counts".to_string(), Json::Obj(counts));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_accumulates_and_counts() {
+        let mut p = SelfProfile::new();
+        let x = p.time("work", || 7);
+        assert_eq!(x, 7);
+        p.time("work", || ());
+        p.add("walks", 3);
+        assert_eq!(p.count("work"), 2);
+        assert_eq!(p.count("walks"), 3);
+        assert!(p.wall_s("work") >= 0.0);
+        assert_eq!(p.wall_s("missing"), 0.0);
+        let j = p.to_json();
+        assert!(j.path(&["counts", "walks"]).is_some());
+    }
+}

@@ -1,0 +1,144 @@
+//! Versioned JSON snapshots for the `--json` CLI surfaces.
+//!
+//! Each snapshot carries a `schema` tag (`halo.cluster.v1`,
+//! `halo.dse.v1`) so downstream tooling can dispatch on shape instead of
+//! sniffing fields. Simulated quantities come from the [`Registry`] /
+//! replay results; host wall times ride along under `profile` and are
+//! explicitly measurement metadata, not simulation output.
+
+use super::registry::fleet_registry;
+use super::{jobj, SelfProfile};
+use crate::cluster::fleet::{DeviceSummary, FleetResult};
+use crate::dse::{DseResult, Metrics};
+use crate::util::json::Json;
+
+/// One replayed cluster as a machine-readable snapshot. `config` is the
+/// caller-described setup (fleet shape, workload, seed) echoed back so
+/// the artifact is self-contained.
+pub fn cluster_snapshot(
+    r: &FleetResult,
+    walks: u64,
+    memo_hits: u64,
+    profile: &SelfProfile,
+    config: Json,
+) -> Json {
+    let per_device: Vec<Json> =
+        r.per_device.iter().map(|d| device_json(d, r.makespan)).collect();
+    jobj(vec![
+        ("schema", Json::Str("halo.cluster.v1".to_string())),
+        ("config", config),
+        ("metrics", fleet_registry(r, walks, memo_hits).to_json()),
+        ("per_device", Json::Arr(per_device)),
+        ("profile", profile.to_json()),
+    ])
+}
+
+fn device_json(d: &DeviceSummary, makespan: f64) -> Json {
+    jobj(vec![
+        ("id", Json::Num(d.id as f64)),
+        ("mapping", Json::Str(d.mapping.name().to_string())),
+        ("role", Json::Str(d.role.to_string())),
+        ("prefills", Json::Num(d.prefills as f64)),
+        ("decode_steps", Json::Num(d.decode_steps as f64)),
+        ("served", Json::Num(d.served as f64)),
+        ("busy_s", Json::Num(d.busy)),
+        ("utilization", Json::Num(d.utilization(makespan))),
+        ("evictions", Json::Num(d.evictions as f64)),
+        ("recompute_tokens", Json::Num(d.recompute_tokens as f64)),
+        ("kv_peak_bytes", Json::Num(d.kv_peak as f64)),
+        ("energy_j", Json::Num(d.energy.total())),
+        ("peak_power_w", Json::Num(d.peak_power_w)),
+        ("throttled_s", Json::Num(d.throttled_s)),
+    ])
+}
+
+/// One finished exploration as a machine-readable snapshot.
+pub fn dse_snapshot(res: &DseResult, config: Json) -> Json {
+    let objectives: Vec<Json> =
+        res.objectives.iter().map(|o| Json::Str(o.name().to_string())).collect();
+    let slo = match res.slo {
+        None => Json::Null,
+        Some(s) => jobj(vec![("ttft_s", Json::Num(s.ttft)), ("pct", Json::Num(s.pct))]),
+    };
+    let evaluated: Vec<Json> = res
+        .evaluated
+        .iter()
+        .map(|e| {
+            jobj(vec![
+                ("label", Json::Str(e.candidate.label())),
+                ("scores", Json::Arr(e.scores.iter().map(|s| Json::Num(*s)).collect())),
+                ("metrics", metrics_json(&e.metrics)),
+            ])
+        })
+        .collect();
+    let frontier: Vec<Json> = res.frontier.iter().map(|&i| Json::Num(i as f64)).collect();
+    jobj(vec![
+        ("schema", Json::Str("halo.dse.v1".to_string())),
+        ("config", config),
+        ("rate_rps", Json::Num(res.rate)),
+        ("objectives", Json::Arr(objectives)),
+        ("slo", slo),
+        ("evaluated", Json::Arr(evaluated)),
+        ("frontier", Json::Arr(frontier)),
+        (
+            "slo_choice",
+            res.slo_choice.map_or(Json::Null, |i| Json::Num(i as f64)),
+        ),
+        ("profile", res.profile.to_json()),
+    ])
+}
+
+/// A [`Metrics`] record as a flat JSON object (keys match the
+/// [`crate::dse::Objective`] vocabulary where one exists).
+pub fn metrics_json(m: &Metrics) -> Json {
+    jobj(vec![
+        ("ttft_p50_s", Json::Num(m.ttft_p50)),
+        ("ttft_p99_s", Json::Num(m.ttft_p99)),
+        ("e2e_p50_s", Json::Num(m.e2e_p50)),
+        ("e2e_p99_s", Json::Num(m.e2e_p99)),
+        ("throughput_rps", Json::Num(m.throughput_rps)),
+        ("decode_tok_per_s", Json::Num(m.decode_tok_per_s)),
+        ("utilization", Json::Num(m.utilization)),
+        ("evictions", Json::Num(m.evictions)),
+        ("recompute_tokens", Json::Num(m.recompute_tokens)),
+        ("kv_transfer_gb", Json::Num(m.kv_transfer_gb)),
+        ("worst_tenant_ttft_p99_s", Json::Num(m.worst_tenant_ttft_p99)),
+        ("slo_ttft_s", Json::Num(m.slo_ttft)),
+        ("slo_attainment", Json::Num(m.slo_attainment)),
+        ("cost", Json::Num(m.cost)),
+        ("energy_per_token_j", Json::Num(m.energy_per_token_j)),
+        ("total_energy_j", Json::Num(m.total_energy_j)),
+        ("peak_power_w", Json::Num(m.peak_power_w)),
+        ("edp", Json::Num(m.edp)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::router::LeastLoaded;
+    use crate::cluster::{Fleet, Interconnect};
+    use crate::config::HwConfig;
+    use crate::model::LlmConfig;
+    use crate::sim::queueing::poisson_trace;
+
+    #[test]
+    fn cluster_snapshot_is_tagged_and_self_contained() {
+        let llm = LlmConfig::llama2_7b();
+        let hw = HwConfig::paper();
+        let mut fleet = Fleet::unified(&llm, &hw, 2, 4, Interconnect::pcie5());
+        let trace = poisson_trace(7, 20, 10.0, (64, 512), 16);
+        let r = fleet.replay(&trace, &mut LeastLoaded);
+        let prof = SelfProfile::new();
+        let cfg = jobj(vec![("devices", Json::Num(2.0))]);
+        let j = cluster_snapshot(&r, fleet.cost_walks(), fleet.cost_memo_hits(), &prof, cfg);
+        assert_eq!(j.path(&["schema"]).and_then(Json::as_str), Some("halo.cluster.v1"));
+        assert_eq!(j.path(&["config", "devices"]).and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.path(&["per_device"]).and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+        let served = j.path(&["metrics", "counters", "requests_served"]).and_then(Json::as_f64);
+        assert_eq!(served, Some(r.served.len() as f64));
+        // snapshots must round-trip through the serializer
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+}

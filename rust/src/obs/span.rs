@@ -1,0 +1,292 @@
+//! Request-lifecycle spans and Chrome-trace export.
+//!
+//! A [`Recorder`] rides along on a device (`Device::enable_obs`) and
+//! copies the *same* `f64` start/duration values that advance the
+//! simulated clock — recording observes, it never computes, so an
+//! instrumented replay is bit-identical to an untracked one and
+//! [`Recorder::busy_total`] reconciles exactly with the device's `busy`
+//! accumulator (same values folded in the same order).
+//!
+//! [`chrome_trace`] serializes the recorded timelines into the Chrome
+//! trace-event JSON format (one track per device plus an interconnect
+//! track for KV handoffs), which loads directly in Perfetto
+//! (<https://ui.perfetto.dev>) or `chrome://tracing`.
+
+use super::jobj;
+use crate::util::json::Json;
+
+/// What a busy span on a device track was doing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Whole-prompt prefill (serialized admission).
+    Prefill,
+    /// One chunk of a chunked prefill.
+    PrefillChunk,
+    /// KV recompute after an eviction (resume path).
+    Recompute,
+    /// One decode step over the resident batch.
+    DecodeStep,
+    /// KV-cache handoff over the interconnect (fleet track).
+    KvTransfer,
+}
+
+impl SpanKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Prefill => "prefill",
+            SpanKind::PrefillChunk => "prefill_chunk",
+            SpanKind::Recompute => "recompute",
+            SpanKind::DecodeStep => "decode_step",
+            SpanKind::KvTransfer => "kv_transfer",
+        }
+    }
+
+    /// Trace category — Perfetto colors slices per category, which is
+    /// what makes the prefill/decode phase structure visible at a glance.
+    pub fn cat(&self) -> &'static str {
+        match self {
+            SpanKind::Prefill | SpanKind::PrefillChunk => "prefill",
+            SpanKind::Recompute => "recompute",
+            SpanKind::DecodeStep => "decode",
+            SpanKind::KvTransfer => "kv",
+        }
+    }
+}
+
+/// One busy interval on a track, in simulated seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub start: f64,
+    pub dur: f64,
+    /// Arrival time of the request this span serves; `-1.0` for batched
+    /// spans (decode steps) that serve several requests at once.
+    pub arrival: f64,
+    /// Requests served by this span (decode batch size; 1 otherwise).
+    pub batch: usize,
+}
+
+/// Point events on a track (instants, not intervals).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request delivered to the device queue.
+    Queued,
+    /// Resident sequence evicted under KV-capacity pressure.
+    Evicted,
+    /// Final token emitted; request leaves the device.
+    Done,
+    /// Thermal governor throttled service during the preceding span.
+    Throttle,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Queued => "queued",
+            EventKind::Evicted => "evicted",
+            EventKind::Done => "done",
+            EventKind::Throttle => "throttle",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub kind: EventKind,
+    pub t: f64,
+    /// Arrival of the affected request (`-1.0` when not per-request).
+    pub arrival: f64,
+    /// Kind-specific detail: the DVFS governor rung for `Throttle`.
+    pub detail: usize,
+}
+
+/// Per-device span/event log. Appended to by the device's busy-time
+/// bookkeeping; drained by [`chrome_trace`].
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    pub spans: Vec<Span>,
+    pub events: Vec<Event>,
+    last_throttled_s: f64,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one busy span. `throttled_s` is the device's cumulative
+    /// throttle time *after* the span: when it grew, the span was
+    /// stretched by the thermal governor and a `Throttle` instant (with
+    /// the governor rung) is emitted at the span's end.
+    pub fn busy_span(&mut self, span: Span, throttled_s: f64, rung: usize) {
+        if throttled_s > self.last_throttled_s {
+            self.events.push(Event {
+                kind: EventKind::Throttle,
+                t: span.start + span.dur,
+                arrival: span.arrival,
+                detail: rung,
+            });
+            self.last_throttled_s = throttled_s;
+        }
+        self.spans.push(span);
+    }
+
+    pub fn event(&mut self, kind: EventKind, t: f64, arrival: f64) {
+        self.events.push(Event { kind, t, arrival, detail: 0 });
+    }
+
+    /// Sum of span durations, folded in recorded order from 0.0 — the
+    /// exact operation the device performs on its `busy` accumulator, so
+    /// the two agree bit-for-bit.
+    pub fn busy_total(&self) -> f64 {
+        self.spans.iter().fold(0.0, |acc, s| acc + s.dur)
+    }
+}
+
+/// One named timeline in the exported trace.
+pub struct Track<'a> {
+    pub tid: usize,
+    pub label: String,
+    pub rec: &'a Recorder,
+}
+
+fn span_event(tid: usize, s: &Span) -> Json {
+    let mut pairs = vec![
+        ("ph", Json::Str("X".to_string())),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(s.start * 1e6)),
+        ("dur", Json::Num(s.dur * 1e6)),
+        ("name", Json::Str(s.kind.name().to_string())),
+        ("cat", Json::Str(s.kind.cat().to_string())),
+    ];
+    let mut args = Vec::new();
+    if s.arrival >= 0.0 {
+        args.push(("arrival_s", Json::Num(s.arrival)));
+    }
+    if s.batch > 1 {
+        args.push(("batch", Json::Num(s.batch as f64)));
+    }
+    if !args.is_empty() {
+        pairs.push(("args", jobj(args)));
+    }
+    jobj(pairs)
+}
+
+fn instant_event(tid: usize, e: &Event) -> Json {
+    let mut args = Vec::new();
+    if e.arrival >= 0.0 {
+        args.push(("arrival_s", Json::Num(e.arrival)));
+    }
+    if e.kind == EventKind::Throttle {
+        args.push(("governor_rung", Json::Num(e.detail as f64)));
+    }
+    let mut pairs = vec![
+        ("ph", Json::Str("i".to_string())),
+        ("s", Json::Str("t".to_string())),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(e.t * 1e6)),
+        ("name", Json::Str(e.kind.name().to_string())),
+    ];
+    if !args.is_empty() {
+        pairs.push(("args", jobj(args)));
+    }
+    jobj(pairs)
+}
+
+fn thread_name(tid: usize, label: &str) -> Json {
+    jobj(vec![
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(tid as f64)),
+        ("name", Json::Str("thread_name".to_string())),
+        ("args", jobj(vec![("name", Json::Str(label.to_string()))])),
+    ])
+}
+
+/// Serialize recorded timelines as a Chrome-trace JSON document.
+///
+/// Timestamps and durations are microseconds (the format's unit), i.e.
+/// simulated seconds × 1e6. Events are emitted in deterministic order
+/// (tracks in the given order; spans then instants in recorded order),
+/// so the same replay always produces byte-identical output.
+pub fn chrome_trace(tracks: &[Track<'_>], kv_spans: &[Span], kv_label: &str) -> Json {
+    let mut events = Vec::new();
+    for t in tracks {
+        events.push(thread_name(t.tid, &t.label));
+        for s in &t.rec.spans {
+            events.push(span_event(t.tid, s));
+        }
+        for e in &t.rec.events {
+            events.push(instant_event(t.tid, e));
+        }
+    }
+    if !kv_spans.is_empty() {
+        let kv_tid = tracks.iter().map(|t| t.tid + 1).max().unwrap_or(0);
+        events.push(thread_name(kv_tid, kv_label));
+        for s in kv_spans {
+            events.push(span_event(kv_tid, s));
+        }
+    }
+    jobj(vec![
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SpanKind, start: f64, dur: f64) -> Span {
+        Span { kind, start, dur, arrival: 0.0, batch: 1 }
+    }
+
+    #[test]
+    fn busy_total_folds_in_order() {
+        let mut r = Recorder::new();
+        let durs = [0.1, 0.07, 1e-9, 0.3];
+        let mut busy = 0.0;
+        for (i, &d) in durs.iter().enumerate() {
+            r.busy_span(span(SpanKind::Prefill, i as f64, d), 0.0, 0);
+            busy += d;
+        }
+        assert_eq!(r.busy_total().to_bits(), busy.to_bits());
+    }
+
+    #[test]
+    fn throttle_instant_emitted_once_per_increase() {
+        let mut r = Recorder::new();
+        r.busy_span(span(SpanKind::DecodeStep, 0.0, 0.1), 0.0, 0);
+        r.busy_span(span(SpanKind::DecodeStep, 0.1, 0.2), 0.05, 2);
+        r.busy_span(span(SpanKind::DecodeStep, 0.3, 0.1), 0.05, 2);
+        let th: Vec<_> = r.events.iter().filter(|e| e.kind == EventKind::Throttle).collect();
+        assert_eq!(th.len(), 1);
+        assert_eq!(th[0].detail, 2);
+        assert!((th[0].t - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_and_deterministic() {
+        let mut r = Recorder::new();
+        r.busy_span(span(SpanKind::Prefill, 0.0, 0.5), 0.0, 0);
+        r.event(EventKind::Done, 0.5, 0.0);
+        let tracks = vec![Track { tid: 0, label: "dev0".to_string(), rec: &r }];
+        let kv =
+            [Span { kind: SpanKind::KvTransfer, start: 0.5, dur: 0.01, arrival: 0.0, batch: 1 }];
+        let doc = chrome_trace(&tracks, &kv, "interconnect");
+        let s1 = doc.to_string();
+        let s2 = chrome_trace(&tracks, &kv, "interconnect").to_string();
+        assert_eq!(s1, s2);
+        let parsed = Json::parse(&s1).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 thread_name + 1 span + 1 instant + 1 kv span
+        assert_eq!(evs.len(), 5);
+        assert!(evs.iter().any(|e| e.get("ph").and_then(Json::as_str) == Some("X")));
+        // kv track lands on its own tid, one past the max device tid
+        let kv_ev =
+            evs.iter().find(|e| e.get("name").and_then(Json::as_str) == Some("kv_transfer"));
+        assert_eq!(kv_ev.unwrap().get("tid").and_then(Json::as_f64), Some(1.0));
+    }
+}

@@ -89,6 +89,12 @@ impl DevicePower {
         }
     }
 
+    /// Current rung of the stepped DVFS governor (0 unless governing) —
+    /// read by the observability plane to annotate throttle events.
+    pub fn governor_rung(&self) -> usize {
+        self.gov_idx
+    }
+
     /// Background power floor, W (`hot_refresh` doubles the DRAM refresh
     /// share — the 2.5D coupling penalty when the stacks run hot).
     pub fn static_power(&self, hot_refresh: bool) -> f64 {

@@ -142,6 +142,7 @@ pub struct CostModel {
     prefill_cache: BTreeMap<usize, PhaseCost>,
     dec_coef: BTreeMap<usize, (PhaseCost, PhaseCost)>,
     walks: u64,
+    hits: u64,
 }
 
 impl CostModel {
@@ -153,6 +154,7 @@ impl CostModel {
             prefill_cache: BTreeMap::new(),
             dec_coef: BTreeMap::new(),
             walks: 0,
+            hits: 0,
         }
     }
 
@@ -160,6 +162,12 @@ impl CostModel {
     /// only) — the one-walk-per-point guarantee's observable.
     pub fn walks(&self) -> u64 {
         self.walks
+    }
+
+    /// Lookups answered from the memo tables without a walk — with
+    /// [`CostModel::walks`], the hit-rate half of the memoization story.
+    pub fn memo_hits(&self) -> u64 {
+        self.hits
     }
 
     fn walk(&mut self, graph: &OpGraph) -> PhaseCost {
@@ -170,6 +178,7 @@ impl CostModel {
     /// Joint prefill cost for a prompt of `l_in` tokens (batch 1).
     pub fn prefill(&mut self, l_in: usize) -> PhaseCost {
         if let Some(&c) = self.prefill_cache.get(&l_in) {
+            self.hits += 1;
             return c;
         }
         let graph = build_prefill_graph(&self.llm, l_in, 1);
@@ -220,16 +229,17 @@ impl CostModel {
     /// Joint batched decode-step cost at (batch, context): affine in ctx
     /// — sample two points per batch size and interpolate componentwise.
     pub fn decode_step(&mut self, batch: usize, ctx: usize) -> PhaseCost {
-        if !self.dec_coef.contains_key(&batch) {
-            let g1 = build_decode_graph(&self.llm, 512, batch);
-            let c1 = self.walk(&g1);
-            let g2 = build_decode_graph(&self.llm, 1024, batch);
-            let c2 = self.walk(&g2);
-            let slope = PhaseCost::combine(&c2, 1.0 / 512.0, &c1, -1.0 / 512.0);
-            let base = PhaseCost::combine(&c1, 1.0, &slope, -512.0);
-            self.dec_coef.insert(batch, (base, slope));
+        if let Some(&(base, slope)) = self.dec_coef.get(&batch) {
+            self.hits += 1;
+            return PhaseCost::combine(&base, 1.0, &slope, ctx.max(1) as f64);
         }
-        let (base, slope) = self.dec_coef[&batch];
+        let g1 = build_decode_graph(&self.llm, 512, batch);
+        let c1 = self.walk(&g1);
+        let g2 = build_decode_graph(&self.llm, 1024, batch);
+        let c2 = self.walk(&g2);
+        let slope = PhaseCost::combine(&c2, 1.0 / 512.0, &c1, -1.0 / 512.0);
+        let base = PhaseCost::combine(&c1, 1.0, &slope, -512.0);
+        self.dec_coef.insert(batch, (base, slope));
         PhaseCost::combine(&base, 1.0, &slope, ctx.max(1) as f64)
     }
 }
@@ -292,15 +302,18 @@ mod tests {
     fn one_walk_per_distinct_point() {
         let mut cm = model(MappingKind::Halo1);
         assert_eq!(cm.walks(), 0);
+        assert_eq!(cm.memo_hits(), 0);
         cm.prefill(512);
         assert_eq!(cm.walks(), 1);
         cm.prefill(512);
         assert_eq!(cm.walks(), 1, "memo hit must not re-walk");
+        assert_eq!(cm.memo_hits(), 1);
         // a decode batch samples its two affine points once...
         cm.decode_step(4, 777);
         assert_eq!(cm.walks(), 3);
         cm.decode_step(4, 9000);
         assert_eq!(cm.walks(), 3, "any context interpolates for free");
+        assert_eq!(cm.memo_hits(), 2);
         // ...and chunk costs reuse the prefill memo
         cm.prefill_chunk(512, 256);
         assert_eq!(cm.walks(), 5, "prefill(768) + prefill(256); prefill(512) cached");

@@ -46,6 +46,7 @@ use super::queueing::{ServedRequest, TraceRequest};
 use crate::config::HwConfig;
 use crate::mapping::MappingKind;
 use crate::model::{LlmConfig, Phase};
+use crate::obs::{EventKind, Recorder, Span, SpanKind};
 use crate::power::{DevicePower, DvfsConfig, ThermalConfig, ThermalModel};
 
 pub use super::cost::{CostModel, PhaseCost};
@@ -159,6 +160,17 @@ impl DeviceJob {
             | DeviceJob::PrefillOnly { ready, .. }
             | DeviceJob::DecodeOnly { ready, .. }
             | DeviceJob::Resume { ready, .. } => *ready,
+        }
+    }
+
+    /// Arrival time of the request this job serves (span identity for
+    /// the observability plane).
+    pub fn arrival(&self) -> f64 {
+        match self {
+            DeviceJob::Full { arrival, .. }
+            | DeviceJob::PrefillOnly { arrival, .. }
+            | DeviceJob::DecodeOnly { arrival, .. }
+            | DeviceJob::Resume { arrival, .. } => *arrival,
         }
     }
 
@@ -304,6 +316,11 @@ pub struct Device {
     /// the thermal stepped governor additionally needs power tracking
     /// with a TDP cap.
     dvfs: DvfsConfig,
+    /// Optional request-lifecycle span recorder ([`crate::obs`]). `None`
+    /// (the default) records nothing; when attached it only *copies* the
+    /// same `f64`s that advance the clock, so the replay stays
+    /// bit-identical either way.
+    obs: Option<Recorder>,
 }
 
 impl Device {
@@ -349,6 +366,7 @@ impl Device {
             kv_peak: 0,
             power: None,
             dvfs: DvfsConfig::nominal(&hw.power),
+            obs: None,
         }
     }
 
@@ -365,6 +383,48 @@ impl Device {
     /// The power/thermal state, if tracking is enabled.
     pub fn power(&self) -> Option<&DevicePower> {
         self.power.as_ref()
+    }
+
+    /// Attach a request-lifecycle span recorder ([`crate::obs`]) to this
+    /// device. Call before pushing work. Recording is pure observation —
+    /// spans copy the same `f64` start/duration values that advance the
+    /// clock, so an instrumented replay is bit-identical to an untracked
+    /// one and [`Recorder::busy_total`] reconciles exactly with `busy`.
+    pub fn enable_obs(&mut self) {
+        self.obs = Some(Recorder::new());
+    }
+
+    /// The recorded span timeline, if observability is enabled.
+    pub fn obs(&self) -> Option<&Recorder> {
+        self.obs.as_ref()
+    }
+
+    /// Cost-oracle lookups served from memo tables without a walk.
+    pub fn cost_memo_hits(&self) -> u64 {
+        self.cost.memo_hits()
+    }
+
+    /// Record one busy span (no-op when obs is off). Reads the power
+    /// plane's cumulative throttle time so thermal/DVFS transitions
+    /// surface as instant events on the device track.
+    fn record_span(&mut self, kind: SpanKind, start: f64, dur: f64, arrival: f64, batch: usize) {
+        if self.obs.is_none() {
+            return;
+        }
+        let (throttled, rung) = match &self.power {
+            Some(pw) => (pw.throttled_s, pw.governor_rung()),
+            None => (0.0, 0),
+        };
+        if let Some(rec) = &mut self.obs {
+            rec.busy_span(Span { kind, start, dur, arrival, batch }, throttled, rung);
+        }
+    }
+
+    /// Record one instant event (no-op when obs is off).
+    fn record_event(&mut self, kind: EventKind, t: f64, arrival: f64) {
+        if let Some(rec) = &mut self.obs {
+            rec.event(kind, t, arrival);
+        }
     }
 
     /// Override the per-phase DVFS operating points (nominal by default).
@@ -512,6 +572,7 @@ impl Device {
     }
 
     pub fn push(&mut self, job: DeviceJob) {
+        self.record_event(EventKind::Queued, job.ready(), job.arrival());
         self.queue.push_back(job);
     }
 
@@ -611,6 +672,7 @@ impl Device {
                         self.busy += p;
                         self.last_active = self.now;
                         self.prefills += 1;
+                        self.record_span(SpanKind::Prefill, start, p, arrival, 1);
                         self.active[slot] = Some(ActiveSeq {
                             arrival,
                             first_token_at: self.now,
@@ -631,6 +693,7 @@ impl Device {
                         self.now = start + p;
                         self.busy += p;
                         self.last_active = self.now;
+                        self.record_span(SpanKind::Recompute, start, p, arrival, 1);
                         self.active[slot] =
                             Some(ActiveSeq { arrival, first_token_at, ctx, remaining });
                     }
@@ -646,6 +709,7 @@ impl Device {
                         self.busy += p;
                         self.last_active = self.now;
                         self.prefills += 1;
+                        self.record_span(SpanKind::Prefill, start, p, arrival, 1);
                         handoffs.push(PrefillDone {
                             arrival,
                             done_at: self.now,
@@ -730,10 +794,17 @@ impl Device {
             let offset = self.prefilling[i].offset;
             let take = chunk.min(self.prefilling[i].l_in - offset);
             let c = self.cost.prefill_chunk(offset, take);
-            let dt = self.charge(self.now, c, Phase::Prefill);
+            let start = self.now;
+            let dt = self.charge(start, c, Phase::Prefill);
             self.now += dt;
             self.busy += dt;
             self.last_active = self.now;
+            let arrival = self.prefilling[i].arrival;
+            let kind = match self.prefilling[i].kind {
+                PrefillKind::Resume { .. } => SpanKind::Recompute,
+                _ => SpanKind::PrefillChunk,
+            };
+            self.record_span(kind, start, dt, arrival, 1);
             self.prefilling[i].offset += take;
             if self.prefilling[i].offset == self.prefilling[i].l_in {
                 let job = self.prefilling.remove(i);
@@ -801,6 +872,7 @@ impl Device {
             let s = self.active[slot].take().unwrap();
             self.evictions += 1;
             self.recompute_tokens += s.ctx as u64;
+            self.record_event(EventKind::Evicted, self.now, s.arrival);
             self.queue.push_back(DeviceJob::Resume {
                 arrival: s.arrival,
                 ready: self.now,
@@ -819,15 +891,23 @@ impl Device {
         }
         let mean_ctx = self.active.iter().flatten().map(|s| s.ctx).sum::<usize>() / batch;
         let c = self.cost.decode_step(batch, mean_ctx);
-        let dt = self.charge(self.now, c, Phase::Decode);
+        let start = self.now;
+        let dt = self.charge(start, c, Phase::Decode);
         self.now += dt;
         self.busy += dt;
         self.last_active = self.now;
         self.decode_steps += 1;
+        // a decode step serves the whole batch: no single arrival
+        self.record_span(SpanKind::DecodeStep, start, dt, -1.0, batch);
+        let observe = self.obs.is_some();
+        let mut finished: Vec<f64> = Vec::new();
         for slot in self.active.iter_mut() {
             if let Some(s) = slot {
                 s.ctx += 1;
                 if s.remaining == 0 {
+                    if observe {
+                        finished.push(s.arrival);
+                    }
                     self.served.push(ServedRequest {
                         arrival: s.arrival,
                         ttft: s.first_token_at - s.arrival,
@@ -838,6 +918,10 @@ impl Device {
                     s.remaining -= 1;
                 }
             }
+        }
+        let done_at = self.now;
+        for arrival in finished {
+            self.record_event(EventKind::Done, done_at, arrival);
         }
     }
 }
@@ -1194,6 +1278,45 @@ mod tests {
         assert_eq!(pw.events.len() as u64, tracked.prefills + tracked.decode_steps);
         assert_eq!(pw.throttled_s, 0.0);
         assert_eq!(plain.cost_walks(), tracked.cost_walks());
+    }
+
+    #[test]
+    fn obs_recording_is_bit_identical_and_reconciles_busy() {
+        let jobs = |d: &mut Device| {
+            for i in 0..5 {
+                d.push(DeviceJob::Full {
+                    arrival: i as f64 * 0.02,
+                    ready: i as f64 * 0.02,
+                    l_in: 128 + 64 * i,
+                    l_out: 6,
+                });
+            }
+        };
+        let mut plain = dev(2);
+        jobs(&mut plain);
+        drain(&mut plain);
+        let mut observed = dev(2);
+        observed.enable_obs();
+        jobs(&mut observed);
+        drain(&mut observed);
+        // observation never perturbs the simulation
+        assert_eq!(plain.now().to_bits(), observed.now().to_bits());
+        assert_eq!(plain.busy.to_bits(), observed.busy.to_bits());
+        assert_eq!(plain.cost_walks(), observed.cost_walks());
+        for (a, b) in plain.served.iter().zip(&observed.served) {
+            assert_eq!(a.ttft.to_bits(), b.ttft.to_bits());
+            assert_eq!(a.e2e.to_bits(), b.e2e.to_bits());
+        }
+        // every busy event left a span, and their durations fold back to
+        // the device's busy accumulator bit-for-bit
+        let rec = observed.obs().unwrap();
+        assert_eq!(rec.spans.len() as u64, observed.prefills + observed.decode_steps);
+        assert_eq!(rec.busy_total().to_bits(), observed.busy.to_bits());
+        // lifecycle events: one Queued per pushed job, one Done per serve
+        let queued = rec.events.iter().filter(|e| e.kind == EventKind::Queued).count();
+        let done = rec.events.iter().filter(|e| e.kind == EventKind::Done).count();
+        assert_eq!(queued, 5);
+        assert_eq!(done, observed.served.len());
     }
 
     #[test]

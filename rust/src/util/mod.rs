@@ -99,6 +99,15 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// [`percentile`] over an already-ascending slice — same rank and
+/// interpolation math, minus the per-call clone-and-sort. Callers that
+/// retain a sorted view (e.g. `FleetResult`) read percentiles through
+/// this for bit-identical values at O(1) cost.
+pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    assert!(!v.is_empty());
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -205,6 +214,17 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_sorted_matches_percentile_bitwise() {
+        let mut r = Rng::new(13);
+        let xs: Vec<f64> = (0..257).map(|_| r.f64() * 10.0).collect();
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [0.0, 12.5, 50.0, 83.0, 99.0, 100.0] {
+            assert_eq!(percentile_sorted(&sorted, p).to_bits(), percentile(&xs, p).to_bits());
+        }
     }
 
     #[test]
