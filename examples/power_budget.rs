@@ -5,7 +5,7 @@
 //!
 //!     cargo run --release --example power_budget
 
-use halo::cluster::{Fleet, Interconnect, Mix, Policy, SchedConfig};
+use halo::cluster::{FleetBuilder, Interconnect, Mix, Policy};
 use halo::config::HwConfig;
 use halo::dse::{explore, DseConfig, Exhaustive, Objective, SearchSpace};
 use halo::mapping::MappingKind;
@@ -22,15 +22,12 @@ fn main() {
 
     println!("== energy per token: Fully-CiD vs Fully-CiM vs HALO1 ==");
     for mapping in [MappingKind::FullCid, MappingKind::FullCim, MappingKind::Halo1] {
-        let mut fleet = Fleet::heterogeneous_with(
-            &llm,
-            &hw,
-            &[mapping],
-            8,
-            Interconnect::board(),
-            SchedConfig::default(),
-        );
-        fleet.enable_power(&hw, None);
+        let mut fleet = FleetBuilder::new(&llm, &hw)
+            .heterogeneous(&[mapping])
+            .slots(8)
+            .interconnect(Interconnect::board())
+            .power(None)
+            .build();
         let mut router = Policy::LeastLoaded.router();
         let r = fleet.replay(&trace, router.as_mut());
         println!(
@@ -45,8 +42,12 @@ fn main() {
     println!("\n== TDP sweep on one HALO1 device (saturating burst) ==");
     let burst = Mix::Generation.trace(63, 48, 1.0e6);
     for cap in [None, Some(150.0), Some(100.0), Some(60.0)] {
-        let mut fleet = Fleet::unified(&llm, &hw, 1, 8, Interconnect::board());
-        fleet.enable_power(&hw, cap.map(ThermalConfig::paper));
+        let mut fleet = FleetBuilder::new(&llm, &hw)
+            .devices(1)
+            .slots(8)
+            .interconnect(Interconnect::board())
+            .power(cap.map(ThermalConfig::paper))
+            .build();
         let mut router = Policy::LeastLoaded.router();
         let r = fleet.replay(&burst, router.as_mut());
         println!(
@@ -63,9 +64,13 @@ fn main() {
     let gen_tokens: u64 = gen.iter().map(|q| q.l_out as u64).sum();
     let eco = hw.power.dvfs_points.len() - 1;
     for (label, pre, dec) in [("nominal", 0, 0), ("eco-decode", 0, eco), ("eco", eco, eco)] {
-        let mut fleet = Fleet::unified(&llm, &hw, 1, 8, Interconnect::board());
-        fleet.enable_power(&hw, None);
-        fleet.set_dvfs(DvfsConfig::with_indices(&hw.power, pre, dec));
+        let mut fleet = FleetBuilder::new(&llm, &hw)
+            .devices(1)
+            .slots(8)
+            .interconnect(Interconnect::board())
+            .power(None)
+            .dvfs(DvfsConfig::with_indices(&hw.power, pre, dec))
+            .build();
         let mut router = Policy::LeastLoaded.router();
         let r = fleet.replay(&gen, router.as_mut());
         println!(

@@ -3,7 +3,7 @@
 //! thermally throttled replay (attribution + RC updates + stretched
 //! events), and windowed power-trace extraction.
 
-use halo::cluster::{Fleet, Interconnect, Mix, Policy};
+use halo::cluster::{FleetBuilder, Interconnect, Mix, Policy};
 use halo::config::HwConfig;
 use halo::model::LlmConfig;
 use halo::power::{power_trace, DvfsConfig, ThermalConfig};
@@ -45,8 +45,12 @@ fn main() {
     });
 
     // trace extraction over a realistic event log
-    let mut fleet = Fleet::unified(&llm, &hw, 1, 8, Interconnect::board());
-    fleet.enable_power(&hw, None);
+    let mut fleet = FleetBuilder::new(&llm, &hw)
+        .devices(1)
+        .slots(8)
+        .interconnect(Interconnect::board())
+        .power(None)
+        .build();
     let mut router = Policy::LeastLoaded.router();
     let r = fleet.replay(&trace, router.as_mut());
     let pw = fleet.devices[0].power().expect("tracked");

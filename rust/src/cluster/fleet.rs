@@ -1,20 +1,35 @@
 //! A fleet of HALO devices advanced in global event order.
 //!
 //! Each device is an independent [`Device`] state machine with its own
-//! clock; the fleet interleaves three event sources — trace arrivals,
+//! clock; the fleet interleaves three event sources — workload arrivals,
 //! KV-handoff deliveries, and device scheduling cycles — always taking
 //! the earliest. Requests routed with distinct prefill/decode devices
 //! incur a KV-cache transfer over the [`Interconnect`] between the
 //! prefill's completion and the decode admission.
+//!
+//! Two entry points share the same event loop:
+//!
+//! - [`Fleet::serve`] pulls arrivals one at a time from any
+//!   [`WorkloadSource`] and folds completions into an online
+//!   [`ServeSink`]-backed result — bounded memory in the request count,
+//!   with streaming [`LogHistogram`] percentiles once the configurable
+//!   retention cap ([`ServeOptions`]) is exceeded.
+//! - [`Fleet::replay`] is a thin wrapper: a slice-backed source with an
+//!   unbounded retention cap, bit-identical to the historical
+//!   materialized-trace replay (pinned by fingerprint tests below).
+//!
+//! Fleets are built with [`FleetBuilder`]; the historical constructors
+//! (`unified`, `disaggregated_with`, ...) remain as deprecated shims.
 
 use super::interconnect::{kv_transfer_bytes, Interconnect};
 use super::router::Router;
+use super::traffic::{SliceSource, WorkloadSource};
 use crate::config::HwConfig;
 use crate::mapping::MappingKind;
 use crate::model::LlmConfig;
-use crate::obs::{self, Span, SpanKind, Track};
+use crate::obs::{self, LogHistogram, Span, SpanKind, Track};
 use crate::power::{DvfsConfig, EnergyBreakdown, ThermalConfig};
-use crate::sim::device::{Device, DeviceJob, SchedConfig};
+use crate::sim::device::{Device, DeviceJob, ReqTag, SchedConfig};
 use crate::sim::queueing::{served_rate, ServedRequest, TraceRequest};
 use crate::util::json::Json;
 use crate::util::percentile_sorted;
@@ -28,6 +43,306 @@ struct InFlight {
     first_token_at: f64,
     ctx: usize,
     remaining: usize,
+    tag: ReqTag,
+}
+
+/// How [`Fleet::serve`] retains completed requests.
+///
+/// Counters, histograms, and the makespan are always exact; the cap
+/// only bounds how many raw [`ServedRequest`] records survive into
+/// [`FleetResult::served`]. Under the cap the result is `complete` and
+/// percentiles come from the exact sorted views (bit-compatible with
+/// the legacy clone-and-sort helpers); over it they fall back to the
+/// ~±3% log-bucketed histograms and RSS stays flat in request count.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// Maximum number of raw served records to retain.
+    pub retain_cap: usize,
+}
+
+impl ServeOptions {
+    /// Retain every served record (the replay-compatible default).
+    pub fn exact() -> Self {
+        ServeOptions { retain_cap: usize::MAX }
+    }
+
+    /// Retain at most `retain_cap` records; statistics go streaming.
+    pub fn streaming(retain_cap: usize) -> Self {
+        ServeOptions { retain_cap }
+    }
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self::exact()
+    }
+}
+
+/// Online accumulator for completed requests: exact counters + streaming
+/// histograms always, raw records only up to the retention cap. Each
+/// retained record is keyed `(device, per-device completion seq)` so the
+/// collect step can reconstruct the legacy device-major `served` order
+/// no matter how device completions interleaved in global time.
+struct ServeSink {
+    retain_cap: usize,
+    retained: Vec<(usize, u64, ServedRequest)>,
+    /// Per-device completion count; doubles as the next seq key.
+    dev_seq: Vec<u64>,
+    ttft_hist: LogHistogram,
+    e2e_hist: LogHistogram,
+    requests: usize,
+    tokens: u64,
+}
+
+impl ServeSink {
+    fn new(retain_cap: usize, devices: usize) -> Self {
+        ServeSink {
+            retain_cap,
+            retained: Vec::new(),
+            dev_seq: vec![0; devices],
+            ttft_hist: LogHistogram::new(),
+            e2e_hist: LogHistogram::new(),
+            requests: 0,
+            tokens: 0,
+        }
+    }
+
+    fn fold(&mut self, dev: usize, r: ServedRequest) {
+        self.ttft_hist.record(r.ttft);
+        self.e2e_hist.record(r.e2e);
+        self.requests += 1;
+        self.tokens += r.tokens;
+        let seq = self.dev_seq[dev];
+        self.dev_seq[dev] += 1;
+        if self.retained.len() < self.retain_cap {
+            self.retained.push((dev, seq, r));
+        }
+    }
+}
+
+/// Topology selected on a [`FleetBuilder`].
+#[derive(Debug, Clone)]
+enum Topology {
+    Unified,
+    Disaggregated { prefill_frac: f64 },
+    Heterogeneous { mappings: Vec<MappingKind> },
+}
+
+/// Fluent construction for [`Fleet`]: one builder replacing the five
+/// historical constructors plus the mutate-after-build sprawl
+/// (`enable_power` / `enable_obs` / `set_dvfs` / `set_kv_capacity`).
+///
+/// ```ignore
+/// let mut fleet = FleetBuilder::new(&llm, &hw)
+///     .devices(8)
+///     .slots(4)
+///     .disaggregated(0.5)
+///     .interconnect(Interconnect::board())
+///     .power(None)
+///     .build();
+/// ```
+///
+/// Defaults: one unified HALO1 device, 4 slots, board-level link,
+/// default scheduler, no power/obs/DVFS.
+#[derive(Debug, Clone)]
+pub struct FleetBuilder {
+    llm: LlmConfig,
+    hw: HwConfig,
+    topology: Topology,
+    devices: usize,
+    slots: usize,
+    interconnect: Interconnect,
+    sched: SchedConfig,
+    kv_caps: Vec<(usize, Option<u64>)>,
+    power_enabled: bool,
+    thermal: Option<ThermalConfig>,
+    dvfs: Option<DvfsConfig>,
+    obs: bool,
+}
+
+impl FleetBuilder {
+    pub fn new(llm: &LlmConfig, hw: &HwConfig) -> Self {
+        FleetBuilder {
+            llm: llm.clone(),
+            hw: hw.clone(),
+            topology: Topology::Unified,
+            devices: 1,
+            slots: 4,
+            interconnect: Interconnect::board(),
+            sched: SchedConfig::default(),
+            kv_caps: Vec::new(),
+            power_enabled: false,
+            thermal: None,
+            dvfs: None,
+            obs: false,
+        }
+    }
+
+    /// Number of devices (ignored by [`FleetBuilder::heterogeneous`],
+    /// which sizes the fleet from its mapping list).
+    pub fn devices(mut self, n: usize) -> Self {
+        self.devices = n;
+        self
+    }
+
+    /// Concurrent decode slots per device.
+    pub fn slots(mut self, n: usize) -> Self {
+        self.slots = n;
+        self
+    }
+
+    pub fn interconnect(mut self, link: Interconnect) -> Self {
+        self.interconnect = link;
+        self
+    }
+
+    /// Per-device scheduling configuration (chunked prefill, admission
+    /// policy, KV capacity).
+    pub fn sched(mut self, sched: SchedConfig) -> Self {
+        self.sched = sched;
+        self
+    }
+
+    /// Homogeneous HALO1 fleet; every device prefills and decodes (the
+    /// default topology).
+    pub fn unified(mut self) -> Self {
+        self.topology = Topology::Unified;
+        self
+    }
+
+    /// Phase-disaggregated fleet: `prefill_frac` of the devices (at
+    /// least one, at most n-1) form a Fully-CiM prefill pool feeding a
+    /// Fully-CiD decode pool.
+    pub fn disaggregated(mut self, prefill_frac: f64) -> Self {
+        self.topology = Topology::Disaggregated { prefill_frac };
+        self
+    }
+
+    /// Unified fleet with an explicit per-device mapping (HALO1 beside
+    /// HALO2 / HALO-SA devices); fleet size follows the list.
+    pub fn heterogeneous(mut self, mappings: &[MappingKind]) -> Self {
+        self.devices = mappings.len();
+        self.topology = Topology::Heterogeneous { mappings: mappings.to_vec() };
+        self
+    }
+
+    /// Override one device's resident-KV budget after construction.
+    pub fn kv_capacity(mut self, dev: usize, cap: Option<u64>) -> Self {
+        self.kv_caps.push((dev, cap));
+        self
+    }
+
+    /// Attach per-event energy attribution (and, with a
+    /// [`ThermalConfig`], a live TDP throttle) to every device.
+    pub fn power(mut self, thermal: Option<ThermalConfig>) -> Self {
+        self.power_enabled = true;
+        self.thermal = thermal;
+        self
+    }
+
+    /// Pin every device to a per-phase DVFS configuration.
+    pub fn dvfs(mut self, dvfs: DvfsConfig) -> Self {
+        self.dvfs = Some(dvfs);
+        self
+    }
+
+    /// Attach request-lifecycle span recorders for Chrome-trace export.
+    pub fn obs(mut self) -> Self {
+        self.obs = true;
+        self
+    }
+
+    pub fn build(self) -> Fleet {
+        let (devs, prefill_pool, decode_pool): (Vec<Device>, Vec<usize>, Vec<usize>) =
+            match &self.topology {
+                Topology::Unified => {
+                    assert!(self.devices > 0);
+                    let devs = (0..self.devices)
+                        .map(|i| {
+                            Device::with_sched(
+                                &self.llm,
+                                &self.hw,
+                                MappingKind::Halo1,
+                                self.slots,
+                                i,
+                                self.sched.clone(),
+                            )
+                        })
+                        .collect();
+                    (devs, (0..self.devices).collect(), (0..self.devices).collect())
+                }
+                Topology::Disaggregated { prefill_frac } => {
+                    let devices = self.devices;
+                    assert!(devices >= 2, "disaggregation needs at least 2 devices");
+                    assert!(*prefill_frac > 0.0 && *prefill_frac < 1.0);
+                    let n_pre = ((devices as f64 * prefill_frac).round() as usize)
+                        .clamp(1, devices - 1);
+                    let devs = (0..devices)
+                        .map(|i| {
+                            let mapping = if i < n_pre {
+                                MappingKind::FullCim
+                            } else {
+                                MappingKind::FullCid
+                            };
+                            Device::with_sched(
+                                &self.llm,
+                                &self.hw,
+                                mapping,
+                                self.slots,
+                                i,
+                                self.sched.clone(),
+                            )
+                        })
+                        .collect();
+                    (devs, (0..n_pre).collect(), (n_pre..devices).collect())
+                }
+                Topology::Heterogeneous { mappings } => {
+                    assert!(!mappings.is_empty(), "heterogeneous fleet needs at least 1 device");
+                    let devs = mappings
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &m)| {
+                            Device::with_sched(
+                                &self.llm,
+                                &self.hw,
+                                m,
+                                self.slots,
+                                i,
+                                self.sched.clone(),
+                            )
+                        })
+                        .collect();
+                    (devs, (0..mappings.len()).collect(), (0..mappings.len()).collect())
+                }
+            };
+        let devices = devs.len();
+        let mut fleet = Fleet {
+            llm: self.llm,
+            devices: devs,
+            interconnect: self.interconnect,
+            prefill_pool,
+            decode_pool,
+            kv_bytes: 0,
+            transfers: 0,
+            kv_energy_j: 0.0,
+            pending_decode: vec![0; devices],
+            pending_kv: vec![0; devices],
+            obs_kv: None,
+        };
+        for (dev, cap) in self.kv_caps {
+            fleet.set_kv_capacity(dev, cap);
+        }
+        if self.power_enabled {
+            fleet.enable_power(&self.hw, self.thermal);
+        }
+        if let Some(dvfs) = self.dvfs {
+            fleet.set_dvfs(dvfs);
+        }
+        if self.obs {
+            fleet.enable_obs();
+        }
+        fleet
+    }
 }
 
 /// N devices, their routing pools, and the link between them.
@@ -61,6 +376,7 @@ pub struct Fleet {
 impl Fleet {
     /// A homogeneous fleet: every device runs the HALO1 phase-aware
     /// mapping end-to-end (the monolithic baseline).
+    #[deprecated(since = "0.7.0", note = "use FleetBuilder::new(llm, hw).devices(n)…build()")]
     pub fn unified(
         llm: &LlmConfig,
         hw: &HwConfig,
@@ -68,11 +384,16 @@ impl Fleet {
         slots: usize,
         interconnect: Interconnect,
     ) -> Self {
-        Self::unified_with(llm, hw, devices, slots, interconnect, SchedConfig::default())
+        FleetBuilder::new(llm, hw)
+            .devices(devices)
+            .slots(slots)
+            .interconnect(interconnect)
+            .build()
     }
 
     /// [`Fleet::unified`] under an explicit per-device scheduling
     /// configuration (chunked prefill, admission policy, KV capacity).
+    #[deprecated(since = "0.7.0", note = "use FleetBuilder::new(llm, hw).sched(…)…build()")]
     pub fn unified_with(
         llm: &LlmConfig,
         hw: &HwConfig,
@@ -81,29 +402,19 @@ impl Fleet {
         interconnect: Interconnect,
         sched: SchedConfig,
     ) -> Self {
-        assert!(devices > 0);
-        let devs = (0..devices)
-            .map(|i| Device::with_sched(llm, hw, MappingKind::Halo1, slots, i, sched.clone()))
-            .collect();
-        Fleet {
-            llm: llm.clone(),
-            devices: devs,
-            interconnect,
-            prefill_pool: (0..devices).collect(),
-            decode_pool: (0..devices).collect(),
-            kv_bytes: 0,
-            transfers: 0,
-            kv_energy_j: 0.0,
-            pending_decode: vec![0; devices],
-            pending_kv: vec![0; devices],
-            obs_kv: None,
-        }
+        FleetBuilder::new(llm, hw)
+            .devices(devices)
+            .slots(slots)
+            .interconnect(interconnect)
+            .sched(sched)
+            .build()
     }
 
     /// A unified fleet with an explicit per-device mapping — heterogeneous
     /// compositions such as HALO1 devices serving alongside HALO2
     /// (accuracy-tiered) or HALO-SA (digital-fallback) devices. Every
     /// device prefills and decodes; routing decides who gets what.
+    #[deprecated(since = "0.7.0", note = "use FleetBuilder with .heterogeneous(mappings)")]
     pub fn heterogeneous_with(
         llm: &LlmConfig,
         hw: &HwConfig,
@@ -112,31 +423,18 @@ impl Fleet {
         interconnect: Interconnect,
         sched: SchedConfig,
     ) -> Self {
-        assert!(!mappings.is_empty(), "heterogeneous fleet needs at least 1 device");
-        let devs = mappings
-            .iter()
-            .enumerate()
-            .map(|(i, &m)| Device::with_sched(llm, hw, m, slots, i, sched.clone()))
-            .collect();
-        let devices = mappings.len();
-        Fleet {
-            llm: llm.clone(),
-            devices: devs,
-            interconnect,
-            prefill_pool: (0..devices).collect(),
-            decode_pool: (0..devices).collect(),
-            kv_bytes: 0,
-            transfers: 0,
-            kv_energy_j: 0.0,
-            pending_decode: vec![0; devices],
-            pending_kv: vec![0; devices],
-            obs_kv: None,
-        }
+        FleetBuilder::new(llm, hw)
+            .heterogeneous(mappings)
+            .slots(slots)
+            .interconnect(interconnect)
+            .sched(sched)
+            .build()
     }
 
     /// A phase-disaggregated fleet: a Fully-CiM prefill pool feeding a
     /// Fully-CiD decode pool (Table II taken to cluster scale).
     /// `prefill_frac` of the devices (at least one, at most n-1) prefill.
+    #[deprecated(since = "0.7.0", note = "use FleetBuilder with .disaggregated(prefill_frac)")]
     pub fn disaggregated(
         llm: &LlmConfig,
         hw: &HwConfig,
@@ -145,20 +443,18 @@ impl Fleet {
         prefill_frac: f64,
         interconnect: Interconnect,
     ) -> Self {
-        Self::disaggregated_with(
-            llm,
-            hw,
-            devices,
-            slots,
-            prefill_frac,
-            interconnect,
-            SchedConfig::default(),
-        )
+        FleetBuilder::new(llm, hw)
+            .devices(devices)
+            .slots(slots)
+            .disaggregated(prefill_frac)
+            .interconnect(interconnect)
+            .build()
     }
 
     /// [`Fleet::disaggregated`] under an explicit per-device scheduling
     /// configuration. The KV capacity applies to every device; use
     /// [`Fleet::set_kv_capacity`] afterwards for heterogeneous budgets.
+    #[deprecated(since = "0.7.0", note = "use FleetBuilder with .disaggregated(prefill_frac)")]
     pub fn disaggregated_with(
         llm: &LlmConfig,
         hw: &HwConfig,
@@ -168,30 +464,13 @@ impl Fleet {
         interconnect: Interconnect,
         sched: SchedConfig,
     ) -> Self {
-        assert!(devices >= 2, "disaggregation needs at least 2 devices");
-        assert!(prefill_frac > 0.0 && prefill_frac < 1.0);
-        let n_pre =
-            ((devices as f64 * prefill_frac).round() as usize).clamp(1, devices - 1);
-        let devs = (0..devices)
-            .map(|i| {
-                let mapping =
-                    if i < n_pre { MappingKind::FullCim } else { MappingKind::FullCid };
-                Device::with_sched(llm, hw, mapping, slots, i, sched.clone())
-            })
-            .collect();
-        Fleet {
-            llm: llm.clone(),
-            devices: devs,
-            interconnect,
-            prefill_pool: (0..n_pre).collect(),
-            decode_pool: (n_pre..devices).collect(),
-            kv_bytes: 0,
-            transfers: 0,
-            kv_energy_j: 0.0,
-            pending_decode: vec![0; devices],
-            pending_kv: vec![0; devices],
-            obs_kv: None,
-        }
+        FleetBuilder::new(llm, hw)
+            .devices(devices)
+            .slots(slots)
+            .disaggregated(prefill_frac)
+            .interconnect(interconnect)
+            .sched(sched)
+            .build()
     }
 
     /// Override one device's resident-KV budget (heterogeneous fleets:
@@ -278,10 +557,34 @@ impl Fleet {
         (req.l_in + req.l_out.max(1)) as u64 * self.llm.kv_bytes_per_token()
     }
 
-    /// Serve a trace through the fleet under `router`. Consumes the
-    /// fleet's working state; call once per constructed fleet.
+    /// Serve a materialized trace through the fleet under `router`.
+    /// Consumes the fleet's working state; call once per constructed
+    /// fleet. A thin wrapper over [`Fleet::serve`] with a slice-backed
+    /// source and unbounded retention — bit-identical to the historical
+    /// replay loop (fingerprint-pinned in tests).
     pub fn replay(&mut self, trace: &[TraceRequest], router: &mut dyn Router) -> FleetResult {
-        let mut pending = trace.iter().peekable();
+        let mut source = SliceSource::new(trace);
+        let r = self.serve(&mut source, router, ServeOptions::exact());
+        debug_assert_eq!(r.requests, trace.len(), "requests conserved");
+        r
+    }
+
+    /// Serve a streaming workload through the fleet under `router`:
+    /// arrivals are pulled from `source` one at a time (never
+    /// materialized), and completions fold into online statistics as
+    /// devices finish them, so memory stays flat in the request count
+    /// when `opts` caps retention. Event order — and therefore every
+    /// timing result — is identical to the historical slice replay:
+    /// ties resolve arrival first, then KV handoff, then the earliest
+    /// device cycle.
+    pub fn serve(
+        &mut self,
+        source: &mut dyn WorkloadSource,
+        router: &mut dyn Router,
+        opts: ServeOptions,
+    ) -> FleetResult {
+        let mut sink = ServeSink::new(opts.retain_cap, self.devices.len());
+        let mut next_req = source.next();
         let mut inflight: Vec<InFlight> = Vec::new();
         loop {
             // earliest actionable device
@@ -294,28 +597,33 @@ impl Fleet {
                 }
             }
             let t_dev = best.map_or(f64::INFINITY, |(t, _)| t);
-            let t_arr = pending.peek().map_or(f64::INFINITY, |r| r.arrival);
+            let t_arr = next_req.as_ref().map_or(f64::INFINITY, |r| r.arrival);
             let t_hand = inflight.iter().map(|h| h.ready).fold(f64::INFINITY, f64::min);
 
             if t_arr.is_finite() && t_arr <= t_dev && t_arr <= t_hand {
                 // route the next arrival (ties resolve arrival-first, the
                 // single-device replay's "pull arrivals up to now" rule)
-                let req = pending.next().unwrap();
-                let route = router.route(self, req);
+                let req = next_req.take().unwrap();
+                let route = router.route(self, &req);
+                let tag = ReqTag::of(&req);
                 if route.prefill == route.decode {
-                    self.devices[route.prefill].push(DeviceJob::full(req));
+                    self.devices[route.prefill].push_tagged(DeviceJob::full(&req), tag);
                 } else {
-                    let est = self.kv_estimate(req);
+                    let est = self.kv_estimate(&req);
                     self.pending_decode[route.decode] += 1;
                     self.pending_kv[route.decode] += est;
-                    self.devices[route.prefill].push(DeviceJob::PrefillOnly {
-                        arrival: req.arrival,
-                        ready: req.arrival,
-                        l_in: req.l_in,
-                        l_out: req.l_out,
-                        decode_dev: route.decode,
-                    });
+                    self.devices[route.prefill].push_tagged(
+                        DeviceJob::PrefillOnly {
+                            arrival: req.arrival,
+                            ready: req.arrival,
+                            l_in: req.l_in,
+                            l_out: req.l_out,
+                            decode_dev: route.decode,
+                        },
+                        tag,
+                    );
                 }
+                next_req = source.next();
             } else if t_hand.is_finite() && t_hand <= t_dev {
                 // deliver the earliest completed KV transfer
                 let i = inflight
@@ -330,13 +638,16 @@ impl Fleet {
                 // l_in + max(l_out, 1) == ctx + remaining + 1
                 let est = (h.ctx + h.remaining + 1) as u64 * self.llm.kv_bytes_per_token();
                 self.pending_kv[h.dev] = self.pending_kv[h.dev].saturating_sub(est);
-                self.devices[h.dev].push(DeviceJob::DecodeOnly {
-                    arrival: h.arrival,
-                    ready: h.ready,
-                    first_token_at: h.first_token_at,
-                    ctx: h.ctx,
-                    remaining: h.remaining,
-                });
+                self.devices[h.dev].push_tagged(
+                    DeviceJob::DecodeOnly {
+                        arrival: h.arrival,
+                        ready: h.ready,
+                        first_token_at: h.first_token_at,
+                        ctx: h.ctx,
+                        remaining: h.remaining,
+                    },
+                    h.tag,
+                );
             } else if let Some((_, id)) = best {
                 for done in self.devices[id].step_cycle() {
                     let bytes = kv_transfer_bytes(&self.llm, done.l_in);
@@ -360,24 +671,41 @@ impl Fleet {
                         first_token_at: done.done_at,
                         ctx: done.l_in,
                         remaining: done.l_out.saturating_sub(1),
+                        tag: done.tag,
                     });
+                }
+                // fold completions as they happen so the retained window
+                // and the histograms stay current without re-scanning
+                if !self.devices[id].served.is_empty() {
+                    for r in std::mem::take(&mut self.devices[id].served) {
+                        sink.fold(id, r);
+                    }
                 }
             } else {
                 break;
             }
         }
-        self.collect(trace.len())
+        self.collect_streamed(sink)
     }
 
-    fn collect(&mut self, n_requests: usize) -> FleetResult {
+    fn collect_streamed(&mut self, mut sink: ServeSink) -> FleetResult {
+        // fold any completions still parked on devices (none after
+        // `serve`, everything after a raw device-driven loop) in device
+        // order — the legacy `served` ordering
+        for (i, d) in self.devices.iter_mut().enumerate() {
+            if !d.served.is_empty() {
+                for r in std::mem::take(&mut d.served) {
+                    sink.fold(i, r);
+                }
+            }
+        }
         let makespan = self.devices.iter().map(|d| d.now()).fold(0.0, f64::max);
-        let mut served = Vec::new();
         let mut per_device = Vec::new();
         let mut fleet_energy = EnergyBreakdown::default();
         let mut power_tracked = false;
         let mut peak_power_w = 0.0f64;
         let mut throttled_s = 0.0;
-        for d in &mut self.devices {
+        for d in &self.devices {
             // per-device energy: every busy event's dynamic + static
             // share, plus the cold static floor over the idle remainder
             // of the fleet makespan
@@ -399,7 +727,7 @@ impl Fleet {
                 role: role_of(d.id, &self.prefill_pool, &self.decode_pool),
                 prefills: d.prefills,
                 decode_steps: d.decode_steps,
-                served: d.served.len(),
+                served: sink.dev_seq[d.id] as usize,
                 busy: d.busy,
                 // when this device last executed work — not its clock,
                 // which idle-jumps can push past the final activity
@@ -411,21 +739,36 @@ impl Fleet {
                 peak_power_w: peak_w,
                 throttled_s: dev_throttled,
             });
-            served.append(&mut d.served);
         }
         fleet_energy.e_link += self.kv_energy_j;
-        debug_assert_eq!(served.len(), n_requests, "requests conserved");
+        let ServeSink { mut retained, ttft_hist, e2e_hist, requests, tokens, .. } = sink;
+        // (device, per-device seq) order == the legacy device-major
+        // append order, regardless of global completion interleaving
+        retained.sort_by_key(|&(dev, seq, _)| (dev, seq));
+        let complete = retained.len() == requests;
+        let served: Vec<ServedRequest> = retained.into_iter().map(|(_, _, r)| r).collect();
         // sorted once here, with util::percentile's exact comparator, so
         // the percentile accessors stay bit-compatible with the legacy
-        // clone-and-sort helpers without re-sorting per call
-        let mut ttft_sorted: Vec<f64> = served.iter().map(|s| s.ttft).collect();
-        ttft_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mut e2e_sorted: Vec<f64> = served.iter().map(|s| s.e2e).collect();
-        e2e_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // clone-and-sort helpers without re-sorting per call; skipped
+        // when retention was capped (the histograms answer instead)
+        let (ttft_sorted, e2e_sorted) = if complete {
+            let mut t: Vec<f64> = served.iter().map(|s| s.ttft).collect();
+            t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut e: Vec<f64> = served.iter().map(|s| s.e2e).collect();
+            e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (t, e)
+        } else {
+            (Vec::new(), Vec::new())
+        };
         FleetResult {
             served,
             ttft_sorted,
             e2e_sorted,
+            requests,
+            tokens,
+            ttft_hist,
+            e2e_hist,
+            complete,
             makespan,
             decode_steps: per_device.iter().map(|s| s.decode_steps).sum(),
             prefills: per_device.iter().map(|s| s.prefills).sum(),
@@ -519,16 +862,32 @@ impl DeviceSummary {
     }
 }
 
-/// Aggregate results of a fleet replay.
+/// Aggregate results of a fleet replay or streamed serve.
 #[derive(Debug, Clone)]
 pub struct FleetResult {
+    /// Completed requests in the legacy device-major order. The full
+    /// population when `complete`; otherwise a retention-capped sample
+    /// (see [`ServeOptions`]) — use `requests` for the true count.
     pub served: Vec<ServedRequest>,
     /// TTFTs of `served`, ascending — built once at collection so the
     /// percentile accessors are cheap reads instead of a clone-and-sort
-    /// per call (DSE reads several per objective evaluation).
+    /// per call (DSE reads several per objective evaluation). Empty when
+    /// retention was capped; the histograms answer instead.
     pub ttft_sorted: Vec<f64>,
     /// End-to-end latencies of `served`, ascending (see `ttft_sorted`).
     pub e2e_sorted: Vec<f64>,
+    /// Exact number of requests served, independent of retention.
+    pub requests: usize,
+    /// Exact output tokens generated, independent of retention.
+    pub tokens: u64,
+    /// Streaming TTFT population (exact count/min/max/mean, ~±3%
+    /// interior percentiles) — always recorded, capped or not.
+    pub ttft_hist: LogHistogram,
+    /// Streaming end-to-end latency population (see `ttft_hist`).
+    pub e2e_hist: LogHistogram,
+    /// Whether `served` holds every completed request (retention cap
+    /// never hit) — when true the percentile accessors are exact.
+    pub complete: bool,
     pub makespan: f64,
     pub decode_steps: u64,
     pub prefills: u64,
@@ -554,22 +913,27 @@ pub struct FleetResult {
 }
 
 impl FleetResult {
-    /// TTFT at percentile `p` off the cached sorted view —
-    /// bit-compatible with `ttft_percentile(&self.served, p)` without
-    /// the per-call clone-and-sort. 0.0 when nothing was served.
+    /// TTFT at percentile `p`: off the cached sorted view when the
+    /// result is `complete` (bit-compatible with
+    /// `ttft_percentile(&self.served, p)`), off the streaming histogram
+    /// when retention was capped. 0.0 when nothing was served.
     pub fn ttft_pct(&self, p: f64) -> f64 {
-        if self.ttft_sorted.is_empty() {
+        if self.requests == 0 {
             0.0
-        } else {
+        } else if self.complete {
             percentile_sorted(&self.ttft_sorted, p)
+        } else {
+            self.ttft_hist.percentile(p)
         }
     }
     /// End-to-end latency at percentile `p` (see [`FleetResult::ttft_pct`]).
     pub fn e2e_pct(&self, p: f64) -> f64 {
-        if self.e2e_sorted.is_empty() {
+        if self.requests == 0 {
             0.0
-        } else {
+        } else if self.complete {
             percentile_sorted(&self.e2e_sorted, p)
+        } else {
+            self.e2e_hist.percentile(p)
         }
     }
     pub fn ttft_p50(&self) -> f64 {
@@ -585,7 +949,7 @@ impl FleetResult {
         self.e2e_pct(99.0)
     }
     pub fn throughput_rps(&self) -> f64 {
-        served_rate(self.served.len(), self.makespan)
+        served_rate(self.requests, self.makespan)
     }
     /// Mean device busy fraction over the fleet makespan.
     pub fn utilization(&self) -> f64 {
@@ -596,10 +960,11 @@ impl FleetResult {
     pub fn energy_j(&self) -> f64 {
         self.energy.total()
     }
-    /// Fleet energy per generated token, J (`tokens` = the trace's total
-    /// output tokens). 0.0 on a zero-token trace — an empty or fully
-    /// rejected replay must not push inf/NaN into DSE rankings or report
-    /// tables.
+    /// Fleet energy per generated token, J (`tokens` = the workload's
+    /// total output tokens; [`FleetResult::tokens`] carries the exact
+    /// count for streamed runs). 0.0 on a zero-token run — an empty or
+    /// fully rejected replay must not push inf/NaN into DSE rankings or
+    /// report tables.
     pub fn energy_per_token(&self, tokens: u64) -> f64 {
         if tokens == 0 {
             0.0
@@ -611,12 +976,44 @@ impl FleetResult {
     pub fn avg_power_w(&self) -> f64 {
         self.energy_j() / self.makespan.max(1e-12)
     }
+
+    /// Order-sensitive FNV-1a digest over every replay-deterministic
+    /// field: counters, the makespan bits, and each retained record's
+    /// timing + identity bits. Two results fingerprint equal iff the
+    /// simulations were bit-identical — the pin used by the
+    /// replay-vs-reference and shim-vs-builder equivalence tests.
+    pub fn fingerprint(&self) -> u64 {
+        fn mix(h: &mut u64, x: u64) {
+            *h ^= x;
+            *h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        mix(&mut h, self.requests as u64);
+        mix(&mut h, self.tokens);
+        mix(&mut h, self.decode_steps);
+        mix(&mut h, self.prefills);
+        mix(&mut h, self.kv_bytes);
+        mix(&mut h, self.transfers);
+        mix(&mut h, self.evictions);
+        mix(&mut h, self.recompute_tokens);
+        mix(&mut h, self.makespan.to_bits());
+        for s in &self.served {
+            mix(&mut h, s.arrival.to_bits());
+            mix(&mut h, s.ttft.to_bits());
+            mix(&mut h, s.e2e.to_bits());
+            mix(&mut h, s.tenant as u64);
+            mix(&mut h, s.session);
+            mix(&mut h, s.tokens);
+        }
+        h
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cluster::router::{LeastLoaded, PhaseDisaggregated, RoundRobin};
+    use crate::cluster::workload::Mix;
     use crate::sim::queueing::{poisson_trace, replay_trace};
 
     fn llm() -> LlmConfig {
@@ -627,11 +1024,108 @@ mod tests {
         HwConfig::paper()
     }
 
+    fn unified(devices: usize) -> Fleet {
+        FleetBuilder::new(&llm(), &hw()).devices(devices).slots(4).build()
+    }
+
+    fn disaggregated(devices: usize, frac: f64) -> Fleet {
+        FleetBuilder::new(&llm(), &hw()).devices(devices).slots(4).disaggregated(frac).build()
+    }
+
+    /// The pre-refactor replay loop, verbatim: peeks a materialized
+    /// slice, leaves completions parked on the devices, and collects at
+    /// the end. `Fleet::serve` must stay bit-identical to this.
+    fn reference_replay(
+        fleet: &mut Fleet,
+        trace: &[TraceRequest],
+        router: &mut dyn Router,
+    ) -> FleetResult {
+        let mut pending = trace.iter().peekable();
+        let mut inflight: Vec<InFlight> = Vec::new();
+        loop {
+            let mut best: Option<(f64, usize)> = None;
+            for d in &fleet.devices {
+                if let Some(t) = d.next_action_time() {
+                    if best.is_none_or(|(bt, _)| t < bt) {
+                        best = Some((t, d.id));
+                    }
+                }
+            }
+            let t_dev = best.map_or(f64::INFINITY, |(t, _)| t);
+            let t_arr = pending.peek().map_or(f64::INFINITY, |r| r.arrival);
+            let t_hand = inflight.iter().map(|h| h.ready).fold(f64::INFINITY, f64::min);
+
+            if t_arr.is_finite() && t_arr <= t_dev && t_arr <= t_hand {
+                let req = pending.next().unwrap();
+                let route = router.route(fleet, req);
+                if route.prefill == route.decode {
+                    fleet.devices[route.prefill].push_tagged(DeviceJob::full(req), ReqTag::of(req));
+                } else {
+                    let est = fleet.kv_estimate(req);
+                    fleet.pending_decode[route.decode] += 1;
+                    fleet.pending_kv[route.decode] += est;
+                    fleet.devices[route.prefill].push_tagged(
+                        DeviceJob::PrefillOnly {
+                            arrival: req.arrival,
+                            ready: req.arrival,
+                            l_in: req.l_in,
+                            l_out: req.l_out,
+                            decode_dev: route.decode,
+                        },
+                        ReqTag::of(req),
+                    );
+                }
+            } else if t_hand.is_finite() && t_hand <= t_dev {
+                let i = inflight
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.ready.partial_cmp(&b.1.ready).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                let h = inflight.swap_remove(i);
+                fleet.pending_decode[h.dev] -= 1;
+                let est = (h.ctx + h.remaining + 1) as u64 * fleet.llm.kv_bytes_per_token();
+                fleet.pending_kv[h.dev] = fleet.pending_kv[h.dev].saturating_sub(est);
+                fleet.devices[h.dev].push_tagged(
+                    DeviceJob::DecodeOnly {
+                        arrival: h.arrival,
+                        ready: h.ready,
+                        first_token_at: h.first_token_at,
+                        ctx: h.ctx,
+                        remaining: h.remaining,
+                    },
+                    h.tag,
+                );
+            } else if let Some((_, id)) = best {
+                for done in fleet.devices[id].step_cycle() {
+                    let bytes = kv_transfer_bytes(&fleet.llm, done.l_in);
+                    fleet.kv_bytes += bytes;
+                    fleet.transfers += 1;
+                    fleet.kv_energy_j += fleet.interconnect.transfer_energy(bytes);
+                    let t_xfer = fleet.interconnect.transfer_time(bytes);
+                    inflight.push(InFlight {
+                        ready: done.done_at + t_xfer,
+                        dev: done.decode_dev,
+                        arrival: done.arrival,
+                        first_token_at: done.done_at,
+                        ctx: done.l_in,
+                        remaining: done.l_out.saturating_sub(1),
+                        tag: done.tag,
+                    });
+                }
+            } else {
+                break;
+            }
+        }
+        let sink = ServeSink::new(usize::MAX, fleet.devices.len());
+        fleet.collect_streamed(sink)
+    }
+
     #[test]
     fn single_device_fleet_reproduces_replay_trace() {
         let tr = poisson_trace(21, 40, 4.0, (64, 1024), 32);
         let single = replay_trace(&llm(), &hw(), MappingKind::Halo1, 4, &tr);
-        let mut fleet = Fleet::unified(&llm(), &hw(), 1, 4, Interconnect::board());
+        let mut fleet = unified(1);
         let r = fleet.replay(&tr, &mut RoundRobin::default());
         assert_eq!(r.served.len(), single.served.len());
         assert_eq!(r.decode_steps, single.decode_steps);
@@ -651,19 +1145,24 @@ mod tests {
     #[test]
     fn unified_fleet_conserves_requests_without_transfers() {
         let tr = poisson_trace(22, 60, 20.0, (64, 512), 16);
-        let mut fleet = Fleet::unified(&llm(), &hw(), 4, 4, Interconnect::board());
+        let mut fleet = unified(4);
         let r = fleet.replay(&tr, &mut LeastLoaded);
         assert_eq!(r.served.len(), 60);
+        assert_eq!(r.requests, 60);
+        assert!(r.complete);
         assert_eq!(r.transfers, 0);
         assert_eq!(r.kv_bytes, 0);
         // least-loaded spreads work across every device
         assert!(r.per_device.iter().all(|d| d.served > 0), "{:?}", r.per_device);
+        // the per-device served counts re-add to the fleet total
+        let dev_sum: usize = r.per_device.iter().map(|d| d.served).sum();
+        assert_eq!(dev_sum, r.requests);
     }
 
     #[test]
     fn disaggregated_fleet_transfers_every_kv_cache() {
         let tr = poisson_trace(23, 30, 10.0, (128, 512), 8);
-        let mut fleet = Fleet::disaggregated(&llm(), &hw(), 4, 4, 0.5, Interconnect::board());
+        let mut fleet = disaggregated(4, 0.5);
         let r = fleet.replay(&tr, &mut PhaseDisaggregated);
         assert_eq!(r.served.len(), 30);
         assert_eq!(r.transfers, 30);
@@ -686,14 +1185,7 @@ mod tests {
     fn heterogeneous_fleet_mixes_mappings_and_conserves() {
         let tr = poisson_trace(26, 40, 30.0, (64, 512), 16);
         let mappings = [MappingKind::Halo1, MappingKind::Halo2, MappingKind::Halo1];
-        let mut fleet = Fleet::heterogeneous_with(
-            &llm(),
-            &hw(),
-            &mappings,
-            4,
-            Interconnect::board(),
-            crate::sim::device::SchedConfig::default(),
-        );
+        let mut fleet = FleetBuilder::new(&llm(), &hw()).heterogeneous(&mappings).slots(4).build();
         assert_eq!(fleet.devices[1].mapping, MappingKind::Halo2);
         let r = fleet.replay(&tr, &mut LeastLoaded);
         assert_eq!(r.served.len(), 40);
@@ -708,7 +1200,12 @@ mod tests {
     fn kv_transfer_energy_counted_per_byte() {
         let tr = poisson_trace(27, 20, 10.0, (128, 512), 8);
         let link = Interconnect::board();
-        let mut fleet = Fleet::disaggregated(&llm(), &hw(), 4, 4, 0.5, link.clone());
+        let mut fleet = FleetBuilder::new(&llm(), &hw())
+            .devices(4)
+            .slots(4)
+            .disaggregated(0.5)
+            .interconnect(link.clone())
+            .build();
         let r = fleet.replay(&tr, &mut PhaseDisaggregated);
         assert_eq!(r.transfers, 20);
         let want = link.transfer_energy(r.kv_bytes);
@@ -723,8 +1220,8 @@ mod tests {
     #[test]
     fn powered_fleet_attributes_energy_to_every_active_device() {
         let tr = poisson_trace(28, 40, 20.0, (64, 512), 16);
-        let mut fleet = Fleet::unified(&llm(), &hw(), 2, 4, Interconnect::board());
-        fleet.enable_power(&hw(), None);
+        let mut fleet =
+            FleetBuilder::new(&llm(), &hw()).devices(2).slots(4).power(None).build();
         let r = fleet.replay(&tr, &mut LeastLoaded);
         assert!(r.power_tracked);
         assert!(r.energy_j() > 0.0);
@@ -740,6 +1237,7 @@ mod tests {
             assert!(d.avg_power_w(r.makespan) > 0.0);
         }
         let tokens: u64 = tr.iter().map(|q| q.l_out as u64).sum();
+        assert_eq!(r.tokens, tokens, "streamed token counter matches the trace");
         assert!(r.energy_per_token(tokens) > 0.0);
         assert!((r.avg_power_w() - r.energy_j() / r.makespan).abs() < 1e-9);
     }
@@ -752,11 +1250,11 @@ mod tests {
         let hw = hw();
         let eco = hw.power.dvfs_points.len() - 1;
         let run = |idx: usize, power: bool| {
-            let mut fleet = Fleet::unified(&llm(), &hw, 2, 4, Interconnect::board());
+            let mut b = FleetBuilder::new(&llm(), &hw).devices(2).slots(4);
             if power {
-                fleet.enable_power(&hw, None);
+                b = b.power(None);
             }
-            fleet.set_dvfs(DvfsConfig::with_indices(&hw.power, idx, idx));
+            let mut fleet = b.dvfs(DvfsConfig::with_indices(&hw.power, idx, idx)).build();
             let r = fleet.replay(&tr, &mut LeastLoaded);
             (r, fleet.cost_walks())
         };
@@ -775,7 +1273,7 @@ mod tests {
     fn cached_percentiles_match_legacy_helpers_bitwise() {
         use crate::sim::queueing::{e2e_percentile, ttft_percentile};
         let tr = poisson_trace(31, 50, 15.0, (64, 768), 16);
-        let mut fleet = Fleet::unified(&llm(), &hw(), 2, 4, Interconnect::board());
+        let mut fleet = unified(2);
         let r = fleet.replay(&tr, &mut LeastLoaded);
         for p in [0.0, 17.0, 50.0, 83.0, 99.0, 100.0] {
             assert_eq!(r.ttft_pct(p).to_bits(), ttft_percentile(&r.served, p).to_bits());
@@ -787,7 +1285,12 @@ mod tests {
     fn slow_link_delays_e2e_not_ttft() {
         let tr = poisson_trace(24, 20, 5.0, (256, 1024), 8);
         let run = |link: Interconnect| {
-            let mut fleet = Fleet::disaggregated(&llm(), &hw(), 4, 4, 0.5, link);
+            let mut fleet = FleetBuilder::new(&llm(), &hw())
+                .devices(4)
+                .slots(4)
+                .disaggregated(0.5)
+                .interconnect(link)
+                .build();
             fleet.replay(&tr, &mut PhaseDisaggregated)
         };
         let fast = run(Interconnect::board());
@@ -795,5 +1298,139 @@ mod tests {
         // TTFT is earned at prefill completion; the link only delays decode
         assert!((fast.ttft_p50() - slow.ttft_p50()).abs() < 1e-9);
         assert!(slow.e2e_p50() > fast.e2e_p50() + 0.05, "{} vs {}", slow.e2e_p50(), fast.e2e_p50());
+    }
+
+    #[test]
+    fn replay_is_bit_identical_to_the_reference_loop_on_all_mixes() {
+        for (i, mix) in Mix::all().into_iter().enumerate() {
+            let tr = mix.trace(40 + i as u64, 60, 12.0);
+            // unified fleet under least-loaded routing
+            let a = unified(3).replay(&tr, &mut LeastLoaded);
+            let b = reference_replay(&mut unified(3), &tr, &mut LeastLoaded);
+            assert_eq!(a.fingerprint(), b.fingerprint(), "unified, mix {}", mix.name());
+            // disaggregated fleet with real KV handoffs in flight
+            let c = disaggregated(4, 0.5).replay(&tr, &mut PhaseDisaggregated);
+            let d = reference_replay(&mut disaggregated(4, 0.5), &tr, &mut PhaseDisaggregated);
+            assert_eq!(c.fingerprint(), d.fingerprint(), "disaggregated, mix {}", mix.name());
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_constructor_shims_match_builder_bit_for_bit() {
+        let tr = Mix::Chat.trace(51, 40, 10.0);
+        let fp =
+            |mut fleet: Fleet, router: &mut dyn Router| fleet.replay(&tr, router).fingerprint();
+        let (l, h) = (llm(), hw());
+        let link = Interconnect::board;
+
+        let shim = fp(Fleet::unified(&l, &h, 2, 4, link()), &mut LeastLoaded);
+        let built = fp(
+            FleetBuilder::new(&l, &h).devices(2).slots(4).interconnect(link()).build(),
+            &mut LeastLoaded,
+        );
+        assert_eq!(shim, built, "unified");
+
+        let sched = SchedConfig::default();
+        let shim = fp(Fleet::unified_with(&l, &h, 2, 4, link(), sched.clone()), &mut LeastLoaded);
+        let built = fp(
+            FleetBuilder::new(&l, &h)
+                .devices(2)
+                .slots(4)
+                .interconnect(link())
+                .sched(sched.clone())
+                .build(),
+            &mut LeastLoaded,
+        );
+        assert_eq!(shim, built, "unified_with");
+
+        let shim = fp(Fleet::disaggregated(&l, &h, 4, 4, 0.5, link()), &mut PhaseDisaggregated);
+        let built = fp(
+            FleetBuilder::new(&l, &h)
+                .devices(4)
+                .slots(4)
+                .disaggregated(0.5)
+                .interconnect(link())
+                .build(),
+            &mut PhaseDisaggregated,
+        );
+        assert_eq!(shim, built, "disaggregated");
+
+        let shim = fp(
+            Fleet::disaggregated_with(&l, &h, 4, 4, 0.5, link(), sched.clone()),
+            &mut PhaseDisaggregated,
+        );
+        let built = fp(
+            FleetBuilder::new(&l, &h)
+                .devices(4)
+                .slots(4)
+                .disaggregated(0.5)
+                .interconnect(link())
+                .sched(sched.clone())
+                .build(),
+            &mut PhaseDisaggregated,
+        );
+        assert_eq!(shim, built, "disaggregated_with");
+
+        let mappings = [MappingKind::Halo1, MappingKind::Halo2];
+        let shim = fp(
+            Fleet::heterogeneous_with(&l, &h, &mappings, 4, link(), sched.clone()),
+            &mut LeastLoaded,
+        );
+        let built = fp(
+            FleetBuilder::new(&l, &h)
+                .heterogeneous(&mappings)
+                .slots(4)
+                .interconnect(link())
+                .sched(sched)
+                .build(),
+            &mut LeastLoaded,
+        );
+        assert_eq!(shim, built, "heterogeneous_with");
+    }
+
+    #[test]
+    fn streaming_retention_cap_keeps_counters_exact() {
+        let tr = Mix::Chat.trace(52, 80, 20.0);
+        let exact = unified(2).replay(&tr, &mut LeastLoaded);
+        let mut fleet = unified(2);
+        let mut src = SliceSource::new(&tr);
+        let capped = fleet.serve(&mut src, &mut LeastLoaded, ServeOptions::streaming(8));
+        // counters, timing, and histograms are exact regardless of the cap
+        assert_eq!(capped.requests, 80);
+        assert_eq!(capped.served.len(), 8, "only the cap survives as raw records");
+        assert!(!capped.complete && exact.complete);
+        assert_eq!(capped.makespan.to_bits(), exact.makespan.to_bits());
+        assert_eq!(capped.decode_steps, exact.decode_steps);
+        assert_eq!(capped.tokens, exact.tokens);
+        assert_eq!(capped.ttft_hist, exact.ttft_hist);
+        assert_eq!(capped.e2e_hist, exact.e2e_hist);
+        assert_eq!(capped.throughput_rps().to_bits(), exact.throughput_rps().to_bits());
+        // histogram percentiles stay inside the exact envelope and near
+        // the exact interior percentiles (log-bucket quantization only)
+        for p in [50.0, 90.0, 99.0] {
+            let v = capped.ttft_pct(p);
+            assert!(
+                v >= exact.ttft_pct(0.0) && v <= exact.ttft_pct(100.0),
+                "p{p}: {v} outside the exact envelope"
+            );
+            let rel = (v - exact.ttft_pct(p)).abs() / exact.ttft_pct(p).max(1e-12);
+            assert!(rel < 0.25, "p{p}: hist {v} vs exact {} (rel {rel})", exact.ttft_pct(p));
+        }
+    }
+
+    #[test]
+    fn empty_source_yields_finite_zero_result() {
+        let mut fleet = unified(2);
+        let r = fleet.serve(
+            &mut SliceSource::new(&[]),
+            &mut LeastLoaded,
+            ServeOptions::default(),
+        );
+        assert_eq!(r.requests, 0);
+        assert!(r.complete);
+        assert_eq!(r.ttft_pct(50.0), 0.0);
+        assert_eq!(r.throughput_rps(), 0.0);
+        assert!(r.makespan.is_finite());
     }
 }

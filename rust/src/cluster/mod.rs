@@ -21,17 +21,27 @@
 //!   aware placement: decode skips full devices, and under decode-pool
 //!   pressure prefill placement steers to the device with the smallest
 //!   outbound handoff backlog;
+//! * [`traffic`] — the streaming workload engine: seeded arrival
+//!   processes (Poisson, bursty MMPP, diurnal rate curves), heavy-tailed
+//!   prompt/output length samplers, and multi-turn sessions that
+//!   re-arrive after a think time with grown context, all behind the
+//!   pull-based [`WorkloadSource`] trait so traffic never has to be
+//!   materialized;
 //! * [`fleet`] — N independent [`sim::device::Device`](crate::sim::device)
 //!   state machines advanced in global event order, each carrying its own
 //!   [`SchedConfig`] (chunked prefill, admission policy, resident-KV
 //!   budget with eviction-and-recompute), optionally a heterogeneous
-//!   per-device KV capacity ([`Fleet::set_kv_capacity`]) or an explicit
-//!   per-device mapping composition ([`Fleet::heterogeneous_with`]).
+//!   per-device KV capacity or an explicit per-device mapping
+//!   composition (see [`FleetBuilder`]).
 //!
-//! Entry points: [`Policy::build`] (or [`Policy::build_with`] for a
-//! non-default scheduler) to construct a (fleet, router) pair and
-//! [`Fleet::replay`] to serve a trace through it. The [`crate::dse`]
-//! plane searches over all of these knobs at once.
+//! Entry points: [`FleetBuilder`] (or [`Policy::build`] /
+//! [`Policy::build_with`] for a (fleet, router) pair) to construct a
+//! fleet, then [`Fleet::serve`] to pull a [`WorkloadSource`] through it
+//! in bounded memory ([`ServeOptions`] caps raw-record retention;
+//! counters and streaming histogram percentiles stay exact-count), or
+//! [`Fleet::replay`] — a thin, bit-identical wrapper for materialized
+//! traces. The [`crate::dse`] plane searches over all of these knobs at
+//! once.
 //!
 //! Energy: [`Fleet::enable_power`] attaches the [`crate::power`] plane —
 //! per-event energy accounting on every device (read off the same joint
@@ -54,10 +64,15 @@
 pub mod fleet;
 pub mod interconnect;
 pub mod router;
+pub mod traffic;
 pub mod workload;
 
 pub use crate::sim::device::{AdmissionPolicy, SchedConfig};
-pub use fleet::{Fleet, FleetResult};
+pub use fleet::{Fleet, FleetBuilder, FleetResult, ServeOptions};
 pub use interconnect::{kv_transfer_bytes, Interconnect};
 pub use router::{KvAware, LeastLoaded, PhaseDisaggregated, Policy, Route, Router, RoundRobin};
-pub use workload::{per_tenant_stats, Mix, TenantStats};
+pub use traffic::{
+    collect_trace, ArrivalKind, ArrivalProcess, LengthSampler, SessionConfig, SliceSource,
+    TrafficConfig, TrafficGen, WorkloadSource,
+};
+pub use workload::{per_tenant_stats, per_tenant_stats_served, Mix, TenantStats};

@@ -6,7 +6,7 @@
 //! policy splits them across the prefill and decode pools, incurring a
 //! KV-cache transfer over the fleet interconnect.
 
-use super::fleet::Fleet;
+use super::fleet::{Fleet, FleetBuilder};
 use super::interconnect::Interconnect;
 use crate::config::HwConfig;
 use crate::model::LlmConfig;
@@ -235,10 +235,15 @@ impl Policy {
         link: Interconnect,
         sched: SchedConfig,
     ) -> (Fleet, Box<dyn Router>) {
+        let builder = FleetBuilder::new(llm, hw)
+            .devices(devices)
+            .slots(slots)
+            .interconnect(link)
+            .sched(sched);
         let fleet = if self.is_disaggregated() {
-            Fleet::disaggregated_with(llm, hw, devices, slots, prefill_frac, link, sched)
+            builder.disaggregated(prefill_frac).build()
         } else {
-            Fleet::unified_with(llm, hw, devices, slots, link, sched)
+            builder.build()
         };
         (fleet, self.router())
     }
@@ -249,17 +254,19 @@ mod tests {
     use super::*;
 
     fn fleet(n: usize) -> Fleet {
-        Fleet::unified(
-            &LlmConfig::llama2_7b(),
-            &HwConfig::paper(),
-            n,
-            4,
-            Interconnect::board(),
-        )
+        FleetBuilder::new(&LlmConfig::llama2_7b(), &HwConfig::paper()).devices(n).slots(4).build()
+    }
+
+    fn disagg_fleet() -> Fleet {
+        FleetBuilder::new(&LlmConfig::llama2_7b(), &HwConfig::paper())
+            .devices(4)
+            .slots(4)
+            .disaggregated(0.5)
+            .build()
     }
 
     fn req() -> TraceRequest {
-        TraceRequest { arrival: 0.0, l_in: 128, l_out: 16, tenant: 0 }
+        TraceRequest { arrival: 0.0, l_in: 128, l_out: 16, tenant: 0, session: 0 }
     }
 
     #[test]
@@ -282,14 +289,7 @@ mod tests {
 
     #[test]
     fn disaggregated_splits_pools() {
-        let f = Fleet::disaggregated(
-            &LlmConfig::llama2_7b(),
-            &HwConfig::paper(),
-            4,
-            4,
-            0.5,
-            Interconnect::board(),
-        );
+        let f = disagg_fleet();
         let mut pd = PhaseDisaggregated;
         let r = pd.route(&f, &req());
         assert!(f.prefill_pool.contains(&r.prefill));
@@ -311,15 +311,7 @@ mod tests {
 
     #[test]
     fn kv_aware_skips_full_decode_devices() {
-        let llm = LlmConfig::llama2_7b();
-        let mut f = Fleet::disaggregated(
-            &llm,
-            &HwConfig::paper(),
-            4,
-            4,
-            0.5,
-            Interconnect::board(),
-        );
+        let mut f = disagg_fleet();
         // decode pool = {2, 3}; device 2 gets a budget too small for the
         // request's lifetime KV, device 3 a comfortable one
         let r = req();
@@ -339,15 +331,7 @@ mod tests {
     #[test]
     fn kv_aware_prefill_placement_checks_decode_pool_headroom() {
         use crate::sim::device::DeviceJob;
-        let llm = LlmConfig::llama2_7b();
-        let mut f = Fleet::disaggregated(
-            &llm,
-            &HwConfig::paper(),
-            4,
-            4,
-            0.5,
-            Interconnect::board(),
-        );
+        let mut f = disagg_fleet();
         // prefill pool = {0, 1}: device 0 carries two small handoff
         // prefills (load 2, small outbound KV); device 1 carries one huge
         // one (load 1, large outbound KV)

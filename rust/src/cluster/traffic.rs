@@ -1,0 +1,716 @@
+//! Streaming traffic engine: seeded, deterministic workload *sources*.
+//!
+//! Everything upstream of the fleet used to be a fully materialized
+//! `Vec<TraceRequest>` ([`Mix::trace`](super::workload::Mix)); that caps
+//! studies at whatever fits in RSS and cannot express the traffic the
+//! paper's low-batch interactive regime actually faces: bursts, diurnal
+//! load curves, heavy-tailed lengths, and multi-turn sessions. This
+//! module replaces the materialized trace with a *pull* abstraction:
+//!
+//! * [`WorkloadSource`] — `fn next(&mut self) -> Option<TraceRequest>`
+//!   with nondecreasing arrivals; the streaming analogue of a trace
+//!   slice. [`SliceSource`] adapts any existing trace, so the legacy
+//!   [`Fleet::replay`](super::fleet::Fleet::replay) path is a thin
+//!   wrapper over the streaming loop.
+//! * [`ArrivalProcess`] — seeded arrival-time generators:
+//!   [`Poisson`] (homogeneous), [`Mmpp`] (2-state Markov-modulated
+//!   Poisson: calm/burst phases with exponential sojourns — bursty
+//!   traffic with a controlled long-run mean rate), and [`Diurnal`]
+//!   (sinusoidal rate curve thinned Lewis–Shedler style — a day of
+//!   traffic with peak and trough). [`ArrivalKind`] names them for the
+//!   CLI (`halo cluster --arrivals poisson|mmpp|diurnal`).
+//! * [`LengthSampler`] — heavy-tailed length law: log-uniform within a
+//!   band (the law every `Mix` preset uses) plus a Pareto tail beyond
+//!   the band with probability `tail_p`, capturing the rare very long
+//!   prompt/output that dominates tail latency at consumer scale.
+//! * [`SessionConfig`] / sessions — multi-turn conversations: a fresh
+//!   arrival opens a session that *re-arrives* after a think time with
+//!   its context grown by the previous turn's output plus a follow-up
+//!   (so successive turns share a strictly growing prefix). Session
+//!   identity travels on [`TraceRequest::session`] for downstream
+//!   prefix-cache studies.
+//! * [`TrafficGen`] — the composition: one seeded RNG drives an arrival
+//!   process, the length samplers, tenant assignment, and the session
+//!   re-arrival queue, merged into a single strictly-increasing arrival
+//!   stream. Bounded memory: state is the active-session set (bounded
+//!   by rate x session lifetime), never the emitted request count.
+//!
+//! Determinism: every sampler draws from one `util::Rng`, so a
+//! [`TrafficConfig`] is a complete, replayable description of a
+//! workload — the same seed yields the same stream whether it is
+//! consumed request-by-request by [`Fleet::serve`](super::fleet::Fleet::serve)
+//! or materialized by [`collect_trace`] first (pinned by test).
+
+use crate::sim::queueing::{log_uniform, TraceRequest};
+use crate::util::Rng;
+
+use super::workload::Mix;
+
+/// A stream of requests with nondecreasing arrival times — the pull-side
+/// seam between workload generation and [`Fleet::serve`](super::fleet::Fleet::serve).
+/// Implementations must yield arrivals that never go backwards; the
+/// fleet's event loop relies on this to pull one lookahead request at a
+/// time instead of scanning a slice.
+pub trait WorkloadSource {
+    /// The next request, or `None` when the stream is exhausted.
+    fn next(&mut self) -> Option<TraceRequest>;
+}
+
+/// Adapts a materialized trace slice to [`WorkloadSource`].
+pub struct SliceSource<'a> {
+    trace: &'a [TraceRequest],
+    pos: usize,
+}
+
+impl<'a> SliceSource<'a> {
+    pub fn new(trace: &'a [TraceRequest]) -> Self {
+        SliceSource { trace, pos: 0 }
+    }
+}
+
+impl WorkloadSource for SliceSource<'_> {
+    fn next(&mut self) -> Option<TraceRequest> {
+        let r = self.trace.get(self.pos).cloned();
+        self.pos += usize::from(r.is_some());
+        r
+    }
+}
+
+/// Drain a source into a materialized trace (the bridge back to every
+/// slice-based API: `per_tenant_stats`, figure tables, DSE calibration).
+pub fn collect_trace(source: &mut dyn WorkloadSource) -> Vec<TraceRequest> {
+    let mut out = Vec::new();
+    while let Some(r) = source.next() {
+        out.push(r);
+    }
+    out
+}
+
+/// A seeded point process generating absolute arrival times.
+pub trait ArrivalProcess {
+    /// Advance to and return the next arrival time (strictly after the
+    /// previous one).
+    fn next_arrival(&mut self, rng: &mut Rng) -> f64;
+}
+
+/// Homogeneous Poisson arrivals at `rate` requests/s.
+pub struct Poisson {
+    rate: f64,
+    t: f64,
+}
+
+impl Poisson {
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0, "arrival rate must be positive");
+        Poisson { rate, t: 0.0 }
+    }
+}
+
+impl ArrivalProcess for Poisson {
+    fn next_arrival(&mut self, rng: &mut Rng) -> f64 {
+        self.t += rng.exp(self.rate);
+        self.t
+    }
+}
+
+/// 2-state Markov-modulated Poisson process: exponential sojourns in a
+/// *calm* phase and a *burst* phase, each an independent Poisson stream.
+/// Burstiness shows up as an inter-arrival squared coefficient of
+/// variation above 1 (Poisson is exactly 1) while the long-run mean rate
+/// stays at the configured target.
+pub struct Mmpp {
+    calm_rate: f64,
+    burst_rate: f64,
+    mean_calm_s: f64,
+    mean_burst_s: f64,
+    t: f64,
+    burst: bool,
+    phase_ends: f64,
+}
+
+impl Mmpp {
+    /// An MMPP whose long-run mean is `rate`: bursts run at 4x the calm
+    /// rate, mean sojourns 10 s calm / 2 s burst, so 1/6 of the time is
+    /// spent bursting and `mean = (5/6 + 4/6) * calm = rate`.
+    pub fn balanced(rate: f64) -> Self {
+        assert!(rate > 0.0, "arrival rate must be positive");
+        let calm = rate / 1.5;
+        Mmpp {
+            calm_rate: calm,
+            burst_rate: 4.0 * calm,
+            mean_calm_s: 10.0,
+            mean_burst_s: 2.0,
+            t: 0.0,
+            // start "in" a zero-length burst so the first step draws a
+            // calm sojourn; phase flips are memoryless, so discarding
+            // the gap drawn past a boundary is distribution-correct
+            burst: true,
+            phase_ends: 0.0,
+        }
+    }
+}
+
+impl ArrivalProcess for Mmpp {
+    fn next_arrival(&mut self, rng: &mut Rng) -> f64 {
+        loop {
+            let rate = if self.burst { self.burst_rate } else { self.calm_rate };
+            let gap = rng.exp(rate);
+            if self.t + gap <= self.phase_ends {
+                self.t += gap;
+                return self.t;
+            }
+            self.t = self.phase_ends;
+            self.burst = !self.burst;
+            let mean = if self.burst { self.mean_burst_s } else { self.mean_calm_s };
+            self.phase_ends = self.t + rng.exp(1.0 / mean);
+        }
+    }
+}
+
+/// Nonhomogeneous Poisson with a sinusoidal rate curve
+/// `rate(t) = base * (1 + amplitude * sin(2 pi t / period))` — one
+/// "day" of traffic per period, mean rate `base` over whole periods.
+/// Sampled by Lewis–Shedler thinning against the peak rate.
+pub struct Diurnal {
+    base_rate: f64,
+    amplitude: f64,
+    period_s: f64,
+    t: f64,
+}
+
+impl Diurnal {
+    pub fn new(base_rate: f64, amplitude: f64, period_s: f64) -> Self {
+        assert!(base_rate > 0.0, "arrival rate must be positive");
+        assert!((0.0..1.0).contains(&amplitude), "amplitude must be in [0, 1)");
+        assert!(period_s > 0.0, "period must be positive");
+        Diurnal { base_rate, amplitude, period_s, t: 0.0 }
+    }
+
+    fn rate_at(&self, t: f64) -> f64 {
+        let phase = 2.0 * std::f64::consts::PI * t / self.period_s;
+        self.base_rate * (1.0 + self.amplitude * phase.sin())
+    }
+}
+
+impl ArrivalProcess for Diurnal {
+    fn next_arrival(&mut self, rng: &mut Rng) -> f64 {
+        let peak = self.base_rate * (1.0 + self.amplitude);
+        loop {
+            self.t += rng.exp(peak);
+            if rng.f64() * peak <= self.rate_at(self.t) {
+                return self.t;
+            }
+        }
+    }
+}
+
+/// Named arrival process for the CLI (`--arrivals`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    Poisson,
+    Mmpp,
+    Diurnal,
+}
+
+impl ArrivalKind {
+    pub fn all() -> [ArrivalKind; 3] {
+        [ArrivalKind::Poisson, ArrivalKind::Mmpp, ArrivalKind::Diurnal]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Mmpp => "mmpp",
+            ArrivalKind::Diurnal => "diurnal",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "poisson" => Some(ArrivalKind::Poisson),
+            "mmpp" | "burst" | "bursty" => Some(ArrivalKind::Mmpp),
+            "diurnal" | "day" => Some(ArrivalKind::Diurnal),
+            _ => None,
+        }
+    }
+
+    /// Instantiate the process at a mean `rate`; `period_s` shapes the
+    /// diurnal curve (one full day-cycle per period) and is ignored by
+    /// the stationary processes.
+    pub fn process(&self, rate: f64, period_s: f64) -> Box<dyn ArrivalProcess> {
+        match self {
+            ArrivalKind::Poisson => Box::new(Poisson::new(rate)),
+            ArrivalKind::Mmpp => Box::new(Mmpp::balanced(rate)),
+            ArrivalKind::Diurnal => Box::new(Diurnal::new(rate, 0.6, period_s.max(1.0))),
+        }
+    }
+}
+
+/// Heavy-tailed token-length law: log-uniform in `[lo, hi]` with
+/// probability `1 - tail_p`, otherwise a Pareto tail
+/// `hi * U^(-1/alpha)` capped at `cap` — the occasional very long
+/// prompt/output that a bounded band cannot express.
+#[derive(Debug, Clone, Copy)]
+pub struct LengthSampler {
+    pub lo: usize,
+    pub hi: usize,
+    /// Probability a draw comes from the Pareto tail (0 disables it).
+    pub tail_p: f64,
+    /// Pareto shape; smaller = heavier tail.
+    pub tail_alpha: f64,
+    /// Hard cap on tail draws (keeps KV budgets finite).
+    pub cap: usize,
+}
+
+impl LengthSampler {
+    /// Log-uniform band with a default 5% / alpha=1.5 Pareto tail capped
+    /// at 16x the band ceiling.
+    pub fn band(lo: usize, hi: usize) -> Self {
+        assert!(lo >= 1 && hi >= lo, "bad length band [{lo}, {hi}]");
+        LengthSampler { lo, hi, tail_p: 0.05, tail_alpha: 1.5, cap: hi.saturating_mul(16) }
+    }
+
+    /// The band without the tail — bit-compatible with the `Mix` law.
+    pub fn body_only(lo: usize, hi: usize) -> Self {
+        LengthSampler { tail_p: 0.0, ..LengthSampler::band(lo, hi) }
+    }
+
+    /// (prompt, output) samplers matching a [`Mix`] preset's bands, with
+    /// the heavy tail on. `Interactive` — a blend in the trace API —
+    /// maps to log-uniform over the blend's full span.
+    pub fn for_mix(mix: Mix) -> (LengthSampler, LengthSampler) {
+        match mix {
+            Mix::Chat => (LengthSampler::band(64, 512), LengthSampler::band(64, 256)),
+            Mix::Summarization => (LengthSampler::band(2048, 8192), LengthSampler::band(32, 128)),
+            Mix::Generation => (LengthSampler::band(64, 256), LengthSampler::band(512, 2048)),
+            Mix::Interactive => (LengthSampler::band(64, 8192), LengthSampler::band(32, 2048)),
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        if self.tail_p > 0.0 && rng.f64() < self.tail_p {
+            let u = rng.f64().max(1e-12);
+            let x = self.hi as f64 * u.powf(-1.0 / self.tail_alpha);
+            (x.round() as usize).clamp(self.hi, self.cap.max(self.hi)).max(1)
+        } else {
+            log_uniform(rng, self.lo, self.hi)
+        }
+    }
+}
+
+/// Multi-turn session behaviour.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionConfig {
+    /// Mean think time between a turn's (estimated) completion and the
+    /// next turn's arrival, exponentially distributed.
+    pub think_time_s: f64,
+    /// Turns per session are drawn uniformly in `[1, max_turns]`.
+    pub max_turns: usize,
+    /// Fresh tokens appended by each follow-up turn on top of the
+    /// previous turn's full context (prompt + generated output).
+    pub follow_up: LengthSampler,
+    /// Crude service-time allowance (s/token) used to estimate when a
+    /// turn completes before scheduling the next think time; the
+    /// generator is upstream of the fleet, so it cannot observe real
+    /// completions.
+    pub service_s_per_token: f64,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            think_time_s: 5.0,
+            max_turns: 6,
+            follow_up: LengthSampler::band(16, 128),
+            service_s_per_token: 2e-3,
+        }
+    }
+}
+
+/// One live conversation awaiting its next turn.
+struct Session {
+    id: u64,
+    tenant: usize,
+    /// Context of the next turn: everything said so far plus the fresh
+    /// follow-up tokens (the shared, strictly growing prefix).
+    next_l_in: usize,
+    turns_left: usize,
+    next_arrival: f64,
+}
+
+/// Complete, replayable description of a generated workload.
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    pub seed: u64,
+    /// Mean offered rate, requests/s (fresh arrivals; session re-arrivals
+    /// add turns on top).
+    pub rate: f64,
+    /// Fresh arrivals stop after this horizon; in-flight sessions whose
+    /// next turn would land beyond it are retired.
+    pub duration_s: f64,
+    pub kind: ArrivalKind,
+    pub prompt: LengthSampler,
+    pub output: LengthSampler,
+    /// Tenants are drawn uniformly per request (per session when
+    /// sessions are on); `<= 1` tags everything tenant 0.
+    pub tenants: usize,
+    /// `Some` turns every fresh arrival into a session opener.
+    pub sessions: Option<SessionConfig>,
+    /// Hard cap on emitted requests (0 = unlimited) — lets benches pin
+    /// an exact request count independent of the rate/duration product.
+    pub max_requests: usize,
+}
+
+impl TrafficConfig {
+    /// Poisson arrivals, mix-shaped lengths, no sessions, no cap.
+    pub fn new(seed: u64, rate: f64, duration_s: f64, mix: Mix) -> Self {
+        let (prompt, output) = LengthSampler::for_mix(mix);
+        TrafficConfig {
+            seed,
+            rate,
+            duration_s,
+            kind: ArrivalKind::Poisson,
+            prompt,
+            output,
+            tenants: 1,
+            sessions: None,
+            max_requests: 0,
+        }
+    }
+
+    pub fn with_kind(mut self, kind: ArrivalKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    pub fn with_sessions(mut self, sessions: SessionConfig) -> Self {
+        self.sessions = Some(sessions);
+        self
+    }
+
+    pub fn with_tenants(mut self, tenants: usize) -> Self {
+        self.tenants = tenants.max(1);
+        self
+    }
+
+    pub fn with_max_requests(mut self, max_requests: usize) -> Self {
+        self.max_requests = max_requests;
+        self
+    }
+
+    pub fn build(&self) -> TrafficGen {
+        TrafficGen::new(self.clone())
+    }
+}
+
+/// The streaming generator: merges fresh arrivals from the configured
+/// [`ArrivalProcess`] with session re-arrivals into one strictly
+/// increasing [`WorkloadSource`]. Memory is O(active sessions), never
+/// O(emitted requests).
+pub struct TrafficGen {
+    cfg: TrafficConfig,
+    rng: Rng,
+    process: Box<dyn ArrivalProcess>,
+    /// Pre-drawn next fresh arrival (None once the horizon is passed).
+    next_fresh: Option<f64>,
+    fresh_done: bool,
+    sessions: Vec<Session>,
+    next_session_id: u64,
+    emitted: usize,
+    last_arrival: f64,
+}
+
+impl TrafficGen {
+    pub fn new(cfg: TrafficConfig) -> Self {
+        let process = cfg.kind.process(cfg.rate, cfg.duration_s);
+        TrafficGen {
+            rng: Rng::new(cfg.seed),
+            process,
+            cfg,
+            next_fresh: None,
+            fresh_done: false,
+            sessions: Vec::new(),
+            next_session_id: 1,
+            emitted: 0,
+            last_arrival: 0.0,
+        }
+    }
+
+    /// Live sessions awaiting their next turn (test/diagnostic surface).
+    pub fn active_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    fn draw_fresh(&mut self) {
+        if self.fresh_done || self.next_fresh.is_some() {
+            return;
+        }
+        let t = self.process.next_arrival(&mut self.rng);
+        if t <= self.cfg.duration_s {
+            self.next_fresh = Some(t);
+        } else {
+            self.fresh_done = true;
+        }
+    }
+
+    /// Index of the session with the earliest next turn (ties broken by
+    /// session id for determinism).
+    fn earliest_session(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, s) in self.sessions.iter().enumerate() {
+            let better = match best {
+                None => true,
+                Some(j) => {
+                    let b = &self.sessions[j];
+                    s.next_arrival < b.next_arrival
+                        || (s.next_arrival == b.next_arrival && s.id < b.id)
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    fn emit(
+        &mut self,
+        arrival: f64,
+        l_in: usize,
+        l_out: usize,
+        tenant: usize,
+        session: u64,
+    ) -> TraceRequest {
+        // strictly increasing arrivals: legacy joins key on arrival bits
+        let arrival = if arrival > self.last_arrival {
+            arrival
+        } else {
+            self.last_arrival + 1e-9
+        };
+        self.last_arrival = arrival;
+        self.emitted += 1;
+        TraceRequest { arrival, l_in, l_out, tenant, session }
+    }
+}
+
+impl WorkloadSource for TrafficGen {
+    fn next(&mut self) -> Option<TraceRequest> {
+        if self.cfg.max_requests > 0 && self.emitted >= self.cfg.max_requests {
+            return None;
+        }
+        self.draw_fresh();
+        loop {
+            let sess_idx = self.earliest_session();
+            let sess_at = sess_idx.map(|i| self.sessions[i].next_arrival);
+            match (self.next_fresh, sess_at) {
+                (None, None) => return None,
+                // session turn is due first
+                (fresh, Some(at)) if fresh.is_none_or(|f| at <= f) => {
+                    let i = sess_idx.unwrap();
+                    if at > self.cfg.duration_s {
+                        // horizon passed mid-think: retire quietly
+                        self.sessions.swap_remove(i);
+                        continue;
+                    }
+                    let l_in = self.sessions[i].next_l_in;
+                    let (id, tenant) = (self.sessions[i].id, self.sessions[i].tenant);
+                    let l_out = self.cfg.output.sample(&mut self.rng);
+                    let req = self.emit(at, l_in, l_out, tenant, id);
+                    let sc = self.cfg.sessions.unwrap_or_default();
+                    let s = &mut self.sessions[i];
+                    s.turns_left -= 1;
+                    if s.turns_left == 0 {
+                        self.sessions.swap_remove(i);
+                    } else {
+                        let follow = sc.follow_up.sample(&mut self.rng);
+                        // grown context: prior turn's full exchange is the
+                        // shared prefix of the next turn
+                        s.next_l_in = l_in + l_out + follow;
+                        let depart =
+                            req.arrival + sc.service_s_per_token * (l_in + l_out) as f64;
+                        s.next_arrival = depart + self.rng.exp(1.0 / sc.think_time_s.max(1e-9));
+                    }
+                    return Some(req);
+                }
+                // fresh arrival is due first
+                (Some(at), _) => {
+                    self.next_fresh = None;
+                    let l_in = self.cfg.prompt.sample(&mut self.rng);
+                    let l_out = self.cfg.output.sample(&mut self.rng);
+                    let tenant = if self.cfg.tenants > 1 {
+                        self.rng.below(self.cfg.tenants as u64) as usize
+                    } else {
+                        0
+                    };
+                    let (session, req);
+                    if let Some(sc) = self.cfg.sessions {
+                        let turns = 1 + self.rng.below(sc.max_turns.max(1) as u64) as usize;
+                        session = self.next_session_id;
+                        self.next_session_id += 1;
+                        req = self.emit(at, l_in, l_out, tenant, session);
+                        if turns > 1 {
+                            let follow = sc.follow_up.sample(&mut self.rng);
+                            let depart =
+                                req.arrival + sc.service_s_per_token * (l_in + l_out) as f64;
+                            self.sessions.push(Session {
+                                id: session,
+                                tenant,
+                                next_l_in: l_in + l_out + follow,
+                                turns_left: turns - 1,
+                                next_arrival: depart
+                                    + self.rng.exp(1.0 / sc.think_time_s.max(1e-9)),
+                            });
+                        }
+                    } else {
+                        req = self.emit(at, l_in, l_out, tenant, 0);
+                    }
+                    return Some(req);
+                }
+                (None, Some(_)) => unreachable!("session arm above covers fresh=None"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(cfg: &TrafficConfig) -> Vec<TraceRequest> {
+        collect_trace(&mut cfg.build())
+    }
+
+    #[test]
+    fn slice_source_replays_trace_verbatim() {
+        let trace = Mix::Chat.trace(1, 50, 10.0);
+        let mut src = SliceSource::new(&trace);
+        let copy = collect_trace(&mut src);
+        assert_eq!(copy.len(), trace.len());
+        for (a, b) in trace.iter().zip(&copy) {
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+            assert_eq!(
+                (a.l_in, a.l_out, a.tenant, a.session),
+                (b.l_in, b.l_out, b.tenant, b.session)
+            );
+        }
+        assert!(src.next().is_none());
+    }
+
+    #[test]
+    fn poisson_rate_and_monotonicity() {
+        for kind in ArrivalKind::all() {
+            let cfg = TrafficConfig::new(11, 50.0, 200.0, Mix::Chat).with_kind(kind);
+            let tr = drain(&cfg);
+            assert!(
+                tr.windows(2).all(|w| w[0].arrival < w[1].arrival),
+                "{} arrivals must strictly increase",
+                kind.name()
+            );
+            // ~50 rps * 200 s = ~10k requests; generous band for the
+            // modulated processes
+            let n = tr.len() as f64;
+            assert!(
+                (n - 10_000.0).abs() < 2_000.0,
+                "{}: {} requests for a 10k-expectation run",
+                kind.name(),
+                tr.len()
+            );
+        }
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson() {
+        let scv = |kind: ArrivalKind| {
+            let cfg = TrafficConfig::new(5, 20.0, 500.0, Mix::Chat).with_kind(kind);
+            let tr = drain(&cfg);
+            let gaps: Vec<f64> =
+                tr.windows(2).map(|w| w[1].arrival - w[0].arrival).collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var =
+                gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+            var / (mean * mean)
+        };
+        let poisson = scv(ArrivalKind::Poisson);
+        let mmpp = scv(ArrivalKind::Mmpp);
+        assert!((0.7..1.4).contains(&poisson), "poisson scv {poisson}");
+        assert!(mmpp > poisson + 0.3, "mmpp scv {mmpp} vs poisson {poisson}");
+    }
+
+    #[test]
+    fn diurnal_rate_tracks_the_curve() {
+        // amplitude 0.6, one period over the horizon: the first half-day
+        // runs above base rate, the second below
+        let cfg = TrafficConfig::new(3, 40.0, 400.0, Mix::Chat).with_kind(ArrivalKind::Diurnal);
+        let tr = drain(&cfg);
+        let first = tr.iter().filter(|r| r.arrival < 200.0).count();
+        let second = tr.len() - first;
+        assert!(
+            first as f64 > 1.5 * second as f64,
+            "diurnal peak half {first} vs trough half {second}"
+        );
+    }
+
+    #[test]
+    fn length_sampler_band_and_tail() {
+        let s = LengthSampler::band(64, 512);
+        let mut rng = Rng::new(9);
+        let draws: Vec<usize> = (0..4000).map(|_| s.sample(&mut rng)).collect();
+        assert!(draws.iter().all(|&x| x >= 64 && x <= s.cap));
+        let tail = draws.iter().filter(|&&x| x > 512).count();
+        // ~5% of 4000 = 200
+        assert!((100..=350).contains(&tail), "tail draws {tail}");
+        let body = LengthSampler::body_only(64, 512);
+        let mut rng = Rng::new(9);
+        assert!((0..4000).all(|_| body.sample(&mut rng) <= 512));
+    }
+
+    #[test]
+    fn sessions_grow_context_monotonically() {
+        use std::collections::HashMap;
+        let cfg = TrafficConfig::new(21, 5.0, 120.0, Mix::Chat)
+            .with_sessions(SessionConfig::default())
+            .with_tenants(3);
+        let tr = drain(&cfg);
+        assert!(tr.iter().all(|r| r.session > 0), "every request belongs to a session");
+        let mut turns: HashMap<u64, Vec<&TraceRequest>> = HashMap::new();
+        for r in &tr {
+            turns.entry(r.session).or_default().push(r);
+        }
+        let multi = turns.values().filter(|v| v.len() > 1).count();
+        assert!(multi > 10, "expected many multi-turn sessions, got {multi}");
+        for reqs in turns.values() {
+            for w in reqs.windows(2) {
+                // next turn's prompt strictly contains the previous
+                // turn's full exchange
+                assert!(w[1].l_in > w[0].l_in + w[0].l_out - 1);
+                assert!(w[1].arrival > w[0].arrival);
+                assert_eq!(w[1].tenant, w[0].tenant);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_bounded_state() {
+        let cfg = TrafficConfig::new(7, 30.0, 60.0, Mix::Interactive)
+            .with_kind(ArrivalKind::Mmpp)
+            .with_sessions(SessionConfig::default());
+        let a = drain(&cfg);
+        let b = drain(&cfg);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            assert_eq!(
+                (x.l_in, x.l_out, x.tenant, x.session),
+                (y.l_in, y.l_out, y.tenant, y.session)
+            );
+        }
+        let c = drain(&TrafficConfig::new(8, 30.0, 60.0, Mix::Interactive));
+        assert!(a.len() != c.len() || a.iter().zip(&c).any(|(x, y)| x.arrival != y.arrival));
+    }
+
+    #[test]
+    fn max_requests_caps_the_stream() {
+        let cfg = TrafficConfig::new(2, 100.0, 1e9, Mix::Chat).with_max_requests(1234);
+        assert_eq!(drain(&cfg).len(), 1234);
+    }
+}

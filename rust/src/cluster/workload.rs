@@ -101,9 +101,42 @@ pub struct TenantStats {
     pub tok_per_s: f64,
 }
 
+/// Aggregate per-tenant stats straight off the served records — no
+/// trace retention required, since tenant identity and token counts now
+/// travel on [`ServedRequest`] itself. This is the streaming-safe path:
+/// a bounded-retention [`serve`](crate::cluster::Fleet::serve) keeps
+/// only a sample of served records, so pass the full population (an
+/// exact replay, or the retained window knowingly). Rows come back
+/// sorted by tenant.
+pub fn per_tenant_stats_served(served: &[ServedRequest], makespan: f64) -> Vec<TenantStats> {
+    use std::collections::BTreeMap;
+    let mut groups: BTreeMap<usize, (Vec<f64>, Vec<f64>, u64)> = BTreeMap::new();
+    for s in served {
+        let g = groups.entry(s.tenant).or_default();
+        g.0.push(s.ttft);
+        g.1.push(s.e2e);
+        g.2 += s.tokens;
+    }
+    groups
+        .into_iter()
+        .map(|(tenant, (ttfts, e2es, tokens))| TenantStats {
+            tenant,
+            requests: ttfts.len(),
+            tokens,
+            ttft_p50: percentile(&ttfts, 50.0),
+            ttft_p99: percentile(&ttfts, 99.0),
+            e2e_p50: percentile(&e2es, 50.0),
+            e2e_p99: percentile(&e2es, 99.0),
+            tok_per_s: tokens as f64 / makespan.max(1e-12),
+        })
+        .collect()
+}
+
 /// Join served records back to their trace requests (arrivals are
 /// strictly increasing, hence unique) and aggregate per tenant. Tenants
 /// absent from the trace produce no row; rows come back sorted by tenant.
+/// Legacy compatibility path — prefer [`per_tenant_stats_served`], which
+/// needs no materialized trace.
 pub fn per_tenant_stats(
     trace: &[TraceRequest],
     served: &[ServedRequest],
@@ -205,6 +238,33 @@ mod tests {
             assert!(t.ttft_p50 > 0.0 && t.ttft_p99 >= t.ttft_p50);
             assert!(t.e2e_p99 >= t.e2e_p50 && t.e2e_p50 >= t.ttft_p50);
             assert!(t.tok_per_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn served_based_tenant_stats_agree_with_legacy_join() {
+        use crate::cluster::{Interconnect, Policy};
+        use crate::config::HwConfig;
+        use crate::model::LlmConfig;
+        let llm = LlmConfig::llama2_7b();
+        let trace = Mix::Interactive.trace_tenants(6, 90, 40.0, 4);
+        let (mut fleet, mut router) =
+            Policy::LeastLoaded.build(&llm, &HwConfig::paper(), 2, 8, 0.5, Interconnect::board());
+        let r = fleet.replay(&trace, router.as_mut());
+        let legacy = per_tenant_stats(&trace, &r.served, r.makespan);
+        let streaming = per_tenant_stats_served(&r.served, r.makespan);
+        // identity now travels on ServedRequest, so the trace-free path
+        // reproduces the legacy join bit for bit
+        assert_eq!(legacy.len(), streaming.len());
+        for (a, b) in legacy.iter().zip(&streaming) {
+            assert_eq!(a.tenant, b.tenant);
+            assert_eq!(a.requests, b.requests);
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.ttft_p50.to_bits(), b.ttft_p50.to_bits());
+            assert_eq!(a.ttft_p99.to_bits(), b.ttft_p99.to_bits());
+            assert_eq!(a.e2e_p50.to_bits(), b.e2e_p50.to_bits());
+            assert_eq!(a.e2e_p99.to_bits(), b.e2e_p99.to_bits());
+            assert_eq!(a.tok_per_s.to_bits(), b.tok_per_s.to_bits());
         }
     }
 }

@@ -183,7 +183,7 @@ fn evaluate_candidate(
     let hw = cand.hw(&cfg.base_hw);
     let (mut fleet, mut router) = cand.build_fleet(&cfg.llm, &hw, cfg.slots, cfg.link.clone());
     let r = fleet.replay(trace, router.as_mut());
-    let m = Metrics::collect(cand, trace, &r, cfg.slo.map(|s| (s.ttft, s.pct)));
+    let m = Metrics::collect(cand, &r, cfg.slo.map(|s| (s.ttft, s.pct)));
     (m, fleet.cost_walks(), fleet.cost_memo_hits())
 }
 
@@ -383,7 +383,7 @@ mod tests {
         );
         let r = fleet.replay(&trace, router.as_mut());
         assert!(r.served.is_empty());
-        let m = Metrics::collect(&cand, &trace, &r, None);
+        let m = Metrics::collect(&cand, &r, None);
         for v in [
             m.ttft_p50,
             m.ttft_p99,

@@ -7,8 +7,7 @@
 //! and the scalar search guidance never need to know about directions.
 
 use super::space::Candidate;
-use crate::cluster::{per_tenant_stats, FleetResult};
-use crate::sim::queueing::TraceRequest;
+use crate::cluster::{per_tenant_stats_served, FleetResult};
 
 /// Everything the objectives can read about one evaluated candidate.
 #[derive(Debug, Clone, PartialEq)]
@@ -45,17 +44,15 @@ pub struct Metrics {
 }
 
 impl Metrics {
-    /// Collect metrics from a finished replay. `slo` is the optional
+    /// Collect metrics from a finished replay or streamed serve. All
+    /// inputs come off the [`FleetResult`] itself (token totals and
+    /// tenant identity travel on the served records now), so no
+    /// materialized trace is needed. `slo` is the optional
     /// (ttft_seconds, percentile) SLO spec used for `slo_ttft` /
     /// `slo_attainment`.
-    pub fn collect(
-        cand: &Candidate,
-        trace: &[TraceRequest],
-        r: &FleetResult,
-        slo: Option<(f64, f64)>,
-    ) -> Metrics {
-        let total_tokens: u64 = trace.iter().map(|q| q.l_out as u64).sum();
-        let tenants = per_tenant_stats(trace, &r.served, r.makespan);
+    pub fn collect(cand: &Candidate, r: &FleetResult, slo: Option<(f64, f64)>) -> Metrics {
+        let total_tokens = r.tokens;
+        let tenants = per_tenant_stats_served(&r.served, r.makespan);
         let worst_tenant =
             tenants.iter().map(|t| t.ttft_p99).fold(0.0f64, f64::max);
         let pct = slo.map_or(50.0, |(_, p)| p);
@@ -70,7 +67,7 @@ impl Metrics {
         let energy_per_token_j = r.energy_per_token(total_tokens);
         // an empty (or fully rejected) trace must yield finite zeros, not
         // inf/NaN that poison `total_cmp` rankings and report tables
-        let decode_tok_per_s = if r.served.is_empty() {
+        let decode_tok_per_s = if r.requests == 0 {
             0.0
         } else {
             total_tokens as f64 / r.makespan.max(1e-12)

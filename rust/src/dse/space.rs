@@ -14,7 +14,7 @@
 //! into a concrete [`Candidate`] that knows how to build its own
 //! [`HwConfig`] and fleet.
 
-use crate::cluster::{Fleet, Interconnect, Policy, Router, SchedConfig};
+use crate::cluster::{Fleet, FleetBuilder, Interconnect, Policy, Router, SchedConfig};
 use crate::config::{HwConfig, PowerConfig};
 use crate::mapping::MappingKind;
 use crate::model::LlmConfig;
@@ -139,29 +139,17 @@ impl Candidate {
         slots: usize,
         link: Interconnect,
     ) -> (Fleet, Box<dyn Router>) {
-        let sched = self.sched();
-        let mut fleet = if self.policy.is_disaggregated() {
-            Fleet::disaggregated_with(
-                llm,
-                hw,
-                self.devices,
-                slots,
-                self.prefill_frac,
-                link,
-                sched,
-            )
+        let builder = FleetBuilder::new(llm, hw)
+            .slots(slots)
+            .interconnect(link)
+            .sched(self.sched())
+            .power(self.thermal())
+            .dvfs(DvfsConfig::with_indices(&hw.power, self.dvfs.0, self.dvfs.1));
+        let fleet = if self.policy.is_disaggregated() {
+            builder.devices(self.devices).disaggregated(self.prefill_frac).build()
         } else {
-            Fleet::heterogeneous_with(
-                llm,
-                hw,
-                &self.composition.mappings(self.devices),
-                slots,
-                link,
-                sched,
-            )
+            builder.heterogeneous(&self.composition.mappings(self.devices)).build()
         };
-        fleet.enable_power(hw, self.thermal());
-        fleet.set_dvfs(DvfsConfig::with_indices(&hw.power, self.dvfs.0, self.dvfs.1));
         (fleet, self.policy.router())
     }
 

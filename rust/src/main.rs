@@ -18,7 +18,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Result};
 
 use halo::cluster::{
-    per_tenant_stats, AdmissionPolicy, Fleet, Interconnect, Mix, Policy, Router, SchedConfig,
+    collect_trace, per_tenant_stats_served, AdmissionPolicy, ArrivalKind, Fleet, FleetBuilder,
+    Interconnect, Mix, Policy, Router, SchedConfig, ServeOptions, SessionConfig, TrafficConfig,
 };
 use halo::config::HwConfig;
 use halo::coordinator::{InferenceEngine, Request, Server};
@@ -46,7 +47,18 @@ USAGE:
                 [--model llama2-7b|qwen3-8b] [--requests N] [--rate R] [--slots N] [--link board|pcie|eth|wan]
                 [--prefill-frac F] [--seed S] [--tenants N]
                 [--chunk TOKENS] [--admission fifo|spf|priority] [--kv-cap GB|auto]
+                [--arrivals poisson|mmpp|diurnal] [--duration S] [--sessions]
                 [--power] [--tdp W|auto] [--dvfs SPEC] [--smoke] [--json]
+                  --arrivals  stream requests from a seeded arrival-process generator
+                              instead of replaying a pre-built trace: poisson (memoryless),
+                              mmpp (two-state bursty), diurnal (rate curve over --duration).
+                              Served under a bounded retention cap, so memory stays flat
+                              however long the stream runs.
+                  --duration  generator horizon in seconds (with --arrivals; default 60,
+                              smoke 10); fresh arrivals stop at the horizon, in-flight
+                              sessions drain
+                  --sessions  multi-turn conversations: completed requests re-arrive after
+                              a think time with their context grown (with --arrivals)
                   --chunk     prefill chunk size (0 = serialized monolithic prefill, the default)
                   --admission ready-queue order: fifo (default), spf (shortest prompt first),
                               priority (interactive prompts <= 512 tokens first)
@@ -304,6 +316,13 @@ struct ClusterSetup {
     track_power: bool,
     dvfs: Option<DvfsConfig>,
     rate: f64,
+    /// `--arrivals`: stream from a generator instead of replaying a trace.
+    arrivals: Option<ArrivalKind>,
+    duration_s: f64,
+    sessions: bool,
+    /// `--requests` as the user gave it (streamed mode caps the generator
+    /// with it only when explicit; the trace default doesn't apply).
+    max_requests: Option<usize>,
 }
 
 fn parse_cluster_setup(f: &HashMap<String, String>) -> Result<ClusterSetup> {
@@ -370,6 +389,21 @@ fn parse_cluster_setup(f: &HashMap<String, String>) -> Result<ClusterSetup> {
     if dvfs.as_ref().is_some_and(|d| d.governor) && tdp.is_none() {
         bail!("--dvfs governor steps the ladder against a TDP cap; add --tdp W|auto");
     }
+    let arrivals = f
+        .get("arrivals")
+        .map(|name| {
+            ArrivalKind::by_name(name)
+                .ok_or_else(|| anyhow!("unknown arrival process {name} (poisson|mmpp|diurnal)"))
+        })
+        .transpose()?;
+    let duration_s = flag_f64(f, "duration", if smoke { 10.0 } else { 60.0 });
+    if duration_s <= 0.0 {
+        bail!("--duration must be positive seconds");
+    }
+    let sessions = f.contains_key("sessions");
+    if (f.contains_key("duration") || sessions) && arrivals.is_none() {
+        bail!("--duration and --sessions stream from a generator; add --arrivals KIND");
+    }
     // default offered load: 3x one monolithic device's measured capacity
     let rate = match f.get("rate").and_then(|v| v.parse::<f64>().ok()) {
         Some(r) => r,
@@ -392,13 +426,17 @@ fn parse_cluster_setup(f: &HashMap<String, String>) -> Result<ClusterSetup> {
         track_power,
         dvfs,
         rate,
+        arrivals,
+        duration_s,
+        sessions,
+        max_requests: f.get("requests").and_then(|v| v.parse().ok()),
     })
 }
 
 impl ClusterSetup {
-    /// Generate the trace and assemble the fleet + router.
-    fn build(&self) -> (Vec<TraceRequest>, Fleet, Box<dyn Router>) {
-        let trace = self.mix.trace_tenants(self.seed, self.n_req, self.rate, self.tenants);
+    /// Assemble the fleet + router (shared by both the trace-replay and
+    /// generator-streamed paths).
+    fn build_fleet(&self) -> (Fleet, Box<dyn Router>) {
         let (mut fleet, router) = self.policy.build_with(
             &self.llm,
             &self.hw,
@@ -414,7 +452,29 @@ impl ClusterSetup {
         if let Some(d) = &self.dvfs {
             fleet.set_dvfs(d.clone());
         }
+        (fleet, router)
+    }
+
+    /// Generate the trace and assemble the fleet + router.
+    fn build(&self) -> (Vec<TraceRequest>, Fleet, Box<dyn Router>) {
+        let trace = self.mix.trace_tenants(self.seed, self.n_req, self.rate, self.tenants);
+        let (fleet, router) = self.build_fleet();
         (trace, fleet, router)
+    }
+
+    /// The `--arrivals` generator config, when streaming was requested.
+    fn traffic(&self) -> Option<TrafficConfig> {
+        let kind = self.arrivals?;
+        let mut cfg = TrafficConfig::new(self.seed, self.rate, self.duration_s, self.mix)
+            .with_kind(kind)
+            .with_tenants(self.tenants);
+        if self.sessions {
+            cfg = cfg.with_sessions(SessionConfig::default());
+        }
+        if let Some(n) = self.max_requests {
+            cfg = cfg.with_max_requests(n);
+        }
+        Some(cfg)
     }
 
     fn print_header(&self) {
@@ -437,13 +497,24 @@ impl ClusterSetup {
                 None => "unlimited".into(),
             }
         );
-        println!(
-            "workload : {} mix, {} requests at {:.2} req/s (seed {})",
-            self.mix.name(),
-            self.n_req,
-            self.rate,
-            self.seed
-        );
+        match self.arrivals {
+            Some(kind) => println!(
+                "workload : {} mix, {} arrivals at {:.2} req/s for {:.0} s{} (seed {})",
+                self.mix.name(),
+                kind.name(),
+                self.rate,
+                self.duration_s,
+                if self.sessions { ", multi-turn sessions" } else { "" },
+                self.seed
+            ),
+            None => println!(
+                "workload : {} mix, {} requests at {:.2} req/s (seed {})",
+                self.mix.name(),
+                self.n_req,
+                self.rate,
+                self.seed
+            ),
+        }
         if self.track_power {
             match self.tdp {
                 Some(w) => {
@@ -481,6 +552,15 @@ impl ClusterSetup {
             ("tenants", Json::Num(self.tenants as f64)),
             ("power_tracked", Json::Bool(self.track_power)),
             ("tdp_w", self.tdp.map_or(Json::Null, Json::Num)),
+            (
+                "arrivals",
+                self.arrivals.map_or(Json::Null, |k| Json::Str(k.name().to_string())),
+            ),
+            (
+                "duration_s",
+                if self.arrivals.is_some() { Json::Num(self.duration_s) } else { Json::Null },
+            ),
+            ("sessions", Json::Bool(self.sessions)),
         ])
     }
 }
@@ -492,9 +572,26 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
         setup.print_header();
     }
     let tenants = setup.tenants;
-    let (trace, mut fleet, mut router) = setup.build();
     let mut prof = SelfProfile::new();
-    let r = prof.time("fleet_replay", || fleet.replay(&trace, router.as_mut()));
+    let (mut fleet, r) = match setup.traffic() {
+        // streamed: pull arrivals from the generator one at a time under a
+        // bounded retention cap — online histograms carry the percentiles,
+        // so memory stays flat however many requests the horizon yields
+        Some(cfg) => {
+            const STREAM_RETAIN: usize = 65_536;
+            let mut gen = cfg.build();
+            let (mut fleet, mut router) = setup.build_fleet();
+            let r = prof.time("fleet_replay", || {
+                fleet.serve(&mut gen, router.as_mut(), ServeOptions::streaming(STREAM_RETAIN))
+            });
+            (fleet, r)
+        }
+        None => {
+            let (trace, mut fleet, mut router) = setup.build();
+            let r = prof.time("fleet_replay", || fleet.replay(&trace, router.as_mut()));
+            (fleet, r)
+        }
+    };
     prof.add("graph_walks", fleet.cost_walks());
     prof.add("oracle_memo_hits", fleet.cost_memo_hits());
     if json {
@@ -550,7 +647,7 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
             "Per-tenant share of the replay",
             &["tenant", "requests", "tokens", "ttft_p50_s", "ttft_p99_s", "e2e_p99_s", "tok_per_s"],
         );
-        for s in per_tenant_stats(&trace, &r.served, r.makespan) {
+        for s in per_tenant_stats_served(&r.served, r.makespan) {
             tt.row(vec![
                 s.tenant.to_string(),
                 s.requests.to_string(),
@@ -563,7 +660,7 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
         }
         println!("{}", tt.to_markdown());
     }
-    println!("served     : {} requests in {}", r.served.len(), fmt_seconds(r.makespan));
+    println!("served     : {} requests in {}", r.requests, fmt_seconds(r.makespan));
     println!(
         "throughput : {:.2} req/s (mean utilization {:.1}%)",
         r.throughput_rps(),
@@ -584,7 +681,7 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
         );
     }
     if r.power_tracked {
-        let tokens: u64 = trace.iter().map(|q| q.l_out as u64).sum();
+        let tokens = r.tokens;
         println!(
             "energy     : {} fleet total ({} / token, {:.3} J on KV transfers)",
             fmt_joules(r.energy_j()),
@@ -614,7 +711,16 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
 fn cmd_trace(f: &HashMap<String, String>) -> Result<()> {
     let setup = parse_cluster_setup(f)?;
     setup.print_header();
-    let (trace, mut fleet, mut router) = setup.build();
+    let (trace, mut fleet, mut router) = match setup.traffic() {
+        // span recording retains every request anyway, so streamed
+        // arrivals are materialized up front and replayed
+        Some(cfg) => {
+            let trace = collect_trace(&mut cfg.build());
+            let (fleet, router) = setup.build_fleet();
+            (trace, fleet, router)
+        }
+        None => setup.build(),
+    };
     fleet.enable_obs();
     let r = fleet.replay(&trace, router.as_mut());
 
@@ -646,7 +752,7 @@ fn cmd_trace(f: &HashMap<String, String>) -> Result<()> {
     let out = f.get("out").map(String::as_str).unwrap_or("trace.json");
     std::fs::write(out, doc.to_string())?;
     let n_events = doc.path(&["traceEvents"]).and_then(Json::as_arr).map_or(0, <[Json]>::len);
-    println!("served     : {} requests in {}", r.served.len(), fmt_seconds(r.makespan));
+    println!("served     : {} requests in {}", r.requests, fmt_seconds(r.makespan));
     println!(
         "trace      : {n_events} events -> {out} (open in https://ui.perfetto.dev \
          or chrome://tracing)"
@@ -959,15 +1065,12 @@ fn cmd_power(f: &HashMap<String, String>) -> Result<()> {
     let mut timelines: Vec<report::Table> = Vec::new();
     for &mk in &mappings {
         let per_dev = vec![mk; devices];
-        let mut fleet = Fleet::heterogeneous_with(
-            &llm,
-            &hw,
-            &per_dev,
-            slots,
-            Interconnect::board(),
-            SchedConfig::default(),
-        );
-        fleet.enable_power(&hw, tdp.map(ThermalConfig::paper));
+        let mut fleet = FleetBuilder::new(&llm, &hw)
+            .heterogeneous(&per_dev)
+            .slots(slots)
+            .interconnect(Interconnect::board())
+            .power(tdp.map(ThermalConfig::paper))
+            .build();
         let mut router: Box<dyn Router> = Policy::LeastLoaded.router();
         let r = fleet.replay(&trace, router.as_mut());
         t.row(vec![

@@ -12,7 +12,9 @@
 
 use super::jobj;
 use crate::cluster::router::{LeastLoaded, PhaseDisaggregated};
-use crate::cluster::{Fleet, Interconnect, Mix};
+use crate::cluster::{
+    ArrivalKind, FleetBuilder, Interconnect, LengthSampler, Mix, ServeOptions, TrafficConfig,
+};
 use crate::config::HwConfig;
 use crate::dse::{explore, DseConfig, Exhaustive, SearchSpace};
 use crate::mapping::MappingKind;
@@ -76,22 +78,24 @@ pub fn run_pinned(smoke: bool) -> Vec<BenchPoint> {
 
     let unified = run_point("fleet_replay_unified", iters, || {
         let trace = Mix::Interactive.trace(42, n_req, 24.0);
-        let mut fleet = Fleet::unified(&llm, &hw, 4, 8, Interconnect::board());
+        let mut fleet = FleetBuilder::new(&llm, &hw)
+            .devices(4)
+            .slots(8)
+            .interconnect(Interconnect::board())
+            .build();
         let r = fleet.replay(&trace, &mut LeastLoaded);
         (fleet.cost_walks(), r.served.len() as u64)
     });
 
     let disagg = run_point("fleet_replay_disagg", iters, || {
         let trace = Mix::Chat.trace(43, n_req, 16.0);
-        let mut fleet = Fleet::disaggregated_with(
-            &llm,
-            &hw,
-            4,
-            8,
-            0.5,
-            Interconnect::board(),
-            SchedConfig::chunked(256),
-        );
+        let mut fleet = FleetBuilder::new(&llm, &hw)
+            .devices(4)
+            .slots(8)
+            .interconnect(Interconnect::board())
+            .sched(SchedConfig::chunked(256))
+            .disaggregated(0.5)
+            .build();
         let r = fleet.replay(&trace, &mut PhaseDisaggregated);
         (fleet.cost_walks(), r.served.len() as u64)
     });
@@ -121,7 +125,32 @@ pub fn run_pinned(smoke: bool) -> Vec<BenchPoint> {
         (res.profile.count("graph_walks"), res.evaluated.len() as u64)
     });
 
-    vec![unified, disagg, oracle, dse]
+    // Streamed serving at scale: a bursty generator feeds Fleet::serve
+    // directly (no materialized trace) under a small retention cap, so
+    // this point exercises both the traffic engine and the bounded-memory
+    // loop. Wall time and the suite-wide `peak_rss_bytes` in the artifact
+    // together pin the million-request path. One iteration: the workload
+    // is large enough to be its own averaging window.
+    let n_stream = if smoke { 10_000 } else { 1_000_000 };
+    let stream = run_point("stream_1m", 1, || {
+        let mut cfg = TrafficConfig::new(44, 200.0, 1.0e9, Mix::Interactive)
+            .with_kind(ArrivalKind::Mmpp)
+            .with_max_requests(n_stream);
+        // tiny fixed bands: absolute work per request is host-independent
+        // and small enough that a million requests replay in seconds
+        cfg.prompt = LengthSampler::band(16, 64);
+        cfg.output = LengthSampler::band(4, 16);
+        let mut gen = cfg.build();
+        let mut fleet = FleetBuilder::new(&llm, &hw)
+            .devices(4)
+            .slots(8)
+            .interconnect(Interconnect::board())
+            .build();
+        let r = fleet.serve(&mut gen, &mut LeastLoaded, ServeOptions::streaming(4096));
+        (fleet.cost_walks(), r.requests as u64)
+    });
+
+    vec![unified, disagg, oracle, dse, stream]
 }
 
 /// Peak resident set size of this process, bytes (`VmHWM` from

@@ -80,7 +80,8 @@ impl Registry {
 /// and DSE surfaces report, built from one [`FleetResult`].
 pub fn fleet_registry(r: &FleetResult, walks: u64, memo_hits: u64) -> Registry {
     let mut reg = Registry::new();
-    reg.inc("requests_served", r.served.len() as u64);
+    reg.inc("requests_served", r.requests as u64);
+    reg.inc("output_tokens", r.tokens);
     reg.inc("prefills", r.prefills);
     reg.inc("decode_steps", r.decode_steps);
     reg.inc("evictions", r.evictions);
@@ -101,14 +102,11 @@ pub fn fleet_registry(r: &FleetResult, walks: u64, memo_hits: u64) -> Registry {
     reg.gauge("avg_power_w", r.avg_power_w());
     reg.gauge("peak_power_w", r.peak_power_w);
     reg.gauge("throttled_s", r.throttled_s);
-    let h = reg.hist("ttft_s");
-    for s in &r.served {
-        h.record(s.ttft);
-    }
-    let h = reg.hist("e2e_s");
-    for s in &r.served {
-        h.record(s.e2e);
-    }
+    // the replay already folded every completion into streaming
+    // histograms (retention-cap independent); merge them instead of
+    // re-recording off the possibly-sampled served vector
+    reg.hist("ttft_s").merge(&r.ttft_hist);
+    reg.hist("e2e_s").merge(&r.e2e_hist);
     reg
 }
 

@@ -117,7 +117,7 @@ pub fn metrics_json(m: &Metrics) -> Json {
 mod tests {
     use super::*;
     use crate::cluster::router::LeastLoaded;
-    use crate::cluster::{Fleet, Interconnect};
+    use crate::cluster::{FleetBuilder, Interconnect};
     use crate::config::HwConfig;
     use crate::model::LlmConfig;
     use crate::sim::queueing::poisson_trace;
@@ -126,7 +126,11 @@ mod tests {
     fn cluster_snapshot_is_tagged_and_self_contained() {
         let llm = LlmConfig::llama2_7b();
         let hw = HwConfig::paper();
-        let mut fleet = Fleet::unified(&llm, &hw, 2, 4, Interconnect::pcie5());
+        let mut fleet = FleetBuilder::new(&llm, &hw)
+            .devices(2)
+            .slots(4)
+            .interconnect(Interconnect::pcie5())
+            .build();
         let trace = poisson_trace(7, 20, 10.0, (64, 512), 16);
         let r = fleet.replay(&trace, &mut LeastLoaded);
         let prof = SelfProfile::new();
@@ -136,7 +140,7 @@ mod tests {
         assert_eq!(j.path(&["config", "devices"]).and_then(Json::as_f64), Some(2.0));
         assert_eq!(j.path(&["per_device"]).and_then(Json::as_arr).map(<[Json]>::len), Some(2));
         let served = j.path(&["metrics", "counters", "requests_served"]).and_then(Json::as_f64);
-        assert_eq!(served, Some(r.served.len() as f64));
+        assert_eq!(served, Some(r.requests as f64));
         // snapshots must round-trip through the serializer
         let text = j.to_string();
         assert_eq!(Json::parse(&text).unwrap(), j);

@@ -3,7 +3,7 @@
 //! TDP throttling sweep (`halo report --fig power`).
 
 use super::{f, Table};
-use crate::cluster::{Fleet, Interconnect, Mix, Router, SchedConfig};
+use crate::cluster::{Fleet, FleetBuilder, Interconnect, Mix, Router};
 use crate::config::HwConfig;
 use crate::mapping::MappingKind;
 use crate::model::LlmConfig;
@@ -26,15 +26,12 @@ fn powered_replay(
     thermal: Option<ThermalConfig>,
     trace: &[TraceRequest],
 ) -> (Fleet, crate::cluster::FleetResult) {
-    let mut fleet = Fleet::heterogeneous_with(
-        llm,
-        hw,
-        &[mapping],
-        SLOTS,
-        Interconnect::board(),
-        SchedConfig::default(),
-    );
-    fleet.enable_power(hw, thermal);
+    let mut fleet = FleetBuilder::new(llm, hw)
+        .heterogeneous(&[mapping])
+        .slots(SLOTS)
+        .interconnect(Interconnect::board())
+        .power(thermal)
+        .build();
     let mut router: Box<dyn Router> = crate::cluster::Policy::LeastLoaded.router();
     let r = fleet.replay(trace, router.as_mut());
     (fleet, r)
@@ -213,16 +210,13 @@ fn dvfs_replay(
     decode_idx: usize,
 ) -> crate::cluster::FleetResult {
     let llm = LlmConfig::llama2_7b();
-    let mut fleet = Fleet::heterogeneous_with(
-        &llm,
-        hw,
-        &[MappingKind::Halo1],
-        SLOTS,
-        Interconnect::board(),
-        SchedConfig::default(),
-    );
-    fleet.enable_power(hw, None);
-    fleet.set_dvfs(DvfsConfig::with_indices(&hw.power, prefill_idx, decode_idx));
+    let mut fleet = FleetBuilder::new(&llm, hw)
+        .heterogeneous(&[MappingKind::Halo1])
+        .slots(SLOTS)
+        .interconnect(Interconnect::board())
+        .power(None)
+        .dvfs(DvfsConfig::with_indices(&hw.power, prefill_idx, decode_idx))
+        .build();
     let mut router: Box<dyn Router> = crate::cluster::Policy::LeastLoaded.router();
     fleet.replay(trace, router.as_mut())
 }

@@ -129,6 +129,29 @@ impl SchedConfig {
     }
 }
 
+/// Request identity riding along with every job: who submitted it
+/// (`tenant`), which conversation it belongs to (`session`), and how
+/// many output tokens it generates — folded into the [`ServedRequest`]
+/// at completion so streaming consumers aggregate per tenant/session
+/// without joining back to a materialized trace. Jobs pushed through
+/// the untagged [`Device::push`] get a default tag derived from the job
+/// itself (tenant 0, session 0, the job's own output-token count), so
+/// existing single-device callers are unaffected.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReqTag {
+    pub tenant: usize,
+    pub session: u64,
+    /// Output tokens the request generates (its `l_out`).
+    pub tokens: u64,
+}
+
+impl ReqTag {
+    /// The identity of one trace request.
+    pub fn of(r: &TraceRequest) -> Self {
+        ReqTag { tenant: r.tenant, session: r.session, tokens: r.l_out as u64 }
+    }
+}
+
 /// One unit of work queued on a device. `ready` is the earliest time the
 /// device may start it (arrival time, or KV-transfer completion).
 #[derive(Debug, Clone)]
@@ -207,6 +230,18 @@ impl DeviceJob {
             | DeviceJob::Resume { ctx, remaining, .. } => ctx + remaining + 1,
         }
     }
+
+    /// Output tokens this job stands for — the default [`ReqTag::tokens`]
+    /// when a job is pushed without an explicit tag. Continuations count
+    /// their already-emitted first token.
+    fn output_tokens(&self) -> u64 {
+        match self {
+            DeviceJob::Full { l_out, .. } | DeviceJob::PrefillOnly { l_out, .. } => *l_out as u64,
+            DeviceJob::DecodeOnly { remaining, .. } | DeviceJob::Resume { remaining, .. } => {
+                *remaining as u64 + 1
+            }
+        }
+    }
 }
 
 /// Handoff emitted when a [`DeviceJob::PrefillOnly`] completes: the KV
@@ -220,6 +255,8 @@ pub struct PrefillDone {
     pub l_in: usize,
     pub l_out: usize,
     pub decode_dev: usize,
+    /// Request identity, forwarded to the decode device.
+    pub tag: ReqTag,
 }
 
 #[derive(Debug, Clone)]
@@ -228,6 +265,7 @@ struct ActiveSeq {
     first_token_at: f64,
     ctx: usize,
     remaining: usize,
+    tag: ReqTag,
 }
 
 /// A prompt streaming through chunked prefill: `offset` of `l_in` tokens
@@ -238,6 +276,7 @@ struct PrefillingJob {
     offset: usize,
     l_in: usize,
     kind: PrefillKind,
+    tag: ReqTag,
 }
 
 #[derive(Debug, Clone)]
@@ -287,7 +326,7 @@ pub struct Device {
     /// KV-cache bytes per cached token (model-dependent).
     kv_per_token: u64,
     cost: CostModel,
-    queue: VecDeque<DeviceJob>,
+    queue: VecDeque<(DeviceJob, ReqTag)>,
     /// Prompts mid-chunked-prefill (always empty under serialized prefill).
     prefilling: Vec<PrefillingJob>,
     active: Vec<Option<ActiveSeq>>,
@@ -498,7 +537,7 @@ impl Device {
     /// it keeps placing work on a device whose budget is already spoken
     /// for by its own backlog.
     pub fn kv_queued_bytes(&self) -> u64 {
-        let tokens: usize = self.queue.iter().map(DeviceJob::kv_lifetime_tokens).sum();
+        let tokens: usize = self.queue.iter().map(|(j, _)| j.kv_lifetime_tokens()).sum();
         tokens as u64 * self.kv_per_token
     }
 
@@ -512,7 +551,7 @@ impl Device {
         let queued: usize = self
             .queue
             .iter()
-            .map(|j| match j {
+            .map(|(j, _)| match j {
                 DeviceJob::PrefillOnly { l_in, l_out, .. } => l_in + (*l_out).max(1),
                 _ => 0,
             })
@@ -558,7 +597,8 @@ impl Device {
         if self.active_count() > 0 || !self.prefilling.is_empty() {
             return Some(self.now);
         }
-        let min_ready = self.queue.iter().map(DeviceJob::ready).fold(f64::INFINITY, f64::min);
+        let min_ready =
+            self.queue.iter().map(|(j, _)| j.ready()).fold(f64::INFINITY, f64::min);
         if min_ready.is_finite() {
             Some(self.now.max(min_ready))
         } else {
@@ -572,8 +612,16 @@ impl Device {
     }
 
     pub fn push(&mut self, job: DeviceJob) {
+        let tag = ReqTag { tenant: 0, session: 0, tokens: job.output_tokens() };
+        self.push_tagged(job, tag);
+    }
+
+    /// [`push`](Self::push) with an explicit request identity — the
+    /// fleet's path, so tenant/session/token counts survive onto the
+    /// [`ServedRequest`] wherever the request finishes.
+    pub fn push_tagged(&mut self, job: DeviceJob, tag: ReqTag) {
         self.record_event(EventKind::Queued, job.ready(), job.arrival());
-        self.queue.push_back(job);
+        self.queue.push_back((job, tag));
     }
 
     /// Index of the next job to admit under the configured policy, or
@@ -583,22 +631,22 @@ impl Device {
     fn next_admission(&self, t0: f64) -> Option<usize> {
         match self.sched.admission {
             AdmissionPolicy::Fifo => match self.queue.front() {
-                Some(j) if j.ready() <= t0 => Some(0),
+                Some((j, _)) if j.ready() <= t0 => Some(0),
                 _ => None,
             },
             AdmissionPolicy::ShortestFirst => self
                 .queue
                 .iter()
                 .enumerate()
-                .filter(|(_, j)| j.ready() <= t0)
-                .min_by_key(|&(i, j)| (j.prefill_work(), i))
+                .filter(|(_, (j, _))| j.ready() <= t0)
+                .min_by_key(|&(i, (j, _))| (j.prefill_work(), i))
                 .map(|(i, _)| i),
             AdmissionPolicy::Interactive => self
                 .queue
                 .iter()
                 .enumerate()
-                .filter(|(_, j)| j.ready() <= t0)
-                .min_by_key(|&(i, j)| (j.prefill_work() > INTERACTIVE_CUTOFF, i))
+                .filter(|(_, (j, _))| j.ready() <= t0)
+                .min_by_key(|&(i, (j, _))| (j.prefill_work() > INTERACTIVE_CUTOFF, i))
                 .map(|(i, _)| i),
         }
     }
@@ -633,7 +681,8 @@ impl Device {
         // idle-advance: nothing running and nothing ready yet -> jump to
         // the first queued job's ready time
         if self.active_count() == 0 && self.prefilling.is_empty() && !self.queue.is_empty() {
-            let min_ready = self.queue.iter().map(DeviceJob::ready).fold(f64::INFINITY, f64::min);
+            let min_ready =
+                self.queue.iter().map(|(j, _)| j.ready()).fold(f64::INFINITY, f64::min);
             self.now = self.now.max(min_ready);
         }
         // admissions against the cycle-start clock (jobs becoming ready
@@ -657,13 +706,14 @@ impl Device {
     fn admit_serialized(&mut self, t0: f64, handoffs: &mut Vec<PrefillDone>) {
         loop {
             let Some(idx) = self.next_admission(t0) else { break };
-            let needs_slot = !matches!(self.queue[idx], DeviceJob::PrefillOnly { .. });
+            let needs_slot = !matches!(self.queue[idx].0, DeviceJob::PrefillOnly { .. });
             if needs_slot {
                 let Some(slot) = self.free_slot() else { break };
-                if self.kv_admission_blocked(self.queue[idx].kv_admit_tokens()) {
+                if self.kv_admission_blocked(self.queue[idx].0.kv_admit_tokens()) {
                     break;
                 }
-                match self.queue.remove(idx).unwrap() {
+                let (job, tag) = self.queue.remove(idx).unwrap();
+                match job {
                     DeviceJob::Full { arrival, ready, l_in, l_out } => {
                         let c = self.cost.prefill(l_in);
                         let start = self.now.max(ready);
@@ -678,11 +728,12 @@ impl Device {
                             first_token_at: self.now,
                             ctx: l_in,
                             remaining: l_out.saturating_sub(1),
+                            tag,
                         });
                     }
                     DeviceJob::DecodeOnly { arrival, first_token_at, ctx, remaining, .. } => {
                         self.active[slot] =
-                            Some(ActiveSeq { arrival, first_token_at, ctx, remaining });
+                            Some(ActiveSeq { arrival, first_token_at, ctx, remaining, tag });
                     }
                     DeviceJob::Resume { arrival, ready, first_token_at, ctx, remaining } => {
                         // recompute the evicted KV prefix, then resume
@@ -695,12 +746,13 @@ impl Device {
                         self.last_active = self.now;
                         self.record_span(SpanKind::Recompute, start, p, arrival, 1);
                         self.active[slot] =
-                            Some(ActiveSeq { arrival, first_token_at, ctx, remaining });
+                            Some(ActiveSeq { arrival, first_token_at, ctx, remaining, tag });
                     }
                     DeviceJob::PrefillOnly { .. } => unreachable!(),
                 }
             } else {
-                match self.queue.remove(idx).unwrap() {
+                let (job, tag) = self.queue.remove(idx).unwrap();
+                match job {
                     DeviceJob::PrefillOnly { arrival, ready, l_in, l_out, decode_dev } => {
                         let c = self.cost.prefill(l_in);
                         let start = self.now.max(ready);
@@ -716,6 +768,7 @@ impl Device {
                             l_in,
                             l_out,
                             decode_dev,
+                            tag,
                         });
                     }
                     _ => unreachable!(),
@@ -740,10 +793,10 @@ impl Device {
                 break;
             }
             let Some(idx) = self.next_admission(t0) else { break };
-            if self.kv_admission_blocked(self.queue[idx].kv_admit_tokens()) {
+            if self.kv_admission_blocked(self.queue[idx].0.kv_admit_tokens()) {
                 break;
             }
-            let needs_slot = !matches!(self.queue[idx], DeviceJob::PrefillOnly { .. });
+            let needs_slot = !matches!(self.queue[idx].0, DeviceJob::PrefillOnly { .. });
             let slot = if needs_slot {
                 match self.free_slot() {
                     Some(s) => s,
@@ -752,13 +805,15 @@ impl Device {
             } else {
                 usize::MAX // unused
             };
-            match self.queue.remove(idx).unwrap() {
+            let (job, tag) = self.queue.remove(idx).unwrap();
+            match job {
                 DeviceJob::Full { arrival, l_in, l_out, .. } => {
                     self.prefilling.push(PrefillingJob {
                         arrival,
                         offset: 0,
                         l_in,
                         kind: PrefillKind::Full { slot, l_out },
+                        tag,
                     });
                 }
                 DeviceJob::PrefillOnly { arrival, l_in, l_out, decode_dev, .. } => {
@@ -767,11 +822,12 @@ impl Device {
                         offset: 0,
                         l_in,
                         kind: PrefillKind::Handoff { decode_dev, l_out },
+                        tag,
                     });
                 }
                 DeviceJob::DecodeOnly { arrival, first_token_at, ctx, remaining, .. } => {
                     self.active[slot] =
-                        Some(ActiveSeq { arrival, first_token_at, ctx, remaining });
+                        Some(ActiveSeq { arrival, first_token_at, ctx, remaining, tag });
                 }
                 DeviceJob::Resume { arrival, first_token_at, ctx, remaining, .. } => {
                     self.prefilling.push(PrefillingJob {
@@ -779,6 +835,7 @@ impl Device {
                         offset: 0,
                         l_in: ctx,
                         kind: PrefillKind::Resume { slot, first_token_at, remaining },
+                        tag,
                     });
                 }
             }
@@ -816,6 +873,7 @@ impl Device {
                             first_token_at: self.now,
                             ctx: job.l_in,
                             remaining: l_out.saturating_sub(1),
+                            tag: job.tag,
                         });
                     }
                     PrefillKind::Handoff { decode_dev, l_out } => {
@@ -826,6 +884,7 @@ impl Device {
                             l_in: job.l_in,
                             l_out,
                             decode_dev,
+                            tag: job.tag,
                         });
                     }
                     PrefillKind::Resume { slot, first_token_at, remaining } => {
@@ -834,6 +893,7 @@ impl Device {
                             first_token_at,
                             ctx: job.l_in,
                             remaining,
+                            tag: job.tag,
                         });
                     }
                 }
@@ -873,13 +933,16 @@ impl Device {
             self.evictions += 1;
             self.recompute_tokens += s.ctx as u64;
             self.record_event(EventKind::Evicted, self.now, s.arrival);
-            self.queue.push_back(DeviceJob::Resume {
-                arrival: s.arrival,
-                ready: self.now,
-                first_token_at: s.first_token_at,
-                ctx: s.ctx,
-                remaining: s.remaining,
-            });
+            self.queue.push_back((
+                DeviceJob::Resume {
+                    arrival: s.arrival,
+                    ready: self.now,
+                    first_token_at: s.first_token_at,
+                    ctx: s.ctx,
+                    remaining: s.remaining,
+                },
+                s.tag,
+            ));
         }
     }
 
@@ -912,6 +975,9 @@ impl Device {
                         arrival: s.arrival,
                         ttft: s.first_token_at - s.arrival,
                         e2e: self.now - s.arrival,
+                        tenant: s.tag.tenant,
+                        session: s.tag.session,
+                        tokens: s.tag.tokens,
                     });
                     *slot = None;
                 } else {

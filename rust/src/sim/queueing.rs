@@ -22,22 +22,27 @@
 //! an explicit [`SchedConfig`] for chunked prefill, priority admission,
 //! and KV-capacity studies.
 
-use super::device::{Device, DeviceJob, SchedConfig};
+use super::device::{Device, DeviceJob, ReqTag, SchedConfig};
 use crate::config::HwConfig;
 use crate::mapping::MappingKind;
 use crate::model::LlmConfig;
 use crate::util::{percentile, Rng};
 
 /// One request in the trace. `tenant` tags the submitting tenant for
-/// multi-tenant studies (0 for single-tenant traces); arrivals are
-/// strictly increasing, so a served record joins back to its trace
-/// request — and hence its tenant — by arrival time.
+/// multi-tenant studies (0 for single-tenant traces) and `session` ties
+/// the turns of a multi-turn conversation together (0 for standalone
+/// requests; see [`cluster::traffic`](crate::cluster::traffic)). Both
+/// identities also travel on the [`ServedRequest`], so streaming
+/// consumers aggregate without retaining the trace; the legacy
+/// join-by-arrival-time path still works because arrivals are strictly
+/// increasing.
 #[derive(Debug, Clone)]
 pub struct TraceRequest {
     pub arrival: f64,
     pub l_in: usize,
     pub l_out: usize,
     pub tenant: usize,
+    pub session: u64,
 }
 
 /// Generate a Poisson-arrival trace whose per-request lengths come from
@@ -68,7 +73,7 @@ pub fn trace_with_tenants(
             t += rng.exp(rate_per_s);
             let (l_in, l_out) = sample(&mut rng);
             let tenant = if tenants > 1 { rng.below(tenants as u64) as usize } else { 0 };
-            TraceRequest { arrival: t, l_in, l_out, tenant }
+            TraceRequest { arrival: t, l_in, l_out, tenant, session: 0 }
         })
         .collect()
 }
@@ -93,12 +98,19 @@ pub fn poisson_trace(
     trace_with(seed, n, rate_per_s, |rng| (log_uniform(rng, lo, hi), l_out))
 }
 
-/// Completed-request record.
+/// Completed-request record. Carries the request's identity (`tenant`,
+/// `session`) and its generated token count so streaming consumers can
+/// aggregate per tenant/session without joining back to a materialized
+/// trace.
 #[derive(Debug, Clone)]
 pub struct ServedRequest {
     pub arrival: f64,
     pub ttft: f64,
     pub e2e: f64,
+    pub tenant: usize,
+    pub session: u64,
+    /// Output tokens generated (the request's `l_out`).
+    pub tokens: u64,
 }
 
 /// p-th TTFT percentile over a served set (shared by the single-device
@@ -188,7 +200,8 @@ pub fn replay_trace_with(
     loop {
         // pull arrivals up to the device clock
         while pending.peek().is_some_and(|r| r.arrival <= dev.now()) {
-            dev.push(DeviceJob::full(pending.next().unwrap()));
+            let r = pending.next().unwrap();
+            dev.push_tagged(DeviceJob::full(r), ReqTag::of(r));
         }
         if !dev.has_work() {
             match pending.peek() {

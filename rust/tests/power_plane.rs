@@ -9,7 +9,7 @@
 //! and the per-phase DVFS plane (ladder monotonicity, stepped governor
 //! convergence).
 
-use halo::cluster::{Fleet, Interconnect, Mix, Policy};
+use halo::cluster::{Fleet, FleetBuilder, Interconnect, Mix, Policy};
 use halo::config::HwConfig;
 use halo::mapping::MappingKind;
 use halo::model::LlmConfig;
@@ -26,19 +26,32 @@ fn llm() -> LlmConfig {
     LlmConfig::llama2_7b()
 }
 
+/// A plain unified fleet on the board link, 8 slots/device.
+fn unified_fleet(devices: usize) -> Fleet {
+    FleetBuilder::new(&llm(), &hw())
+        .devices(devices)
+        .slots(8)
+        .interconnect(Interconnect::board())
+        .build()
+}
+
 /// One power-tracked HALO1 device serving `trace`.
 fn powered_replay(
     trace: &[TraceRequest],
     thermal: Option<ThermalConfig>,
 ) -> halo::cluster::FleetResult {
-    let mut fleet = Fleet::unified(&llm(), &hw(), 1, 8, Interconnect::board());
-    fleet.enable_power(&hw(), thermal);
+    let mut fleet = FleetBuilder::new(&llm(), &hw())
+        .devices(1)
+        .slots(8)
+        .interconnect(Interconnect::board())
+        .power(thermal)
+        .build();
     let mut router = Policy::LeastLoaded.router();
     fleet.replay(trace, router.as_mut())
 }
 
 fn single_request(l_in: usize, l_out: usize) -> Vec<TraceRequest> {
-    vec![TraceRequest { arrival: 0.0, l_in, l_out, tenant: 0 }]
+    vec![TraceRequest { arrival: 0.0, l_in, l_out, tenant: 0, session: 0 }]
 }
 
 #[test]
@@ -71,7 +84,7 @@ fn power_tracking_performs_no_extra_graph_walks() {
     // the latency-only replay of the same trace
     let trace = Mix::Interactive.trace(41, 48, 12.0);
     let walks = |power: bool| {
-        let mut fleet = Fleet::unified(&llm(), &hw(), 2, 8, Interconnect::board());
+        let mut fleet = unified_fleet(2);
         if power {
             fleet.enable_power(&hw(), None);
         }
@@ -144,7 +157,7 @@ fn power_tracking_off_or_uncapped_is_bit_identical() {
     // bit-identical — attribution is an observer, not a participant
     let trace = Mix::Interactive.trace(31, 60, 10.0);
     let run = |power: Option<Option<ThermalConfig>>| {
-        let mut fleet = Fleet::unified(&llm(), &hw(), 2, 8, Interconnect::board());
+        let mut fleet = unified_fleet(2);
         if let Some(thermal) = power {
             fleet.enable_power(&hw(), thermal);
         }
@@ -217,14 +230,24 @@ fn dvfs_ladder_monotone_on_compute_bound_prefill() {
     // outweighs the shallow CV^2 saving) while strictly reducing peak
     // power — and they strictly stretch the replay.
     let trace: Vec<TraceRequest> = (0..12)
-        .map(|i| TraceRequest { arrival: i as f64 * 1e-3, l_in: 2048, l_out: 1, tenant: 0 })
+        .map(|i| TraceRequest {
+            arrival: i as f64 * 1e-3,
+            l_in: 2048,
+            l_out: 1,
+            tenant: 0,
+            session: 0,
+        })
         .collect();
     let ladder_len = hw().power.dvfs_points.len();
     assert!(ladder_len >= 3);
     let run = |idx: usize| {
-        let mut fleet = Fleet::unified(&llm(), &hw(), 1, 8, Interconnect::board());
-        fleet.enable_power(&hw(), None);
-        fleet.set_dvfs(DvfsConfig::with_indices(&hw().power, idx, idx));
+        let mut fleet = FleetBuilder::new(&llm(), &hw())
+            .devices(1)
+            .slots(8)
+            .interconnect(Interconnect::board())
+            .power(None)
+            .dvfs(DvfsConfig::with_indices(&hw().power, idx, idx))
+            .build();
         let mut router = Policy::LeastLoaded.router();
         fleet.replay(&trace, router.as_mut())
     };
@@ -255,18 +278,19 @@ fn dvfs_governor_converges_under_a_tdp_cap_like_the_scalar_throttle() {
     // the cap) by walking the ladder, and do nothing uncapped
     let trace = Mix::Generation.trace(39, 40, 1.0e6);
     let run = |cap: Option<f64>| {
-        let mut fleet = Fleet::unified(&llm(), &hw(), 1, 8, Interconnect::board());
-        fleet.enable_power(
-            &hw(),
-            cap.map(|w| {
+        let mut fleet = FleetBuilder::new(&llm(), &hw())
+            .devices(1)
+            .slots(8)
+            .interconnect(Interconnect::board())
+            .power(cap.map(|w| {
                 // short replay: shrink the thermal time constant so the
                 // package reaches its band within the test's busy time
                 let mut c = ThermalConfig::paper(w);
                 c.tau_s = 0.05;
                 c
-            }),
-        );
-        fleet.set_dvfs(DvfsConfig::governed(&hw().power));
+            }))
+            .dvfs(DvfsConfig::governed(&hw().power))
+            .build();
         let mut router = Policy::LeastLoaded.router();
         let r = fleet.replay(&trace, router.as_mut());
         let max_gov = fleet.devices[0].power().unwrap().max_gov_idx;
@@ -296,7 +320,7 @@ fn dvfs_governor_converges_under_a_tdp_cap_like_the_scalar_throttle() {
 #[test]
 fn per_device_energy_and_utilization_surface_in_fleet_stats() {
     let trace = Mix::Interactive.trace(37, 60, 30.0);
-    let mut fleet = Fleet::unified(&llm(), &hw(), 3, 8, Interconnect::board());
+    let mut fleet = unified_fleet(3);
     fleet.enable_power(&hw(), None);
     let mut router = Policy::LeastLoaded.router();
     let r = fleet.replay(&trace, router.as_mut());

@@ -1,0 +1,123 @@
+//! Streaming-serving integration: a generator-fed `Fleet::serve` must be
+//! bit-identical to materializing the same stream and replaying it, the
+//! slice-backed serve must equal the legacy replay on every mix preset,
+//! request identity (tenant, session, tokens) must travel on the served
+//! records themselves, and a bounded retention cap must bound the raw
+//! records without perturbing any online statistic.
+
+use halo::cluster::router::LeastLoaded;
+use halo::cluster::{
+    collect_trace, per_tenant_stats_served, ArrivalKind, Fleet, FleetBuilder, Interconnect, Mix,
+    ServeOptions, SessionConfig, SliceSource, TrafficConfig,
+};
+use halo::config::HwConfig;
+use halo::model::LlmConfig;
+
+fn fleet(devices: usize) -> Fleet {
+    FleetBuilder::new(&LlmConfig::llama2_7b(), &HwConfig::paper())
+        .devices(devices)
+        .slots(8)
+        .interconnect(Interconnect::board())
+        .build()
+}
+
+fn traffic() -> TrafficConfig {
+    TrafficConfig::new(17, 30.0, 20.0, Mix::Chat).with_kind(ArrivalKind::Mmpp).with_tenants(3)
+}
+
+#[test]
+fn generator_stream_and_materialized_replay_are_bit_identical() {
+    // acceptance: same seed, two consumption styles — pulled one request
+    // at a time through serve(), or drained up front and replayed as a
+    // slice — must produce the same FleetResult to the bit
+    let trace = collect_trace(&mut traffic().build());
+    assert!(trace.len() > 100, "workload too small to be meaningful: {}", trace.len());
+    let mut gen = traffic().build();
+    let streamed = fleet(3).serve(&mut gen, &mut LeastLoaded, ServeOptions::exact());
+    let replayed = fleet(3).replay(&trace, &mut LeastLoaded);
+    assert_eq!(streamed.fingerprint(), replayed.fingerprint());
+    assert_eq!(streamed.requests, trace.len());
+    assert!(streamed.complete);
+}
+
+#[test]
+fn slice_backed_serve_equals_legacy_replay_on_every_mix() {
+    for (i, mix) in Mix::all().into_iter().enumerate() {
+        let trace = mix.trace(70 + i as u64, 60, 12.0);
+        let a = fleet(3).replay(&trace, &mut LeastLoaded);
+        let b = fleet(3).serve(
+            &mut SliceSource::new(&trace),
+            &mut LeastLoaded,
+            ServeOptions::exact(),
+        );
+        assert_eq!(a.fingerprint(), b.fingerprint(), "{}", mix.name());
+        assert_eq!(a.requests, 60, "{}", mix.name());
+    }
+}
+
+#[test]
+fn tenant_and_session_identity_travels_on_served_requests() {
+    // the bugfix pin: identity is carried by the simulation itself, not
+    // recovered by a post-hoc arrival-time join against the trace
+    let cfg = traffic().with_sessions(SessionConfig::default());
+    let r = fleet(3).serve(&mut cfg.build(), &mut LeastLoaded, ServeOptions::exact());
+    assert!(r.complete && r.requests > 0);
+    assert!(r.served.iter().all(|s| s.tenant < 3), "tenant ids must survive serving");
+    assert!(r.served.iter().all(|s| s.session > 0), "session ids must survive serving");
+    assert_eq!(r.served.iter().map(|s| s.tokens).sum::<u64>(), r.tokens);
+    let stats = per_tenant_stats_served(&r.served, r.makespan);
+    assert!(!stats.is_empty() && stats.len() <= 3);
+    assert_eq!(stats.iter().map(|t| t.requests).sum::<usize>(), r.requests);
+    assert_eq!(stats.iter().map(|t| t.tokens).sum::<u64>(), r.tokens);
+}
+
+#[test]
+fn retention_cap_bounds_records_not_statistics() {
+    let trace = Mix::Chat.trace(19, 80, 20.0);
+    let run = |opts: ServeOptions| {
+        fleet(2).serve(&mut SliceSource::new(&trace), &mut LeastLoaded, opts)
+    };
+    let exact = run(ServeOptions::exact());
+    let capped = run(ServeOptions::streaming(8));
+    assert_eq!(capped.requests, 80);
+    assert_eq!(capped.served.len(), 8, "only the cap survives as raw records");
+    assert!(!capped.complete && exact.complete);
+    // every online statistic is identical — the cap only sheds records
+    assert_eq!(capped.makespan.to_bits(), exact.makespan.to_bits());
+    assert_eq!(capped.tokens, exact.tokens);
+    assert_eq!(capped.decode_steps, exact.decode_steps);
+    assert_eq!(capped.ttft_hist, exact.ttft_hist);
+    assert_eq!(capped.e2e_hist, exact.e2e_hist);
+    assert_eq!(capped.ttft_hist.count(), 80);
+    // capped percentiles come from the histogram: inside the exact
+    // envelope and close to the exact-sorted values
+    for p in [50.0, 90.0, 99.0] {
+        let (a, b) = (capped.ttft_pct(p), exact.ttft_pct(p));
+        assert!(a >= exact.ttft_hist.min() && a <= exact.ttft_hist.max());
+        assert!((a - b).abs() <= 0.25 * b.abs().max(1e-12), "p{p}: hist {a} vs exact {b}");
+    }
+}
+
+#[test]
+fn session_turns_replay_with_grown_prefixes_under_serving() {
+    // multi-turn sessions keep their grown context through the full
+    // serving path: later turns of a session must carry strictly larger
+    // prompts, visible in the served token accounting
+    let cfg = TrafficConfig::new(23, 8.0, 60.0, Mix::Chat).with_sessions(SessionConfig::default());
+    let trace = collect_trace(&mut cfg.build());
+    let mut by_session: std::collections::HashMap<u64, Vec<&halo::sim::queueing::TraceRequest>> =
+        std::collections::HashMap::new();
+    for q in &trace {
+        by_session.entry(q.session).or_default().push(q);
+    }
+    assert!(by_session.values().any(|v| v.len() > 1), "no multi-turn sessions generated");
+    for turns in by_session.values() {
+        for w in turns.windows(2) {
+            assert!(w[1].l_in > w[0].l_in, "session prefix must grow turn over turn");
+        }
+    }
+    // and the stream serves to completion with conserved counts
+    let r = fleet(2).serve(&mut cfg.build(), &mut LeastLoaded, ServeOptions::exact());
+    assert_eq!(r.requests, trace.len());
+    assert!(r.complete);
+}
