@@ -27,7 +27,7 @@ use super::traffic::{SliceSource, WorkloadSource};
 use crate::config::HwConfig;
 use crate::mapping::MappingKind;
 use crate::model::LlmConfig;
-use crate::obs::{self, LogHistogram, Span, SpanKind, Track};
+use crate::obs::{self, GaugeSample, LogHistogram, Recorder, Span, SpanKind, Track, WindowSeries};
 use crate::power::{DvfsConfig, EnergyBreakdown, ThermalConfig};
 use crate::sim::device::{Device, DeviceJob, ReqTag, SchedConfig};
 use crate::sim::queueing::{served_rate, ServedRequest, TraceRequest};
@@ -328,6 +328,7 @@ impl FleetBuilder {
             pending_decode: vec![0; devices],
             pending_kv: vec![0; devices],
             obs_kv: None,
+            obs_kv_cap: usize::MAX,
         };
         for (dev, cap) in self.kv_caps {
             fleet.set_kv_capacity(dev, cap);
@@ -371,6 +372,9 @@ pub struct Fleet {
     /// KV-handoff transfer spans for the trace's interconnect track
     /// (`Some` once [`Fleet::enable_obs`] is called).
     obs_kv: Option<Vec<Span>>,
+    /// Retention cap on `obs_kv` (mirroring the device recorders'):
+    /// `usize::MAX` for `enable_obs`, finite for `enable_obs_capped`.
+    obs_kv_cap: usize,
 }
 
 impl Fleet {
@@ -503,6 +507,19 @@ impl Fleet {
             d.enable_obs();
         }
         self.obs_kv = Some(Vec::new());
+        self.obs_kv_cap = usize::MAX;
+    }
+
+    /// [`enable_obs`](Self::enable_obs) with a retention cap per
+    /// recorder (and on the KV-span log), mirroring
+    /// [`ServeOptions::streaming`]: a monitored million-request stream
+    /// keeps flat memory while busy totals stay exact.
+    pub fn enable_obs_capped(&mut self, cap: usize) {
+        for d in &mut self.devices {
+            d.enable_obs_capped(cap);
+        }
+        self.obs_kv = Some(Vec::new());
+        self.obs_kv_cap = cap;
     }
 
     /// Pin every device to the same per-phase DVFS configuration (static
@@ -583,6 +600,52 @@ impl Fleet {
         router: &mut dyn Router,
         opts: ServeOptions,
     ) -> FleetResult {
+        self.serve_inner(source, router, opts, None)
+    }
+
+    /// [`serve`](Self::serve) with windowed telemetry: `series` is fed
+    /// arrivals, completions, and gauge samples at window boundaries as
+    /// the stream plays out, then finalized at the makespan. Monitoring
+    /// is pure observation — it copies the same `f64`s that advance the
+    /// clocks — so the returned result is bit-identical to an
+    /// unmonitored [`serve`](Self::serve) (fingerprint-pinned in
+    /// `rust/tests/monitor_plane.rs`).
+    pub fn serve_monitored(
+        &mut self,
+        source: &mut dyn WorkloadSource,
+        router: &mut dyn Router,
+        opts: ServeOptions,
+        series: &mut WindowSeries,
+    ) -> FleetResult {
+        self.serve_inner(source, router, opts, Some(series))
+    }
+
+    /// [`replay`](Self::replay) with windowed telemetry (exact
+    /// retention) — the `halo trace --timeseries` path.
+    pub fn replay_monitored(
+        &mut self,
+        trace: &[TraceRequest],
+        router: &mut dyn Router,
+        series: &mut WindowSeries,
+    ) -> FleetResult {
+        let mut source = SliceSource::new(trace);
+        let r = self.serve_inner(&mut source, router, ServeOptions::exact(), Some(series));
+        debug_assert_eq!(r.requests, trace.len(), "requests conserved");
+        r
+    }
+
+    /// Fleet-wide gauge snapshot at the current simulated instant.
+    fn gauge_sample(&self) -> GaugeSample {
+        GaugeSample::from_devices(self.devices.iter().map(Device::telemetry))
+    }
+
+    fn serve_inner(
+        &mut self,
+        source: &mut dyn WorkloadSource,
+        router: &mut dyn Router,
+        opts: ServeOptions,
+        mut series: Option<&mut WindowSeries>,
+    ) -> FleetResult {
         let mut sink = ServeSink::new(opts.retain_cap, self.devices.len());
         let mut next_req = source.next();
         let mut inflight: Vec<InFlight> = Vec::new();
@@ -600,10 +663,24 @@ impl Fleet {
             let t_arr = next_req.as_ref().map_or(f64::INFINITY, |r| r.arrival);
             let t_hand = inflight.iter().map(|h| h.ready).fold(f64::INFINITY, f64::min);
 
+            // window roll before dispatch: when the next event crosses a
+            // window boundary, close windows with gauges read *before*
+            // the event executes (pure reads — nothing feeds back)
+            if let Some(s) = series.as_deref_mut() {
+                let t_next = t_arr.min(t_hand).min(t_dev);
+                if t_next.is_finite() && s.needs_roll(t_next) {
+                    let sample = self.gauge_sample();
+                    s.roll(t_next, &sample);
+                }
+            }
+
             if t_arr.is_finite() && t_arr <= t_dev && t_arr <= t_hand {
                 // route the next arrival (ties resolve arrival-first, the
                 // single-device replay's "pull arrivals up to now" rule)
                 let req = next_req.take().unwrap();
+                if let Some(s) = series.as_deref_mut() {
+                    s.observe_arrival(req.arrival);
+                }
                 let route = router.route(self, &req);
                 let tag = ReqTag::of(&req);
                 if route.prefill == route.decode {
@@ -656,13 +733,15 @@ impl Fleet {
                     self.kv_energy_j += self.interconnect.transfer_energy(bytes);
                     let t_xfer = self.interconnect.transfer_time(bytes);
                     if let Some(kv) = &mut self.obs_kv {
-                        kv.push(Span {
-                            kind: SpanKind::KvTransfer,
-                            start: done.done_at,
-                            dur: t_xfer,
-                            arrival: done.arrival,
-                            batch: 1,
-                        });
+                        if kv.len() < self.obs_kv_cap {
+                            kv.push(Span {
+                                kind: SpanKind::KvTransfer,
+                                start: done.done_at,
+                                dur: t_xfer,
+                                arrival: done.arrival,
+                                batch: 1,
+                            });
+                        }
                     }
                     inflight.push(InFlight {
                         ready: done.done_at + t_xfer,
@@ -678,12 +757,31 @@ impl Fleet {
                 // and the histograms stay current without re-scanning
                 if !self.devices[id].served.is_empty() {
                     for r in std::mem::take(&mut self.devices[id].served) {
+                        if let Some(s) = series.as_deref_mut() {
+                            s.observe_completion(r.arrival + r.e2e, r.ttft, r.e2e, r.tokens);
+                        }
                         sink.fold(id, r);
                     }
                 }
             } else {
                 break;
             }
+        }
+        if let Some(s) = series.as_deref_mut() {
+            // drain any completions still parked on devices (device
+            // order — collect_streamed's own fold order) so the series
+            // sees the full population, then close it at the makespan
+            for i in 0..self.devices.len() {
+                if !self.devices[i].served.is_empty() {
+                    for r in std::mem::take(&mut self.devices[i].served) {
+                        s.observe_completion(r.arrival + r.e2e, r.ttft, r.e2e, r.tokens);
+                        sink.fold(i, r);
+                    }
+                }
+            }
+            let makespan = self.devices.iter().map(|d| d.now()).fold(0.0, f64::max);
+            let sample = self.gauge_sample();
+            s.finalize(makespan, &sample);
         }
         self.collect_streamed(sink)
     }
@@ -811,6 +909,12 @@ impl Fleet {
     /// Recorded KV-transfer spans (`None` unless obs is enabled).
     pub fn kv_spans(&self) -> Option<&[Span]> {
         self.obs_kv.as_deref()
+    }
+
+    /// Per-device span recorders (`None` unless obs is enabled) — the
+    /// latency-attribution plane's input alongside [`Fleet::kv_spans`].
+    pub fn recorders(&self) -> Option<Vec<&Recorder>> {
+        self.devices.iter().map(Device::obs).collect()
     }
 }
 

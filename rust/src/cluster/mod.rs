@@ -60,6 +60,12 @@
 //! (`halo trace`). Replay percentiles ([`FleetResult::ttft_pct`] /
 //! [`FleetResult::e2e_pct`]) read cached sorted views built once at
 //! collection instead of cloning and sorting per call.
+//! [`Fleet::serve_monitored`] / [`Fleet::replay_monitored`] additionally
+//! drive a fixed-memory [`crate::obs::WindowSeries`] from the same event
+//! loop — windowed arrivals/completions/latency/utilization over
+//! *simulated* time for `halo monitor`, again without perturbing a
+//! single simulated f64 (monitored and unmonitored serves fingerprint
+//! identically; pinned by test).
 
 pub mod fleet;
 pub mod interconnect;

@@ -6,6 +6,7 @@
 //!   roofline  — print the Fig. 1 roofline points
 //!   cluster   — fleet-scale serving simulation with routing policies
 //!   trace     — cluster replay with request-lifecycle spans -> Chrome-trace JSON
+//!   monitor   — streamed serve with windowed telemetry, SLO burn rates, attribution
 //!   dse       — design-space exploration / SLO auto-tuning over the simulator
 //!   power     — per-event energy attribution and TDP throttling studies
 //!   bench     — pinned simulator benchmarks (the perf trajectory CI tracks)
@@ -41,14 +42,14 @@ halo — memory-centric heterogeneous accelerator for low-batch LLM inference
 USAGE:
   halo simulate [--model llama2-7b|qwen3-8b] [--mapping HALO1|HALO2|CENT|AttAcc1|AttAcc2|FullCiD|FullCiM|HALO-SA]
                 [--lin N] [--lout N] [--batch N]
-  halo report   [--all | --fig 1|4|5|6|7|8|9|10|cluster|dse|power | --headline] [--out DIR]
+  halo report   [--all | --fig 1|4|5|6|7|8|9|10|cluster|dse|power|obs | --headline] [--out DIR]
   halo roofline [--lin N] [--batch N]
   halo cluster  [--devices N] [--policy roundrobin|leastloaded|disaggregated|kvaware] [--mix chat|summarization|generation|interactive]
                 [--model llama2-7b|qwen3-8b] [--requests N] [--rate R] [--slots N] [--link board|pcie|eth|wan]
                 [--prefill-frac F] [--seed S] [--tenants N]
                 [--chunk TOKENS] [--admission fifo|spf|priority] [--kv-cap GB|auto]
                 [--arrivals poisson|mmpp|diurnal] [--duration S] [--sessions]
-                [--power] [--tdp W|auto] [--dvfs SPEC] [--smoke] [--json]
+                [--power] [--tdp W|auto] [--dvfs SPEC] [--smoke] [--json] [--timeseries FILE]
                   --arrivals  stream requests from a seeded arrival-process generator
                               instead of replaying a pre-built trace: poisson (memoryless),
                               mmpp (two-state bursty), diurnal (rate curve over --duration).
@@ -76,12 +77,38 @@ USAGE:
                   --smoke     tiny CI run: 2 devices, 32 requests
                   --json      print one `halo.cluster.v1` snapshot (metrics registry,
                               per-device rows, self-profile) instead of the tables
+                  --timeseries also record windowed telemetry (simulated time) during the
+                              run and write one `halo.timeseries.v1` snapshot to FILE
+                              (window knobs as in `halo monitor`)
   halo trace    [same flags as cluster] [--out FILE]
                   replay the cluster with request-lifecycle span recording on (queued,
                   prefill chunks, KV handoffs, decode steps, evictions, throttling) and
                   write a Chrome-trace JSON timeline — one track per device plus an
                   interconnect track. Open in https://ui.perfetto.dev or chrome://tracing.
                   --out       output file (default trace.json)
+  halo monitor  [same flags as cluster] [--window S] [--max-windows N]
+                [--ttft-slo S] [--e2e-slo S] [--slo-objective P]
+                [--fast-windows N] [--slow-windows N] [--burn-threshold X]
+                [--timeseries FILE] [--attrib DIR]
+                  serve a generated stream (default: mmpp arrivals) with windowed
+                  telemetry over simulated time: a per-window throughput / latency /
+                  utilization table, SLO attainment with fast+slow burn-rate alerts,
+                  and per-request latency attribution (where the p99 comes from).
+                  Attribution components reconcile bit-exactly against the recorded
+                  TTFT/e2e; the command exits nonzero on any mismatch, so CI gates on it.
+                  --window      window width in simulated seconds (default duration/24,
+                                min 0.25); memory stays fixed however long the stream
+                                runs — windows coarsen 2x whenever --max-windows
+                                (default 256) would overflow
+                  --ttft-slo    TTFT target in seconds (default 0.5)
+                  --e2e-slo     end-to-end latency target in seconds (default 10)
+                  --slo-objective required attainment in (0,1) (default 0.99)
+                  --fast-windows, --slow-windows
+                                trailing window counts for the fast/slow burn rates
+                                (default 3/12, SRE multi-window style)
+                  --burn-threshold alert when both burns exceed this (default 4.0)
+                  --timeseries  write one `halo.timeseries.v1` snapshot to FILE
+                  --attrib      write the attribution + SLO window tables as CSV to DIR
   halo dse      [--space smoke|sched|fleet|hw|mapping|power|full] [--strategy grid|random|hillclimb]
                 [--model llama2-7b|qwen3-8b] [--mix chat|summarization|generation|interactive]
                 [--requests N] [--seed S] [--slots N] [--link board|pcie|eth|wan]
@@ -176,6 +203,7 @@ fn main() -> Result<()> {
         "roofline" => cmd_roofline(&flags),
         "cluster" => cmd_cluster(&flags),
         "trace" => cmd_trace(&flags),
+        "monitor" => cmd_monitor(&flags),
         "dse" => cmd_dse(&flags),
         "power" => cmd_power(&flags),
         "bench" => cmd_bench(&flags),
@@ -255,6 +283,10 @@ fn cmd_report(f: &HashMap<String, String>) -> Result<()> {
                     report::cluster::kv_capacity_pressure_at(&hw, t1),
                 ]
             }
+            "obs" => vec![
+                report::obs::attribution_breakdown(&hw),
+                report::obs::slo_burn_windows(&hw),
+            ],
             "dse" => vec![
                 report::dse::vb_extremes_search(&hw),
                 report::dse::dse_frontier_for_mix(&hw, Mix::Chat),
@@ -572,6 +604,11 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
         setup.print_header();
     }
     let tenants = setup.tenants;
+    let ts_out = f.get("timeseries").map(PathBuf::from);
+    let mut series = match &ts_out {
+        Some(_) => Some(monitor_series(f, setup.duration_s)?),
+        None => None,
+    };
     let mut prof = SelfProfile::new();
     let (mut fleet, r) = match setup.traffic() {
         // streamed: pull arrivals from the generator one at a time under a
@@ -581,19 +618,30 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
             const STREAM_RETAIN: usize = 65_536;
             let mut gen = cfg.build();
             let (mut fleet, mut router) = setup.build_fleet();
-            let r = prof.time("fleet_replay", || {
-                fleet.serve(&mut gen, router.as_mut(), ServeOptions::streaming(STREAM_RETAIN))
+            let opts = ServeOptions::streaming(STREAM_RETAIN);
+            let r = prof.time("fleet_replay", || match series.as_mut() {
+                Some(s) => fleet.serve_monitored(&mut gen, router.as_mut(), opts, s),
+                None => fleet.serve(&mut gen, router.as_mut(), opts),
             });
             (fleet, r)
         }
         None => {
             let (trace, mut fleet, mut router) = setup.build();
-            let r = prof.time("fleet_replay", || fleet.replay(&trace, router.as_mut()));
+            let r = prof.time("fleet_replay", || match series.as_mut() {
+                Some(s) => fleet.replay_monitored(&trace, router.as_mut(), s),
+                None => fleet.replay(&trace, router.as_mut()),
+            });
             (fleet, r)
         }
     };
     prof.add("graph_walks", fleet.cost_walks());
     prof.add("oracle_memo_hits", fleet.cost_memo_hits());
+    if let (Some(path), Some(s)) = (&ts_out, &series) {
+        std::fs::write(path, obs::timeseries_snapshot(s, None, setup.config_json()).to_string())?;
+        if !json {
+            println!("timeseries : {} windows -> {}", s.len(), path.display());
+        }
+    }
     if json {
         let snap = obs::cluster_snapshot(
             &r,
@@ -721,8 +769,20 @@ fn cmd_trace(f: &HashMap<String, String>) -> Result<()> {
         }
         None => setup.build(),
     };
+    let ts_out = f.get("timeseries").map(PathBuf::from);
+    let mut series = match &ts_out {
+        Some(_) => Some(monitor_series(f, setup.duration_s)?),
+        None => None,
+    };
     fleet.enable_obs();
-    let r = fleet.replay(&trace, router.as_mut());
+    let r = match series.as_mut() {
+        Some(s) => fleet.replay_monitored(&trace, router.as_mut(), s),
+        None => fleet.replay(&trace, router.as_mut()),
+    };
+    if let (Some(path), Some(s)) = (&ts_out, &series) {
+        std::fs::write(path, obs::timeseries_snapshot(s, None, setup.config_json()).to_string())?;
+        println!("timeseries : {} windows -> {}", s.len(), path.display());
+    }
 
     // every recorded device timeline must reconcile exactly with the
     // replay's own busy accounting — same f64s folded in the same order
@@ -757,6 +817,223 @@ fn cmd_trace(f: &HashMap<String, String>) -> Result<()> {
         "trace      : {n_events} events -> {out} (open in https://ui.perfetto.dev \
          or chrome://tracing)"
     );
+    Ok(())
+}
+
+/// Parse the `--window` / `--max-windows` knobs into a fresh
+/// [`obs::WindowSeries`] (shared by `halo monitor` and the
+/// `--timeseries` flags on `cluster` / `trace`).
+fn monitor_series(f: &HashMap<String, String>, duration_s: f64) -> Result<obs::WindowSeries> {
+    let width = flag_f64(f, "window", (duration_s / 24.0).max(0.25));
+    if !(width > 0.0 && width.is_finite()) {
+        bail!("--window must be positive seconds");
+    }
+    let max_windows = flag_usize(f, "max-windows", 256);
+    if max_windows < 4 {
+        bail!("--max-windows must be at least 4");
+    }
+    Ok(obs::WindowSeries::new(width, max_windows))
+}
+
+/// Parse the SLO target and burn-rate alerting knobs of `halo monitor`.
+fn parse_monitor_slo(f: &HashMap<String, String>) -> Result<(obs::SloSpec, obs::BurnRateConfig)> {
+    let d = obs::SloSpec::interactive();
+    let spec = obs::SloSpec {
+        ttft_target_s: flag_f64(f, "ttft-slo", d.ttft_target_s),
+        e2e_target_s: flag_f64(f, "e2e-slo", d.e2e_target_s),
+        objective: flag_f64(f, "slo-objective", d.objective),
+    };
+    if !(spec.objective > 0.0 && spec.objective < 1.0) {
+        bail!("--slo-objective must be strictly between 0 and 1");
+    }
+    if !(spec.ttft_target_s > 0.0 && spec.e2e_target_s > 0.0) {
+        bail!("--ttft-slo and --e2e-slo must be positive seconds");
+    }
+    let db = obs::BurnRateConfig::default();
+    let burn = obs::BurnRateConfig {
+        fast_windows: flag_usize(f, "fast-windows", db.fast_windows),
+        slow_windows: flag_usize(f, "slow-windows", db.slow_windows),
+        threshold: flag_f64(f, "burn-threshold", db.threshold),
+    };
+    if burn.fast_windows == 0 || burn.slow_windows < burn.fast_windows {
+        bail!("--fast-windows must be >= 1 and --slow-windows >= --fast-windows");
+    }
+    if burn.threshold.is_nan() || burn.threshold <= 0.0 {
+        bail!("--burn-threshold must be positive");
+    }
+    Ok((spec, burn))
+}
+
+/// Per-window telemetry + SLO table of one monitored serve.
+fn slo_windows_table(
+    series: &obs::WindowSeries,
+    slo: &obs::SloReport,
+    n_dev: usize,
+) -> report::Table {
+    let mut t = report::Table::new(
+        "obs_slo_windows",
+        &format!(
+            "Windowed telemetry — {:.2}s windows: load, latency, SLO attainment, burn rate",
+            series.width_s()
+        ),
+        &[
+            "start_s",
+            "arrivals",
+            "completions",
+            "throughput_rps",
+            "queue",
+            "util",
+            "ttft_p99_s",
+            "e2e_p99_s",
+            "ttft_att",
+            "e2e_att",
+            "ttft_burn_fast",
+            "e2e_burn_fast",
+        ],
+    );
+    let w = series.width_s();
+    for (win, s) in series.windows().iter().zip(&slo.per_window) {
+        t.row(vec![
+            format!("{:.1}", s.start_s),
+            win.arrivals.to_string(),
+            win.completions.to_string(),
+            format!("{:.2}", win.throughput_rps(w)),
+            win.queue_depth.to_string(),
+            format!("{:.3}", win.utilization(w, n_dev)),
+            format!("{:.4}", win.ttft_pct(99.0)),
+            format!("{:.4}", win.e2e_pct(99.0)),
+            format!("{:.4}", s.ttft_attainment),
+            format!("{:.4}", s.e2e_attainment),
+            format!("{:.2}", s.ttft_burn_fast),
+            format!("{:.2}", s.e2e_burn_fast),
+        ]);
+    }
+    t
+}
+
+/// The "where does the p99 come from" table of one monitored serve.
+fn attribution_table(attrs: &[obs::Attribution]) -> report::Table {
+    let mut t = report::Table::new(
+        "obs_attribution",
+        "Latency attribution — mean component seconds, all requests vs p99 e2e tail",
+        &["component", "mean_s_all", "mean_s_tail", "tail_share"],
+    );
+    for row in obs::tail_breakdown(attrs, 99.0) {
+        t.row(vec![
+            row.component.to_string(),
+            format!("{:.6}", row.mean_s_all),
+            format!("{:.6}", row.mean_s_tail),
+            format!("{:.4}", row.tail_share),
+        ]);
+    }
+    t
+}
+
+fn cmd_monitor(flags: &HashMap<String, String>) -> Result<()> {
+    // monitor is a streaming surface: default to mmpp arrivals so a bare
+    // `halo monitor` shows bursts, burn spikes and recovery out of the box
+    let mut f = flags.clone();
+    f.entry("arrivals".to_string()).or_insert_with(|| "mmpp".to_string());
+    let setup = parse_cluster_setup(&f)?;
+    let (spec, burn) = parse_monitor_slo(&f)?;
+    let mut series = monitor_series(&f, setup.duration_s)?;
+    setup.print_header();
+    println!(
+        "slo      : TTFT < {:.3} s, e2e < {:.3} s at {:.1}% (alert: fast {} / slow {} \
+         windows over {:.1}x budget)",
+        spec.ttft_target_s,
+        spec.e2e_target_s,
+        spec.objective * 100.0,
+        burn.fast_windows,
+        burn.slow_windows,
+        burn.threshold
+    );
+
+    const STREAM_RETAIN: usize = 65_536;
+    let cfg = setup.traffic().expect("monitor always streams");
+    let mut gen = cfg.build();
+    let (mut fleet, mut router) = setup.build_fleet();
+    fleet.enable_obs_capped(STREAM_RETAIN);
+    let mut prof = SelfProfile::new();
+    let opts = ServeOptions::streaming(STREAM_RETAIN);
+    let r = prof.time("fleet_replay", || {
+        fleet.serve_monitored(&mut gen, router.as_mut(), opts, &mut series)
+    });
+
+    // the windowed populations must merge bit-exactly onto the whole-run
+    // histograms — the tentpole invariant, enforced on every run
+    if series.merged_ttft().counts() != r.ttft_hist.counts()
+        || series.merged_e2e().counts() != r.e2e_hist.counts()
+    {
+        bail!("windowed latency populations do not merge onto the whole-run histograms");
+    }
+
+    let slo = obs::slo::evaluate(&series, &spec, &burn);
+    let wt = slo_windows_table(&series, &slo, setup.devices);
+    println!("\n{}", wt.to_markdown());
+    println!(
+        "slo      : whole-run attainment TTFT {:.4} / e2e {:.4} (objective {:.2})",
+        slo.ttft_attainment, slo.e2e_attainment, spec.objective
+    );
+    if slo.alerts.is_empty() {
+        println!("alerts   : none");
+    } else {
+        for a in &slo.alerts {
+            println!(
+                "alert    : {} burn at t={:.1}s (window {}): fast {:.2}x / slow {:.2}x budget",
+                a.metric, a.t_s, a.window, a.burn_fast, a.burn_slow
+            );
+        }
+    }
+
+    // attribution needs the complete span record: every served request
+    // retained and no recorder drop — true whenever the run fits the
+    // streaming caps (the CI smoke path always does)
+    let recorders = fleet.recorders().expect("obs enabled before serve");
+    let spans_complete = r.complete && recorders.iter().all(|rec| rec.dropped() == (0, 0));
+    let at = if spans_complete {
+        let attrs = obs::attribute(&r.served, &recorders, fleet.kv_spans().unwrap_or(&[]));
+        let bad = obs::reconcile(&attrs);
+        if bad != 0 {
+            bail!(
+                "attribution failed to reconcile bit-exactly on {bad} of {} requests",
+                attrs.len()
+            );
+        }
+        let t = attribution_table(&attrs);
+        println!("{}", t.to_markdown());
+        println!("attrib   : {} requests, components reconcile bit-exactly", attrs.len());
+        Some(t)
+    } else {
+        println!(
+            "attrib   : skipped — span retention capped (shorten --duration or cap --requests)"
+        );
+        None
+    };
+
+    println!(
+        "served   : {} requests in {} ({} windows of {:.2}s, {} coarsenings, \
+         replay {} wall)",
+        r.requests,
+        fmt_seconds(r.makespan),
+        series.len(),
+        series.width_s(),
+        series.coarsenings(),
+        fmt_seconds(prof.wall_s("fleet_replay"))
+    );
+
+    if let Some(dir) = f.get("attrib").map(PathBuf::from) {
+        wt.write_csv(&dir)?;
+        if let Some(t) = &at {
+            t.write_csv(&dir)?;
+        }
+        println!("csv      : tables -> {}", dir.display());
+    }
+    if let Some(path) = f.get("timeseries").map(PathBuf::from) {
+        let snap = obs::timeseries_snapshot(&series, Some(&slo), setup.config_json());
+        std::fs::write(&path, snap.to_string())?;
+        println!("snapshot : halo.timeseries.v1 -> {}", path.display());
+    }
     Ok(())
 }
 

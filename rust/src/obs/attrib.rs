@@ -1,0 +1,301 @@
+//! Per-request latency attribution: where did the time go?
+//!
+//! Decomposes every served request's TTFT and end-to-end latency into
+//! pipeline components using the [`Recorder`] span timelines that
+//! `halo trace` already records:
+//!
+//! - **queue_wait** — arrival until the first prefill span starts;
+//! - **prefill** — prefill/chunk span time, net of throttle stall;
+//! - **throttle_stall** — extra service time the thermal governor
+//!   added during this request's attributable spans;
+//! - **recompute** — re-prefill of evicted KV (resume path), net of
+//!   any stall beyond the prefill spans';
+//! - **kv_handoff** — interconnect KV-transfer time (disaggregated
+//!   serving), which lands *after* the first token, so e2e only;
+//! - **first_token_gap** / **decode** — signed closure terms: chunk
+//!   scheduling gaps and handoff wait for TTFT; batched decode-step
+//!   time (never attributable to one arrival — decode spans serve the
+//!   whole batch) plus inter-cycle waits for e2e.
+//!
+//! The closure terms are computed so the component folds are **bit
+//! exact**: folding the TTFT components (in
+//! [`Attribution::ttft_components`] order) from 0.0 reproduces the
+//! recorded `ttft` to the last bit, and likewise for e2e — pinned by
+//! [`reconcile`] and enforced in CI. That guarantee is what lets the
+//! aggregated "where does p99 come from" table claim every second it
+//! prints is a second the simulator actually charged.
+
+use std::collections::HashMap;
+
+use super::span::{EventKind, Recorder, Span, SpanKind};
+use crate::sim::queueing::ServedRequest;
+
+/// One request's latency decomposition. All components are simulated
+/// seconds; see the module docs for what each covers.
+#[derive(Debug, Clone, Copy)]
+pub struct Attribution {
+    pub arrival: f64,
+    /// Recorded TTFT — bit-exactly the fold of [`Self::ttft_components`].
+    pub ttft: f64,
+    /// Recorded e2e — bit-exactly the fold of [`Self::e2e_components`].
+    pub e2e: f64,
+    pub queue_wait: f64,
+    pub prefill: f64,
+    pub throttle_stall: f64,
+    pub recompute: f64,
+    pub kv_handoff: f64,
+    pub first_token_gap: f64,
+    pub decode: f64,
+}
+
+impl Attribution {
+    /// TTFT components in canonical fold order.
+    pub fn ttft_components(&self) -> [(&'static str, f64); 4] {
+        [
+            ("queue_wait", self.queue_wait),
+            ("prefill", self.prefill),
+            ("throttle_stall", self.throttle_stall),
+            ("first_token_gap", self.first_token_gap),
+        ]
+    }
+
+    /// End-to-end components in canonical fold order.
+    pub fn e2e_components(&self) -> [(&'static str, f64); 6] {
+        [
+            ("queue_wait", self.queue_wait),
+            ("prefill", self.prefill),
+            ("throttle_stall", self.throttle_stall),
+            ("recompute", self.recompute),
+            ("kv_handoff", self.kv_handoff),
+            ("decode", self.decode),
+        ]
+    }
+}
+
+/// The closure term `r` such that folding `parts` then `r` from 0.0
+/// reproduces `total` bit-exactly. A plain `total - partial` residual
+/// is not enough in f64 (the final add can round); the correction loop
+/// walks `r` until the fold lands on `total`'s exact bits.
+fn residual(total: f64, parts: &[f64]) -> f64 {
+    let partial: f64 = parts.iter().sum();
+    let mut r = total - partial;
+    for _ in 0..8 {
+        let s = partial + r;
+        if s.to_bits() == total.to_bits() {
+            break;
+        }
+        r += total - s;
+    }
+    r
+}
+
+/// Attribute every request in `served` against the fleet's recorded
+/// span timelines (`recorders`, device order) and the interconnect's
+/// KV-transfer spans. Requests are joined to spans by exact arrival
+/// time (arrivals are unique within a stream by construction).
+pub fn attribute(
+    served: &[ServedRequest],
+    recorders: &[&Recorder],
+    kv_spans: &[Span],
+) -> Vec<Attribution> {
+    let idx: HashMap<u64, usize> =
+        served.iter().enumerate().map(|(i, r)| (r.arrival.to_bits(), i)).collect();
+    let n = served.len();
+    let mut prefill = vec![0.0f64; n];
+    let mut recompute = vec![0.0f64; n];
+    let mut stall = vec![0.0f64; n];
+    let mut kv = vec![0.0f64; n];
+    let mut first = vec![f64::INFINITY; n];
+    for rec in recorders {
+        for s in &rec.spans {
+            let Some(&i) = idx.get(&s.arrival.to_bits()) else { continue };
+            match s.kind {
+                SpanKind::Prefill | SpanKind::PrefillChunk => {
+                    prefill[i] += s.dur;
+                    first[i] = first[i].min(s.start);
+                }
+                SpanKind::Recompute => recompute[i] += s.dur,
+                // decode steps serve the whole batch (arrival -1.0);
+                // KV transfers arrive via `kv_spans`
+                SpanKind::DecodeStep | SpanKind::KvTransfer => {}
+            }
+        }
+        for e in &rec.events {
+            if e.kind == EventKind::Throttle {
+                if let Some(&i) = idx.get(&e.arrival.to_bits()) {
+                    stall[i] += e.stall_s;
+                }
+            }
+        }
+    }
+    for s in kv_spans {
+        if s.kind == SpanKind::KvTransfer {
+            if let Some(&i) = idx.get(&s.arrival.to_bits()) {
+                kv[i] += s.dur;
+            }
+        }
+    }
+    served
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let queue_wait = if first[i].is_finite() { first[i] - r.arrival } else { 0.0 };
+            // span durations already include governor stall; report the
+            // stall separately and net it out of the span components
+            // (prefill first, any excess out of recompute)
+            let from_prefill = stall[i].min(prefill[i]);
+            let net_prefill = prefill[i] - from_prefill;
+            let net_recompute = (recompute[i] - (stall[i] - from_prefill)).max(0.0);
+            let mut a = Attribution {
+                arrival: r.arrival,
+                ttft: r.ttft,
+                e2e: r.e2e,
+                queue_wait,
+                prefill: net_prefill,
+                throttle_stall: stall[i],
+                recompute: net_recompute,
+                kv_handoff: kv[i],
+                first_token_gap: 0.0,
+                decode: 0.0,
+            };
+            a.first_token_gap = residual(a.ttft, &[a.queue_wait, a.prefill, a.throttle_stall]);
+            a.decode = residual(
+                a.e2e,
+                &[a.queue_wait, a.prefill, a.throttle_stall, a.recompute, a.kv_handoff],
+            );
+            a
+        })
+        .collect()
+}
+
+/// Number of attributions whose component folds do *not* reproduce the
+/// recorded TTFT/e2e bit-exactly. Must be 0; CI fails otherwise.
+pub fn reconcile(attrs: &[Attribution]) -> usize {
+    attrs
+        .iter()
+        .filter(|a| {
+            let t = a.ttft_components().iter().fold(0.0, |acc, c| acc + c.1);
+            let e = a.e2e_components().iter().fold(0.0, |acc, c| acc + c.1);
+            t.to_bits() != a.ttft.to_bits() || e.to_bits() != a.e2e.to_bits()
+        })
+        .count()
+}
+
+/// One row of the "where does the tail come from" table.
+#[derive(Debug, Clone, Copy)]
+pub struct BreakdownRow {
+    pub component: &'static str,
+    /// Mean seconds over the whole population.
+    pub mean_s_all: f64,
+    /// Mean seconds over the tail (requests at or above the `p`th
+    /// e2e percentile).
+    pub mean_s_tail: f64,
+    /// This component's share of the tail's mean e2e.
+    pub tail_share: f64,
+}
+
+/// Aggregate attributions into a component breakdown of the e2e tail
+/// at percentile `p` (e.g. 99.0 → the slowest 1% of requests). Returns
+/// component rows in fold order plus a closing `e2e` total row; empty
+/// input yields an empty table.
+pub fn tail_breakdown(attrs: &[Attribution], p: f64) -> Vec<BreakdownRow> {
+    if attrs.is_empty() {
+        return Vec::new();
+    }
+    let mut order: Vec<usize> = (0..attrs.len()).collect();
+    order.sort_by(|&a, &b| attrs[a].e2e.partial_cmp(&attrs[b].e2e).unwrap());
+    let cut = ((p.clamp(0.0, 100.0) / 100.0) * attrs.len() as f64) as usize;
+    let tail: Vec<usize> = order[cut.min(attrs.len() - 1)..].to_vec();
+    let mean = |pick: &dyn Fn(&Attribution) -> f64, ids: &[usize]| -> f64 {
+        ids.iter().map(|&i| pick(&attrs[i])).sum::<f64>() / ids.len() as f64
+    };
+    let names = attrs[0].e2e_components().map(|c| c.0);
+    let tail_e2e = mean(&|a: &Attribution| a.e2e, &tail).max(1e-12);
+    let mut rows: Vec<BreakdownRow> = names
+        .iter()
+        .enumerate()
+        .map(|(k, &component)| {
+            let pick = move |a: &Attribution| a.e2e_components()[k].1;
+            let all = mean(&pick, &order);
+            let t = mean(&pick, &tail);
+            BreakdownRow { component, mean_s_all: all, mean_s_tail: t, tail_share: t / tail_e2e }
+        })
+        .collect();
+    rows.push(BreakdownRow {
+        component: "e2e",
+        mean_s_all: mean(&|a: &Attribution| a.e2e, &order),
+        mean_s_tail: mean(&|a: &Attribution| a.e2e, &tail),
+        tail_share: 1.0,
+    });
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn req(arrival: f64, ttft: f64, e2e: f64) -> ServedRequest {
+        ServedRequest { arrival, ttft, e2e, tenant: 0, session: 0, tokens: 4 }
+    }
+
+    fn span(kind: SpanKind, start: f64, dur: f64, arrival: f64) -> Span {
+        Span { kind, start, dur, arrival, batch: 1 }
+    }
+
+    #[test]
+    fn components_fold_bit_exactly_onto_recorded_latencies() {
+        let served = vec![req(0.0, 2.0, 10.0), req(1.0, 0.7, 3.3)];
+        let mut rec = Recorder::new();
+        rec.spans.push(span(SpanKind::PrefillChunk, 0.5, 0.5, 0.0));
+        rec.spans.push(span(SpanKind::PrefillChunk, 1.2, 0.5, 0.0));
+        rec.spans.push(span(SpanKind::Prefill, 1.1, 0.6, 1.0));
+        rec.spans.push(span(SpanKind::DecodeStep, 2.0, 0.3, -1.0));
+        let kv = vec![span(SpanKind::KvTransfer, 2.0, 0.25, 0.0)];
+        let attrs = attribute(&served, &[&rec], &kv);
+        assert_eq!(reconcile(&attrs), 0);
+        let a = &attrs[0];
+        assert_eq!(a.queue_wait, 0.5);
+        assert_eq!(a.prefill, 1.0);
+        assert_eq!(a.kv_handoff, 0.25);
+        assert!(a.first_token_gap > 0.0, "chunk gap shows up in TTFT closure");
+        let b = &attrs[1];
+        assert!((b.queue_wait - 0.1).abs() < 1e-12);
+        assert_eq!(b.prefill, 0.6);
+        assert_eq!(b.kv_handoff, 0.0);
+    }
+
+    #[test]
+    fn residual_correction_is_bit_exact_on_awkward_floats() {
+        let mut rng = Rng::new(11);
+        for _ in 0..2000 {
+            let parts: Vec<f64> = (0..5).map(|_| rng.f64() * 3.0).collect();
+            let total = rng.f64() * 20.0 + 1e-9;
+            let r = residual(total, &parts);
+            let fold = parts.iter().sum::<f64>() + r;
+            assert_eq!(fold.to_bits(), total.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        let attrs = attribute(&[], &[], &[]);
+        assert!(attrs.is_empty());
+        assert_eq!(reconcile(&attrs), 0);
+        assert!(tail_breakdown(&attrs, 99.0).is_empty());
+    }
+
+    #[test]
+    fn tail_breakdown_shares_sum_to_one() {
+        let served: Vec<ServedRequest> =
+            (0..100).map(|k| req(k as f64, 0.1, 1.0 + (k % 10) as f64)).collect();
+        let attrs = attribute(&served, &[], &[]);
+        assert_eq!(reconcile(&attrs), 0);
+        let rows = tail_breakdown(&attrs, 90.0);
+        assert_eq!(rows.last().unwrap().component, "e2e");
+        let share: f64 = rows.iter().filter(|r| r.component != "e2e").map(|r| r.tail_share).sum();
+        assert!((share - 1.0).abs() < 1e-9, "component shares cover the tail mean: {share}");
+        // the tail mean is the slowest decile's mean
+        assert!(rows.last().unwrap().mean_s_tail > rows.last().unwrap().mean_s_all);
+    }
+}

@@ -109,6 +109,20 @@ impl LogHistogram {
         self.n
     }
 
+    /// The raw bucket counts (length [`N_BUCKETS`]) — for bit-exact
+    /// merge pins and external aggregation.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Number of recorded samples at or below `x`, to bucket
+    /// resolution: every bucket up to and including `x`'s own is
+    /// counted (bucket 0's zero/negative/NaN samples always are). The
+    /// SLO attainment primitive.
+    pub fn count_at_or_below(&self, x: f64) -> u64 {
+        self.counts[..=Self::index(x)].iter().sum()
+    }
+
     pub fn min(&self) -> f64 {
         if self.n == 0 || !self.min.is_finite() {
             0.0
@@ -253,6 +267,87 @@ mod tests {
         for p in [10.0, 50.0, 95.0] {
             assert_eq!(a.percentile(p), all.percentile(p));
         }
+    }
+
+    #[test]
+    fn merge_of_many_partitions_is_bucket_for_bucket_exact() {
+        // the windowed-telemetry contract: per-window histograms merged
+        // in any grouping equal the combined population, bucket for
+        // bucket, with identical quantiles at every probe point
+        let mut rng = Rng::new(21);
+        let mut parts: Vec<LogHistogram> = (0..16).map(|_| LogHistogram::new()).collect();
+        let mut all = LogHistogram::new();
+        for i in 0..12000 {
+            let x = 10f64.powf(rng.f64() * 5.0 - 3.0);
+            parts[i % 16].record(x);
+            all.record(x);
+        }
+        let mut merged = LogHistogram::new();
+        for p in &parts {
+            merged.merge(p);
+        }
+        assert_eq!(merged.counts, all.counts);
+        assert_eq!(merged.n, all.n);
+        assert_eq!(merged.min, all.min);
+        assert_eq!(merged.max, all.max);
+        for p in [0.0, 1.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9, 100.0] {
+            assert_eq!(merged.percentile(p), all.percentile(p), "p{p}");
+        }
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity_both_ways() {
+        let mut a = LogHistogram::new();
+        for x in [0.01, 0.5, 2.0, 40.0] {
+            a.record(x);
+        }
+        let before = a.clone();
+        a.merge(&LogHistogram::new());
+        assert_eq!(a, before, "merging an empty histogram changes nothing");
+        let mut empty = LogHistogram::new();
+        empty.merge(&before);
+        assert_eq!(empty, before, "merging into an empty histogram copies the population");
+        // empty-into-empty stays empty and zero-safe
+        let mut e2 = LogHistogram::new();
+        e2.merge(&LogHistogram::new());
+        assert_eq!(e2.count(), 0);
+        assert_eq!(e2.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn merge_of_single_bucket_histograms_is_exact() {
+        // both populations in one bucket: the merged histogram is that
+        // bucket with the summed count, and every percentile is exact
+        let (mut a, mut b) = (LogHistogram::new(), LogHistogram::new());
+        for _ in 0..3 {
+            a.record(0.25);
+        }
+        for _ in 0..5 {
+            b.record(0.25);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 8);
+        assert_eq!(a.counts.iter().sum::<u64>(), 8);
+        assert_eq!(a.counts.iter().filter(|&&c| c > 0).count(), 1);
+        for p in [0.0, 10.0, 50.0, 99.0, 100.0] {
+            assert_eq!(a.percentile(p), 0.25);
+        }
+    }
+
+    #[test]
+    fn count_at_or_below_splits_the_population() {
+        let mut h = LogHistogram::new();
+        for _ in 0..7 {
+            h.record(0.1);
+        }
+        for _ in 0..3 {
+            h.record(4.0);
+        }
+        h.record(0.0); // bucket 0 counts as "at or below"
+        assert_eq!(h.count_at_or_below(1.0), 8);
+        assert_eq!(h.count_at_or_below(1e9), 11);
+        assert_eq!(h.count_at_or_below(1e-12), 1);
+        assert_eq!(LogHistogram::new().count_at_or_below(1.0), 0);
     }
 
     #[test]

@@ -17,24 +17,36 @@
 //! - **Self-profiling** ([`selfprof`], [`bench`]): host wall-time and
 //!   work counters for the simulator's own hot paths, plus the pinned
 //!   `halo bench` suite CI tracks commit over commit.
+//! - **Time-resolved telemetry** ([`timeseries`], [`slo`], [`attrib`]):
+//!   fixed-memory windowed metrics over *simulated* time with
+//!   coarsening, per-window SLO attainment with multi-window burn-rate
+//!   alerting, and per-request latency attribution whose components
+//!   fold bit-exactly onto the recorded TTFT/e2e — the `halo monitor`
+//!   surface and the signal a future autoscaler consumes.
 //!
 //! Simulated quantities and host measurements never mix: wall times
 //! live only in [`SelfProfile`] / [`bench`] outputs and are excluded
 //! from every determinism guarantee.
 
+pub mod attrib;
 pub mod bench;
 pub mod hist;
 pub mod registry;
 pub mod selfprof;
+pub mod slo;
 pub mod snapshot;
 pub mod span;
+pub mod timeseries;
 
+pub use attrib::{attribute, reconcile, tail_breakdown, Attribution, BreakdownRow};
 pub use bench::{bench_json, compare, peak_rss_bytes, run_pinned, BenchDelta, BenchPoint};
 pub use hist::LogHistogram;
-pub use registry::{fleet_registry, Registry};
+pub use registry::{fleet_registry, timeseries_registry, Registry};
 pub use selfprof::SelfProfile;
-pub use snapshot::{cluster_snapshot, dse_snapshot, metrics_json};
+pub use slo::{attainment, bad_fraction, BurnRateConfig, SloAlert, SloReport, SloSpec, WindowSlo};
+pub use snapshot::{cluster_snapshot, dse_snapshot, metrics_json, timeseries_snapshot};
 pub use span::{chrome_trace, Event, EventKind, Recorder, Span, SpanKind, Track};
+pub use timeseries::{DeviceGauges, GaugeSample, Window, WindowSeries};
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;

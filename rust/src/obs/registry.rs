@@ -6,6 +6,7 @@
 //! the schema stays consistent across subcommands.
 
 use super::hist::LogHistogram;
+use super::timeseries::WindowSeries;
 use crate::cluster::fleet::FleetResult;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -108,6 +109,24 @@ pub fn fleet_registry(r: &FleetResult, walks: u64, memo_hits: u64) -> Registry {
     reg.hist("ttft_s").merge(&r.ttft_hist);
     reg.hist("e2e_s").merge(&r.e2e_hist);
     reg
+}
+
+/// Fold a [`WindowSeries`] into registry vocabulary: series-level
+/// counters/gauges plus a per-window completions histogram (how bursty
+/// the stream was window over window). The merged latency populations
+/// are *not* duplicated here — `fleet_registry` already carries them
+/// and the series' merged histograms are bit-identical to those.
+pub fn timeseries_registry(reg: &mut Registry, series: &WindowSeries) {
+    reg.inc("timeseries_windows", series.len() as u64);
+    reg.inc("timeseries_coarsenings", u64::from(series.coarsenings()));
+    reg.inc("timeseries_arrivals", series.windows().iter().map(|w| w.arrivals).sum());
+    reg.inc("timeseries_completions", series.windows().iter().map(|w| w.completions).sum());
+    reg.inc("timeseries_tokens", series.windows().iter().map(|w| w.tokens).sum());
+    reg.gauge("timeseries_window_s", series.width_s());
+    let h = reg.hist("window_completions");
+    for w in series.windows() {
+        h.record(w.completions as f64);
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,353 @@
+//! Per-window SLO evaluation with multi-window burn-rate alerting.
+//!
+//! An SLO here is "fraction of requests with TTFT (or e2e) at or below
+//! a target must be at least `objective`". The complement of the
+//! objective is the *error budget*; the **burn rate** of a span of
+//! windows is its bad-request fraction divided by that budget — burn
+//! 1.0 spends the budget exactly, burn 10 spends it ten times too
+//! fast. Following the SRE multi-window pattern, an alert needs *both*
+//! a fast (recent, spiky) and a slow (sustained) trailing span over
+//! the threshold, which filters one-window blips without missing real
+//! regressions; alerts fire on the rising edge only, so a sustained
+//! breach is one alert, not one per window.
+//!
+//! Empty windows (idle diurnal troughs) have a bad fraction of 0.0 —
+//! no traffic burns no budget — so quiet periods can never alert
+//! (satellite fix: these helpers return 0.0, never NaN, on empty
+//! populations).
+//!
+//! Everything is computed from the deterministic [`WindowSeries`], so
+//! the alert stream is bit-reproducible per seed — the consumable
+//! signal a future autoscaler reacts to.
+
+use super::hist::LogHistogram;
+use super::jobj;
+use super::timeseries::WindowSeries;
+use crate::util::json::Json;
+
+/// Latency service-level objective: attainment targets for TTFT and
+/// end-to-end latency. (Distinct from [`crate::dse::SloSpec`], the
+/// DSE auto-tune knob — qualify as `obs::SloSpec` where both are in
+/// scope.)
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// TTFT target in simulated seconds.
+    pub ttft_target_s: f64,
+    /// End-to-end latency target in simulated seconds.
+    pub e2e_target_s: f64,
+    /// Required attainment in (0, 1), e.g. 0.99.
+    pub objective: f64,
+}
+
+impl SloSpec {
+    /// The interactive-serving default: 500 ms TTFT, 10 s e2e, 99%.
+    pub fn interactive() -> Self {
+        SloSpec { ttft_target_s: 0.5, e2e_target_s: 10.0, objective: 0.99 }
+    }
+
+    /// Tolerable bad-request fraction (`1 - objective`).
+    pub fn error_budget(&self) -> f64 {
+        1.0 - self.objective
+    }
+}
+
+/// Fraction of recorded samples at or below `target` (bucket
+/// resolution, ~2.2%). Returns 0.0 — not NaN — on an empty histogram.
+pub fn attainment(h: &LogHistogram, target: f64) -> f64 {
+    if h.count() == 0 {
+        return 0.0;
+    }
+    h.count_at_or_below(target) as f64 / h.count() as f64
+}
+
+/// Fraction of recorded samples above `target`. Returns 0.0 on an
+/// empty histogram: an idle window burns no error budget.
+pub fn bad_fraction(h: &LogHistogram, target: f64) -> f64 {
+    if h.count() == 0 {
+        return 0.0;
+    }
+    (h.count() - h.count_at_or_below(target)) as f64 / h.count() as f64
+}
+
+/// Burn-rate alerting shape: trailing window counts for the fast and
+/// slow spans, and the burn threshold both must exceed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BurnRateConfig {
+    pub fast_windows: usize,
+    pub slow_windows: usize,
+    pub threshold: f64,
+}
+
+impl Default for BurnRateConfig {
+    fn default() -> Self {
+        BurnRateConfig { fast_windows: 3, slow_windows: 12, threshold: 4.0 }
+    }
+}
+
+/// One window's SLO readout.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowSlo {
+    pub start_s: f64,
+    /// Completions in the window.
+    pub total: u64,
+    pub ttft_attainment: f64,
+    pub e2e_attainment: f64,
+    pub ttft_burn_fast: f64,
+    pub ttft_burn_slow: f64,
+    pub e2e_burn_fast: f64,
+    pub e2e_burn_slow: f64,
+}
+
+/// A rising-edge burn-rate alert: at window `window` both the fast and
+/// slow trailing burns for `metric` crossed the threshold.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloAlert {
+    /// `"ttft"` or `"e2e"`.
+    pub metric: &'static str,
+    /// Index into the series' windows.
+    pub window: usize,
+    /// Simulated time of the window's end.
+    pub t_s: f64,
+    pub burn_fast: f64,
+    pub burn_slow: f64,
+}
+
+/// The full SLO evaluation of one serve.
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    pub spec: SloSpec,
+    pub burn: BurnRateConfig,
+    /// Whole-run TTFT attainment (merged population).
+    pub ttft_attainment: f64,
+    /// Whole-run e2e attainment (merged population).
+    pub e2e_attainment: f64,
+    pub per_window: Vec<WindowSlo>,
+    pub alerts: Vec<SloAlert>,
+}
+
+impl SloReport {
+    pub fn to_json(&self) -> Json {
+        let windows: Vec<Json> = self
+            .per_window
+            .iter()
+            .map(|w| {
+                jobj(vec![
+                    ("start_s", Json::Num(w.start_s)),
+                    ("total", Json::Num(w.total as f64)),
+                    ("ttft_attainment", Json::Num(w.ttft_attainment)),
+                    ("e2e_attainment", Json::Num(w.e2e_attainment)),
+                    ("ttft_burn_fast", Json::Num(w.ttft_burn_fast)),
+                    ("ttft_burn_slow", Json::Num(w.ttft_burn_slow)),
+                    ("e2e_burn_fast", Json::Num(w.e2e_burn_fast)),
+                    ("e2e_burn_slow", Json::Num(w.e2e_burn_slow)),
+                ])
+            })
+            .collect();
+        let alerts: Vec<Json> = self
+            .alerts
+            .iter()
+            .map(|a| {
+                jobj(vec![
+                    ("metric", Json::Str(a.metric.to_string())),
+                    ("window", Json::Num(a.window as f64)),
+                    ("t_s", Json::Num(a.t_s)),
+                    ("burn_fast", Json::Num(a.burn_fast)),
+                    ("burn_slow", Json::Num(a.burn_slow)),
+                ])
+            })
+            .collect();
+        jobj(vec![
+            (
+                "spec",
+                jobj(vec![
+                    ("ttft_target_s", Json::Num(self.spec.ttft_target_s)),
+                    ("e2e_target_s", Json::Num(self.spec.e2e_target_s)),
+                    ("objective", Json::Num(self.spec.objective)),
+                ]),
+            ),
+            (
+                "burn",
+                jobj(vec![
+                    ("fast_windows", Json::Num(self.burn.fast_windows as f64)),
+                    ("slow_windows", Json::Num(self.burn.slow_windows as f64)),
+                    ("threshold", Json::Num(self.burn.threshold)),
+                ]),
+            ),
+            ("ttft_attainment", Json::Num(self.ttft_attainment)),
+            ("e2e_attainment", Json::Num(self.e2e_attainment)),
+            ("windows", Json::Arr(windows)),
+            ("alerts", Json::Arr(alerts)),
+        ])
+    }
+}
+
+/// Bad/total counts of the trailing `k` windows ending at `i`.
+fn trailing(stats: &[(u64, u64)], i: usize, k: usize) -> (u64, u64) {
+    let lo = (i + 1).saturating_sub(k.max(1));
+    stats[lo..=i].iter().fold((0, 0), |acc, s| (acc.0 + s.0, acc.1 + s.1))
+}
+
+/// Burn rate of a (bad, total) span: bad fraction over the error
+/// budget; 0.0 when the span saw no traffic.
+fn burn_of(bad: u64, total: u64, budget: f64) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    (bad as f64 / total as f64) / budget
+}
+
+/// Evaluate `spec` over every window of `series` with multi-window
+/// burn-rate alerting. Deterministic: same series, same report.
+pub fn evaluate(series: &WindowSeries, spec: &SloSpec, burn: &BurnRateConfig) -> SloReport {
+    let budget = spec.error_budget().max(1e-12);
+    // per-window (bad, total) for each metric
+    let ttft_stats: Vec<(u64, u64)> = series
+        .windows()
+        .iter()
+        .map(|w| (w.ttft.count() - w.ttft.count_at_or_below(spec.ttft_target_s), w.ttft.count()))
+        .collect();
+    let e2e_stats: Vec<(u64, u64)> = series
+        .windows()
+        .iter()
+        .map(|w| (w.e2e.count() - w.e2e.count_at_or_below(spec.e2e_target_s), w.e2e.count()))
+        .collect();
+    let mut per_window = Vec::with_capacity(series.len());
+    let mut alerts = Vec::new();
+    let mut firing = [false; 2];
+    for (i, w) in series.windows().iter().enumerate() {
+        let (tf_bad, tf_tot) = trailing(&ttft_stats, i, burn.fast_windows);
+        let (ts_bad, ts_tot) = trailing(&ttft_stats, i, burn.slow_windows);
+        let (ef_bad, ef_tot) = trailing(&e2e_stats, i, burn.fast_windows);
+        let (es_bad, es_tot) = trailing(&e2e_stats, i, burn.slow_windows);
+        let row = WindowSlo {
+            start_s: series.start_of(i),
+            total: w.e2e.count(),
+            ttft_attainment: attainment(&w.ttft, spec.ttft_target_s),
+            e2e_attainment: attainment(&w.e2e, spec.e2e_target_s),
+            ttft_burn_fast: burn_of(tf_bad, tf_tot, budget),
+            ttft_burn_slow: burn_of(ts_bad, ts_tot, budget),
+            e2e_burn_fast: burn_of(ef_bad, ef_tot, budget),
+            e2e_burn_slow: burn_of(es_bad, es_tot, budget),
+        };
+        let conds = [
+            ("ttft", row.ttft_burn_fast, row.ttft_burn_slow),
+            ("e2e", row.e2e_burn_fast, row.e2e_burn_slow),
+        ];
+        for (m, (metric, fast, slow)) in conds.into_iter().enumerate() {
+            let cond = fast >= burn.threshold && slow >= burn.threshold;
+            if cond && !firing[m] {
+                alerts.push(SloAlert {
+                    metric,
+                    window: i,
+                    t_s: series.start_of(i) + series.width_s(),
+                    burn_fast: fast,
+                    burn_slow: slow,
+                });
+            }
+            firing[m] = cond;
+        }
+        per_window.push(row);
+    }
+    SloReport {
+        spec: *spec,
+        burn: *burn,
+        ttft_attainment: attainment(&series.merged_ttft(), spec.ttft_target_s),
+        e2e_attainment: attainment(&series.merged_e2e(), spec.e2e_target_s),
+        per_window,
+        alerts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::timeseries::GaugeSample;
+
+    #[test]
+    fn empty_population_helpers_are_zero_not_nan() {
+        let h = LogHistogram::new();
+        assert_eq!(attainment(&h, 0.5), 0.0);
+        assert_eq!(bad_fraction(&h, 0.5), 0.0);
+        assert_eq!(burn_of(0, 0, 0.01), 0.0);
+    }
+
+    #[test]
+    fn attainment_splits_population_at_target() {
+        let mut h = LogHistogram::new();
+        for _ in 0..90 {
+            h.record(0.1);
+        }
+        for _ in 0..10 {
+            h.record(2.0);
+        }
+        // target between the two modes: bucket error is irrelevant
+        assert!((attainment(&h, 0.5) - 0.9).abs() < 1e-12);
+        assert!((bad_fraction(&h, 0.5) - 0.1).abs() < 1e-12);
+    }
+
+    /// A series with `good` windows of in-SLO traffic, then `bad`
+    /// windows of violations, then `good` again.
+    fn staged_series(good: usize, bad: usize, tail: usize) -> WindowSeries {
+        let mut s = WindowSeries::new(1.0, 64);
+        let mut t = 0.5;
+        for stage in [(good, 0.1), (bad, 5.0), (tail, 0.1)] {
+            for _ in 0..stage.0 {
+                if s.needs_roll(t) {
+                    s.roll(t, &GaugeSample::default());
+                }
+                for _ in 0..10 {
+                    s.observe_completion(t, stage.1, stage.1, 1);
+                }
+                t += 1.0;
+            }
+        }
+        s.finalize(t, &GaugeSample::default());
+        s
+    }
+
+    #[test]
+    fn sustained_breach_is_one_rising_edge_alert_per_metric() {
+        let spec = SloSpec { ttft_target_s: 0.5, e2e_target_s: 0.5, objective: 0.9 };
+        let burn = BurnRateConfig { fast_windows: 2, slow_windows: 4, threshold: 2.0 };
+        let s = staged_series(4, 6, 0);
+        let rep = evaluate(&s, &spec, &burn);
+        let ttft_alerts: Vec<_> = rep.alerts.iter().filter(|a| a.metric == "ttft").collect();
+        assert_eq!(ttft_alerts.len(), 1, "sustained breach fires exactly once: {:?}", rep.alerts);
+        // violations start at window 4; burn 10x crosses both spans there
+        assert_eq!(ttft_alerts[0].window, 4);
+        assert!(ttft_alerts[0].burn_fast >= 2.0 && ttft_alerts[0].burn_slow >= 2.0);
+    }
+
+    #[test]
+    fn recovery_and_rebreach_fires_again_but_idle_never_does() {
+        let spec = SloSpec { ttft_target_s: 0.5, e2e_target_s: 0.5, objective: 0.9 };
+        let burn = BurnRateConfig { fast_windows: 1, slow_windows: 2, threshold: 2.0 };
+        // good, breach, long recovery (clears the slow span), breach again
+        let mut s = WindowSeries::new(1.0, 64);
+        let mut t = 0.5;
+        for stage in [(2usize, 0.1), (2, 5.0), (4, 0.1), (2, 5.0)] {
+            for _ in 0..stage.0 {
+                if s.needs_roll(t) {
+                    s.roll(t, &GaugeSample::default());
+                }
+                for _ in 0..10 {
+                    s.observe_completion(t, stage.1, stage.1, 1);
+                }
+                t += 1.0;
+            }
+        }
+        // trailing idle windows: no traffic, must not alert
+        s.finalize(t + 8.0, &GaugeSample::default());
+        let rep = evaluate(&s, &spec, &burn);
+        let e2e_alerts: Vec<_> = rep.alerts.iter().filter(|a| a.metric == "e2e").collect();
+        assert_eq!(e2e_alerts.len(), 2, "re-breach after recovery re-alerts: {:?}", rep.alerts);
+        let last_breach_end = 10;
+        assert!(
+            rep.alerts.iter().all(|a| a.window < last_breach_end),
+            "idle trailing windows never alert: {:?}",
+            rep.alerts
+        );
+        // whole-run attainments are finite and in [0, 1]
+        assert!((0.0..=1.0).contains(&rep.ttft_attainment));
+    }
+}

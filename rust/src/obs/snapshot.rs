@@ -7,6 +7,8 @@
 //! explicitly measurement metadata, not simulation output.
 
 use super::registry::fleet_registry;
+use super::slo::SloReport;
+use super::timeseries::WindowSeries;
 use super::{jobj, SelfProfile};
 use crate::cluster::fleet::{DeviceSummary, FleetResult};
 use crate::dse::{DseResult, Metrics};
@@ -85,6 +87,22 @@ pub fn dse_snapshot(res: &DseResult, config: Json) -> Json {
             res.slo_choice.map_or(Json::Null, |i| Json::Num(i as f64)),
         ),
         ("profile", res.profile.to_json()),
+    ])
+}
+
+/// One monitored serve's windowed telemetry as a machine-readable
+/// `halo.timeseries.v1` snapshot: the config echo, the window series,
+/// the merged whole-run latency populations (bit-identical to the
+/// `FleetResult` histograms — pinned by test), and the SLO burn-rate
+/// report when one was evaluated.
+pub fn timeseries_snapshot(series: &WindowSeries, slo: Option<&SloReport>, config: Json) -> Json {
+    jobj(vec![
+        ("schema", Json::Str("halo.timeseries.v1".to_string())),
+        ("config", config),
+        ("series", series.to_json()),
+        ("ttft_total", series.merged_ttft().to_json()),
+        ("e2e_total", series.merged_e2e().to_json()),
+        ("slo", slo.map_or(Json::Null, SloReport::to_json)),
     ])
 }
 

@@ -98,48 +98,107 @@ pub struct Event {
     pub arrival: f64,
     /// Kind-specific detail: the DVFS governor rung for `Throttle`.
     pub detail: usize,
+    /// Stall seconds this `Throttle` event added over the previous one
+    /// (0.0 for other kinds) — the attribution plane's input.
+    pub stall_s: f64,
 }
 
 /// Per-device span/event log. Appended to by the device's busy-time
 /// bookkeeping; drained by [`chrome_trace`].
-#[derive(Debug, Clone, Default)]
+///
+/// Retention is capped (mirroring `ServeOptions::streaming`): past
+/// `retain_cap` recorded spans (and, independently, events) new entries
+/// are counted in [`dropped`](Self::dropped) instead of stored, so
+/// enabling obs on a million-request stream cannot grow memory
+/// unboundedly. [`busy_total`](Self::busy_total) stays exact under the
+/// cap: the running sum accumulates *before* the retention gate, in
+/// call order, so it reconciles bit-for-bit with the device's `busy`
+/// accumulator whether or not spans were dropped.
+#[derive(Debug, Clone)]
 pub struct Recorder {
     pub spans: Vec<Span>,
     pub events: Vec<Event>,
     last_throttled_s: f64,
+    /// Span durations folded in call order — `busy_total` under capping.
+    busy_sum: f64,
+    retain_cap: usize,
+    dropped_spans: u64,
+    dropped_events: u64,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Recorder {
+    /// An uncapped recorder (retains everything) — the `halo trace`
+    /// path, where the full timeline is the product.
     pub fn new() -> Self {
-        Self::default()
+        Self::with_cap(usize::MAX)
+    }
+
+    /// A recorder retaining at most `cap` spans and `cap` events.
+    pub fn with_cap(cap: usize) -> Self {
+        Recorder {
+            spans: Vec::new(),
+            events: Vec::new(),
+            last_throttled_s: 0.0,
+            busy_sum: 0.0,
+            retain_cap: cap,
+            dropped_spans: 0,
+            dropped_events: 0,
+        }
     }
 
     /// Record one busy span. `throttled_s` is the device's cumulative
     /// throttle time *after* the span: when it grew, the span was
     /// stretched by the thermal governor and a `Throttle` instant (with
-    /// the governor rung) is emitted at the span's end.
+    /// the governor rung and the stall delta) is emitted at the span's
+    /// end.
     pub fn busy_span(&mut self, span: Span, throttled_s: f64, rung: usize) {
+        self.busy_sum += span.dur;
         if throttled_s > self.last_throttled_s {
-            self.events.push(Event {
+            self.push_event(Event {
                 kind: EventKind::Throttle,
                 t: span.start + span.dur,
                 arrival: span.arrival,
                 detail: rung,
+                stall_s: throttled_s - self.last_throttled_s,
             });
             self.last_throttled_s = throttled_s;
         }
-        self.spans.push(span);
+        if self.spans.len() < self.retain_cap {
+            self.spans.push(span);
+        } else {
+            self.dropped_spans += 1;
+        }
     }
 
     pub fn event(&mut self, kind: EventKind, t: f64, arrival: f64) {
-        self.events.push(Event { kind, t, arrival, detail: 0 });
+        self.push_event(Event { kind, t, arrival, detail: 0, stall_s: 0.0 });
+    }
+
+    fn push_event(&mut self, e: Event) {
+        if self.events.len() < self.retain_cap {
+            self.events.push(e);
+        } else {
+            self.dropped_events += 1;
+        }
+    }
+
+    /// `(spans, events)` discarded past the retention cap.
+    pub fn dropped(&self) -> (u64, u64) {
+        (self.dropped_spans, self.dropped_events)
     }
 
     /// Sum of span durations, folded in recorded order from 0.0 — the
     /// exact operation the device performs on its `busy` accumulator, so
-    /// the two agree bit-for-bit.
+    /// the two agree bit-for-bit (even when retention dropped spans: the
+    /// sum is accumulated before the gate).
     pub fn busy_total(&self) -> f64 {
-        self.spans.iter().fold(0.0, |acc, s| acc + s.dur)
+        self.busy_sum
     }
 }
 
@@ -180,6 +239,7 @@ fn instant_event(tid: usize, e: &Event) -> Json {
     }
     if e.kind == EventKind::Throttle {
         args.push(("governor_rung", Json::Num(e.detail as f64)));
+        args.push(("stall_s", Json::Num(e.stall_s)));
     }
     let mut pairs = vec![
         ("ph", Json::Str("i".to_string())),
@@ -265,6 +325,31 @@ mod tests {
         assert_eq!(th.len(), 1);
         assert_eq!(th[0].detail, 2);
         assert!((th[0].t - 0.3).abs() < 1e-12);
+        // the instant carries the stall delta it reported
+        assert_eq!(th[0].stall_s.to_bits(), 0.05f64.to_bits());
+    }
+
+    #[test]
+    fn retention_cap_bounds_memory_but_busy_total_stays_exact() {
+        let mut capped = Recorder::with_cap(8);
+        let mut full = Recorder::new();
+        let mut busy = 0.0;
+        for i in 0..100 {
+            let s = span(SpanKind::DecodeStep, i as f64, 0.013 * (i + 1) as f64);
+            capped.busy_span(s, 0.0, 0);
+            full.busy_span(s, 0.0, 0);
+            capped.event(EventKind::Done, s.start + s.dur, 0.0);
+            busy += s.dur;
+        }
+        assert_eq!(capped.spans.len(), 8, "span retention is capped");
+        assert_eq!(capped.events.len(), 8, "event retention is capped");
+        assert_eq!(capped.dropped(), (92, 92));
+        assert_eq!(full.dropped(), (0, 0));
+        // the retained prefix is the earliest spans, untouched
+        assert_eq!(capped.spans[..], full.spans[..8]);
+        // busy reconciliation is exact despite the drops
+        assert_eq!(capped.busy_total().to_bits(), busy.to_bits());
+        assert_eq!(capped.busy_total().to_bits(), full.busy_total().to_bits());
     }
 
     #[test]

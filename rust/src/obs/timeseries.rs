@@ -1,0 +1,512 @@
+//! Windowed time-series telemetry over *simulated* time.
+//!
+//! Whole-run aggregates hide nonstationary behavior: an MMPP burst that
+//! doubles p99 TTFT for two simulated minutes is invisible in a run-level
+//! histogram. [`WindowSeries`] slices a streamed serve into fixed-width
+//! windows of simulated seconds and aggregates, per window: arrivals,
+//! completions, token throughput, queue depth, per-device utilization,
+//! throttle/energy deltas, KV pressure, and full TTFT/e2e
+//! [`LogHistogram`]s.
+//!
+//! Two invariants drive the design:
+//!
+//! - **Pure observation.** The series is fed from inside
+//!   [`crate::cluster::fleet::Fleet::serve`] but only *copies* the same
+//!   `f64`s that advance the simulated clock — a monitored serve is
+//!   bit-identical to an unmonitored one (pinned by
+//!   `rust/tests/monitor_plane.rs`).
+//! - **Fixed memory.** The series owns at most `max_windows` windows.
+//!   When simulated time outgrows the budget the series *coarsens*:
+//!   window width doubles and adjacent pairs merge ([`LogHistogram`]
+//!   merges are exact on counts), so a million-request stream keeps the
+//!   flat-RSS guarantee of `rust/tests/stream_memory.rs` while still
+//!   ending with a full-run series at the finest width that fits.
+//!
+//! Cumulative device gauges (busy seconds, throttle seconds, energy)
+//! are sampled at window close and *differenced* against the previous
+//! close, so per-window deltas telescope exactly to the run totals.
+//! When a roll closes several windows at once (an idle gap), the whole
+//! gap's delta lands on the first window closed — later ones close
+//! empty, which is the truthful reading of an idle trough.
+
+use super::hist::LogHistogram;
+use super::jobj;
+use crate::util::json::Json;
+
+/// Instantaneous telemetry for one device: queue/KV state plus the
+/// device's *cumulative* busy/throttle/energy meters. Produced by
+/// `Device::telemetry`; consumed via [`GaugeSample::from_devices`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeviceGauges {
+    /// Jobs delivered but not yet admitted.
+    pub queue_depth: u64,
+    /// Sequences resident in decode slots plus in-progress prefills.
+    pub active: u64,
+    /// Resident KV bytes right now.
+    pub kv_resident_bytes: u64,
+    /// Cumulative busy seconds since construction.
+    pub busy_s: f64,
+    /// Cumulative thermal-throttle stall seconds (0 when power is off).
+    pub throttled_s: f64,
+    /// Cumulative attributed energy in joules (0 when power is off).
+    pub energy_j: f64,
+}
+
+/// A fleet-wide gauge snapshot at one simulated instant: device gauges
+/// summed, with per-device cumulative busy retained for utilization.
+#[derive(Debug, Clone, Default)]
+pub struct GaugeSample {
+    pub queue_depth: u64,
+    pub active: u64,
+    pub kv_resident_bytes: u64,
+    pub busy_s: f64,
+    pub throttled_s: f64,
+    pub energy_j: f64,
+    pub per_dev_busy_s: Vec<f64>,
+}
+
+impl GaugeSample {
+    pub fn from_devices<I: IntoIterator<Item = DeviceGauges>>(devices: I) -> Self {
+        let mut s = GaugeSample::default();
+        for d in devices {
+            s.queue_depth += d.queue_depth;
+            s.active += d.active;
+            s.kv_resident_bytes += d.kv_resident_bytes;
+            s.busy_s += d.busy_s;
+            s.throttled_s += d.throttled_s;
+            s.energy_j += d.energy_j;
+            s.per_dev_busy_s.push(d.busy_s);
+        }
+        s
+    }
+}
+
+/// One window of the series. Counters and histograms accumulate as
+/// events land; gauge fields are set when the window closes (snapshot
+/// gauges hold the close-instant value, delta gauges hold the in-window
+/// difference of the cumulative meters).
+#[derive(Debug, Clone, Default)]
+pub struct Window {
+    pub arrivals: u64,
+    pub completions: u64,
+    /// Output tokens of requests *completed* in this window.
+    pub tokens: u64,
+    /// TTFTs of completions in this window.
+    pub ttft: LogHistogram,
+    /// End-to-end latencies of completions in this window.
+    pub e2e: LogHistogram,
+    /// Fleet queue depth at window close.
+    pub queue_depth: u64,
+    /// Active sequences at window close.
+    pub active: u64,
+    /// Resident KV bytes at window close.
+    pub kv_resident_bytes: u64,
+    /// Busy seconds accrued fleet-wide inside this window.
+    pub busy_s: f64,
+    /// Throttle stall seconds accrued inside this window.
+    pub throttled_s: f64,
+    /// Energy joules accrued inside this window.
+    pub energy_j: f64,
+    /// Per-device busy seconds accrued inside this window.
+    pub per_dev_busy_s: Vec<f64>,
+    /// Whether this window has received its close-time gauge snapshot.
+    closed: bool,
+}
+
+impl Window {
+    /// Merge `other` (the *later* of an adjacent pair) into `self` for a
+    /// coarsening step: counters add, histograms merge, gauge deltas
+    /// add; the close-time snapshot is the later window's when it has
+    /// one. The merged window is closed only if `other` was — a merge
+    /// with the still-open current window stays open and takes its
+    /// snapshot at the next close.
+    fn absorb(&mut self, other: Window) {
+        self.arrivals += other.arrivals;
+        self.completions += other.completions;
+        self.tokens += other.tokens;
+        self.ttft.merge(&other.ttft);
+        self.e2e.merge(&other.e2e);
+        self.busy_s += other.busy_s;
+        self.throttled_s += other.throttled_s;
+        self.energy_j += other.energy_j;
+        if self.per_dev_busy_s.len() < other.per_dev_busy_s.len() {
+            self.per_dev_busy_s.resize(other.per_dev_busy_s.len(), 0.0);
+        }
+        for (i, b) in other.per_dev_busy_s.iter().enumerate() {
+            self.per_dev_busy_s[i] += b;
+        }
+        if other.closed {
+            self.queue_depth = other.queue_depth;
+            self.active = other.active;
+            self.kv_resident_bytes = other.kv_resident_bytes;
+        }
+        self.closed = other.closed;
+    }
+
+    /// Completions per simulated second (0.0 for an empty window).
+    pub fn throughput_rps(&self, width_s: f64) -> f64 {
+        if self.completions == 0 || width_s <= 0.0 {
+            return 0.0;
+        }
+        self.completions as f64 / width_s
+    }
+
+    /// TTFT percentile of this window's completions (0.0 when empty —
+    /// idle diurnal troughs produce genuinely empty windows).
+    pub fn ttft_pct(&self, p: f64) -> f64 {
+        self.ttft.percentile(p)
+    }
+
+    /// End-to-end percentile of this window's completions (0.0 when empty).
+    pub fn e2e_pct(&self, p: f64) -> f64 {
+        self.e2e.percentile(p)
+    }
+
+    /// Mean fleet utilization over the window: busy seconds divided by
+    /// `n_dev` device-seconds of wall width (0.0 when degenerate).
+    pub fn utilization(&self, width_s: f64, n_dev: usize) -> f64 {
+        if n_dev == 0 || width_s <= 0.0 {
+            return 0.0;
+        }
+        self.busy_s / (width_s * n_dev as f64)
+    }
+}
+
+/// Fixed-memory windowed telemetry over simulated time. See the module
+/// docs for the coarsening and gauge-delta semantics.
+#[derive(Debug, Clone)]
+pub struct WindowSeries {
+    width: f64,
+    max_windows: usize,
+    windows: Vec<Window>,
+    /// Index of the oldest still-open window.
+    cur: usize,
+    /// Cumulative gauge meters at the last window close.
+    prev: GaugeSample,
+    coarsenings: u32,
+    finalized: bool,
+}
+
+impl WindowSeries {
+    /// A series of `max_windows` windows starting `width_s` wide.
+    ///
+    /// Panics if `width_s` is not a positive finite number or
+    /// `max_windows < 4` (coarsening needs room to halve into).
+    pub fn new(width_s: f64, max_windows: usize) -> Self {
+        assert!(width_s.is_finite() && width_s > 0.0, "window width must be positive");
+        assert!(max_windows >= 4, "need at least 4 windows");
+        WindowSeries {
+            width: width_s,
+            max_windows,
+            windows: vec![Window::default()],
+            cur: 0,
+            prev: GaugeSample::default(),
+            coarsenings: 0,
+            finalized: false,
+        }
+    }
+
+    /// Window index for simulated time `t` at the current width.
+    /// Saturates (never panics) for huge `t`; `t <= 0` maps to 0.
+    fn index_of(&self, t: f64) -> usize {
+        if t.is_nan() || t <= 0.0 {
+            return 0;
+        }
+        // `as` saturates at usize::MAX for out-of-range floats
+        (t / self.width) as usize
+    }
+
+    /// Whether advancing to event time `t` crosses a window boundary —
+    /// the caller should take a gauge sample and [`roll`](Self::roll).
+    pub fn needs_roll(&self, t: f64) -> bool {
+        !self.finalized && self.index_of(t) > self.cur
+    }
+
+    /// Advance the series to event time `t`, closing every window that
+    /// ends at or before it with gauges from `sample`. Coarsens first if
+    /// `t` falls outside the window budget.
+    pub fn roll(&mut self, t: f64, sample: &GaugeSample) {
+        if self.finalized {
+            return;
+        }
+        let mut target = self.index_of(t);
+        while target >= self.max_windows {
+            self.coarsen();
+            target = self.index_of(t);
+        }
+        while self.cur < target {
+            self.close_current(sample);
+            self.cur += 1;
+            if self.windows.len() <= self.cur {
+                self.windows.push(Window::default());
+            }
+        }
+    }
+
+    /// Double the window width: merge adjacent pairs, halve the cursor.
+    fn coarsen(&mut self) {
+        let old = std::mem::take(&mut self.windows);
+        let mut merged: Vec<Window> = Vec::with_capacity(old.len() / 2 + 1);
+        let mut it = old.into_iter();
+        loop {
+            let Some(mut a) = it.next() else { break };
+            if let Some(b) = it.next() {
+                a.absorb(b);
+            }
+            merged.push(a);
+        }
+        self.windows = merged;
+        self.width *= 2.0;
+        self.cur /= 2;
+        self.coarsenings += 1;
+    }
+
+    /// Close the window at `cur`: snapshot gauges, difference the
+    /// cumulative meters against the previous close.
+    fn close_current(&mut self, sample: &GaugeSample) {
+        let w = &mut self.windows[self.cur];
+        w.queue_depth = sample.queue_depth;
+        w.active = sample.active;
+        w.kv_resident_bytes = sample.kv_resident_bytes;
+        w.busy_s += sample.busy_s - self.prev.busy_s;
+        w.throttled_s += sample.throttled_s - self.prev.throttled_s;
+        w.energy_j += sample.energy_j - self.prev.energy_j;
+        if w.per_dev_busy_s.len() < sample.per_dev_busy_s.len() {
+            w.per_dev_busy_s.resize(sample.per_dev_busy_s.len(), 0.0);
+        }
+        for (i, b) in sample.per_dev_busy_s.iter().enumerate() {
+            let p = self.prev.per_dev_busy_s.get(i).copied().unwrap_or(0.0);
+            w.per_dev_busy_s[i] += b - p;
+        }
+        w.closed = true;
+        self.prev = sample.clone();
+    }
+
+    /// Ensure a window exists for time `t` and return it (coarsening and
+    /// extending as needed). Completions may land *behind* the cursor
+    /// (a request finishes mid-cycle while the clock sits at the cycle
+    /// end) or ahead of it (the cycle overshoots the boundary); both are
+    /// bucketed at their true simulated time.
+    fn window_at(&mut self, t: f64) -> &mut Window {
+        let mut i = self.index_of(t);
+        while i >= self.max_windows {
+            self.coarsen();
+            i = self.index_of(t);
+        }
+        while self.windows.len() <= i {
+            self.windows.push(Window::default());
+        }
+        &mut self.windows[i]
+    }
+
+    /// Record one request arrival at simulated time `t`.
+    pub fn observe_arrival(&mut self, t: f64) {
+        self.window_at(t).arrivals += 1;
+    }
+
+    /// Record one request completion: `t_done` is the completion's
+    /// simulated time (arrival + e2e), `tokens` its output tokens.
+    pub fn observe_completion(&mut self, t_done: f64, ttft: f64, e2e: f64, tokens: u64) {
+        let w = self.window_at(t_done);
+        w.completions += 1;
+        w.tokens += tokens;
+        w.ttft.record(ttft);
+        w.e2e.record(e2e);
+    }
+
+    /// Close out the series at the end of a serve: roll to `makespan`,
+    /// close the last window, and freeze. Idempotent.
+    pub fn finalize(&mut self, makespan: f64, sample: &GaugeSample) {
+        if self.finalized {
+            return;
+        }
+        if makespan.is_finite() {
+            self.roll(makespan, sample);
+        }
+        self.close_current(sample);
+        self.finalized = true;
+    }
+
+    /// The windows, oldest first. Window `i` covers
+    /// `[start_of(i), start_of(i) + width_s())`.
+    pub fn windows(&self) -> &[Window] {
+        &self.windows
+    }
+
+    pub fn len(&self) -> usize {
+        self.windows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    /// Current window width in simulated seconds (doubles per coarsening).
+    pub fn width_s(&self) -> f64 {
+        self.width
+    }
+
+    /// Start time of window `i` in simulated seconds.
+    pub fn start_of(&self, i: usize) -> f64 {
+        i as f64 * self.width
+    }
+
+    /// How many times the series doubled its width to stay in budget.
+    pub fn coarsenings(&self) -> u32 {
+        self.coarsenings
+    }
+
+    /// All per-window TTFT histograms merged — bucket-for-bucket equal
+    /// to the global streaming population (pinned by test).
+    pub fn merged_ttft(&self) -> LogHistogram {
+        let mut h = LogHistogram::new();
+        for w in &self.windows {
+            h.merge(&w.ttft);
+        }
+        h
+    }
+
+    /// All per-window e2e histograms merged (see [`merged_ttft`](Self::merged_ttft)).
+    pub fn merged_e2e(&self) -> LogHistogram {
+        let mut h = LogHistogram::new();
+        for w in &self.windows {
+            h.merge(&w.e2e);
+        }
+        h
+    }
+
+    /// The series as JSON (the `series` body of the
+    /// `halo.timeseries.v1` snapshot).
+    pub fn to_json(&self) -> Json {
+        let n_dev = self.windows.iter().map(|w| w.per_dev_busy_s.len()).max().unwrap_or(0);
+        let windows: Vec<Json> = self
+            .windows
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let util_per_dev: Vec<Json> = (0..n_dev)
+                    .map(|d| {
+                        let b = w.per_dev_busy_s.get(d).copied().unwrap_or(0.0);
+                        Json::Num(if self.width > 0.0 { b / self.width } else { 0.0 })
+                    })
+                    .collect();
+                jobj(vec![
+                    ("start_s", Json::Num(self.start_of(i))),
+                    ("arrivals", Json::Num(w.arrivals as f64)),
+                    ("completions", Json::Num(w.completions as f64)),
+                    ("tokens", Json::Num(w.tokens as f64)),
+                    ("throughput_rps", Json::Num(w.throughput_rps(self.width))),
+                    ("queue_depth", Json::Num(w.queue_depth as f64)),
+                    ("active", Json::Num(w.active as f64)),
+                    ("kv_resident_bytes", Json::Num(w.kv_resident_bytes as f64)),
+                    ("busy_s", Json::Num(w.busy_s)),
+                    ("throttled_s", Json::Num(w.throttled_s)),
+                    ("energy_j", Json::Num(w.energy_j)),
+                    ("utilization", Json::Num(w.utilization(self.width, n_dev))),
+                    ("util_per_device", Json::Arr(util_per_dev)),
+                    ("ttft", w.ttft.to_json()),
+                    ("e2e", w.e2e.to_json()),
+                ])
+            })
+            .collect();
+        jobj(vec![
+            ("window_s", Json::Num(self.width)),
+            ("coarsenings", Json::Num(self.coarsenings as f64)),
+            ("windows", Json::Arr(windows)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(busy: f64, per_dev: &[f64]) -> GaugeSample {
+        GaugeSample {
+            queue_depth: 1,
+            active: 2,
+            kv_resident_bytes: 3,
+            busy_s: busy,
+            throttled_s: busy * 0.1,
+            energy_j: busy * 5.0,
+            per_dev_busy_s: per_dev.to_vec(),
+        }
+    }
+
+    #[test]
+    fn coarsening_preserves_totals_within_budget() {
+        let mut s = WindowSeries::new(1.0, 4);
+        let mut total = 0u64;
+        for k in 0..64u64 {
+            let t = k as f64 + 0.5;
+            if s.needs_roll(t) {
+                let g = sample(k as f64, &[k as f64]);
+                s.roll(t, &g);
+            }
+            s.observe_arrival(t);
+            s.observe_completion(t, 0.01 * (k + 1) as f64, 0.1 * (k + 1) as f64, 7);
+            total += 1;
+        }
+        s.finalize(64.0, &sample(63.0, &[63.0]));
+        assert!(s.len() <= 4, "stayed within the window budget");
+        assert!(s.coarsenings() >= 4, "64 s into 4 windows of 1 s needs >= 4 doublings");
+        let arrivals: u64 = s.windows().iter().map(|w| w.arrivals).sum();
+        let completions: u64 = s.windows().iter().map(|w| w.completions).sum();
+        let tokens: u64 = s.windows().iter().map(|w| w.tokens).sum();
+        assert_eq!(arrivals, total);
+        assert_eq!(completions, total);
+        assert_eq!(tokens, total * 7);
+        assert_eq!(s.merged_ttft().count(), total);
+        assert_eq!(s.merged_e2e().count(), total);
+    }
+
+    #[test]
+    fn gauge_deltas_telescope_to_run_totals() {
+        let mut s = WindowSeries::new(1.0, 8);
+        for k in 1..=6u64 {
+            let t = k as f64 + 0.25;
+            let g = sample(k as f64 * 2.0, &[k as f64, k as f64]);
+            if s.needs_roll(t) {
+                s.roll(t, &g);
+            }
+        }
+        let fin = sample(12.0, &[6.0, 6.0]);
+        s.finalize(6.25, &fin);
+        let busy: f64 = s.windows().iter().map(|w| w.busy_s).sum();
+        assert!((busy - 12.0).abs() < 1e-9, "deltas sum to the final cumulative meter");
+        let dev0: f64 =
+            s.windows().iter().map(|w| w.per_dev_busy_s.first().copied().unwrap_or(0.0)).sum();
+        assert!((dev0 - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_windows_are_zero_safe() {
+        let mut s = WindowSeries::new(1.0, 8);
+        s.finalize(5.0, &GaugeSample::default());
+        for (i, w) in s.windows().iter().enumerate() {
+            assert_eq!(w.throughput_rps(s.width_s()), 0.0, "window {i}");
+            assert_eq!(w.ttft_pct(99.0), 0.0);
+            assert_eq!(w.e2e_pct(50.0), 0.0);
+            assert_eq!(w.utilization(s.width_s(), 4), 0.0);
+        }
+        assert_eq!(Window::default().utilization(0.0, 0), 0.0);
+        // the snapshot must serialize without NaN
+        let text = s.to_json().to_string();
+        assert!(!text.contains("NaN") && !text.contains("null"), "{text}");
+    }
+
+    #[test]
+    fn out_of_order_completions_land_in_their_true_window() {
+        let mut s = WindowSeries::new(1.0, 8);
+        s.roll(3.5, &GaugeSample::default());
+        // completion behind the cursor: finished at t=1.2 while the
+        // clock sits at 3.5
+        s.observe_completion(1.2, 0.1, 0.2, 1);
+        // completion ahead of the cursor: cycle overshoots to 4.8
+        s.observe_completion(4.8, 0.1, 0.3, 1);
+        s.finalize(5.0, &GaugeSample::default());
+        assert_eq!(s.windows()[1].completions, 1);
+        assert_eq!(s.windows()[4].completions, 1);
+        assert_eq!(s.merged_e2e().count(), 2);
+    }
+}

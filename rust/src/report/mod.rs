@@ -8,6 +8,7 @@
 
 pub mod cluster;
 pub mod dse;
+pub mod obs;
 pub mod power;
 
 use std::fmt::Write as _;

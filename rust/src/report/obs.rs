@@ -1,0 +1,165 @@
+//! Observability-plane tables: where the p99 comes from (per-request
+//! latency attribution aggregated over the tail) and how SLO attainment
+//! and burn rate evolve window over window on a bursty stream.
+//!
+//! Both tables run the same MMPP chat stream against a 4-device
+//! phase-disaggregated fleet with chunked prefill — the configuration
+//! where attribution is most interesting (queue wait, chunked prefill,
+//! KV handoff and decode all contribute) — so the `halo report --fig
+//! obs` artifact doubles as a worked example of the `halo monitor`
+//! surface.
+
+use super::Table;
+use crate::cluster::{
+    collect_trace, ArrivalKind, Interconnect, Mix, Policy, SchedConfig, TrafficConfig,
+};
+use crate::config::HwConfig;
+use crate::model::LlmConfig;
+use crate::obs::{self, attribute, tail_breakdown, WindowSeries};
+
+use super::f;
+
+/// Decode slots per device (matches the cluster-plane tables).
+const SLOTS: usize = 8;
+
+/// The shared workload: an MMPP chat stream, bursty enough that queue
+/// wait dominates the tail inside bursts while the troughs stay quiet.
+fn obs_trace(rate: f64) -> Vec<crate::sim::queueing::TraceRequest> {
+    let cfg = TrafficConfig::new(4242, rate, 40.0, Mix::Chat)
+        .with_kind(ArrivalKind::Mmpp)
+        .with_max_requests(400);
+    collect_trace(&mut cfg.build())
+}
+
+/// Latency attribution over the e2e tail: for each component, its mean
+/// share of a request's end-to-end latency across the whole population
+/// vs across the p99 tail — the "where does p99 come from" table.
+pub fn attribution_breakdown(hw: &HwConfig) -> Table {
+    let llm = LlmConfig::llama2_7b();
+    let rate = 24.0;
+    let trace = obs_trace(rate);
+    let (mut fleet, mut router) = Policy::PhaseDisaggregated.build_with(
+        &llm,
+        hw,
+        4,
+        SLOTS,
+        0.5,
+        Interconnect::board(),
+        SchedConfig::chunked(256),
+    );
+    fleet.enable_obs();
+    let r = fleet.replay(&trace, router.as_mut());
+    let recorders = fleet.recorders().expect("obs enabled");
+    let kv = fleet.kv_spans().expect("obs enabled");
+    let attrs = attribute(&r.served, &recorders, kv);
+    debug_assert_eq!(obs::reconcile(&attrs), 0, "attribution must fold bit-exactly");
+    let rows = tail_breakdown(&attrs, 99.0);
+    let mut t = Table::new(
+        "obs_attribution",
+        &format!(
+            "Latency attribution — mean component seconds, all requests vs p99 e2e tail \
+             (LLaMA-2 7B, chat MMPP {:.1} req/s, 4-dev disaggregated, chunked prefill)",
+            rate
+        ),
+        &["component", "mean_s_all", "mean_s_tail", "tail_share"],
+    );
+    for row in rows {
+        t.row(vec![
+            row.component.to_string(),
+            f(row.mean_s_all),
+            f(row.mean_s_tail),
+            f(row.tail_share),
+        ]);
+    }
+    t
+}
+
+/// Windowed SLO attainment and burn rate over the monitored stream: one
+/// row per window of the same MMPP replay, showing attainment dip and
+/// burn-rate spike inside bursts.
+pub fn slo_burn_windows(hw: &HwConfig) -> Table {
+    let llm = LlmConfig::llama2_7b();
+    let rate = 24.0;
+    let trace = obs_trace(rate);
+    let (mut fleet, mut router) = Policy::PhaseDisaggregated.build_with(
+        &llm,
+        hw,
+        4,
+        SLOTS,
+        0.5,
+        Interconnect::board(),
+        SchedConfig::chunked(256),
+    );
+    let mut series = WindowSeries::new(2.0, 64);
+    let r = fleet.replay_monitored(&trace, router.as_mut(), &mut series);
+    let spec = obs::SloSpec::interactive();
+    let report = obs::slo::evaluate(&series, &spec, &obs::BurnRateConfig::default());
+    let mut t = Table::new(
+        "obs_slo_windows",
+        &format!(
+            "Windowed SLO — attainment and burn rate per {:.1}s window \
+             (chat MMPP {:.1} req/s, {} served, TTFT<{:.2}s / e2e<{:.1}s @ {:.0}%)",
+            series.width_s(),
+            rate,
+            r.requests,
+            spec.ttft_target_s,
+            spec.e2e_target_s,
+            spec.objective * 100.0
+        ),
+        &[
+            "window_start_s",
+            "completions",
+            "throughput_rps",
+            "ttft_attainment",
+            "e2e_attainment",
+            "ttft_burn_fast",
+            "e2e_burn_fast",
+            "utilization",
+        ],
+    );
+    let width = series.width_s();
+    for (w, s) in series.windows().iter().zip(&report.per_window) {
+        t.row(vec![
+            f(s.start_s),
+            w.completions.to_string(),
+            f(w.throughput_rps(width)),
+            f(s.ttft_attainment),
+            f(s.e2e_attainment),
+            f(s.ttft_burn_fast),
+            f(s.e2e_burn_fast),
+            f(w.utilization(width, 4)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attribution_table_reconciles_and_covers_components() {
+        let t = attribution_breakdown(&HwConfig::paper());
+        // one row per e2e component plus the closing e2e row
+        assert_eq!(t.rows.len(), 7);
+        let shares = t.col_f64("tail_share");
+        let last = *shares.last().unwrap();
+        assert!((last - 1.0).abs() < 1e-12, "e2e row must carry share 1.0");
+        // component shares (all but the e2e row) sum to ~1
+        let sum: f64 = shares[..shares.len() - 1].iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "component shares sum to 1, got {sum}");
+    }
+
+    #[test]
+    fn slo_window_table_is_finite_and_nonempty() {
+        let t = slo_burn_windows(&HwConfig::paper());
+        assert!(!t.rows.is_empty());
+        for h in ["ttft_attainment", "e2e_attainment", "ttft_burn_fast", "utilization"] {
+            for v in t.col_f64(h) {
+                assert!(v.is_finite(), "{h} must stay finite on every window");
+            }
+        }
+        let served: f64 = t.col_f64("completions").iter().sum();
+        assert!(served > 0.0);
+    }
+}

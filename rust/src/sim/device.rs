@@ -433,6 +433,14 @@ impl Device {
         self.obs = Some(Recorder::new());
     }
 
+    /// [`enable_obs`](Self::enable_obs) with a retention cap: at most
+    /// `cap` spans (and `cap` events) are kept, the rest counted in
+    /// [`Recorder::dropped`] — busy totals stay exact either way. The
+    /// monitored-streaming path, mirroring `ServeOptions::streaming`.
+    pub fn enable_obs_capped(&mut self, cap: usize) {
+        self.obs = Some(Recorder::with_cap(cap));
+    }
+
     /// The recorded span timeline, if observability is enabled.
     pub fn obs(&self) -> Option<&Recorder> {
         self.obs.as_ref()
@@ -578,6 +586,29 @@ impl Device {
                 cap.saturating_sub(self.kv_committed_bytes())
                     .saturating_sub(self.kv_queued_bytes())
             }
+        }
+    }
+
+    /// Jobs delivered to this device but not yet admitted.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Instantaneous telemetry for the windowed monitor: queue/active/KV
+    /// state plus the cumulative busy/throttle/energy meters. Pure reads
+    /// of existing accumulators — sampling never perturbs the replay.
+    pub fn telemetry(&self) -> crate::obs::DeviceGauges {
+        let (throttled_s, energy_j) = match &self.power {
+            Some(pw) => (pw.throttled_s, pw.energy.total()),
+            None => (0.0, 0.0),
+        };
+        crate::obs::DeviceGauges {
+            queue_depth: self.queue.len() as u64,
+            active: (self.active_count() + self.prefilling.len()) as u64,
+            kv_resident_bytes: self.kv_resident_bytes(),
+            busy_s: self.busy,
+            throttled_s,
+            energy_j,
         }
     }
 

@@ -1,0 +1,162 @@
+//! Monitoring-plane integration pins: windowed telemetry driven from
+//! inside the serve loop must not perturb the simulation (bit-exact
+//! fingerprints), its per-window populations must merge bucket-for-
+//! bucket onto the whole-run histograms, latency attribution must fold
+//! bit-exactly onto the recorded TTFT/e2e, and empty windows on sparse
+//! streams must read as zeros, never NaN.
+
+use halo::cluster::{
+    collect_trace, ArrivalKind, Fleet, Interconnect, Mix, Policy, Router, SchedConfig,
+    ServeOptions, TrafficConfig,
+};
+use halo::config::HwConfig;
+use halo::model::LlmConfig;
+use halo::obs::{self, BurnRateConfig, WindowSeries};
+use halo::sim::queueing::TraceRequest;
+
+/// The monitored configuration of interest: phase-disaggregated pools
+/// with chunked prefill, so queue wait, prefill chunks, KV handoff and
+/// decode all contribute to latency.
+fn chunked_fleet(devices: usize) -> (Fleet, Box<dyn Router>) {
+    Policy::PhaseDisaggregated.build_with(
+        &LlmConfig::llama2_7b(),
+        &HwConfig::paper(),
+        devices,
+        8,
+        0.5,
+        Interconnect::board(),
+        SchedConfig::chunked(256),
+    )
+}
+
+fn mmpp_trace(seed: u64, n: usize, rate: f64) -> Vec<TraceRequest> {
+    let cfg = TrafficConfig::new(seed, rate, 1.0e9, Mix::Chat)
+        .with_kind(ArrivalKind::Mmpp)
+        .with_max_requests(n);
+    collect_trace(&mut cfg.build())
+}
+
+#[test]
+fn monitored_replay_is_bit_identical_and_merges_bucket_for_bucket() {
+    let trace = mmpp_trace(4242, 300, 24.0);
+    let (mut plain_fleet, mut plain_router) = chunked_fleet(4);
+    let plain = plain_fleet.replay(&trace, plain_router.as_mut());
+
+    let (mut mon_fleet, mut mon_router) = chunked_fleet(4);
+    let mut series = WindowSeries::new(2.0, 64);
+    let mon = mon_fleet.replay_monitored(&trace, mon_router.as_mut(), &mut series);
+
+    // observation must not perturb a single simulated f64
+    assert_eq!(plain.fingerprint(), mon.fingerprint(), "monitoring changed the replay");
+
+    // the windowed populations merge bit-exactly onto the global ones
+    let mt = series.merged_ttft();
+    let me = series.merged_e2e();
+    assert_eq!(mt.counts(), mon.ttft_hist.counts(), "ttft buckets diverge");
+    assert_eq!(me.counts(), mon.e2e_hist.counts(), "e2e buckets diverge");
+    assert_eq!(mt.min().to_bits(), mon.ttft_hist.min().to_bits());
+    assert_eq!(mt.max().to_bits(), mon.ttft_hist.max().to_bits());
+    for p in [1.0, 25.0, 50.0, 90.0, 99.0] {
+        assert_eq!(mt.percentile(p).to_bits(), mon.ttft_hist.percentile(p).to_bits());
+        assert_eq!(me.percentile(p).to_bits(), mon.e2e_hist.percentile(p).to_bits());
+    }
+
+    // and the window counters conserve the run's totals
+    let arrivals: u64 = series.windows().iter().map(|w| w.arrivals).sum();
+    let completions: u64 = series.windows().iter().map(|w| w.completions).sum();
+    let tokens: u64 = series.windows().iter().map(|w| w.tokens).sum();
+    assert_eq!(arrivals as usize, trace.len());
+    assert_eq!(completions as usize, mon.requests);
+    assert_eq!(tokens, mon.tokens);
+}
+
+#[test]
+fn attribution_folds_bit_exactly_on_a_chunked_disaggregated_replay() {
+    let trace = mmpp_trace(7, 200, 24.0);
+    let (mut fleet, mut router) = chunked_fleet(4);
+    fleet.enable_obs();
+    let r = fleet.replay(&trace, router.as_mut());
+
+    let recorders = fleet.recorders().expect("obs enabled");
+    let attrs = obs::attribute(&r.served, &recorders, fleet.kv_spans().expect("obs enabled"));
+    assert_eq!(attrs.len(), r.requests);
+    assert_eq!(obs::reconcile(&attrs), 0, "components must fold bit-exactly onto ttft/e2e");
+
+    // the configuration exercises every component source
+    assert!(attrs.iter().any(|a| a.queue_wait > 0.0), "bursty load must queue");
+    assert!(attrs.iter().any(|a| a.prefill > 0.0), "prefill chunks must attribute");
+    assert!(attrs.iter().any(|a| a.kv_handoff > 0.0), "disaggregation must hand off KV");
+    assert!(attrs.iter().any(|a| a.decode > 0.0), "decode must attribute");
+
+    // the tail table is well-formed: component shares sum to 1, the
+    // closing e2e row carries share 1.0
+    let rows = obs::tail_breakdown(&attrs, 99.0);
+    assert_eq!(rows.last().unwrap().component, "e2e");
+    let share: f64 = rows[..rows.len() - 1].iter().map(|r| r.tail_share).sum();
+    assert!((share - 1.0).abs() < 1e-6, "tail shares sum to {share}");
+}
+
+#[test]
+fn low_rate_diurnal_stream_keeps_empty_windows_zero_not_nan() {
+    let cfg = TrafficConfig::new(5, 0.2, 120.0, Mix::Chat).with_kind(ArrivalKind::Diurnal);
+    let mut gen = cfg.build();
+    let (mut fleet, mut router) = chunked_fleet(2);
+    let mut series = WindowSeries::new(5.0, 64);
+    let r = fleet.serve_monitored(&mut gen, router.as_mut(), ServeOptions::exact(), &mut series);
+
+    assert!(r.requests > 0, "the stream must serve something");
+    let empties = series.windows().iter().filter(|w| w.completions == 0).count();
+    assert!(empties > 0, "a low-rate diurnal stream must leave idle windows");
+
+    let spec = obs::SloSpec::interactive();
+    let report = obs::slo::evaluate(&series, &spec, &BurnRateConfig::default());
+    assert_eq!(report.per_window.len(), series.len());
+    let width = series.width_s();
+    for (w, s) in series.windows().iter().zip(&report.per_window) {
+        for v in [
+            w.ttft_pct(99.0),
+            w.e2e_pct(50.0),
+            w.throughput_rps(width),
+            w.utilization(width, 2),
+            s.ttft_attainment,
+            s.e2e_attainment,
+            s.ttft_burn_fast,
+            s.e2e_burn_slow,
+        ] {
+            assert!(v.is_finite(), "telemetry must stay finite on every window, got {v}");
+        }
+        if w.completions == 0 {
+            assert_eq!(w.ttft_pct(99.0), 0.0);
+            assert_eq!(s.ttft_attainment, 0.0);
+            assert_eq!(s.e2e_attainment, 0.0);
+        }
+    }
+    // idle troughs burn no error budget, so a quiet stream never alerts
+    // on its empty windows
+    for a in &report.alerts {
+        let bad_window = &series.windows()[a.window];
+        assert!(bad_window.completions > 0, "an empty window can never raise an alert");
+    }
+    let total: u64 = series.windows().iter().map(|w| w.completions).sum();
+    assert_eq!(total as usize, r.requests);
+}
+
+#[test]
+fn long_streams_coarsen_in_place_and_stay_retention_independent() {
+    let cfg = TrafficConfig::new(9, 40.0, 400.0, Mix::Chat).with_max_requests(1_500);
+    let mut gen = cfg.build();
+    let (mut fleet, mut router) = chunked_fleet(2);
+    let mut series = WindowSeries::new(0.5, 16);
+    // a tight retention cap: raw records are sampled, histograms exact
+    let opts = ServeOptions::streaming(256);
+    let r = fleet.serve_monitored(&mut gen, router.as_mut(), opts, &mut series);
+
+    assert!(!r.complete, "the cap must have been hit for this pin to mean anything");
+    assert!(series.coarsenings() > 0, "a long stream must coarsen its windows");
+    assert!(series.len() <= 16, "the window budget is a hard bound");
+    let completions: u64 = series.windows().iter().map(|w| w.completions).sum();
+    assert_eq!(completions as usize, r.requests);
+    // merging stays bit-exact even when raw-record retention was capped
+    assert_eq!(series.merged_ttft().counts(), r.ttft_hist.counts());
+    assert_eq!(series.merged_e2e().counts(), r.e2e_hist.counts());
+}

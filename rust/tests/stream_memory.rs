@@ -15,7 +15,7 @@ use halo::cluster::{
 };
 use halo::config::HwConfig;
 use halo::model::LlmConfig;
-use halo::obs::peak_rss_bytes;
+use halo::obs::{peak_rss_bytes, WindowSeries};
 
 /// Tiny fixed-band requests: the workload's footprint is dominated by
 /// the serving loop, not by any single giant context.
@@ -80,4 +80,33 @@ fn million_request_stream_runs_in_flat_memory() {
     // sanity: the big run really did ~100x the work
     assert!(big.tokens > 50 * base.tokens);
     assert_eq!(big.ttft_hist.count(), 1_000_000);
+
+    // the same 1M stream again, now fully monitored: windowed telemetry
+    // plus capped span recording. Monitoring must (a) not perturb a
+    // single simulated f64 — same fingerprint as the unmonitored run —
+    // (b) merge its windowed populations bit-exactly onto the whole-run
+    // histograms, and (c) stay inside the same flat-memory envelope
+    // (series and recorders are fixed-size by construction).
+    let mut series = WindowSeries::new(60.0, 64);
+    let mut gen = config(99, rate, 1_000_000).build();
+    let mut monitored_fleet = fleet();
+    monitored_fleet.enable_obs_capped(4096);
+    let mon = monitored_fleet.serve_monitored(
+        &mut gen,
+        &mut LeastLoaded,
+        ServeOptions::streaming(4096),
+        &mut series,
+    );
+    assert_eq!(mon.requests, 1_000_000);
+    assert_eq!(mon.fingerprint(), big.fingerprint(), "monitoring must not perturb the serve");
+    assert_eq!(series.merged_ttft().counts(), big.ttft_hist.counts());
+    assert_eq!(series.merged_e2e().counts(), big.e2e_hist.counts());
+    let rss_monitored = peak_rss_bytes().unwrap();
+    let growth_mon = rss_monitored.saturating_sub(rss_after);
+    assert!(
+        growth_mon < BOUND,
+        "monitoring a 1M-request stream grew peak RSS by {:.1} MB (bound {} MB)",
+        growth_mon as f64 / 1e6,
+        BOUND / (1024 * 1024)
+    );
 }
