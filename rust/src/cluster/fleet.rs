@@ -916,6 +916,23 @@ impl Fleet {
     pub fn recorders(&self) -> Option<Vec<&Recorder>> {
         self.devices.iter().map(Device::obs).collect()
     }
+
+    /// Fleet-wide observability drop counters `(spans, events,
+    /// decode-batch records)` summed across device recorders, or `None`
+    /// unless obs is enabled. `(0, 0, 0)` means the recorded trace is
+    /// lossless; anything else marks downstream span-derived analyses
+    /// (attribution, critical paths) as working from partial evidence.
+    pub fn obs_dropped(&self) -> Option<(u64, u64, u64)> {
+        let recs = self.recorders()?;
+        let mut total = (0u64, 0u64, 0u64);
+        for r in recs {
+            let (s, e) = r.dropped();
+            total.0 += s;
+            total.1 += e;
+            total.2 += r.dropped_batches();
+        }
+        Some(total)
+    }
 }
 
 fn role_of(id: usize, prefill: &[usize], decode: &[usize]) -> &'static str {

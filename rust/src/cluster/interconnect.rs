@@ -36,6 +36,16 @@ impl Interconnect {
         self
     }
 
+    /// The same link with its bandwidth scaled by `k` (latency and
+    /// per-byte energy untouched) — the replay-side ground truth for
+    /// the critical-path plane's "interconnect bandwidth ×k" what-if.
+    pub fn with_bandwidth_scale(mut self, k: f64) -> Self {
+        assert!(k > 0.0);
+        self.name = "scaled";
+        self.bw *= k;
+        self
+    }
+
     /// On-board / 2.5D-class link (NVLink-generation bandwidth;
     /// ~1.3 pJ/bit short-reach SerDes).
     pub fn board() -> Self {
@@ -131,6 +141,18 @@ mod tests {
         // override hook
         let custom = Interconnect::new(1e9, 0.0).with_transfer_energy(5e-12);
         assert!((custom.transfer_energy(1000) - 5e-9).abs() < 1e-20);
+    }
+
+    #[test]
+    fn bandwidth_scale_shrinks_only_the_pipe_term() {
+        let base = Interconnect::ethernet();
+        let fast = Interconnect::ethernet().with_bandwidth_scale(2.0);
+        assert_eq!(fast.latency, base.latency);
+        assert_eq!(fast.e_per_byte, base.e_per_byte);
+        let bytes = 1_000_000_000u64;
+        let pipe_base = base.transfer_time(bytes) - base.latency;
+        let pipe_fast = fast.transfer_time(bytes) - fast.latency;
+        assert!((pipe_fast * 2.0 - pipe_base).abs() < 1e-9 * pipe_base);
     }
 
     #[test]

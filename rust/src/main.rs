@@ -7,6 +7,7 @@
 //!   cluster   — fleet-scale serving simulation with routing policies
 //!   trace     — cluster replay with request-lifecycle spans -> Chrome-trace JSON
 //!   monitor   — streamed serve with windowed telemetry, SLO burn rates, attribution
+//!   critpath  — causal critical-path extraction with bottleneck + what-if attribution
 //!   dse       — design-space exploration / SLO auto-tuning over the simulator
 //!   power     — per-event energy attribution and TDP throttling studies
 //!   bench     — pinned simulator benchmarks (the perf trajectory CI tracks)
@@ -42,7 +43,7 @@ halo — memory-centric heterogeneous accelerator for low-batch LLM inference
 USAGE:
   halo simulate [--model llama2-7b|qwen3-8b] [--mapping HALO1|HALO2|CENT|AttAcc1|AttAcc2|FullCiD|FullCiM|HALO-SA]
                 [--lin N] [--lout N] [--batch N]
-  halo report   [--all | --fig 1|4|5|6|7|8|9|10|cluster|dse|power|obs | --headline] [--out DIR]
+  halo report   [--all | --fig 1|4|5|6|7|8|9|10|cluster|dse|power|obs|critpath | --headline] [--out DIR]
   halo roofline [--lin N] [--batch N]
   halo cluster  [--devices N] [--policy roundrobin|leastloaded|disaggregated|kvaware] [--mix chat|summarization|generation|interactive]
                 [--model llama2-7b|qwen3-8b] [--requests N] [--rate R] [--slots N] [--link board|pcie|eth|wan]
@@ -50,6 +51,7 @@ USAGE:
                 [--chunk TOKENS] [--admission fifo|spf|priority] [--kv-cap GB|auto]
                 [--arrivals poisson|mmpp|diurnal] [--duration S] [--sessions]
                 [--power] [--tdp W|auto] [--dvfs SPEC] [--smoke] [--json] [--timeseries FILE]
+                [--critpath FILE] [--metrics-out FILE]
                   --arrivals  stream requests from a seeded arrival-process generator
                               instead of replaying a pre-built trace: poisson (memoryless),
                               mmpp (two-state bursty), diurnal (rate curve over --duration).
@@ -80,6 +82,12 @@ USAGE:
                   --timeseries also record windowed telemetry (simulated time) during the
                               run and write one `halo.timeseries.v1` snapshot to FILE
                               (window knobs as in `halo monitor`)
+                  --critpath  also record request-lifecycle spans during the run and
+                              write one `halo.critpath.v1` snapshot to FILE: per-request
+                              causal paths, per-resource bottleneck shares, what-ifs
+                  --metrics-out
+                              write the whole-run metrics registry as OpenMetrics text
+                              exposition to FILE (Prometheus/victoria scrapable)
   halo trace    [same flags as cluster] [--out FILE]
                   replay the cluster with request-lifecycle span recording on (queued,
                   prefill chunks, KV handoffs, decode steps, evictions, throttling) and
@@ -89,7 +97,7 @@ USAGE:
   halo monitor  [same flags as cluster] [--window S] [--max-windows N]
                 [--ttft-slo S] [--e2e-slo S] [--slo-objective P]
                 [--fast-windows N] [--slow-windows N] [--burn-threshold X]
-                [--timeseries FILE] [--attrib DIR]
+                [--timeseries FILE] [--attrib DIR] [--critpath FILE] [--metrics-out FILE]
                   serve a generated stream (default: mmpp arrivals) with windowed
                   telemetry over simulated time: a per-window throughput / latency /
                   utilization table, SLO attainment with fast+slow burn-rate alerts,
@@ -109,6 +117,26 @@ USAGE:
                   --burn-threshold alert when both burns exceed this (default 4.0)
                   --timeseries  write one `halo.timeseries.v1` snapshot to FILE
                   --attrib      write the attribution + SLO window tables as CSV to DIR
+                  --critpath    write one `halo.critpath.v1` snapshot to FILE (paths
+                                extracted from the capped stream recorders; lossy runs
+                                degrade to partial coverage instead of failing)
+                  --metrics-out write the whole-run + windowed metrics registry as
+                                OpenMetrics text exposition to FILE
+  halo critpath [same flags as cluster] [--paths N] [--csv DIR] [--out FILE]
+                  extract every served request's causal critical path from an
+                  instrumented replay (default: mmpp arrivals): queue wait, prefill
+                  chunks, KV handoffs, decode steps, throttle stalls — each segment
+                  classified by the resource that binds it (cim_compute,
+                  cid_bandwidth, interconnect, kv_capacity, scheduler, thermal).
+                  Prints the slowest per-request paths, the per-resource bottleneck
+                  profile (all requests vs the p99 e2e tail, split by phase), and a
+                  COZ-style what-if table: estimated TTFT/e2e p99 movement under
+                  interconnect bandwidth x2, CiM mesh x2, KV budget +50%, no TDP
+                  cap. Path segments reconcile bit-exactly against the recorded
+                  e2e; the command exits nonzero on any mismatch, so CI gates on it.
+                  --paths     how many slowest path dumps to print (default 3)
+                  --csv       write the bottleneck + what-if tables as CSV to DIR
+                  --out       write one `halo.critpath.v1` snapshot to FILE
   halo dse      [--space smoke|sched|fleet|hw|mapping|power|full] [--strategy grid|random|hillclimb]
                 [--model llama2-7b|qwen3-8b] [--mix chat|summarization|generation|interactive]
                 [--requests N] [--seed S] [--slots N] [--link board|pcie|eth|wan]
@@ -204,6 +232,7 @@ fn main() -> Result<()> {
         "cluster" => cmd_cluster(&flags),
         "trace" => cmd_trace(&flags),
         "monitor" => cmd_monitor(&flags),
+        "critpath" => cmd_critpath(&flags),
         "dse" => cmd_dse(&flags),
         "power" => cmd_power(&flags),
         "bench" => cmd_bench(&flags),
@@ -286,6 +315,10 @@ fn cmd_report(f: &HashMap<String, String>) -> Result<()> {
             "obs" => vec![
                 report::obs::attribution_breakdown(&hw),
                 report::obs::slo_burn_windows(&hw),
+            ],
+            "critpath" => vec![
+                report::critpath::bottleneck_table(&hw),
+                report::critpath::whatif_table(&hw),
             ],
             "dse" => vec![
                 report::dse::vb_extremes_search(&hw),
@@ -609,6 +642,8 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
         Some(_) => Some(monitor_series(f, setup.duration_s)?),
         None => None,
     };
+    let cp_out = f.get("critpath").map(PathBuf::from);
+    let metrics_out = f.get("metrics-out").map(PathBuf::from);
     let mut prof = SelfProfile::new();
     let (mut fleet, r) = match setup.traffic() {
         // streamed: pull arrivals from the generator one at a time under a
@@ -618,6 +653,9 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
             const STREAM_RETAIN: usize = 65_536;
             let mut gen = cfg.build();
             let (mut fleet, mut router) = setup.build_fleet();
+            if cp_out.is_some() {
+                fleet.enable_obs_capped(STREAM_RETAIN);
+            }
             let opts = ServeOptions::streaming(STREAM_RETAIN);
             let r = prof.time("fleet_replay", || match series.as_mut() {
                 Some(s) => fleet.serve_monitored(&mut gen, router.as_mut(), opts, s),
@@ -627,6 +665,9 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
         }
         None => {
             let (trace, mut fleet, mut router) = setup.build();
+            if cp_out.is_some() {
+                fleet.enable_obs();
+            }
             let r = prof.time("fleet_replay", || match series.as_mut() {
                 Some(s) => fleet.replay_monitored(&trace, router.as_mut(), s),
                 None => fleet.replay(&trace, router.as_mut()),
@@ -636,10 +677,52 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
     };
     prof.add("graph_walks", fleet.cost_walks());
     prof.add("oracle_memo_hits", fleet.cost_memo_hits());
+    let obs_dropped = fleet.obs_dropped();
+    if !json {
+        if let Some((s, e, b)) = obs_dropped.filter(|&d| d != (0, 0, 0)) {
+            println!(
+                "WARNING    : lossy trace — recorder dropped {s} spans / {e} events / {b} \
+                 decode batches; critical-path coverage degrades to partial"
+            );
+        }
+    }
     if let (Some(path), Some(s)) = (&ts_out, &series) {
-        std::fs::write(path, obs::timeseries_snapshot(s, None, setup.config_json()).to_string())?;
+        let snap = obs::timeseries_snapshot(s, None, setup.config_json(), obs_dropped);
+        std::fs::write(path, snap.to_string())?;
         if !json {
             println!("timeseries : {} windows -> {}", s.len(), path.display());
+        }
+    }
+    if let Some(path) = &metrics_out {
+        let mut reg = obs::fleet_registry(&r, fleet.cost_walks(), fleet.cost_memo_hits());
+        if let Some(s) = &series {
+            obs::timeseries_registry(&mut reg, s);
+        }
+        std::fs::write(path, reg.to_openmetrics())?;
+        if !json {
+            println!("metrics    : OpenMetrics exposition -> {}", path.display());
+        }
+    }
+    if let Some(path) = &cp_out {
+        let recorders = fleet.recorders().expect("--critpath enables span recording");
+        let paths =
+            obs::extract_paths(&r.served, &recorders, fleet.kv_spans().unwrap_or(&[]));
+        let bad = obs::reconcile_paths(&paths);
+        if bad != 0 {
+            bail!(
+                "critical paths failed to reconcile bit-exactly on {bad} of {} requests",
+                paths.len()
+            );
+        }
+        let snap =
+            critpath_snapshot_from(&paths, f, setup.duration_s, setup.config_json(), obs_dropped)?;
+        std::fs::write(path, snap.to_string())?;
+        if !json {
+            println!(
+                "critpath   : {} paths (reconciled bit-exact) -> {}",
+                paths.len(),
+                path.display()
+            );
         }
     }
     if json {
@@ -649,6 +732,7 @@ fn cmd_cluster(f: &HashMap<String, String>) -> Result<()> {
             fleet.cost_memo_hits(),
             &prof,
             setup.config_json(),
+            obs_dropped,
         );
         println!("{snap}");
         return Ok(());
@@ -780,7 +864,8 @@ fn cmd_trace(f: &HashMap<String, String>) -> Result<()> {
         None => fleet.replay(&trace, router.as_mut()),
     };
     if let (Some(path), Some(s)) = (&ts_out, &series) {
-        std::fs::write(path, obs::timeseries_snapshot(s, None, setup.config_json()).to_string())?;
+        let snap = obs::timeseries_snapshot(s, None, setup.config_json(), fleet.obs_dropped());
+        std::fs::write(path, snap.to_string())?;
         println!("timeseries : {} windows -> {}", s.len(), path.display());
     }
 
@@ -959,6 +1044,8 @@ fn cmd_monitor(flags: &HashMap<String, String>) -> Result<()> {
     let r = prof.time("fleet_replay", || {
         fleet.serve_monitored(&mut gen, router.as_mut(), opts, &mut series)
     });
+    prof.add("graph_walks", fleet.cost_walks());
+    prof.add("oracle_memo_hits", fleet.cost_memo_hits());
 
     // the windowed populations must merge bit-exactly onto the whole-run
     // histograms — the tentpole invariant, enforced on every run
@@ -991,6 +1078,13 @@ fn cmd_monitor(flags: &HashMap<String, String>) -> Result<()> {
     // streaming caps (the CI smoke path always does)
     let recorders = fleet.recorders().expect("obs enabled before serve");
     let spans_complete = r.complete && recorders.iter().all(|rec| rec.dropped() == (0, 0));
+    let obs_dropped = fleet.obs_dropped();
+    if let Some((s, e, b)) = obs_dropped.filter(|&d| d != (0, 0, 0)) {
+        println!(
+            "WARNING  : lossy trace — recorder dropped {s} spans / {e} events / {b} decode \
+             batches; critical-path coverage degrades to partial (shorten --duration)"
+        );
+    }
     let at = if spans_complete {
         let attrs = obs::attribute(&r.served, &recorders, fleet.kv_spans().unwrap_or(&[]));
         let bad = obs::reconcile(&attrs);
@@ -1021,6 +1115,12 @@ fn cmd_monitor(flags: &HashMap<String, String>) -> Result<()> {
         series.coarsenings(),
         fmt_seconds(prof.wall_s("fleet_replay"))
     );
+    println!(
+        "profile  : serve {} wall, {} graph walks, {} oracle memo hits",
+        fmt_seconds(prof.wall_s("fleet_replay")),
+        prof.count("graph_walks"),
+        prof.count("oracle_memo_hits")
+    );
 
     if let Some(dir) = f.get("attrib").map(PathBuf::from) {
         wt.write_csv(&dir)?;
@@ -1030,9 +1130,227 @@ fn cmd_monitor(flags: &HashMap<String, String>) -> Result<()> {
         println!("csv      : tables -> {}", dir.display());
     }
     if let Some(path) = f.get("timeseries").map(PathBuf::from) {
-        let snap = obs::timeseries_snapshot(&series, Some(&slo), setup.config_json());
+        let snap = obs::timeseries_snapshot(&series, Some(&slo), setup.config_json(), obs_dropped);
         std::fs::write(&path, snap.to_string())?;
         println!("snapshot : halo.timeseries.v1 -> {}", path.display());
+    }
+    if let Some(path) = f.get("metrics-out").map(PathBuf::from) {
+        let mut reg = obs::fleet_registry(&r, fleet.cost_walks(), fleet.cost_memo_hits());
+        obs::timeseries_registry(&mut reg, &series);
+        std::fs::write(&path, reg.to_openmetrics())?;
+        println!("metrics  : OpenMetrics exposition -> {}", path.display());
+    }
+    if let Some(path) = f.get("critpath").map(PathBuf::from) {
+        // the stream recorders are capped, so long runs degrade to partial
+        // coverage — the reconciliation invariant holds regardless
+        let paths = obs::extract_paths(&r.served, &recorders, fleet.kv_spans().unwrap_or(&[]));
+        let bad = obs::reconcile_paths(&paths);
+        if bad != 0 {
+            bail!(
+                "critical paths failed to reconcile bit-exactly on {bad} of {} requests",
+                paths.len()
+            );
+        }
+        let mean_cov =
+            paths.iter().map(|p| p.coverage).sum::<f64>() / paths.len().max(1) as f64;
+        let snap =
+            critpath_snapshot_from(&paths, &f, setup.duration_s, setup.config_json(), obs_dropped)?;
+        std::fs::write(&path, snap.to_string())?;
+        println!(
+            "critpath : {} paths (reconciled bit-exact, coverage mean {mean_cov:.3}) -> {}",
+            paths.len(),
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+/// References to the `n` slowest requests by recorded e2e latency.
+fn top_paths(paths: &[obs::CritPath], n: usize) -> Vec<&obs::CritPath> {
+    let mut by_e2e: Vec<&obs::CritPath> = paths.iter().collect();
+    by_e2e.sort_by(|a, b| b.e2e.total_cmp(&a.e2e));
+    by_e2e.truncate(n);
+    by_e2e
+}
+
+/// Assemble one `halo.critpath.v1` snapshot from extracted paths — the
+/// `--critpath FILE` flags on `cluster`/`monitor` and `halo critpath
+/// --out` all share this shape (window knobs as in `halo monitor`).
+fn critpath_snapshot_from(
+    paths: &[obs::CritPath],
+    f: &HashMap<String, String>,
+    duration_s: f64,
+    config: Json,
+    obs_dropped: Option<(u64, u64, u64)>,
+) -> Result<Json> {
+    let width = flag_f64(f, "window", (duration_s / 24.0).max(0.25));
+    if !(width > 0.0 && width.is_finite()) {
+        bail!("--window must be positive seconds");
+    }
+    let max_windows = flag_usize(f, "max-windows", 256);
+    let bottleneck = obs::bottleneck_profile(paths, 99.0);
+    let phases = obs::phase_profile(paths);
+    let windows = obs::windowed_profile(paths, width, max_windows);
+    let whatifs = obs::evaluate_all(paths, &obs::standard_whatifs());
+    let top = top_paths(paths, 5);
+    Ok(obs::critpath_snapshot(
+        paths,
+        obs::reconcile_paths(paths),
+        &bottleneck,
+        &phases,
+        &windows,
+        &whatifs,
+        &top,
+        config,
+        obs_dropped,
+    ))
+}
+
+fn cmd_critpath(flags: &HashMap<String, String>) -> Result<()> {
+    // critpath is a diagnosis surface like monitor: default to mmpp
+    // arrivals so a bare `halo critpath` profiles a bursty stream
+    let mut f = flags.clone();
+    f.entry("arrivals".to_string()).or_insert_with(|| "mmpp".to_string());
+    let setup = parse_cluster_setup(&f)?;
+    setup.print_header();
+
+    // path extraction wants every request's complete span record, so
+    // streamed arrivals are materialized up front and replayed with
+    // uncapped recorders (the capped live-stream surface is `halo
+    // monitor --critpath`, which degrades to partial coverage instead)
+    let (trace, mut fleet, mut router) = match setup.traffic() {
+        Some(cfg) => {
+            let trace = collect_trace(&mut cfg.build());
+            let (fleet, router) = setup.build_fleet();
+            (trace, fleet, router)
+        }
+        None => setup.build(),
+    };
+    fleet.enable_obs();
+    let mut prof = SelfProfile::new();
+    let r = prof.time("fleet_replay", || fleet.replay(&trace, router.as_mut()));
+    prof.add("graph_walks", fleet.cost_walks());
+    prof.add("oracle_memo_hits", fleet.cost_memo_hits());
+
+    let recorders = fleet.recorders().expect("obs enabled before replay");
+    let kv = fleet.kv_spans().unwrap_or(&[]);
+    let paths = prof.time("critpath_extract", || obs::extract_paths(&r.served, &recorders, kv));
+    let bad = obs::reconcile_paths(&paths);
+    if bad != 0 {
+        bail!(
+            "critical paths failed to reconcile bit-exactly on {bad} of {} requests",
+            paths.len()
+        );
+    }
+    let obs_dropped = fleet.obs_dropped();
+    if obs_dropped.is_some_and(|d| d != (0, 0, 0)) {
+        println!("WARNING  : lossy trace — coverage degrades to partial (see obs_dropped)");
+    }
+    let mean_cov = paths.iter().map(|p| p.coverage).sum::<f64>() / paths.len().max(1) as f64;
+    println!(
+        "critpath : {} paths reconcile bit-exactly against recorded e2e (coverage mean {:.3})",
+        paths.len(),
+        mean_cov
+    );
+
+    // the slowest requests, segment by segment
+    let n_dump = flag_usize(&f, "paths", 3);
+    const MAX_SEGMENTS: usize = 16;
+    for p in top_paths(&paths, n_dump) {
+        println!(
+            "\npath     : arrival {:.3}s  ttft {}  e2e {}  coverage {:.3}",
+            p.arrival,
+            fmt_seconds(p.ttft),
+            fmt_seconds(p.e2e),
+            p.coverage
+        );
+        for s in p.segments.iter().take(MAX_SEGMENTS) {
+            println!(
+                "  +{:>9.4}s  {:<13} {:<13} {:<8} {}",
+                s.start - p.arrival,
+                s.label,
+                s.resource.name(),
+                s.phase,
+                fmt_seconds(s.dur)
+            );
+        }
+        if p.segments.len() > MAX_SEGMENTS {
+            println!("  ... {} more segments", p.segments.len() - MAX_SEGMENTS);
+        }
+    }
+
+    // which resource binds the fleet: whole population, p99 tail, per phase
+    let rows = obs::bottleneck_profile(&paths, 99.0);
+    let phases = obs::phase_profile(&paths);
+    let mut bt = report::Table::new(
+        "critpath_bottleneck",
+        "Critical-path bottleneck profile — seconds and share per binding resource, \
+         all requests vs p99 e2e tail",
+        &["resource", "total_s", "share", "tail_s", "tail_share", "prefill_share", "decode_share"],
+    );
+    for row in &rows {
+        let phase_share = |phase: &str| {
+            phases
+                .iter()
+                .find(|p| p.phase == phase && p.resource == row.resource)
+                .map_or(0.0, |p| p.share)
+        };
+        bt.row(vec![
+            row.resource.name().to_string(),
+            format!("{:.6}", row.total_s),
+            format!("{:.4}", row.share),
+            format!("{:.6}", row.tail_s),
+            format!("{:.4}", row.tail_share),
+            format!("{:.4}", phase_share("prefill")),
+            format!("{:.4}", phase_share("decode")),
+        ]);
+    }
+    println!("\n{}", bt.to_markdown());
+
+    // the COZ-style counterfactuals: what each upgrade would buy
+    let whatifs = obs::evaluate_all(&paths, &obs::standard_whatifs());
+    let mut wt = report::Table::new(
+        "critpath_whatif",
+        "What-if virtual speedups — estimated p99 movement under scaled resources",
+        &[
+            "whatif",
+            "base_ttft_p99_s",
+            "est_ttft_p99_s",
+            "base_e2e_p99_s",
+            "est_e2e_p99_s",
+            "delta_e2e_p99_s",
+        ],
+    );
+    for w in &whatifs {
+        wt.row(vec![
+            w.name.to_string(),
+            format!("{:.6}", w.base_ttft_p99_s),
+            format!("{:.6}", w.est_ttft_p99_s),
+            format!("{:.6}", w.base_e2e_p99_s),
+            format!("{:.6}", w.est_e2e_p99_s),
+            format!("{:.6}", w.delta_e2e_p99_s),
+        ]);
+    }
+    println!("{}", wt.to_markdown());
+
+    println!(
+        "profile  : replay {} + extract {} wall, {} graph walks, {} oracle memo hits",
+        fmt_seconds(prof.wall_s("fleet_replay")),
+        fmt_seconds(prof.wall_s("critpath_extract")),
+        prof.count("graph_walks"),
+        prof.count("oracle_memo_hits")
+    );
+
+    if let Some(dir) = f.get("csv").map(PathBuf::from) {
+        bt.write_csv(&dir)?;
+        wt.write_csv(&dir)?;
+        println!("csv      : tables -> {}", dir.display());
+    }
+    if let Some(path) = f.get("out").map(PathBuf::from) {
+        let snap =
+            critpath_snapshot_from(&paths, &f, setup.duration_s, setup.config_json(), obs_dropped)?;
+        std::fs::write(&path, snap.to_string())?;
+        println!("snapshot : halo.critpath.v1 -> {}", path.display());
     }
     Ok(())
 }

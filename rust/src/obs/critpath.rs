@@ -1,0 +1,666 @@
+//! Causal critical-path extraction: *what resource* binds each request.
+//!
+//! `obs::attrib` answers "where did the time go" per pipeline component;
+//! this module answers the next question — what hardware resource was
+//! the binding constraint along each served request's dependency chain,
+//! and therefore what a hardware change would actually buy. From the
+//! recorded span timelines it reconstructs each request's critical path
+//! across devices:
+//!
+//! queue wait → prefill chunks (with admission-gate edges) → KV handoff
+//! over the interconnect → decode steps (batch-coupled to co-resident
+//! requests) → throttle stalls and eviction recompute
+//!
+//! and classifies every segment by binding resource ([`Resource`]):
+//! CiM compute binds prefill, CiD/HBM bandwidth binds decode, the
+//! interposer binds KV handoff, KV capacity binds recompute and
+//! admission-blocked queueing, the scheduler binds gaps between busy
+//! intervals, and the thermal governor binds throttle stalls — HALO's
+//! phase-flipping bottleneck argument, made measurable per request.
+//!
+//! **Bit-exact discipline** (same as `obs::attrib`): each path ends in a
+//! signed `closure` segment computed with the shared ulp-correcting
+//! residual, so folding every segment duration from 0.0 reproduces the
+//! recorded e2e to the last bit — pinned by [`reconcile_paths`] and
+//! enforced in CI. Under retention-cap span drops extraction degrades
+//! gracefully: inferred segments fall to [`Resource::Unattributed`] and
+//! each path reports the [`CritPath::coverage`] fraction its recorded
+//! service spans actually evidence.
+
+use std::collections::{HashMap, HashSet};
+
+use super::attrib::residual;
+use super::span::{EventKind, Recorder, Span, SpanKind};
+use crate::sim::queueing::ServedRequest;
+
+/// The binding resource of a critical-path segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resource {
+    /// CiM tile compute — prefill / chunked prefill passes.
+    CimCompute,
+    /// CiD/HBM bandwidth — batched decode steps.
+    CidBandwidth,
+    /// Interposer / interconnect — KV-cache handoff transfers.
+    Interconnect,
+    /// KV byte budget — eviction recompute and admission-blocked waits.
+    KvCapacity,
+    /// Queue / scheduler — waits between busy intervals.
+    Scheduler,
+    /// Thermal governor — throttle stall carved out of service spans.
+    Thermal,
+    /// Closure under lossy observation (retention-cap drops).
+    Unattributed,
+}
+
+pub const N_RESOURCES: usize = 7;
+
+impl Resource {
+    pub const ALL: [Resource; N_RESOURCES] = [
+        Resource::CimCompute,
+        Resource::CidBandwidth,
+        Resource::Interconnect,
+        Resource::KvCapacity,
+        Resource::Scheduler,
+        Resource::Thermal,
+        Resource::Unattributed,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Resource::CimCompute => "cim_compute",
+            Resource::CidBandwidth => "cid_bandwidth",
+            Resource::Interconnect => "interconnect",
+            Resource::KvCapacity => "kv_capacity",
+            Resource::Scheduler => "scheduler",
+            Resource::Thermal => "thermal",
+            Resource::Unattributed => "unattributed",
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        Resource::ALL.iter().position(|r| r == self).unwrap()
+    }
+}
+
+/// One segment of a request's critical path, in simulated seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Segment {
+    /// What the segment was: `queue_wait`, `prefill`, `prefill_chunk`,
+    /// `recompute`, `kv_handoff`, `decode_step`, `throttle_stall`,
+    /// `gap`, or the final signed `closure`.
+    pub label: &'static str,
+    pub resource: Resource,
+    /// Serving phase this segment belongs to (`prefill` before the
+    /// first token, `decode` after).
+    pub phase: &'static str,
+    pub start: f64,
+    /// Signed duration; only the final `closure` segment may be
+    /// negative (it is the ulp-correcting residual).
+    pub dur: f64,
+}
+
+/// One served request's extracted critical path.
+#[derive(Debug, Clone)]
+pub struct CritPath {
+    pub arrival: f64,
+    /// Recorded TTFT — the phase boundary for segment classification.
+    pub ttft: f64,
+    /// Recorded e2e — bit-exactly the fold of the segment durations.
+    pub e2e: f64,
+    pub segments: Vec<Segment>,
+    /// Fraction of e2e directly evidenced by recorded service spans
+    /// (prefill/recompute/handoff/decode/stall), in `[0, 1]`. Queue
+    /// wait and scheduler gaps are inferred, not evidenced, so a
+    /// heavily queued request reports < 1 even under full observation;
+    /// retention-cap drops push it further down.
+    pub coverage: f64,
+}
+
+impl CritPath {
+    /// Left fold of the segment durations from 0.0 — reproduces
+    /// [`Self::e2e`] bit-exactly (pinned by [`reconcile_paths`]).
+    pub fn fold(&self) -> f64 {
+        self.segments.iter().fold(0.0, |acc, s| acc + s.dur)
+    }
+
+    /// Total critical-path seconds per resource, in [`Resource::ALL`]
+    /// order.
+    pub fn per_resource(&self) -> [f64; N_RESOURCES] {
+        let mut t = [0.0; N_RESOURCES];
+        for s in &self.segments {
+            t[s.resource.index()] += s.dur;
+        }
+        t
+    }
+}
+
+/// Labels whose segments count as directly recorded service evidence.
+fn is_service(label: &str) -> bool {
+    matches!(
+        label,
+        "prefill" | "prefill_chunk" | "recompute" | "kv_handoff" | "decode_step" | "throttle_stall"
+    )
+}
+
+/// A raw busy interval joined to one request, before the path walk.
+#[derive(Clone, Copy)]
+struct Interval {
+    start: f64,
+    dur: f64,
+    label: &'static str,
+    resource: Resource,
+}
+
+/// Extract every served request's critical path from the fleet's
+/// recorded span timelines (`recorders`, device order), decode-batch
+/// membership records, and the interconnect's KV-transfer spans.
+/// Requests join to spans by exact arrival time (unique per stream by
+/// construction). Never panics on lossy input: dropped observation
+/// shows up as `Unattributed` closure and reduced coverage.
+pub fn extract_paths(
+    served: &[ServedRequest],
+    recorders: &[&Recorder],
+    kv_spans: &[Span],
+) -> Vec<CritPath> {
+    let idx: HashMap<u64, usize> =
+        served.iter().enumerate().map(|(i, r)| (r.arrival.to_bits(), i)).collect();
+    let n = served.len();
+    let mut intervals: Vec<Vec<Interval>> = vec![Vec::new(); n];
+    let mut stall = vec![0.0f64; n];
+    let mut blocked: HashSet<u64> = HashSet::new();
+    let lossy = recorders.iter().any(|r| r.dropped() != (0, 0) || r.dropped_batches() > 0);
+    for rec in recorders {
+        for s in &rec.spans {
+            let Some(&i) = idx.get(&s.arrival.to_bits()) else { continue };
+            let (label, resource) = match s.kind {
+                SpanKind::Prefill => ("prefill", Resource::CimCompute),
+                SpanKind::PrefillChunk => ("prefill_chunk", Resource::CimCompute),
+                SpanKind::Recompute => ("recompute", Resource::KvCapacity),
+                SpanKind::KvTransfer => ("kv_handoff", Resource::Interconnect),
+                // decode steps carry arrival -1.0; membership arrives
+                // via the batch side-channel below
+                SpanKind::DecodeStep => continue,
+            };
+            intervals[i].push(Interval { start: s.start, dur: s.dur, label, resource });
+        }
+        for b in &rec.batches {
+            for a in &b.arrivals {
+                if let Some(&i) = idx.get(&a.to_bits()) {
+                    intervals[i].push(Interval {
+                        start: b.start,
+                        dur: b.dur,
+                        label: "decode_step",
+                        resource: Resource::CidBandwidth,
+                    });
+                }
+            }
+        }
+        for e in &rec.events {
+            match e.kind {
+                EventKind::Throttle => {
+                    if let Some(&i) = idx.get(&e.arrival.to_bits()) {
+                        stall[i] += e.stall_s;
+                    }
+                }
+                EventKind::AdmitBlocked => {
+                    blocked.insert(e.arrival.to_bits());
+                }
+                _ => {}
+            }
+        }
+    }
+    for s in kv_spans {
+        if s.kind == SpanKind::KvTransfer {
+            if let Some(&i) = idx.get(&s.arrival.to_bits()) {
+                intervals[i].push(Interval {
+                    start: s.start,
+                    dur: s.dur,
+                    label: "kv_handoff",
+                    resource: Resource::Interconnect,
+                });
+            }
+        }
+    }
+    served
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            build_path(r, &mut intervals[i], stall[i], blocked.contains(&r.arrival.to_bits()), lossy)
+        })
+        .collect()
+}
+
+/// Walk one request's sorted busy intervals from its arrival, emitting
+/// gap segments for waits, verbatim segments for recorded service,
+/// carving the thermal stall out, and closing with the bit-exact
+/// residual.
+fn build_path(
+    r: &ServedRequest,
+    intervals: &mut [Interval],
+    stall_s: f64,
+    kv_blocked: bool,
+    lossy: bool,
+) -> CritPath {
+    intervals.sort_by(|a, b| {
+        a.start.partial_cmp(&b.start).unwrap().then(a.dur.partial_cmp(&b.dur).unwrap())
+    });
+    let t_first = r.arrival + r.ttft;
+    let phase_of = |start: f64| if start < t_first { "prefill" } else { "decode" };
+    let infer_resource = |wait: Resource| if lossy { Resource::Unattributed } else { wait };
+    let mut segments: Vec<Segment> = Vec::new();
+    let mut cursor = r.arrival;
+    let mut first_gap = true;
+    for iv in intervals.iter() {
+        if iv.dur <= 0.0 {
+            continue;
+        }
+        if iv.start > cursor {
+            let (label, res) = if first_gap {
+                // the head-of-path wait is queue wait; an admission-gate
+                // event reclassifies it as KV-capacity-bound
+                let bound = if kv_blocked { Resource::KvCapacity } else { Resource::Scheduler };
+                ("queue_wait", bound)
+            } else {
+                ("gap", Resource::Scheduler)
+            };
+            segments.push(Segment {
+                label,
+                resource: infer_resource(res),
+                phase: phase_of(cursor),
+                start: cursor,
+                dur: iv.start - cursor,
+            });
+            cursor = iv.start;
+        }
+        first_gap = false;
+        let end = iv.start + iv.dur;
+        if end <= cursor {
+            continue; // fully shadowed by an earlier interval
+        }
+        // trim any overlap with the path walked so far: the critical
+        // path only takes the part past the cursor
+        let start = cursor.max(iv.start);
+        segments.push(Segment {
+            label: iv.label,
+            resource: iv.resource,
+            phase: phase_of(start),
+            start,
+            dur: end - start,
+        });
+        cursor = end;
+    }
+    // carve the thermal governor's stall out of the service segments it
+    // stretched (prefill first, excess out of recompute — the same
+    // netting order as obs::attrib), surfacing it as its own segment
+    if stall_s > 0.0 {
+        let mut remaining = stall_s;
+        let mut last_carved = None;
+        for pass in 0..2 {
+            for (k, s) in segments.iter_mut().enumerate() {
+                if remaining <= 0.0 {
+                    break;
+                }
+                let eligible = match pass {
+                    0 => s.resource == Resource::CimCompute,
+                    _ => s.label == "recompute",
+                };
+                if !eligible {
+                    continue;
+                }
+                let take = remaining.min(s.dur.max(0.0));
+                if take > 0.0 {
+                    s.dur -= take;
+                    remaining -= take;
+                    last_carved = Some(k);
+                }
+            }
+        }
+        let carved = stall_s - remaining;
+        if carved > 0.0 {
+            let at = last_carved.unwrap();
+            let seg = segments[at];
+            segments.insert(
+                at + 1,
+                Segment {
+                    label: "throttle_stall",
+                    resource: Resource::Thermal,
+                    phase: seg.phase,
+                    start: seg.start + seg.dur,
+                    dur: carved,
+                },
+            );
+        }
+    }
+    // bit-exact closure: whatever the walk could not evidence (decode
+    // inter-cycle waits under full observation; dropped spans under a
+    // retention cap) lands in the signed residual
+    let parts: Vec<f64> = segments.iter().map(|s| s.dur).collect();
+    let closure = residual(r.e2e, &parts);
+    let has_decode = segments.iter().any(|s| s.resource == Resource::CidBandwidth);
+    segments.push(Segment {
+        label: "closure",
+        resource: if lossy || !has_decode { Resource::Unattributed } else { Resource::Scheduler },
+        phase: "decode",
+        start: cursor,
+        dur: closure,
+    });
+    let service: f64 =
+        segments.iter().filter(|s| is_service(s.label)).map(|s| s.dur.max(0.0)).sum();
+    let coverage = if r.e2e > 0.0 { (service / r.e2e).clamp(0.0, 1.0) } else { 1.0 };
+    CritPath { arrival: r.arrival, ttft: r.ttft, e2e: r.e2e, segments, coverage }
+}
+
+/// Number of paths whose segment fold does *not* reproduce the recorded
+/// e2e bit-exactly. Must be 0; CI fails otherwise.
+pub fn reconcile_paths(paths: &[CritPath]) -> usize {
+    paths.iter().filter(|p| p.fold().to_bits() != p.e2e.to_bits()).count()
+}
+
+/// One row of the fleet bottleneck profile.
+#[derive(Debug, Clone, Copy)]
+pub struct BottleneckRow {
+    pub resource: Resource,
+    /// Critical-path seconds bound by this resource, whole population.
+    pub total_s: f64,
+    /// Share of all critical-path time.
+    pub share: f64,
+    /// Critical-path seconds over the p-tail (slowest requests by e2e).
+    pub tail_s: f64,
+    /// Share of the tail's critical-path time.
+    pub tail_share: f64,
+}
+
+/// Aggregate paths into a per-resource bottleneck profile, population
+/// vs the e2e tail at percentile `p` (e.g. 99.0 → slowest 1%). Always
+/// returns one row per [`Resource::ALL`] entry (stable table shape);
+/// empty input yields an empty vec.
+pub fn bottleneck_profile(paths: &[CritPath], p: f64) -> Vec<BottleneckRow> {
+    if paths.is_empty() {
+        return Vec::new();
+    }
+    let mut order: Vec<usize> = (0..paths.len()).collect();
+    order.sort_by(|&a, &b| paths[a].e2e.partial_cmp(&paths[b].e2e).unwrap());
+    let cut = ((p.clamp(0.0, 100.0) / 100.0) * paths.len() as f64) as usize;
+    let tail = &order[cut.min(paths.len() - 1)..];
+    let mut total = [0.0f64; N_RESOURCES];
+    let mut tail_t = [0.0f64; N_RESOURCES];
+    for p in paths {
+        for (t, v) in total.iter_mut().zip(p.per_resource()) {
+            *t += v;
+        }
+    }
+    for &i in tail {
+        for (t, v) in tail_t.iter_mut().zip(paths[i].per_resource()) {
+            *t += v;
+        }
+    }
+    let grand: f64 = total.iter().sum::<f64>().max(1e-12);
+    let tail_grand: f64 = tail_t.iter().sum::<f64>().max(1e-12);
+    Resource::ALL
+        .iter()
+        .map(|&resource| {
+            let k = resource.index();
+            BottleneckRow {
+                resource,
+                total_s: total[k],
+                share: total[k] / grand,
+                tail_s: tail_t[k],
+                tail_share: tail_t[k] / tail_grand,
+            }
+        })
+        .collect()
+}
+
+/// One row of the per-phase bottleneck profile.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseRow {
+    pub phase: &'static str,
+    pub resource: Resource,
+    pub total_s: f64,
+    /// Share of this phase's critical-path time.
+    pub share: f64,
+}
+
+/// Per-phase resource profile: which resource binds prefill vs decode —
+/// the paper's phase-flip, read off the extracted paths. Rows are
+/// emitted phase-major in [`Resource::ALL`] order.
+pub fn phase_profile(paths: &[CritPath]) -> Vec<PhaseRow> {
+    let mut totals = [[0.0f64; N_RESOURCES]; 2];
+    for p in paths {
+        for s in &p.segments {
+            let ph = usize::from(s.phase == "decode");
+            totals[ph][s.resource.index()] += s.dur;
+        }
+    }
+    let mut rows = Vec::with_capacity(2 * N_RESOURCES);
+    for (ph, name) in [(0usize, "prefill"), (1usize, "decode")] {
+        let grand: f64 = totals[ph].iter().sum::<f64>().max(1e-12);
+        for &resource in &Resource::ALL {
+            let t = totals[ph][resource.index()];
+            rows.push(PhaseRow { phase: name, resource, total_s: t, share: t / grand });
+        }
+    }
+    rows
+}
+
+/// Per-window resource totals over simulated time.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowProfile {
+    pub start_s: f64,
+    /// Seconds per resource ([`Resource::ALL`] order) from paths
+    /// completing in this window.
+    pub totals: [f64; N_RESOURCES],
+    pub completions: u64,
+}
+
+/// Bucket each path's critical-path time into fixed windows by its
+/// completion time (`arrival + e2e`) — aligned with the monitor plane's
+/// `WindowSeries` when called with its `width_s()`/`len()`. Paths
+/// completing past the last window fold into it (same clamp the window
+/// series applies).
+pub fn windowed_profile(paths: &[CritPath], width_s: f64, n_windows: usize) -> Vec<WindowProfile> {
+    if width_s <= 0.0 || n_windows == 0 {
+        return Vec::new();
+    }
+    let mut out: Vec<WindowProfile> = (0..n_windows)
+        .map(|i| WindowProfile {
+            start_s: i as f64 * width_s,
+            totals: [0.0; N_RESOURCES],
+            completions: 0,
+        })
+        .collect();
+    for p in paths {
+        let t = p.arrival + p.e2e;
+        let i = ((t / width_s) as usize).min(n_windows - 1);
+        for (acc, v) in out[i].totals.iter_mut().zip(p.per_resource()) {
+            *acc += v;
+        }
+        out[i].completions += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(arrival: f64, ttft: f64, e2e: f64) -> ServedRequest {
+        ServedRequest { arrival, ttft, e2e, tenant: 0, session: 0, tokens: 4 }
+    }
+
+    fn span(kind: SpanKind, start: f64, dur: f64, arrival: f64) -> Span {
+        Span { kind, start, dur, arrival, batch: 1 }
+    }
+
+    #[test]
+    fn handcrafted_path_reconstructs_queue_prefill_handoff_decode() {
+        // arrival 0.0, queue 0.2, prefill [0.2,0.7), handoff [0.7,0.8),
+        // decode steps [0.9,1.0) and [1.1,1.2); e2e ends at 1.2
+        let served = vec![req(0.0, 0.7, 1.2)];
+        let mut rec = Recorder::new();
+        rec.spans.push(span(SpanKind::Prefill, 0.2, 0.5, 0.0));
+        rec.decode_batch(0.9, 0.1, vec![0.0]);
+        rec.decode_batch(1.1, 0.1, vec![0.0, 5.0]);
+        let kv = vec![span(SpanKind::KvTransfer, 0.7, 0.1, 0.0)];
+        let paths = extract_paths(&served, &[&rec], &kv);
+        assert_eq!(paths.len(), 1);
+        assert_eq!(reconcile_paths(&paths), 0);
+        let p = &paths[0];
+        let labels: Vec<_> = p.segments.iter().map(|s| s.label).collect();
+        assert_eq!(
+            labels,
+            vec![
+                "queue_wait",
+                "prefill",
+                "kv_handoff",
+                "gap",
+                "decode_step",
+                "gap",
+                "decode_step",
+                "closure"
+            ]
+        );
+        assert_eq!(p.segments[0].resource, Resource::Scheduler);
+        assert_eq!(p.segments[1].resource, Resource::CimCompute);
+        assert_eq!(p.segments[1].phase, "prefill");
+        assert_eq!(p.segments[2].resource, Resource::Interconnect);
+        assert_eq!(p.segments[2].phase, "decode");
+        assert_eq!(p.segments[4].resource, Resource::CidBandwidth);
+        // closure is tiny under full observation here (gaps are walked)
+        assert!(p.segments.last().unwrap().dur.abs() < 1e-9);
+        assert!(p.coverage > 0.5 && p.coverage <= 1.0);
+    }
+
+    #[test]
+    fn admission_blocked_queue_wait_is_kv_capacity_bound() {
+        let served = vec![req(1.0, 1.5, 2.0)];
+        let mut rec = Recorder::new();
+        rec.spans.push(span(SpanKind::Prefill, 2.0, 0.5, 1.0));
+        rec.decode_batch(2.5, 0.2, vec![1.0]);
+        rec.event(EventKind::AdmitBlocked, 1.3, 1.0);
+        let paths = extract_paths(&served, &[&rec], &[]);
+        let p = &paths[0];
+        assert_eq!(p.segments[0].label, "queue_wait");
+        assert_eq!(p.segments[0].resource, Resource::KvCapacity);
+        assert_eq!(reconcile_paths(&paths), 0);
+    }
+
+    #[test]
+    fn throttle_stall_is_carved_into_a_thermal_segment() {
+        let served = vec![req(0.0, 0.6, 1.0)];
+        let mut rec = Recorder::new();
+        // busy_span with growing throttled_s emits the Throttle event
+        rec.busy_span(span(SpanKind::Prefill, 0.0, 0.6, 0.0), 0.1, 1);
+        rec.decode_batch(0.6, 0.4, vec![0.0]);
+        let paths = extract_paths(&served, &[&rec], &[]);
+        let p = &paths[0];
+        let th: Vec<_> = p.segments.iter().filter(|s| s.resource == Resource::Thermal).collect();
+        assert_eq!(th.len(), 1);
+        assert_eq!(th[0].label, "throttle_stall");
+        assert!((th[0].dur - 0.1).abs() < 1e-12);
+        // the prefill segment shrank by the carved stall
+        let pf = p.segments.iter().find(|s| s.label == "prefill").unwrap();
+        assert!((pf.dur - 0.5).abs() < 1e-12);
+        assert_eq!(th[0].phase, "prefill");
+        assert_eq!(reconcile_paths(&paths), 0);
+    }
+
+    #[test]
+    fn no_observation_at_all_still_folds_bit_exactly() {
+        // nothing joined: the whole e2e is one queue wait plus closure
+        let served = vec![req(3.0, 0.4, 2.7)];
+        let paths = extract_paths(&served, &[&Recorder::new()], &[]);
+        assert_eq!(reconcile_paths(&paths), 0);
+        let p = &paths[0];
+        assert_eq!(p.coverage, 0.0);
+        // no decode evidence => closure is unattributed, not scheduler
+        assert_eq!(p.segments.last().unwrap().resource, Resource::Unattributed);
+    }
+
+    #[test]
+    fn lossy_recorders_degrade_to_unattributed_without_panicking() {
+        let served = vec![req(0.0, 0.5, 1.0), req(0.1, 0.6, 1.1)];
+        let mut rec = Recorder::with_cap(1);
+        rec.busy_span(span(SpanKind::Prefill, 0.2, 0.3, 0.0), 0.0, 0);
+        rec.busy_span(span(SpanKind::Prefill, 0.5, 0.2, 0.1), 0.0, 0); // dropped
+        let paths = extract_paths(&served, &[&rec], &[]);
+        assert_eq!(reconcile_paths(&paths), 0, "lossy paths still fold bit-exactly");
+        // inferred waits are unattributed under drops
+        assert!(paths[0]
+            .segments
+            .iter()
+            .filter(|s| !is_service(s.label))
+            .all(|s| s.resource == Resource::Unattributed));
+        // the request whose span was dropped has zero coverage
+        assert_eq!(paths[1].coverage, 0.0);
+        assert!(paths[0].coverage > 0.0);
+    }
+
+    #[test]
+    fn overlapping_intervals_are_trimmed_not_double_counted() {
+        let served = vec![req(0.0, 0.5, 1.0)];
+        let mut rec = Recorder::new();
+        rec.spans.push(span(SpanKind::PrefillChunk, 0.0, 0.4, 0.0));
+        rec.spans.push(span(SpanKind::PrefillChunk, 0.2, 0.3, 0.0)); // overlaps 0.2..0.4
+        rec.decode_batch(0.5, 0.5, vec![0.0]);
+        let paths = extract_paths(&served, &[&rec], &[]);
+        assert_eq!(reconcile_paths(&paths), 0);
+        let p = &paths[0];
+        let chunk_total: f64 =
+            p.segments.iter().filter(|s| s.label == "prefill_chunk").map(|s| s.dur).sum();
+        assert!((chunk_total - 0.5).abs() < 1e-12, "0.0..0.5 walked once, got {chunk_total}");
+    }
+
+    #[test]
+    fn bottleneck_profile_shares_sum_to_one_and_shape_is_stable() {
+        let served: Vec<ServedRequest> =
+            (0..50).map(|k| req(k as f64, 0.2, 0.5 + (k % 7) as f64 * 0.3)).collect();
+        let mut rec = Recorder::new();
+        for r in &served {
+            rec.spans.push(span(SpanKind::Prefill, r.arrival + 0.05, 0.15, r.arrival));
+            rec.decode_batch(r.arrival + 0.2, 0.1, vec![r.arrival]);
+        }
+        let paths = extract_paths(&served, &[&rec], &[]);
+        assert_eq!(reconcile_paths(&paths), 0);
+        let rows = bottleneck_profile(&paths, 90.0);
+        assert_eq!(rows.len(), N_RESOURCES);
+        let share: f64 = rows.iter().map(|r| r.share).sum();
+        let tail_share: f64 = rows.iter().map(|r| r.tail_share).sum();
+        assert!((share - 1.0).abs() < 1e-9);
+        assert!((tail_share - 1.0).abs() < 1e-9);
+        assert!(bottleneck_profile(&[], 99.0).is_empty());
+    }
+
+    #[test]
+    fn phase_profile_separates_prefill_and_decode_resources() {
+        let served = vec![req(0.0, 0.5, 1.5)];
+        let mut rec = Recorder::new();
+        rec.spans.push(span(SpanKind::Prefill, 0.1, 0.4, 0.0));
+        rec.decode_batch(0.5, 1.0, vec![0.0]);
+        let paths = extract_paths(&served, &[&rec], &[]);
+        let rows = phase_profile(&paths);
+        assert_eq!(rows.len(), 2 * N_RESOURCES);
+        let pick = |phase: &str, res: Resource| {
+            rows.iter().find(|r| r.phase == phase && r.resource == res).unwrap().total_s
+        };
+        assert!(pick("prefill", Resource::CimCompute) > 0.0);
+        assert_eq!(pick("prefill", Resource::CidBandwidth), 0.0);
+        assert!(pick("decode", Resource::CidBandwidth) > 0.0);
+        assert_eq!(pick("decode", Resource::CimCompute), 0.0);
+    }
+
+    #[test]
+    fn windowed_profile_buckets_by_completion_and_clamps() {
+        let paths = extract_paths(
+            &[req(0.5, 0.1, 0.4), req(3.0, 0.1, 0.5), req(100.0, 0.1, 1.0)],
+            &[&Recorder::new()],
+            &[],
+        );
+        let w = windowed_profile(&paths, 2.0, 3);
+        assert_eq!(w.len(), 3);
+        assert_eq!(w[0].completions, 1, "completion at 0.9 lands in [0,2)");
+        assert_eq!(w[1].completions, 1, "completion at 3.5 lands in [2,4)");
+        assert_eq!(w[2].completions, 1, "past-horizon completion clamps into the last window");
+        assert!(windowed_profile(&paths, 0.0, 4).is_empty());
+    }
+}

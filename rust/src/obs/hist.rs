@@ -139,6 +139,16 @@ impl LogHistogram {
         }
     }
 
+    /// Exact sum of all finite recorded samples — the OpenMetrics
+    /// histogram `_sum` series.
+    pub fn sum(&self) -> f64 {
+        if self.sum.is_finite() {
+            self.sum
+        } else {
+            0.0
+        }
+    }
+
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0

@@ -23,6 +23,13 @@
 //!   alerting, and per-request latency attribution whose components
 //!   fold bit-exactly onto the recorded TTFT/e2e — the `halo monitor`
 //!   surface and the signal a future autoscaler consumes.
+//! - **Causal critical paths** ([`critpath`], [`whatif`]): per-request
+//!   critical-path extraction classifying every segment by binding
+//!   resource (CiM compute / CiD bandwidth / interconnect / KV
+//!   capacity / scheduler / thermal), aggregated into fleet bottleneck
+//!   profiles, plus a COZ-style what-if engine that re-folds the paths
+//!   under scaled resources — the `halo critpath` surface and the
+//!   control signal the KV-spill and packing DSE tentpoles consume.
 //!
 //! Simulated quantities and host measurements never mix: wall times
 //! live only in [`SelfProfile`] / [`bench`] outputs and are excluded
@@ -30,6 +37,7 @@
 
 pub mod attrib;
 pub mod bench;
+pub mod critpath;
 pub mod hist;
 pub mod registry;
 pub mod selfprof;
@@ -37,16 +45,24 @@ pub mod slo;
 pub mod snapshot;
 pub mod span;
 pub mod timeseries;
+pub mod whatif;
 
 pub use attrib::{attribute, reconcile, tail_breakdown, Attribution, BreakdownRow};
 pub use bench::{bench_json, compare, peak_rss_bytes, run_pinned, BenchDelta, BenchPoint};
+pub use critpath::{
+    bottleneck_profile, extract_paths, phase_profile, reconcile_paths, windowed_profile,
+    BottleneckRow, CritPath, PhaseRow, Resource, Segment, WindowProfile, N_RESOURCES,
+};
 pub use hist::LogHistogram;
 pub use registry::{fleet_registry, timeseries_registry, Registry};
 pub use selfprof::SelfProfile;
 pub use slo::{attainment, bad_fraction, BurnRateConfig, SloAlert, SloReport, SloSpec, WindowSlo};
-pub use snapshot::{cluster_snapshot, dse_snapshot, metrics_json, timeseries_snapshot};
-pub use span::{chrome_trace, Event, EventKind, Recorder, Span, SpanKind, Track};
+pub use snapshot::{
+    cluster_snapshot, critpath_snapshot, dse_snapshot, metrics_json, timeseries_snapshot,
+};
+pub use span::{chrome_trace, BatchRecord, Event, EventKind, Recorder, Span, SpanKind, Track};
 pub use timeseries::{DeviceGauges, GaugeSample, Window, WindowSeries};
+pub use whatif::{evaluate_all, scaled_latencies, standard_whatifs, WhatIf, WhatIfResult};
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;

@@ -62,6 +62,43 @@ impl Registry {
         }
     }
 
+    /// OpenMetrics text exposition (the Prometheus scrape format): one
+    /// `# TYPE` block per metric, counters suffixed `_total`, gauges
+    /// verbatim, histograms as cumulative `_bucket{le=...}` series at
+    /// fixed boundaries plus `_sum`/`_count`, closed by `# EOF`.
+    ///
+    /// Names are prefixed `halo_`; bucket counts are bucket-granular
+    /// (a boundary includes its whole containing log bucket). BTreeMap
+    /// iteration keeps the output byte-deterministic — pinned by the
+    /// golden-file test in `rust/tests/critpath_plane.rs`.
+    pub fn to_openmetrics(&self) -> String {
+        const LE: [f64; 6] = [0.001, 0.01, 0.1, 1.0, 10.0, 100.0];
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("# TYPE halo_{k} counter\n"));
+            out.push_str(&format!("halo_{k}_total {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("# TYPE halo_{k} gauge\n"));
+            out.push_str(&format!("halo_{k} {}\n", om_num(*v)));
+        }
+        for (k, h) in &self.hists {
+            out.push_str(&format!("# TYPE halo_{k} histogram\n"));
+            for le in LE {
+                out.push_str(&format!(
+                    "halo_{k}_bucket{{le=\"{}\"}} {}\n",
+                    om_num(le),
+                    h.count_at_or_below(le)
+                ));
+            }
+            out.push_str(&format!("halo_{k}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+            out.push_str(&format!("halo_{k}_sum {}\n", om_num(h.sum())));
+            out.push_str(&format!("halo_{k}_count {}\n", h.count()));
+        }
+        out.push_str("# EOF\n");
+        out
+    }
+
     pub fn to_json(&self) -> Json {
         let counters: BTreeMap<String, Json> =
             self.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect();
@@ -74,6 +111,18 @@ impl Registry {
         m.insert("gauges".to_string(), Json::Obj(gauges));
         m.insert("histograms".to_string(), Json::Obj(hists));
         Json::Obj(m)
+    }
+}
+
+/// OpenMetrics number formatting: Rust's shortest-roundtrip `Display`
+/// (deterministic), with non-finite values spelled per the spec.
+fn om_num(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        if v > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() }
+    } else {
+        format!("{v}")
     }
 }
 
@@ -146,6 +195,26 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.path(&["counters", "walks"]).and_then(Json::as_f64), Some(5.0));
         assert_eq!(j.path(&["histograms", "lat", "count"]).and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn openmetrics_exposition_is_well_formed_and_deterministic() {
+        let mut r = Registry::new();
+        r.inc("requests_served", 42);
+        r.gauge("utilization", 0.5);
+        r.hist("ttft_s").record(0.25);
+        r.hist("ttft_s").record(7.0);
+        let s = r.to_openmetrics();
+        assert_eq!(s, r.to_openmetrics(), "byte-deterministic");
+        assert!(s.ends_with("# EOF\n"));
+        assert!(s.contains("# TYPE halo_requests_served counter\n"));
+        assert!(s.contains("halo_requests_served_total 42\n"));
+        assert!(s.contains("halo_utilization 0.5\n"));
+        assert!(s.contains("halo_ttft_s_bucket{le=\"1\"} 1\n"));
+        assert!(s.contains("halo_ttft_s_bucket{le=\"10\"} 2\n"));
+        assert!(s.contains("halo_ttft_s_bucket{le=\"+Inf\"} 2\n"));
+        assert!(s.contains("halo_ttft_s_sum 7.25\n"));
+        assert!(s.contains("halo_ttft_s_count 2\n"));
     }
 
     #[test]

@@ -6,23 +6,44 @@
 //! replay results; host wall times ride along under `profile` and are
 //! explicitly measurement metadata, not simulation output.
 
+use super::critpath::{
+    BottleneckRow, CritPath, PhaseRow, Resource, Segment, WindowProfile, N_RESOURCES,
+};
 use super::registry::fleet_registry;
 use super::slo::SloReport;
 use super::timeseries::WindowSeries;
+use super::whatif::WhatIfResult;
 use super::{jobj, SelfProfile};
 use crate::cluster::fleet::{DeviceSummary, FleetResult};
 use crate::dse::{DseResult, Metrics};
 use crate::util::json::Json;
 
+/// Observability drop counters as a snapshot object: spans/events/
+/// decode-batch records discarded past the recorder retention cap.
+/// `None` (obs off) serializes as JSON null so downstream tooling can
+/// tell "not instrumented" from "instrumented and lossless".
+fn dropped_json(obs_dropped: Option<(u64, u64, u64)>) -> Json {
+    match obs_dropped {
+        None => Json::Null,
+        Some((spans, events, batches)) => jobj(vec![
+            ("spans", Json::Num(spans as f64)),
+            ("events", Json::Num(events as f64)),
+            ("batches", Json::Num(batches as f64)),
+        ]),
+    }
+}
+
 /// One replayed cluster as a machine-readable snapshot. `config` is the
 /// caller-described setup (fleet shape, workload, seed) echoed back so
-/// the artifact is self-contained.
+/// the artifact is self-contained. `obs_dropped` carries the recorder
+/// drop counters when the replay was instrumented (`None` otherwise).
 pub fn cluster_snapshot(
     r: &FleetResult,
     walks: u64,
     memo_hits: u64,
     profile: &SelfProfile,
     config: Json,
+    obs_dropped: Option<(u64, u64, u64)>,
 ) -> Json {
     let per_device: Vec<Json> =
         r.per_device.iter().map(|d| device_json(d, r.makespan)).collect();
@@ -31,6 +52,7 @@ pub fn cluster_snapshot(
         ("config", config),
         ("metrics", fleet_registry(r, walks, memo_hits).to_json()),
         ("per_device", Json::Arr(per_device)),
+        ("obs_dropped", dropped_json(obs_dropped)),
         ("profile", profile.to_json()),
     ])
 }
@@ -95,14 +117,131 @@ pub fn dse_snapshot(res: &DseResult, config: Json) -> Json {
 /// the merged whole-run latency populations (bit-identical to the
 /// `FleetResult` histograms — pinned by test), and the SLO burn-rate
 /// report when one was evaluated.
-pub fn timeseries_snapshot(series: &WindowSeries, slo: Option<&SloReport>, config: Json) -> Json {
+pub fn timeseries_snapshot(
+    series: &WindowSeries,
+    slo: Option<&SloReport>,
+    config: Json,
+    obs_dropped: Option<(u64, u64, u64)>,
+) -> Json {
     jobj(vec![
         ("schema", Json::Str("halo.timeseries.v1".to_string())),
         ("config", config),
         ("series", series.to_json()),
         ("ttft_total", series.merged_ttft().to_json()),
         ("e2e_total", series.merged_e2e().to_json()),
+        ("obs_dropped", dropped_json(obs_dropped)),
         ("slo", slo.map_or(Json::Null, SloReport::to_json)),
+    ])
+}
+
+fn segment_json(s: &Segment) -> Json {
+    jobj(vec![
+        ("label", Json::Str(s.label.to_string())),
+        ("resource", Json::Str(s.resource.name().to_string())),
+        ("phase", Json::Str(s.phase.to_string())),
+        ("start_s", Json::Num(s.start)),
+        ("dur_s", Json::Num(s.dur)),
+    ])
+}
+
+fn path_json(p: &CritPath) -> Json {
+    jobj(vec![
+        ("arrival_s", Json::Num(p.arrival)),
+        ("ttft_s", Json::Num(p.ttft)),
+        ("e2e_s", Json::Num(p.e2e)),
+        ("coverage", Json::Num(p.coverage)),
+        ("segments", Json::Arr(p.segments.iter().map(segment_json).collect())),
+    ])
+}
+
+fn resource_totals_json(totals: &[f64; N_RESOURCES]) -> Json {
+    jobj(Resource::ALL.iter().map(|r| (r.name(), Json::Num(totals[r.index()]))).collect())
+}
+
+/// One critical-path analysis as a machine-readable `halo.critpath.v1`
+/// snapshot: the config echo, population/reconciliation/coverage
+/// summary, the per-resource bottleneck profile (whole population and
+/// p99 tail), the per-phase profile, per-window resource totals, the
+/// what-if table, and the `top_paths` slowest per-request path dumps.
+#[allow(clippy::too_many_arguments)]
+pub fn critpath_snapshot(
+    paths: &[CritPath],
+    mismatches: usize,
+    bottleneck: &[BottleneckRow],
+    phases: &[PhaseRow],
+    windows: &[WindowProfile],
+    whatifs: &[WhatIfResult],
+    top_paths: &[&CritPath],
+    config: Json,
+    obs_dropped: Option<(u64, u64, u64)>,
+) -> Json {
+    let n = paths.len().max(1) as f64;
+    let mean_cov = paths.iter().map(|p| p.coverage).sum::<f64>() / n;
+    let min_cov = paths.iter().map(|p| p.coverage).fold(f64::INFINITY, f64::min);
+    let bottleneck_rows: Vec<Json> = bottleneck
+        .iter()
+        .map(|r| {
+            jobj(vec![
+                ("resource", Json::Str(r.resource.name().to_string())),
+                ("total_s", Json::Num(r.total_s)),
+                ("share", Json::Num(r.share)),
+                ("tail_s", Json::Num(r.tail_s)),
+                ("tail_share", Json::Num(r.tail_share)),
+            ])
+        })
+        .collect();
+    let phase_rows: Vec<Json> = phases
+        .iter()
+        .map(|r| {
+            jobj(vec![
+                ("phase", Json::Str(r.phase.to_string())),
+                ("resource", Json::Str(r.resource.name().to_string())),
+                ("total_s", Json::Num(r.total_s)),
+                ("share", Json::Num(r.share)),
+            ])
+        })
+        .collect();
+    let window_rows: Vec<Json> = windows
+        .iter()
+        .map(|w| {
+            jobj(vec![
+                ("start_s", Json::Num(w.start_s)),
+                ("completions", Json::Num(w.completions as f64)),
+                ("totals", resource_totals_json(&w.totals)),
+            ])
+        })
+        .collect();
+    let whatif_rows: Vec<Json> = whatifs
+        .iter()
+        .map(|w| {
+            jobj(vec![
+                ("name", Json::Str(w.name.to_string())),
+                ("desc", Json::Str(w.desc.to_string())),
+                ("base_ttft_p99_s", Json::Num(w.base_ttft_p99_s)),
+                ("est_ttft_p99_s", Json::Num(w.est_ttft_p99_s)),
+                ("delta_ttft_p99_s", Json::Num(w.delta_ttft_p99_s)),
+                ("base_e2e_p99_s", Json::Num(w.base_e2e_p99_s)),
+                ("est_e2e_p99_s", Json::Num(w.est_e2e_p99_s)),
+                ("delta_e2e_p99_s", Json::Num(w.delta_e2e_p99_s)),
+                ("base_e2e_mean_s", Json::Num(w.base_e2e_mean_s)),
+                ("est_e2e_mean_s", Json::Num(w.est_e2e_mean_s)),
+                ("delta_e2e_mean_s", Json::Num(w.delta_e2e_mean_s)),
+            ])
+        })
+        .collect();
+    jobj(vec![
+        ("schema", Json::Str("halo.critpath.v1".to_string())),
+        ("config", config),
+        ("requests", Json::Num(paths.len() as f64)),
+        ("reconcile_mismatches", Json::Num(mismatches as f64)),
+        ("coverage_mean", Json::Num(mean_cov)),
+        ("coverage_min", Json::Num(if min_cov.is_finite() { min_cov } else { 0.0 })),
+        ("obs_dropped", dropped_json(obs_dropped)),
+        ("bottleneck", Json::Arr(bottleneck_rows)),
+        ("phases", Json::Arr(phase_rows)),
+        ("windows", Json::Arr(window_rows)),
+        ("whatif", Json::Arr(whatif_rows)),
+        ("top_paths", Json::Arr(top_paths.iter().map(|p| path_json(p)).collect())),
     ])
 }
 
@@ -153,13 +292,62 @@ mod tests {
         let r = fleet.replay(&trace, &mut LeastLoaded);
         let prof = SelfProfile::new();
         let cfg = jobj(vec![("devices", Json::Num(2.0))]);
-        let j = cluster_snapshot(&r, fleet.cost_walks(), fleet.cost_memo_hits(), &prof, cfg);
+        let j = cluster_snapshot(
+            &r,
+            fleet.cost_walks(),
+            fleet.cost_memo_hits(),
+            &prof,
+            cfg,
+            Some((0, 0, 0)),
+        );
         assert_eq!(j.path(&["schema"]).and_then(Json::as_str), Some("halo.cluster.v1"));
         assert_eq!(j.path(&["config", "devices"]).and_then(Json::as_f64), Some(2.0));
         assert_eq!(j.path(&["per_device"]).and_then(Json::as_arr).map(<[Json]>::len), Some(2));
         let served = j.path(&["metrics", "counters", "requests_served"]).and_then(Json::as_f64);
         assert_eq!(served, Some(r.requests as f64));
+        // drop counters surface per satellite: instrumented-and-lossless
+        assert_eq!(j.path(&["obs_dropped", "spans"]).and_then(Json::as_f64), Some(0.0));
         // snapshots must round-trip through the serializer
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn critpath_snapshot_is_tagged_and_round_trips() {
+        use super::super::critpath::{
+            bottleneck_profile, extract_paths, phase_profile, reconcile_paths, windowed_profile,
+        };
+        use super::super::span::{Recorder, Span, SpanKind};
+        use super::super::whatif::{evaluate_all, standard_whatifs};
+        use crate::sim::queueing::ServedRequest;
+        let served = vec![ServedRequest {
+            arrival: 0.0,
+            ttft: 0.5,
+            e2e: 1.0,
+            tenant: 0,
+            session: 0,
+            tokens: 4,
+        }];
+        let mut rec = Recorder::new();
+        rec.spans.push(Span { kind: SpanKind::Prefill, start: 0.1, dur: 0.4, arrival: 0.0, batch: 1 });
+        rec.decode_batch(0.5, 0.5, vec![0.0]);
+        let paths = extract_paths(&served, &[&rec], &[]);
+        let j = critpath_snapshot(
+            &paths,
+            reconcile_paths(&paths),
+            &bottleneck_profile(&paths, 99.0),
+            &phase_profile(&paths),
+            &windowed_profile(&paths, 0.5, 2),
+            &evaluate_all(&paths, &standard_whatifs()),
+            &[&paths[0]],
+            jobj(vec![("workload", Json::Str("unit".to_string()))]),
+            Some((0, 0, 0)),
+        );
+        assert_eq!(j.path(&["schema"]).and_then(Json::as_str), Some("halo.critpath.v1"));
+        assert_eq!(j.path(&["requests"]).and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.path(&["reconcile_mismatches"]).and_then(Json::as_f64), Some(0.0));
+        assert_eq!(j.path(&["whatif"]).and_then(Json::as_arr).map(<[Json]>::len), Some(4));
+        assert_eq!(j.path(&["top_paths"]).and_then(Json::as_arr).map(<[Json]>::len), Some(1));
         let text = j.to_string();
         assert_eq!(Json::parse(&text).unwrap(), j);
     }

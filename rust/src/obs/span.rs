@@ -77,6 +77,10 @@ pub enum EventKind {
     Done,
     /// Thermal governor throttled service during the preceding span.
     Throttle,
+    /// Admission gate refused the request this cycle: the KV byte
+    /// budget could not fit its working set. The critical-path plane
+    /// reclassifies the request's queue wait as KV-capacity-bound.
+    AdmitBlocked,
 }
 
 impl EventKind {
@@ -86,6 +90,7 @@ impl EventKind {
             EventKind::Evicted => "evicted",
             EventKind::Done => "done",
             EventKind::Throttle => "throttle",
+            EventKind::AdmitBlocked => "admit_blocked",
         }
     }
 }
@@ -103,6 +108,22 @@ pub struct Event {
     pub stall_s: f64,
 }
 
+/// Decode-batch membership: which arrivals shared one decode step.
+///
+/// Decode-step [`Span`]s carry `arrival: -1.0` because one span serves
+/// the whole resident batch — per-request decode time is unrecoverable
+/// from spans alone. This side-channel records the member arrivals per
+/// step so the critical-path plane can rebuild each request's decode
+/// intervals (and its batching/coupling edges to co-batched requests)
+/// without touching the span vector that existing tests pin.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchRecord {
+    pub start: f64,
+    pub dur: f64,
+    /// Arrival times of every sequence resident during this step.
+    pub arrivals: Vec<f64>,
+}
+
 /// Per-device span/event log. Appended to by the device's busy-time
 /// bookkeeping; drained by [`chrome_trace`].
 ///
@@ -118,12 +139,15 @@ pub struct Event {
 pub struct Recorder {
     pub spans: Vec<Span>,
     pub events: Vec<Event>,
+    /// Decode-batch membership records (capped like spans/events).
+    pub batches: Vec<BatchRecord>,
     last_throttled_s: f64,
     /// Span durations folded in call order — `busy_total` under capping.
     busy_sum: f64,
     retain_cap: usize,
     dropped_spans: u64,
     dropped_events: u64,
+    dropped_batches: u64,
 }
 
 impl Default for Recorder {
@@ -144,11 +168,13 @@ impl Recorder {
         Recorder {
             spans: Vec::new(),
             events: Vec::new(),
+            batches: Vec::new(),
             last_throttled_s: 0.0,
             busy_sum: 0.0,
             retain_cap: cap,
             dropped_spans: 0,
             dropped_events: 0,
+            dropped_batches: 0,
         }
     }
 
@@ -188,9 +214,26 @@ impl Recorder {
         }
     }
 
+    /// Record one decode step's batch membership. Capped independently
+    /// at the same `retain_cap` as spans/events; the member list copies
+    /// values that already advanced the simulated clock, so recording
+    /// stays pure observation.
+    pub fn decode_batch(&mut self, start: f64, dur: f64, arrivals: Vec<f64>) {
+        if self.batches.len() < self.retain_cap {
+            self.batches.push(BatchRecord { start, dur, arrivals });
+        } else {
+            self.dropped_batches += 1;
+        }
+    }
+
     /// `(spans, events)` discarded past the retention cap.
     pub fn dropped(&self) -> (u64, u64) {
         (self.dropped_spans, self.dropped_events)
+    }
+
+    /// Decode-batch membership records discarded past the retention cap.
+    pub fn dropped_batches(&self) -> u64 {
+        self.dropped_batches
     }
 
     /// Sum of span durations, folded in recorded order from 0.0 — the
@@ -350,6 +393,19 @@ mod tests {
         // busy reconciliation is exact despite the drops
         assert_eq!(capped.busy_total().to_bits(), busy.to_bits());
         assert_eq!(capped.busy_total().to_bits(), full.busy_total().to_bits());
+    }
+
+    #[test]
+    fn batch_records_are_capped_independently_of_spans() {
+        let mut r = Recorder::with_cap(3);
+        for i in 0..10 {
+            r.decode_batch(i as f64, 0.01, vec![0.0, 1.0]);
+        }
+        assert_eq!(r.batches.len(), 3);
+        assert_eq!(r.dropped_batches(), 7);
+        // span/event drop counters are untouched by batch drops
+        assert_eq!(r.dropped(), (0, 0));
+        assert_eq!(r.batches[0].arrivals, vec![0.0, 1.0]);
     }
 
     #[test]

@@ -1,0 +1,247 @@
+//! COZ-style what-if engine: virtual speedup over extracted critical
+//! paths.
+//!
+//! Given the per-request critical paths from [`crate::obs::critpath`],
+//! a [`WhatIf`] scales every segment bound by a chosen resource and
+//! re-folds each path — answering "what would interposer bandwidth ×2
+//! buy on the p99?" deterministically, without a re-simulation. The
+//! estimate is first-order (it rescales recorded time; it does not
+//! re-run admission or batching decisions), so `halo critpath`
+//! cross-checks one scaled point against a real replay — the estimate
+//! must agree with the true replay in sign and land within a pinned
+//! relative bound (enforced in `rust/tests/critpath_plane.rs`).
+//!
+//! TTFT is estimated by walking each path's segments until the
+//! cumulative unscaled time reaches the recorded TTFT, scaling the
+//! straddling segment fractionally — the first token moves with the
+//! resources on the prefill side of the path only.
+
+use super::critpath::{CritPath, Resource, N_RESOURCES};
+use crate::util::percentile;
+
+/// One counterfactual: per-resource time scale factors. A factor of
+/// 0.5 on [`Resource::Interconnect`] models "interconnect bandwidth
+/// ×2" (transfer time halves); 0.0 on [`Resource::Thermal`] models
+/// "no TDP cap" (stalls vanish).
+#[derive(Debug, Clone)]
+pub struct WhatIf {
+    pub name: &'static str,
+    pub desc: &'static str,
+    pub scale: [f64; N_RESOURCES],
+}
+
+impl WhatIf {
+    pub fn new(name: &'static str, desc: &'static str) -> Self {
+        WhatIf { name, desc, scale: [1.0; N_RESOURCES] }
+    }
+
+    pub fn scaled(mut self, resource: Resource, factor: f64) -> Self {
+        self.scale[resource.index()] = factor;
+        self
+    }
+}
+
+/// The standard counterfactual set `halo critpath` evaluates.
+pub fn standard_whatifs() -> Vec<WhatIf> {
+    vec![
+        WhatIf::new("interconnect_bw_x2", "interposer/interconnect bandwidth x2")
+            .scaled(Resource::Interconnect, 0.5),
+        WhatIf::new("cim_mesh_x2", "CiM tile mesh x2 (prefill compute x2)")
+            .scaled(Resource::CimCompute, 0.5),
+        WhatIf::new("kv_budget_1p5x", "KV byte budget +50% (recompute/blocked time x2/3)")
+            .scaled(Resource::KvCapacity, 2.0 / 3.0),
+        WhatIf::new("no_tdp_cap", "no TDP cap (thermal stalls vanish)")
+            .scaled(Resource::Thermal, 0.0),
+    ]
+}
+
+/// Estimated latency distribution shift under one [`WhatIf`].
+#[derive(Debug, Clone, Copy)]
+pub struct WhatIfResult {
+    pub name: &'static str,
+    pub desc: &'static str,
+    pub base_ttft_p99_s: f64,
+    pub base_e2e_p99_s: f64,
+    pub est_ttft_p99_s: f64,
+    pub est_e2e_p99_s: f64,
+    /// `est - base`; negative means the counterfactual helps.
+    pub delta_ttft_p99_s: f64,
+    pub delta_e2e_p99_s: f64,
+    pub base_e2e_mean_s: f64,
+    pub est_e2e_mean_s: f64,
+    pub delta_e2e_mean_s: f64,
+}
+
+/// One path's scaled `(ttft, e2e)` under the what-if's factors.
+pub fn scaled_latencies(path: &CritPath, w: &WhatIf) -> (f64, f64) {
+    let mut cum = 0.0f64;
+    let mut e2e = 0.0f64;
+    let mut ttft = 0.0f64;
+    for s in &path.segments {
+        let k = w.scale[s.resource.index()];
+        e2e += s.dur * k;
+        if cum < path.ttft && s.dur > 0.0 {
+            // the part of this segment on the prefill side of the
+            // first token, scaled — fractional when it straddles
+            let take = s.dur.min(path.ttft - cum);
+            ttft += take * k;
+        }
+        cum += s.dur;
+    }
+    (ttft.max(0.0), e2e.max(0.0))
+}
+
+/// Evaluate one counterfactual over the whole path population.
+pub fn evaluate(paths: &[CritPath], w: &WhatIf) -> WhatIfResult {
+    let zero = WhatIfResult {
+        name: w.name,
+        desc: w.desc,
+        base_ttft_p99_s: 0.0,
+        base_e2e_p99_s: 0.0,
+        est_ttft_p99_s: 0.0,
+        est_e2e_p99_s: 0.0,
+        delta_ttft_p99_s: 0.0,
+        delta_e2e_p99_s: 0.0,
+        base_e2e_mean_s: 0.0,
+        est_e2e_mean_s: 0.0,
+        delta_e2e_mean_s: 0.0,
+    };
+    if paths.is_empty() {
+        return zero;
+    }
+    let base_ttft: Vec<f64> = paths.iter().map(|p| p.ttft).collect();
+    let base_e2e: Vec<f64> = paths.iter().map(|p| p.e2e).collect();
+    let mut est_ttft = Vec::with_capacity(paths.len());
+    let mut est_e2e = Vec::with_capacity(paths.len());
+    for p in paths {
+        let (t, e) = scaled_latencies(p, w);
+        est_ttft.push(t);
+        est_e2e.push(e);
+    }
+    let n = paths.len() as f64;
+    let bt = percentile(&base_ttft, 99.0);
+    let be = percentile(&base_e2e, 99.0);
+    let et = percentile(&est_ttft, 99.0);
+    let ee = percentile(&est_e2e, 99.0);
+    let bm = base_e2e.iter().sum::<f64>() / n;
+    let em = est_e2e.iter().sum::<f64>() / n;
+    WhatIfResult {
+        base_ttft_p99_s: bt,
+        base_e2e_p99_s: be,
+        est_ttft_p99_s: et,
+        est_e2e_p99_s: ee,
+        delta_ttft_p99_s: et - bt,
+        delta_e2e_p99_s: ee - be,
+        base_e2e_mean_s: bm,
+        est_e2e_mean_s: em,
+        delta_e2e_mean_s: em - bm,
+        ..zero
+    }
+}
+
+/// Evaluate every counterfactual in `ws`.
+pub fn evaluate_all(paths: &[CritPath], ws: &[WhatIf]) -> Vec<WhatIfResult> {
+    ws.iter().map(|w| evaluate(paths, w)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::critpath::Segment;
+
+    fn path(segs: &[(&'static str, Resource, f64)], ttft: f64) -> CritPath {
+        let mut start = 0.0;
+        let segments: Vec<Segment> = segs
+            .iter()
+            .map(|&(label, resource, dur)| {
+                let s = Segment {
+                    label,
+                    resource,
+                    phase: if start < ttft { "prefill" } else { "decode" },
+                    start,
+                    dur,
+                };
+                start += dur;
+                s
+            })
+            .collect();
+        let e2e = segments.iter().fold(0.0, |a, s| a + s.dur);
+        CritPath { arrival: 0.0, ttft, e2e, segments, coverage: 1.0 }
+    }
+
+    #[test]
+    fn identity_whatif_changes_nothing() {
+        let p = path(
+            &[
+                ("queue_wait", Resource::Scheduler, 0.2),
+                ("prefill", Resource::CimCompute, 0.5),
+                ("decode_step", Resource::CidBandwidth, 0.3),
+            ],
+            0.7,
+        );
+        let r = evaluate(&[p], &WhatIf::new("noop", "identity"));
+        assert!((r.delta_e2e_p99_s).abs() < 1e-12);
+        assert!((r.delta_ttft_p99_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaling_decode_only_moves_e2e_not_ttft() {
+        let p = path(
+            &[
+                ("prefill", Resource::CimCompute, 0.5),
+                ("decode_step", Resource::CidBandwidth, 1.0),
+            ],
+            0.5,
+        );
+        let w = WhatIf::new("decode_x2", "").scaled(Resource::CidBandwidth, 0.5);
+        let r = evaluate(&[p], &w);
+        assert!((r.delta_ttft_p99_s).abs() < 1e-12, "ttft is prefill-side only");
+        assert!((r.est_e2e_p99_s - 1.0).abs() < 1e-12, "0.5 + 0.5*1.0");
+    }
+
+    #[test]
+    fn ttft_straddling_segment_scales_fractionally() {
+        // one prefill segment of 1.0 with ttft 0.6 inside it: scaling
+        // prefill x0.5 halves the straddled fraction too
+        let p = path(&[("prefill", Resource::CimCompute, 1.0)], 0.6);
+        let w = WhatIf::new("p", "").scaled(Resource::CimCompute, 0.5);
+        let (t, e) = scaled_latencies(&p, &w);
+        assert!((t - 0.3).abs() < 1e-12);
+        assert!((e - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn thermal_zeroing_removes_exactly_the_stall() {
+        let p = path(
+            &[
+                ("prefill", Resource::CimCompute, 0.4),
+                ("throttle_stall", Resource::Thermal, 0.2),
+                ("decode_step", Resource::CidBandwidth, 0.4),
+            ],
+            0.6,
+        );
+        let r = evaluate(&[p], &standard_whatifs()[3]);
+        assert!((r.delta_e2e_p99_s + 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_population_is_safe() {
+        for w in standard_whatifs() {
+            let r = evaluate(&[], &w);
+            assert_eq!(r.base_e2e_p99_s, 0.0);
+            assert_eq!(r.delta_e2e_p99_s, 0.0);
+        }
+    }
+
+    #[test]
+    fn standard_set_covers_the_advertised_axes() {
+        let ws = standard_whatifs();
+        assert_eq!(ws.len(), 4);
+        assert_eq!(ws[0].scale[Resource::Interconnect.index()], 0.5);
+        assert_eq!(ws[1].scale[Resource::CimCompute.index()], 0.5);
+        assert!((ws[2].scale[Resource::KvCapacity.index()] - 2.0 / 3.0).abs() < 1e-15);
+        assert_eq!(ws[3].scale[Resource::Thermal.index()], 0.0);
+        // every other factor stays identity
+        assert_eq!(ws[0].scale[Resource::Scheduler.index()], 1.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Critical-path-plane tables: which resource binds the fleet (whole
+//! population vs p99 tail, and per phase), and what the standard
+//! hardware counterfactuals would buy — the `halo report --fig
+//! critpath` artifact, run on the same MMPP chat stream as the
+//! observability tables so the two figures read side by side.
+
+use super::Table;
+use crate::cluster::{
+    collect_trace, ArrivalKind, Interconnect, Mix, Policy, SchedConfig, TrafficConfig,
+};
+use crate::config::HwConfig;
+use crate::model::LlmConfig;
+use crate::obs::{self, bottleneck_profile, extract_paths, phase_profile, reconcile_paths};
+
+use super::f;
+
+/// Decode slots per device (matches the cluster/obs-plane tables).
+const SLOTS: usize = 8;
+
+fn critpath_trace(rate: f64) -> Vec<crate::sim::queueing::TraceRequest> {
+    let cfg = TrafficConfig::new(4242, rate, 40.0, Mix::Chat)
+        .with_kind(ArrivalKind::Mmpp)
+        .with_max_requests(400);
+    collect_trace(&mut cfg.build())
+}
+
+/// Run the shared instrumented replay and extract every path.
+fn extracted(hw: &HwConfig, rate: f64) -> Vec<obs::CritPath> {
+    let llm = LlmConfig::llama2_7b();
+    let trace = critpath_trace(rate);
+    let (mut fleet, mut router) = Policy::PhaseDisaggregated.build_with(
+        &llm,
+        hw,
+        4,
+        SLOTS,
+        0.5,
+        Interconnect::board(),
+        SchedConfig::chunked(256),
+    );
+    fleet.enable_obs();
+    let r = fleet.replay(&trace, router.as_mut());
+    let recorders = fleet.recorders().expect("obs enabled");
+    let kv = fleet.kv_spans().expect("obs enabled");
+    let paths = extract_paths(&r.served, &recorders, kv);
+    debug_assert_eq!(reconcile_paths(&paths), 0, "paths must fold bit-exactly");
+    paths
+}
+
+/// Per-resource critical-path shares, whole population vs the p99 e2e
+/// tail, with the per-phase split alongside — "what resource binds the
+/// tail" as one table.
+pub fn bottleneck_table(hw: &HwConfig) -> Table {
+    let rate = 24.0;
+    let paths = extracted(hw, rate);
+    let rows = bottleneck_profile(&paths, 99.0);
+    let phases = phase_profile(&paths);
+    let mut t = Table::new(
+        "critpath_bottleneck",
+        &format!(
+            "Critical-path bottleneck profile — seconds and share per binding resource, \
+             all requests vs p99 e2e tail, with per-phase shares \
+             (LLaMA-2 7B, chat MMPP {rate:.1} req/s, 4-dev disaggregated, chunked prefill)"
+        ),
+        &["resource", "total_s", "share", "tail_s", "tail_share", "prefill_share", "decode_share"],
+    );
+    for row in rows {
+        let phase_share = |phase: &str| {
+            phases
+                .iter()
+                .find(|p| p.phase == phase && p.resource == row.resource)
+                .map_or(0.0, |p| p.share)
+        };
+        t.row(vec![
+            row.resource.name().to_string(),
+            f(row.total_s),
+            f(row.share),
+            f(row.tail_s),
+            f(row.tail_share),
+            f(phase_share("prefill")),
+            f(phase_share("decode")),
+        ]);
+    }
+    t
+}
+
+/// The standard what-if table: estimated p99 movement under each
+/// counterfactual, from re-folding the extracted paths with scaled
+/// resources — no re-simulation.
+pub fn whatif_table(hw: &HwConfig) -> Table {
+    let rate = 24.0;
+    let paths = extracted(hw, rate);
+    let results = obs::evaluate_all(&paths, &obs::standard_whatifs());
+    let mut t = Table::new(
+        "critpath_whatif",
+        &format!(
+            "What-if virtual speedups — estimated TTFT/e2e p99 under scaled resources \
+             (LLaMA-2 7B, chat MMPP {rate:.1} req/s, 4-dev disaggregated, chunked prefill)"
+        ),
+        &[
+            "whatif",
+            "base_ttft_p99_s",
+            "est_ttft_p99_s",
+            "delta_ttft_p99_s",
+            "base_e2e_p99_s",
+            "est_e2e_p99_s",
+            "delta_e2e_p99_s",
+        ],
+    );
+    for r in results {
+        t.row(vec![
+            r.name.to_string(),
+            f(r.base_ttft_p99_s),
+            f(r.est_ttft_p99_s),
+            f(r.delta_ttft_p99_s),
+            f(r.base_e2e_p99_s),
+            f(r.est_e2e_p99_s),
+            f(r.delta_e2e_p99_s),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bottleneck_table_covers_every_resource_and_shares_sum() {
+        let t = bottleneck_table(&HwConfig::paper());
+        assert_eq!(t.rows.len(), obs::N_RESOURCES);
+        let share: f64 = t.col_f64("share").iter().sum();
+        assert!((share - 1.0).abs() < 1e-6, "resource shares sum to 1, got {share}");
+        let tail: f64 = t.col_f64("tail_share").iter().sum();
+        assert!((tail - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn whatif_table_rows_are_finite_and_never_hurt() {
+        let t = whatif_table(&HwConfig::paper());
+        assert_eq!(t.rows.len(), 4);
+        for h in ["base_e2e_p99_s", "est_e2e_p99_s", "delta_e2e_p99_s"] {
+            for v in t.col_f64(h) {
+                assert!(v.is_finite());
+            }
+        }
+        // a pure speedup counterfactual can only move the estimate down
+        for d in t.col_f64("delta_e2e_p99_s") {
+            assert!(d <= 1e-9, "speedup what-ifs must not raise the estimated p99: {d}");
+        }
+    }
+}

@@ -7,6 +7,7 @@
 //! throttling) live in [`power`].
 
 pub mod cluster;
+pub mod critpath;
 pub mod dse;
 pub mod obs;
 pub mod power;

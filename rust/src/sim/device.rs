@@ -741,6 +741,8 @@ impl Device {
             if needs_slot {
                 let Some(slot) = self.free_slot() else { break };
                 if self.kv_admission_blocked(self.queue[idx].0.kv_admit_tokens()) {
+                    let blocked = self.queue[idx].0.arrival();
+                    self.record_event(EventKind::AdmitBlocked, self.now, blocked);
                     break;
                 }
                 let (job, tag) = self.queue.remove(idx).unwrap();
@@ -825,6 +827,8 @@ impl Device {
             }
             let Some(idx) = self.next_admission(t0) else { break };
             if self.kv_admission_blocked(self.queue[idx].0.kv_admit_tokens()) {
+                let blocked = self.queue[idx].0.arrival();
+                self.record_event(EventKind::AdmitBlocked, self.now, blocked);
                 break;
             }
             let needs_slot = !matches!(self.queue[idx].0, DeviceJob::PrefillOnly { .. });
@@ -993,6 +997,14 @@ impl Device {
         self.decode_steps += 1;
         // a decode step serves the whole batch: no single arrival
         self.record_span(SpanKind::DecodeStep, start, dt, -1.0, batch);
+        // decode-batch membership side-channel: which arrivals shared
+        // this step (pure observation — copies already-charged values)
+        if self.obs.is_some() {
+            let members: Vec<f64> = self.active.iter().flatten().map(|s| s.arrival).collect();
+            if let Some(rec) = &mut self.obs {
+                rec.decode_batch(start, dt, members);
+            }
+        }
         let observe = self.obs.is_some();
         let mut finished: Vec<f64> = Vec::new();
         for slot in self.active.iter_mut() {
@@ -1414,6 +1426,63 @@ mod tests {
         let done = rec.events.iter().filter(|e| e.kind == EventKind::Done).count();
         assert_eq!(queued, 5);
         assert_eq!(done, observed.served.len());
+    }
+
+    #[test]
+    fn decode_batch_membership_mirrors_decode_spans() {
+        let mut d = dev(4);
+        d.enable_obs();
+        for i in 0..4 {
+            d.push(DeviceJob::Full {
+                arrival: i as f64 * 0.001,
+                ready: i as f64 * 0.001,
+                l_in: 128,
+                l_out: 8,
+            });
+        }
+        drain(&mut d);
+        let rec = d.obs().unwrap();
+        // one membership record per decode step, uncapped
+        assert_eq!(rec.batches.len() as u64, d.decode_steps);
+        let decode_spans: Vec<_> =
+            rec.spans.iter().filter(|s| s.kind == SpanKind::DecodeStep).collect();
+        assert_eq!(decode_spans.len(), rec.batches.len());
+        for (s, b) in decode_spans.iter().zip(&rec.batches) {
+            assert_eq!(s.start.to_bits(), b.start.to_bits());
+            assert_eq!(s.dur.to_bits(), b.dur.to_bits());
+            assert_eq!(s.batch, b.arrivals.len(), "span batch size equals member count");
+        }
+        // every served arrival appears in at least one batch record
+        for r in &d.served {
+            assert!(
+                rec.batches.iter().any(|b| b.arrivals.contains(&r.arrival)),
+                "arrival {} missing from batch membership",
+                r.arrival
+            );
+        }
+    }
+
+    #[test]
+    fn kv_blocked_admission_emits_admit_blocked_events() {
+        let llm = LlmConfig::llama2_7b();
+        let kvpt = llm.kv_bytes_per_token();
+        let sched = SchedConfig::default().with_kv_capacity(1000 * kvpt);
+        let mut d = dev_with(4, sched);
+        d.enable_obs();
+        for _ in 0..4 {
+            d.push(DeviceJob::Full { arrival: 0.0, ready: 0.0, l_in: 200, l_out: 300 });
+        }
+        drain(&mut d);
+        let rec = d.obs().unwrap();
+        let blocked =
+            rec.events.iter().filter(|e| e.kind == EventKind::AdmitBlocked).count();
+        assert!(blocked > 0, "KV-capped backlog must record admission-gate events");
+        // the gate names the request it refused
+        assert!(rec
+            .events
+            .iter()
+            .filter(|e| e.kind == EventKind::AdmitBlocked)
+            .all(|e| e.arrival >= 0.0));
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Critical-path-plane integration pins: every extracted per-request
+//! path must fold bit-exactly onto the recorded e2e on a chunked
+//! disaggregated replay, the what-if estimator must agree (sign and
+//! magnitude) with a real replay at a scaled point, capped recorders
+//! must degrade to partial coverage instead of panicking, recorder drop
+//! counters must surface in the JSON snapshots, and the OpenMetrics
+//! exposition must match its golden file byte for byte.
+
+use halo::cluster::{
+    collect_trace, ArrivalKind, Fleet, Interconnect, Mix, Policy, Router, SchedConfig,
+    TrafficConfig,
+};
+use halo::config::HwConfig;
+use halo::model::LlmConfig;
+use halo::obs::{self, Registry, Resource, SelfProfile};
+use halo::sim::queueing::TraceRequest;
+use halo::util::json::Json;
+use halo::util::percentile;
+
+/// The configuration of interest: phase-disaggregated pools with
+/// chunked prefill, so queue wait, prefill chunks, KV handoff and
+/// decode all land on the critical path.
+fn chunked_fleet(devices: usize, link: Interconnect) -> (Fleet, Box<dyn Router>) {
+    Policy::PhaseDisaggregated.build_with(
+        &LlmConfig::llama2_7b(),
+        &HwConfig::paper(),
+        devices,
+        8,
+        0.5,
+        link,
+        SchedConfig::chunked(256),
+    )
+}
+
+fn mmpp_trace(seed: u64, n: usize, rate: f64) -> Vec<TraceRequest> {
+    let cfg = TrafficConfig::new(seed, rate, 1.0e9, Mix::Chat)
+        .with_kind(ArrivalKind::Mmpp)
+        .with_max_requests(n);
+    collect_trace(&mut cfg.build())
+}
+
+#[test]
+fn critical_paths_fold_bit_exactly_on_a_chunked_disaggregated_replay() {
+    let trace = mmpp_trace(7, 200, 24.0);
+    let (mut fleet, mut router) = chunked_fleet(4, Interconnect::board());
+    fleet.enable_obs();
+    let r = fleet.replay(&trace, router.as_mut());
+
+    let recorders = fleet.recorders().expect("obs enabled");
+    let kv = fleet.kv_spans().expect("obs enabled");
+    let paths = obs::extract_paths(&r.served, &recorders, kv);
+    assert_eq!(paths.len(), r.requests);
+    assert_eq!(obs::reconcile_paths(&paths), 0, "paths must fold bit-exactly onto e2e");
+    for p in &paths {
+        assert_eq!(p.fold().to_bits(), p.e2e.to_bits(), "left fold must reproduce e2e bits");
+        assert!((0.0..=1.0).contains(&p.coverage), "coverage {} out of range", p.coverage);
+    }
+    // complete instrumentation: the service segments dominate the paths
+    let mean_cov = paths.iter().map(|p| p.coverage).sum::<f64>() / paths.len() as f64;
+    assert!(mean_cov > 0.5, "uncapped recorders must cover most of the e2e, got {mean_cov}");
+
+    // the configuration exercises every major segment source
+    let has = |label: &str| paths.iter().any(|p| p.segments.iter().any(|s| s.label == label));
+    assert!(has("queue_wait"), "bursty load must queue");
+    assert!(has("prefill_chunk"), "chunked prefill must land on the path");
+    assert!(has("kv_handoff"), "disaggregation must hand off KV");
+    assert!(has("decode_step"), "decode must land on the path");
+
+    // bottleneck profile: one row per resource, shares sum to 1
+    let rows = obs::bottleneck_profile(&paths, 99.0);
+    assert_eq!(rows.len(), obs::N_RESOURCES);
+    let share: f64 = rows.iter().map(|r| r.share).sum();
+    assert!((share - 1.0).abs() < 1e-6, "resource shares sum to {share}");
+    let tail: f64 = rows.iter().map(|r| r.tail_share).sum();
+    assert!((tail - 1.0).abs() < 1e-6, "tail shares sum to {tail}");
+
+    // per-phase split covers the same seconds as the flat profile
+    let phases = obs::phase_profile(&paths);
+    let flat: f64 = rows.iter().map(|r| r.total_s).sum();
+    let split: f64 = phases.iter().map(|p| p.total_s).sum();
+    assert!((flat - split).abs() < 1e-9 * flat.abs().max(1.0), "{flat} vs {split}");
+}
+
+#[test]
+fn interconnect_whatif_agrees_with_a_real_scaled_replay() {
+    // a slow link at low load: KV handoffs are a first-order cost, and
+    // queueing second-order effects stay small, so the virtual speedup
+    // should land near the real one
+    let trace = mmpp_trace(11, 120, 4.0);
+    let (mut base_fleet, mut base_router) = chunked_fleet(4, Interconnect::ethernet());
+    base_fleet.enable_obs();
+    let base = base_fleet.replay(&trace, base_router.as_mut());
+
+    let recorders = base_fleet.recorders().expect("obs enabled");
+    let paths =
+        obs::extract_paths(&base.served, &recorders, base_fleet.kv_spans().expect("obs enabled"));
+    assert_eq!(obs::reconcile_paths(&paths), 0);
+    let interconnect_s: f64 =
+        paths.iter().map(|p| p.per_resource()[Resource::Interconnect.index()]).sum();
+    assert!(interconnect_s > 0.0, "ethernet handoffs must land on the critical path");
+
+    let whatifs = obs::standard_whatifs();
+    let bw2 = whatifs.iter().find(|w| w.name == "interconnect_bw_x2").expect("standard axis");
+    let est = obs::whatif::evaluate(&paths, bw2);
+
+    // ground truth: the same trace through the same fleet shape with the
+    // link bandwidth actually doubled
+    let (mut fast_fleet, mut fast_router) =
+        chunked_fleet(4, Interconnect::ethernet().with_bandwidth_scale(2.0));
+    let fast = fast_fleet.replay(&trace, fast_router.as_mut());
+
+    let e2e_of = |r: &halo::cluster::FleetResult| -> Vec<f64> {
+        r.served.iter().map(|s| s.e2e).collect()
+    };
+    let base_e2e = e2e_of(&base);
+    let fast_e2e = e2e_of(&fast);
+    let true_mean_delta = fast_e2e.iter().sum::<f64>() / fast_e2e.len() as f64
+        - base_e2e.iter().sum::<f64>() / base_e2e.len() as f64;
+    let true_p99_delta = percentile(&fast_e2e, 99.0) - percentile(&base_e2e, 99.0);
+
+    // sign agreement: both the estimator and reality say the faster
+    // link helps
+    assert!(est.delta_e2e_mean_s < 0.0, "estimated mean delta {}", est.delta_e2e_mean_s);
+    assert!(est.delta_e2e_p99_s <= 0.0, "estimated p99 delta {}", est.delta_e2e_p99_s);
+    assert!(true_mean_delta < 0.0, "real mean delta {true_mean_delta}");
+    assert!(true_p99_delta <= 0.0, "real p99 delta {true_p99_delta}");
+
+    // pinned relative bound on the mean movement: the estimator halves
+    // the observed handoff segments, reality halves the pipe term and
+    // relaxes queueing — they must land within 60% + 2ms of each other
+    let err = (est.delta_e2e_mean_s - true_mean_delta).abs();
+    let bound = 0.6 * true_mean_delta.abs() + 2e-3;
+    assert!(
+        err <= bound,
+        "what-if drifted from reality: est {} vs true {true_mean_delta} (err {err} > {bound})",
+        est.delta_e2e_mean_s
+    );
+}
+
+#[test]
+fn capped_recorders_degrade_to_partial_coverage_without_panicking() {
+    let trace = mmpp_trace(13, 150, 24.0);
+    let (mut fleet, mut router) = chunked_fleet(4, Interconnect::board());
+    // a cap this tiny guarantees drops on every device
+    fleet.enable_obs_capped(8);
+    let r = fleet.replay(&trace, router.as_mut());
+
+    let dropped = fleet.obs_dropped().expect("obs enabled");
+    assert_ne!(dropped, (0, 0, 0), "the cap must actually have been hit for this pin to bind");
+
+    let recorders = fleet.recorders().expect("obs enabled");
+    let paths = obs::extract_paths(&r.served, &recorders, fleet.kv_spans().unwrap_or(&[]));
+    assert_eq!(paths.len(), r.requests, "every served request still gets a path");
+    assert_eq!(obs::reconcile_paths(&paths), 0, "reconciliation survives lossy traces");
+    for p in &paths {
+        assert!((0.0..=1.0).contains(&p.coverage));
+    }
+    // lost spans mean lost coverage, honestly reported
+    let mean_cov = paths.iter().map(|p| p.coverage).sum::<f64>() / paths.len() as f64;
+    assert!(mean_cov < 0.5, "a cap of 8 spans/device must lose most coverage, got {mean_cov}");
+    // inference is disabled on lossy traces: gap time reads unattributed,
+    // never confidently mislabeled
+    let unattributed: f64 = obs::bottleneck_profile(&paths, 99.0)
+        .iter()
+        .filter(|r| r.resource == Resource::Unattributed)
+        .map(|r| r.total_s)
+        .sum();
+    assert!(unattributed > 0.0, "lossy traces must carry unattributed time");
+}
+
+#[test]
+fn snapshots_surface_recorder_drop_counters() {
+    let trace = mmpp_trace(17, 80, 24.0);
+    let (mut fleet, mut router) = chunked_fleet(2, Interconnect::board());
+    fleet.enable_obs_capped(4);
+    let r = fleet.replay(&trace, router.as_mut());
+    let dropped = fleet.obs_dropped().expect("obs enabled");
+    assert_ne!(dropped, (0, 0, 0));
+
+    let snap = obs::cluster_snapshot(
+        &r,
+        fleet.cost_walks(),
+        fleet.cost_memo_hits(),
+        &SelfProfile::new(),
+        Json::Null,
+        Some(dropped),
+    );
+    let parsed = Json::parse(&snap.to_string()).expect("snapshot must be valid json");
+    let spans = parsed.path(&["obs_dropped", "spans"]).and_then(Json::as_f64).unwrap();
+    let events = parsed.path(&["obs_dropped", "events"]).and_then(Json::as_f64).unwrap();
+    let batches = parsed.path(&["obs_dropped", "batches"]).and_then(Json::as_f64).unwrap();
+    assert_eq!(
+        (spans as u64, events as u64, batches as u64),
+        dropped,
+        "drop counters must surface verbatim"
+    );
+    // uninstrumented runs read null, not zero — "no recorder" and
+    // "lossless recorder" stay distinguishable
+    let plain = obs::cluster_snapshot(&r, 0, 0, &SelfProfile::new(), Json::Null, None);
+    assert_eq!(plain.path(&["obs_dropped"]), Some(&Json::Null));
+}
+
+#[test]
+fn openmetrics_exposition_matches_the_golden_file() {
+    // a hand-pinned registry: dyadic samples so `_sum` renders exactly,
+    // samples and boundaries in distinct log buckets so the cumulative
+    // bucket counts are unambiguous
+    let mut reg = Registry::new();
+    reg.inc("decode_steps", 7);
+    reg.inc("requests_served", 3);
+    reg.gauge("utilization", 0.75);
+    let h = reg.hist("e2e_s");
+    h.record(0.25);
+    h.record(2.0);
+    h.record(50.0);
+
+    let golden = include_str!("data/openmetrics.golden.prom");
+    assert_eq!(
+        reg.to_openmetrics(),
+        golden,
+        "OpenMetrics exposition drifted from its golden file"
+    );
+}
