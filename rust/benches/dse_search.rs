@@ -1,9 +1,10 @@
 //! Microbenchmarks of the DSE plane: candidate evaluation (one fleet
-//! replay + scoring), full smoke-grid searches, and hill-climbing over
-//! the fleet space — the paths `halo dse` sits on.
+//! replay + scoring), full smoke-grid searches, hill-climbing over the
+//! fleet space, and the parallel / multi-fidelity variants of the grid
+//! — the paths `halo dse` sits on.
 
 use halo::cluster::Mix;
-use halo::dse::{explore, DseConfig, Exhaustive, HillClimb, RandomSearch, SearchSpace};
+use halo::dse::{explore, DseConfig, Exhaustive, Fidelity, HillClimb, RandomSearch, SearchSpace};
 use halo::model::LlmConfig;
 use halo::util::bench::{bb, BenchSuite};
 
@@ -35,6 +36,37 @@ fn main() {
     s.bench("hillclimb_fleet_space", || {
         let mut hc = HillClimb { restarts: 1, steps: 6, seed: 5 };
         bb(explore(&fleet, &mut hc, &base));
+    });
+
+    // the same power-space grid at 1 and 4 evaluation threads: the pair
+    // measures the worker pool's speedup on a bit-identical search
+    let power = SearchSpace::preset("power").unwrap();
+    let par = {
+        let mut cfg = base.clone();
+        cfg.requests = 24;
+        cfg
+    };
+    s.bench_throughput("grid_power_space_t1", power.len() as f64, || {
+        bb(explore(&power, &mut Exhaustive, &par));
+    });
+    let par4 = {
+        let mut cfg = par.clone();
+        cfg.threads = 4;
+        cfg
+    };
+    s.bench_throughput("grid_power_space_t4", power.len() as f64, || {
+        bb(explore(&power, &mut Exhaustive, &par4));
+    });
+
+    // successive halving over the same grid: most replays are short
+    // prefixes, only survivors pay the full trace
+    let halved = {
+        let mut cfg = par.clone();
+        cfg.fidelity = Fidelity::halving();
+        cfg
+    };
+    s.bench_throughput("grid_power_space_halving", power.len() as f64, || {
+        bb(explore(&power, &mut Exhaustive, &halved));
     });
 
     s.finish();

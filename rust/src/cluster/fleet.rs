@@ -649,11 +649,20 @@ impl Fleet {
         let mut sink = ServeSink::new(opts.retain_cap, self.devices.len());
         let mut next_req = source.next();
         let mut inflight: Vec<InFlight> = Vec::new();
+        // dirty-min caches over the per-event scans: each event touches
+        // exactly one device, so only that device's next-action time is
+        // recomputed, and the in-flight min-ready folds incrementally on
+        // push (a delivery rebuilds it). Bit-identical to the full
+        // rescans — pinned by the reference-loop replay test on every
+        // `Mix` preset.
+        let mut dev_next: Vec<Option<f64>> =
+            self.devices.iter().map(Device::next_action_time).collect();
+        let mut hand_min = f64::INFINITY;
         loop {
             // earliest actionable device
             let mut best: Option<(f64, usize)> = None;
-            for d in &self.devices {
-                if let Some(t) = d.next_action_time() {
+            for (d, t) in self.devices.iter().zip(dev_next.iter()) {
+                if let Some(t) = *t {
                     if best.is_none_or(|(bt, _)| t < bt) {
                         best = Some((t, d.id));
                     }
@@ -661,7 +670,12 @@ impl Fleet {
             }
             let t_dev = best.map_or(f64::INFINITY, |(t, _)| t);
             let t_arr = next_req.as_ref().map_or(f64::INFINITY, |r| r.arrival);
-            let t_hand = inflight.iter().map(|h| h.ready).fold(f64::INFINITY, f64::min);
+            let t_hand = hand_min;
+            debug_assert_eq!(
+                t_hand.to_bits(),
+                inflight.iter().map(|h| h.ready).fold(f64::INFINITY, f64::min).to_bits(),
+                "stale in-flight min-ready cache"
+            );
 
             // window roll before dispatch: when the next event crosses a
             // window boundary, close windows with gauges read *before*
@@ -700,6 +714,7 @@ impl Fleet {
                         tag,
                     );
                 }
+                dev_next[route.prefill] = self.devices[route.prefill].next_action_time();
                 next_req = source.next();
             } else if t_hand.is_finite() && t_hand <= t_dev {
                 // deliver the earliest completed KV transfer
@@ -710,6 +725,7 @@ impl Fleet {
                     .map(|(i, _)| i)
                     .unwrap();
                 let h = inflight.swap_remove(i);
+                hand_min = inflight.iter().map(|h| h.ready).fold(f64::INFINITY, f64::min);
                 self.pending_decode[h.dev] -= 1;
                 // exact reverse of kv_estimate:
                 // l_in + max(l_out, 1) == ctx + remaining + 1
@@ -725,6 +741,7 @@ impl Fleet {
                     },
                     h.tag,
                 );
+                dev_next[h.dev] = self.devices[h.dev].next_action_time();
             } else if let Some((_, id)) = best {
                 for done in self.devices[id].step_cycle() {
                     let bytes = kv_transfer_bytes(&self.llm, done.l_in);
@@ -752,7 +769,9 @@ impl Fleet {
                         remaining: done.l_out.saturating_sub(1),
                         tag: done.tag,
                     });
+                    hand_min = hand_min.min(done.done_at + t_xfer);
                 }
+                dev_next[id] = self.devices[id].next_action_time();
                 // fold completions as they happen so the retained window
                 // and the histograms stay current without re-scanning
                 if !self.devices[id].served.is_empty() {

@@ -23,6 +23,17 @@
 //! the Pareto frontier, and — when a TTFT SLO is given — the *cheapest*
 //! configuration that meets it. Everything is deterministic per seed:
 //! two runs with the same arguments are bit-identical.
+//!
+//! Evaluation is batched and optionally parallel: strategies hand the
+//! engine whole batches of independent points (see
+//! [`Strategy::search_batched`]) which fan out over a
+//! `std::thread::scope` worker pool ([`DseConfig::threads`]) and merge
+//! back in batch order, so results are bit-identical at any thread
+//! count. [`Fidelity::SuccessiveHalving`] layers multi-fidelity on top:
+//! the strategy runs on short trace prefixes, the top `1/eta` survive
+//! each rung, and survivors are always re-scored at full fidelity —
+//! reported metrics, the frontier, and the SLO choice only ever come
+//! from full replays.
 
 pub mod objective;
 pub mod pareto;
@@ -30,6 +41,8 @@ pub mod space;
 pub mod strategy;
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
 
 pub use objective::{fleet_cost, Direction, Metrics, Objective};
 pub use pareto::{dominates, pareto_indices};
@@ -81,6 +94,11 @@ pub struct DseConfig {
     /// for hill-climbing when no SLO is set.
     pub objectives: Vec<Objective>,
     pub base_hw: HwConfig,
+    /// Worker threads for candidate evaluation (1 = in-line). Purely a
+    /// wall-clock knob: results are bit-identical at any value.
+    pub threads: usize,
+    /// How much of the trace each candidate replays before scoring.
+    pub fidelity: Fidelity,
 }
 
 impl DseConfig {
@@ -98,6 +116,41 @@ impl DseConfig {
             slo: None,
             objectives: Objective::default_set(),
             base_hw: HwConfig::paper(),
+            threads: 1,
+            fidelity: Fidelity::Full,
+        }
+    }
+}
+
+/// Evaluation fidelity of one exploration run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Every visited candidate replays the full trace (the default).
+    Full,
+    /// Successive halving: the strategy runs entirely on the shortest
+    /// trace prefix (`requests / start_div`), then the visited pool is
+    /// re-scored on geometrically longer prefixes, keeping the top
+    /// `1/eta` per rung; survivors are always re-scored on the full
+    /// trace. `evaluated`, the frontier, and the SLO choice therefore
+    /// come only from full-fidelity replays; pruned points are counted
+    /// in the self-profile (`sh_pruned` out of `sh_pool`), never
+    /// silently dropped from coverage claims.
+    SuccessiveHalving { eta: usize, start_div: usize },
+}
+
+impl Fidelity {
+    /// The default halving schedule: score on requests/8, promote the
+    /// top half, re-score on requests/4, promote again, then replay the
+    /// survivors in full — about 4x fewer full-fidelity replays than an
+    /// exhaustive pass over the same pool.
+    pub fn halving() -> Self {
+        Fidelity::SuccessiveHalving { eta: 2, start_div: 8 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Fidelity::Full => "full",
+            Fidelity::SuccessiveHalving { .. } => "halving",
         }
     }
 }
@@ -140,13 +193,18 @@ impl DseResult {
     }
 
     /// Index of the evaluated candidate best on `obj` (by minimized
-    /// score; ties resolve to the earliest-visited).
+    /// score; ties resolve to the earliest-visited). When `obj` is one
+    /// of the configured objectives, the ranking reads the cached
+    /// `Evaluated.scores` column — no re-scoring, and guaranteed
+    /// consistency with the frontier's coordinates; other objectives
+    /// fall back to scoring the stored metrics.
     pub fn best_by(&self, obj: Objective) -> Option<usize> {
-        (0..self.evaluated.len())
-            .min_by(|&a, &b| {
-                obj.score(&self.evaluated[a].metrics)
-                    .total_cmp(&obj.score(&self.evaluated[b].metrics))
-            })
+        let col = self.objectives.iter().position(|&o| o == obj);
+        let score = |i: usize| match col {
+            Some(c) => self.evaluated[i].scores[c],
+            None => obj.score(&self.evaluated[i].metrics),
+        };
+        (0..self.evaluated.len()).min_by(|&a, &b| score(a).total_cmp(&score(b)))
     }
 
     fn meets_slo(&self, i: usize) -> bool {
@@ -187,10 +245,278 @@ fn evaluate_candidate(
     (m, fleet.cost_walks(), fleet.cost_memo_hits())
 }
 
+/// Replay every pending candidate — in-line for one worker, fanned over
+/// a `std::thread::scope` pool otherwise. Workers steal positions from
+/// an atomic cursor and return `(position, result)` pairs; the merge
+/// reorders them by position, so the output is position-aligned with
+/// `pending` regardless of which worker ran what. Wall time accumulates
+/// under `wall_key` and the same-named counter counts the replays.
+fn evaluate_batch(
+    pending: &[(Index, Candidate)],
+    cfg: &DseConfig,
+    trace: &[TraceRequest],
+    prof: &mut SelfProfile,
+    wall_key: &'static str,
+) -> Vec<(Metrics, u64, u64)> {
+    if pending.is_empty() {
+        return Vec::new();
+    }
+    let n = pending.len();
+    let workers = cfg.threads.max(1).min(n);
+    let t0 = Instant::now();
+    let results: Vec<(Metrics, u64, u64)> = if workers == 1 {
+        pending.iter().map(|(_, cand)| evaluate_candidate(cand, cfg, trace)).collect()
+    } else {
+        let mut slots: Vec<Option<(Metrics, u64, u64)>> = vec![None; n];
+        let cursor = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let cursor = &cursor;
+                    s.spawn(move || {
+                        let mut done = Vec::new();
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            done.push((i, evaluate_candidate(&pending[i].1, cfg, trace)));
+                        }
+                        done
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, r) in h.join().expect("DSE worker panicked") {
+                    slots[i] = Some(r);
+                }
+            }
+        });
+        slots.into_iter().map(|r| r.expect("unevaluated batch slot")).collect()
+    };
+    prof.add_wall(wall_key, t0.elapsed().as_secs_f64());
+    prof.add(wall_key, n as u64);
+    results
+}
+
+/// Resolution of one batch point against a memo: already scored, or
+/// position `usize` in the batch's pending (to-replay) list.
+enum Slot {
+    Done(f64),
+    Pending(usize),
+}
+
+/// The memoizing batch evaluator behind [`explore`]: resolves each batch
+/// against the canonical-index memo (later in-batch duplicates of a
+/// pending key count as memo hits, exactly as they would sequentially),
+/// replays the distinct new candidates via [`evaluate_batch`], and
+/// merges results in batch order — so `evaluated`, the memo, and every
+/// profile counter are bit-identical at any thread count.
+struct Evaluator<'a> {
+    space: &'a SearchSpace,
+    cfg: &'a DseConfig,
+    trace: &'a [TraceRequest],
+    evaluated: Vec<Evaluated>,
+    /// Keyed on the canonical index (axes a topology ignores are
+    /// pinned), so physically identical points replay once and appear
+    /// as one frontier row; invalid points pin to +inf.
+    memo: BTreeMap<Index, f64>,
+    prof: SelfProfile,
+}
+
+impl Evaluator<'_> {
+    fn run_batch(&mut self, batch: &[Index]) -> Vec<f64> {
+        let mut slots: Vec<Slot> = Vec::with_capacity(batch.len());
+        let mut pending: Vec<(Index, Candidate)> = Vec::new();
+        let mut pending_at: BTreeMap<Index, usize> = BTreeMap::new();
+        for idx in batch {
+            let key = self.space.canonical(idx);
+            if let Some(&s) = self.memo.get(&key) {
+                self.prof.add("dse_memo_hits", 1);
+                slots.push(Slot::Done(s));
+            } else if let Some(&p) = pending_at.get(&key) {
+                self.prof.add("dse_memo_hits", 1);
+                slots.push(Slot::Pending(p));
+            } else {
+                let cand = self.space.decode(&key);
+                if cand.valid() {
+                    pending_at.insert(key, pending.len());
+                    slots.push(Slot::Pending(pending.len()));
+                    pending.push((key, cand));
+                } else {
+                    self.prof.add("invalid_candidates", 1);
+                    self.memo.insert(key, f64::INFINITY);
+                    slots.push(Slot::Done(f64::INFINITY));
+                }
+            }
+        }
+        let results =
+            evaluate_batch(&pending, self.cfg, self.trace, &mut self.prof, "candidate_evals");
+        let mut scalars = Vec::with_capacity(pending.len());
+        for ((key, cand), (metrics, walks, oracle_hits)) in pending.into_iter().zip(results) {
+            self.prof.add("graph_walks", walks);
+            self.prof.add("oracle_memo_hits", oracle_hits);
+            let scalar = scalarize(self.cfg, &metrics);
+            let scores = self.cfg.objectives.iter().map(|o| o.score(&metrics)).collect();
+            self.evaluated.push(Evaluated { index: key, candidate: cand, metrics, scores });
+            self.memo.insert(key, scalar);
+            scalars.push(scalar);
+        }
+        slots
+            .iter()
+            .map(|s| match s {
+                Slot::Done(v) => *v,
+                Slot::Pending(p) => scalars[*p],
+            })
+            .collect()
+    }
+}
+
+/// One pooled point of a successive-halving run, carrying its
+/// latest-rung score.
+struct ShPoint {
+    key: Index,
+    cand: Candidate,
+    scalar: f64,
+    slo_ttft: f64,
+}
+
+/// Multi-fidelity mode: run the whole strategy on the shortest trace
+/// prefix (cheap replays both guide the walk and seed the pool), prune
+/// the pool on geometrically longer prefixes keeping the top `1/eta`
+/// per rung, and finally push the survivors through the full-fidelity
+/// engine — the only place `ev.evaluated` grows. Deterministic at any
+/// thread count: batches merge in order and the promotion sort is total
+/// with a pool-order tie-break.
+fn successive_halving(
+    ev: &mut Evaluator<'_>,
+    strategy: &mut dyn Strategy,
+    eta: usize,
+    start_div: usize,
+) {
+    let eta = eta.max(2);
+    // prefix divisors, largest first; stop above `eta` so the last rung
+    // is still a strict prefix and full fidelity stays a separate pass
+    let mut divs: Vec<usize> = Vec::new();
+    let mut d = start_div;
+    while d > eta {
+        divs.push(d);
+        d /= eta;
+    }
+    if divs.is_empty() {
+        // degenerate schedule (start_div <= eta): plain full fidelity
+        strategy.search_batched(ev.space, &mut |b| ev.run_batch(b));
+        return;
+    }
+
+    // rung 0: the strategy's entire walk happens here, scored on the
+    // shortest prefix against a rung-local memo
+    let space = ev.space;
+    let cfg = ev.cfg;
+    let trace = ev.trace;
+    let n0 = (trace.len() / divs[0]).max(1).min(trace.len().max(1));
+    let prefix0 = &trace[..n0.min(trace.len())];
+    let mut pool: Vec<ShPoint> = Vec::new();
+    let mut rung_memo: BTreeMap<Index, f64> = BTreeMap::new();
+    {
+        let mut run = |batch: &[Index]| -> Vec<f64> {
+            let mut slots: Vec<Slot> = Vec::with_capacity(batch.len());
+            let mut pending: Vec<(Index, Candidate)> = Vec::new();
+            let mut pending_at: BTreeMap<Index, usize> = BTreeMap::new();
+            for idx in batch {
+                let key = space.canonical(idx);
+                if let Some(&s) = rung_memo.get(&key) {
+                    ev.prof.add("dse_memo_hits", 1);
+                    slots.push(Slot::Done(s));
+                } else if let Some(&p) = pending_at.get(&key) {
+                    ev.prof.add("dse_memo_hits", 1);
+                    slots.push(Slot::Pending(p));
+                } else {
+                    let cand = space.decode(&key);
+                    if cand.valid() {
+                        pending_at.insert(key, pending.len());
+                        slots.push(Slot::Pending(pending.len()));
+                        pending.push((key, cand));
+                    } else {
+                        ev.prof.add("invalid_candidates", 1);
+                        rung_memo.insert(key, f64::INFINITY);
+                        slots.push(Slot::Done(f64::INFINITY));
+                    }
+                }
+            }
+            let results = evaluate_batch(&pending, cfg, prefix0, &mut ev.prof, "sh_rung_evals");
+            let mut scalars = Vec::with_capacity(pending.len());
+            for ((key, cand), (m, walks, hits)) in pending.into_iter().zip(results) {
+                ev.prof.add("graph_walks", walks);
+                ev.prof.add("oracle_memo_hits", hits);
+                let scalar = scalarize(cfg, &m);
+                rung_memo.insert(key, scalar);
+                pool.push(ShPoint { key, cand, scalar, slo_ttft: m.slo_ttft });
+                scalars.push(scalar);
+            }
+            slots
+                .iter()
+                .map(|s| match s {
+                    Slot::Done(v) => *v,
+                    Slot::Pending(p) => scalars[*p],
+                })
+                .collect()
+        };
+        strategy.search_batched(space, &mut run);
+    }
+    ev.prof.add("sh_pool", pool.len() as u64);
+
+    // later rungs re-score the survivors on longer prefixes; each rung
+    // (including rung 0, whose scores the strategy drive produced)
+    // promotes the top 1/eta
+    let mut alive: Vec<usize> = (0..pool.len()).collect();
+    for (r, &div) in divs.iter().enumerate() {
+        if r > 0 {
+            let n_r = (trace.len() / div).max(1).min(trace.len().max(1));
+            let prefix = &trace[..n_r.min(trace.len())];
+            let batch: Vec<(Index, Candidate)> =
+                alive.iter().map(|&p| (pool[p].key, pool[p].cand.clone())).collect();
+            let results = evaluate_batch(&batch, cfg, prefix, &mut ev.prof, "sh_rung_evals");
+            for (&p, (m, walks, hits)) in alive.iter().zip(results) {
+                ev.prof.add("graph_walks", walks);
+                ev.prof.add("oracle_memo_hits", hits);
+                pool[p].scalar = scalarize(cfg, &m);
+                pool[p].slo_ttft = m.slo_ttft;
+            }
+        }
+        let keep = alive.len().div_ceil(eta).max(1);
+        if keep >= alive.len() {
+            continue;
+        }
+        // rank by (scalar, slo_ttft, pool position) — the same ordering
+        // the final SLO choice uses, so ties never prune the would-be
+        // winner arbitrarily
+        let mut ranked = alive.clone();
+        ranked.sort_by(|&a, &b| {
+            pool[a]
+                .scalar
+                .total_cmp(&pool[b].scalar)
+                .then(pool[a].slo_ttft.total_cmp(&pool[b].slo_ttft))
+                .then(a.cmp(&b))
+        });
+        ranked.truncate(keep);
+        ranked.sort_unstable(); // back to pool order for the next rung
+        ev.prof.add("sh_pruned", (alive.len() - keep) as u64);
+        alive = ranked;
+    }
+
+    // survivors go through the full-fidelity engine: this is the only
+    // place `evaluated` grows, so metrics/frontier/SLO are full replays
+    let survivors: Vec<Index> = alive.iter().map(|&p| pool[p].key).collect();
+    let _ = ev.run_batch(&survivors);
+}
+
 /// Run one exploration: calibrate the offered load, drive `strategy`
-/// over `space` with memoized candidate evaluation, then extract the
-/// Pareto frontier and the SLO choice. Deterministic per (space,
-/// strategy, cfg) — including bit-identical floating-point results.
+/// over `space` with memoized, batched (and, at `cfg.threads > 1`,
+/// parallel) candidate evaluation, then extract the Pareto frontier and
+/// the SLO choice. Deterministic per (space, strategy, cfg) — including
+/// bit-identical floating-point results at any thread count; only the
+/// profile's wall times vary across hosts.
 pub fn explore(
     space: &SearchSpace,
     strategy: &mut dyn Strategy,
@@ -207,36 +533,21 @@ pub fn explore(
     let trace =
         prof.time("trace_gen", || cfg.mix.trace_tenants(cfg.seed, cfg.requests, rate, cfg.tenants));
 
-    let mut evaluated: Vec<Evaluated> = Vec::new();
-    // memo keyed on the canonical index (axes a topology ignores are
-    // pinned), so physically identical points replay once and appear as
-    // one frontier row; invalid points pin to +inf
-    let mut memo: BTreeMap<Index, f64> = BTreeMap::new();
-    {
-        let mut eval = |idx: &Index| -> f64 {
-            let key = space.canonical(idx);
-            if let Some(&s) = memo.get(&key) {
-                prof.add("dse_memo_hits", 1);
-                return s;
-            }
-            let cand = space.decode(&key);
-            if !cand.valid() {
-                prof.add("invalid_candidates", 1);
-                memo.insert(key, f64::INFINITY);
-                return f64::INFINITY;
-            }
-            let (metrics, walks, oracle_hits) =
-                prof.time("candidate_evals", || evaluate_candidate(&cand, cfg, &trace));
-            prof.add("graph_walks", walks);
-            prof.add("oracle_memo_hits", oracle_hits);
-            let scalar = scalarize(cfg, &metrics);
-            let scores = cfg.objectives.iter().map(|o| o.score(&metrics)).collect();
-            evaluated.push(Evaluated { index: key, candidate: cand, metrics, scores });
-            memo.insert(key, scalar);
-            scalar
-        };
-        strategy.search(space, &mut eval);
+    let mut ev = Evaluator {
+        space,
+        cfg,
+        trace: &trace,
+        evaluated: Vec::new(),
+        memo: BTreeMap::new(),
+        prof,
+    };
+    match cfg.fidelity {
+        Fidelity::Full => strategy.search_batched(space, &mut |b| ev.run_batch(b)),
+        Fidelity::SuccessiveHalving { eta, start_div } => {
+            successive_halving(&mut ev, strategy, eta, start_div)
+        }
     }
+    let Evaluator { evaluated, prof, .. } = ev;
 
     let score_vecs: Vec<Vec<f64>> = evaluated.iter().map(|e| e.scores.clone()).collect();
     let mut frontier = pareto_indices(&score_vecs);
@@ -455,5 +766,105 @@ mod tests {
         cfg.rate = Some(3.5);
         let res = explore(&tiny_space(), &mut Exhaustive, &cfg);
         assert_eq!(res.rate, 3.5);
+    }
+
+    #[test]
+    fn parallel_explore_is_bit_identical_to_sequential() {
+        let space = SearchSpace::paper_point()
+            .with_policies(vec![Policy::LeastLoaded])
+            .with_devices(vec![1])
+            .with_chunks(vec![0, 512])
+            .with_tdp_caps_w(vec![0.0, 60.0]);
+        let mut cfg = tiny_cfg();
+        cfg.rate = Some(10.0);
+        let seq = explore(&space, &mut Exhaustive, &cfg);
+        cfg.threads = 4;
+        let par = explore(&space, &mut Exhaustive, &cfg);
+        assert_eq!(seq.evaluated.len(), par.evaluated.len());
+        for (a, b) in seq.evaluated.iter().zip(par.evaluated.iter()) {
+            assert_eq!(a.index, b.index, "visit order");
+            let (sa, sb): (Vec<u64>, Vec<u64>) = (
+                a.scores.iter().map(|v| v.to_bits()).collect(),
+                b.scores.iter().map(|v| v.to_bits()).collect(),
+            );
+            assert_eq!(sa, sb, "scores of {}", a.candidate.label());
+            assert_eq!(a.metrics.ttft_p50.to_bits(), b.metrics.ttft_p50.to_bits());
+        }
+        assert_eq!(seq.frontier, par.frontier);
+        assert_eq!(seq.slo_choice, par.slo_choice);
+        // counters (not wall times) are part of the determinism contract
+        for key in ["candidate_evals", "dse_memo_hits", "invalid_candidates", "graph_walks"] {
+            assert_eq!(seq.profile.count(key), par.profile.count(key), "{key}");
+        }
+    }
+
+    #[test]
+    fn best_by_reads_the_cached_scores_column_for_configured_objectives() {
+        let mut cfg = tiny_cfg();
+        cfg.objectives = vec![Objective::TtftP50, Objective::Cost];
+        let mut res = explore(&tiny_space(), &mut Exhaustive, &cfg);
+        assert_eq!(res.evaluated.len(), 2);
+        // doctor one point's metrics so cached scores and a re-score
+        // disagree: a configured objective must follow the cache (the
+        // frontier's coordinates), an unconfigured one the metrics
+        let cached_best = res.best_by(Objective::TtftP50).unwrap();
+        let other = 1 - cached_best;
+        res.evaluated[other].metrics.ttft_p50 = -1.0;
+        assert_eq!(
+            res.best_by(Objective::TtftP50),
+            Some(cached_best),
+            "configured objective must rank by the cached scores column"
+        );
+        res.evaluated[other].metrics.e2e_p50 = -1.0;
+        assert_eq!(
+            res.best_by(Objective::E2eP50),
+            Some(other),
+            "unconfigured objective falls back to scoring the metrics"
+        );
+    }
+
+    #[test]
+    fn successive_halving_reports_only_full_fidelity_survivors() {
+        let space = SearchSpace::paper_point()
+            .with_policies(vec![Policy::LeastLoaded])
+            .with_devices(vec![1])
+            .with_chunks(vec![0, 256, 512, 1024]);
+        let mut cfg = tiny_cfg();
+        cfg.requests = 64;
+        cfg.rate = Some(8.0);
+        cfg.fidelity = Fidelity::halving();
+        let res = explore(&space, &mut Exhaustive, &cfg);
+        let pool = res.profile.count("sh_pool");
+        let pruned = res.profile.count("sh_pruned");
+        assert_eq!(pool, 4, "every valid candidate joins the rung-0 pool");
+        // coverage conservation: pool = survivors + pruned, nothing
+        // silently dropped
+        assert_eq!(res.evaluated.len() as u64 + pruned, pool);
+        assert!(pruned > 0, "halving must prune on a 4-point pool");
+        assert_eq!(
+            res.profile.count("candidate_evals"),
+            res.evaluated.len() as u64,
+            "full replays count only the survivors"
+        );
+        assert!(res.profile.count("sh_rung_evals") > 0);
+        assert!(!res.frontier.is_empty());
+    }
+
+    #[test]
+    fn degenerate_halving_schedule_falls_back_to_full_fidelity() {
+        let mut cfg = tiny_cfg();
+        cfg.fidelity = Fidelity::SuccessiveHalving { eta: 2, start_div: 2 };
+        let sh = explore(&tiny_space(), &mut Exhaustive, &cfg);
+        cfg.fidelity = Fidelity::Full;
+        let full = explore(&tiny_space(), &mut Exhaustive, &cfg);
+        assert_eq!(sh.evaluated.len(), full.evaluated.len());
+        assert_eq!(sh.profile.count("sh_pool"), 0);
+        for (a, b) in sh.evaluated.iter().zip(full.evaluated.iter()) {
+            let (sa, sb): (Vec<u64>, Vec<u64>) = (
+                a.scores.iter().map(|v| v.to_bits()).collect(),
+                b.scores.iter().map(|v| v.to_bits()).collect(),
+            );
+            assert_eq!(sa, sb);
+        }
     }
 }

@@ -6,14 +6,44 @@
 //! SLO-penalized cost in auto-tune mode) and `f64::INFINITY` for invalid
 //! points, so strategies need no validity logic of their own. All
 //! strategies are deterministic given their seed.
+//!
+//! Strategies speak two equivalent protocols. [`Strategy::search`] is
+//! the sequential one: one point per `eval` call. [`Strategy::search_batched`]
+//! hands the engine whole batches of mutually independent points and
+//! receives all their scores at once, so the engine may replay a batch
+//! concurrently — the grid yields fixed-size index chunks, random
+//! search yields its entire seeded sample set, and hill-climb yields
+//! each step's neighbor ring. Both protocols visit the same points in
+//! the same order (pinned by test), so everything downstream of the
+//! engine is bit-identical whichever one drives it.
 
 use super::space::{Index, SearchSpace, AXES};
 use crate::util::Rng;
+
+/// Flat-index chunk size of the batched grid. A constant (never the
+/// worker-thread count), so the visit order — and with it every
+/// downstream result — is independent of parallelism.
+pub const GRID_BATCH: usize = 64;
 
 /// A search strategy: drive `eval` over points of `space`.
 pub trait Strategy {
     fn name(&self) -> &'static str;
     fn search(&mut self, space: &SearchSpace, eval: &mut dyn FnMut(&Index) -> f64);
+
+    /// Batched protocol: call `run_batch` with successive batches of
+    /// points whose evaluations are mutually independent; it returns
+    /// one guidance score per point, in batch order. Must visit the
+    /// same points in the same order as [`search`](Self::search). The
+    /// default adapter degenerates to single-point batches, so any
+    /// strategy that only implements `search` still works under the
+    /// parallel engine (it just exposes no parallelism).
+    fn search_batched(
+        &mut self,
+        space: &SearchSpace,
+        run_batch: &mut dyn FnMut(&[Index]) -> Vec<f64>,
+    ) {
+        self.search(space, &mut |idx| run_batch(std::slice::from_ref(idx))[0]);
+    }
 }
 
 /// Exhaustive grid enumeration (the degenerate §V-B "search" and every
@@ -28,6 +58,21 @@ impl Strategy for Exhaustive {
     fn search(&mut self, space: &SearchSpace, eval: &mut dyn FnMut(&Index) -> f64) {
         for i in 0..space.len() {
             eval(&space.flat(i));
+        }
+    }
+    fn search_batched(
+        &mut self,
+        space: &SearchSpace,
+        run_batch: &mut dyn FnMut(&[Index]) -> Vec<f64>,
+    ) {
+        // grid points are all independent; chunk the flat order so one
+        // slow batch never serializes the whole sweep
+        let mut start = 0;
+        while start < space.len() {
+            let end = (start + GRID_BATCH).min(space.len());
+            let batch: Vec<Index> = (start..end).map(|i| space.flat(i)).collect();
+            run_batch(&batch);
+            start = end;
         }
     }
 }
@@ -48,6 +93,19 @@ impl Strategy for RandomSearch {
         let mut rng = Rng::new(self.seed);
         for _ in 0..self.samples {
             eval(&space.sample(&mut rng));
+        }
+    }
+    fn search_batched(
+        &mut self,
+        space: &SearchSpace,
+        run_batch: &mut dyn FnMut(&[Index]) -> Vec<f64>,
+    ) {
+        // no sample depends on another's score: the whole seeded sample
+        // set is one batch
+        let mut rng = Rng::new(self.seed);
+        let batch: Vec<Index> = (0..self.samples).map(|_| space.sample(&mut rng)).collect();
+        if !batch.is_empty() {
+            run_batch(&batch);
         }
     }
 }
@@ -82,6 +140,43 @@ impl Strategy for HillClimb {
                         if s < cur_score && best.is_none_or(|(_, bs)| s < bs) {
                             best = Some((next, s));
                         }
+                    }
+                }
+                match best {
+                    Some((next, s)) => {
+                        cur = next;
+                        cur_score = s;
+                    }
+                    None => break,
+                }
+            }
+        }
+    }
+    fn search_batched(
+        &mut self,
+        space: &SearchSpace,
+        run_batch: &mut dyn FnMut(&[Index]) -> Vec<f64>,
+    ) {
+        let mut rng = Rng::new(self.seed);
+        for _ in 0..self.restarts.max(1) {
+            let mut cur = space.sample(&mut rng);
+            let mut cur_score = run_batch(std::slice::from_ref(&cur))[0];
+            for _ in 0..self.steps {
+                // each step's neighbor ring is one batch, in the same
+                // axis-major order the sequential walk visits it
+                let ring: Vec<Index> = (0..AXES)
+                    .flat_map(|axis| {
+                        [-1i64, 1].into_iter().filter_map(move |dir| space.step(&cur, axis, dir))
+                    })
+                    .collect();
+                if ring.is_empty() {
+                    break;
+                }
+                let scores = run_batch(&ring);
+                let mut best: Option<(Index, f64)> = None;
+                for (next, &s) in ring.iter().zip(scores.iter()) {
+                    if s < cur_score && best.is_none_or(|(_, bs)| s < bs) {
+                        best = Some((*next, s));
                     }
                 }
                 match best {
@@ -165,6 +260,80 @@ mod tests {
         };
         HillClimb { restarts: 2, steps: 50, seed: 5 }.search(&space, &mut eval);
         assert_eq!(best_seen, 0.0, "steepest descent reaches the origin");
+    }
+
+    fn visited_batched(strategy: &mut dyn Strategy, space: &SearchSpace) -> Vec<Index> {
+        let mut order = Vec::new();
+        let mut run = |batch: &[Index]| -> Vec<f64> {
+            order.extend_from_slice(batch);
+            batch.iter().map(|idx| idx.iter().map(|&x| x as f64).sum::<f64>()).collect()
+        };
+        strategy.search_batched(space, &mut run);
+        order
+    }
+
+    #[test]
+    fn batched_visit_order_matches_sequential_for_every_strategy() {
+        // the engine's memo/evaluated order (and therefore every
+        // downstream snapshot) rides on this equivalence
+        let space = SearchSpace::fleet();
+        assert_eq!(
+            visited(&mut Exhaustive, &space),
+            visited_batched(&mut Exhaustive, &space),
+            "grid"
+        );
+        assert_eq!(
+            visited(&mut RandomSearch { samples: 25, seed: 9 }, &space),
+            visited_batched(&mut RandomSearch { samples: 25, seed: 9 }, &space),
+            "random"
+        );
+        assert_eq!(
+            visited(&mut HillClimb { restarts: 3, steps: 12, seed: 5 }, &space),
+            visited_batched(&mut HillClimb { restarts: 3, steps: 12, seed: 5 }, &space),
+            "hillclimb"
+        );
+    }
+
+    #[test]
+    fn grid_batches_are_chunked_and_cover_the_space() {
+        let space = SearchSpace::preset("power").expect("power preset");
+        assert!(space.len() > GRID_BATCH, "need a space bigger than one chunk");
+        let mut batches = 0usize;
+        let mut total = 0usize;
+        let mut run = |batch: &[Index]| -> Vec<f64> {
+            assert!(!batch.is_empty() && batch.len() <= GRID_BATCH);
+            batches += 1;
+            total += batch.len();
+            vec![0.0; batch.len()]
+        };
+        Exhaustive.search_batched(&space, &mut run);
+        assert_eq!(total, space.len());
+        assert_eq!(batches, space.len().div_ceil(GRID_BATCH));
+    }
+
+    #[test]
+    fn default_batched_adapter_yields_single_point_batches() {
+        // a strategy that only implements `search` still drives the
+        // batched engine, one point at a time
+        struct SeqOnly;
+        impl Strategy for SeqOnly {
+            fn name(&self) -> &'static str {
+                "seq-only"
+            }
+            fn search(&mut self, space: &SearchSpace, eval: &mut dyn FnMut(&Index) -> f64) {
+                for i in 0..space.len().min(5) {
+                    eval(&space.flat(i));
+                }
+            }
+        }
+        let space = SearchSpace::smoke();
+        let mut sizes = Vec::new();
+        let mut run = |batch: &[Index]| -> Vec<f64> {
+            sizes.push(batch.len());
+            vec![0.0; batch.len()]
+        };
+        SeqOnly.search_batched(&space, &mut run);
+        assert_eq!(sizes, vec![1; space.len().min(5)]);
     }
 
     #[test]

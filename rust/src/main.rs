@@ -25,7 +25,7 @@ use halo::cluster::{
 };
 use halo::config::HwConfig;
 use halo::coordinator::{InferenceEngine, Request, Server};
-use halo::dse::{self, DseConfig, Objective, SearchSpace, SloSpec};
+use halo::dse::{self, DseConfig, Fidelity, Objective, SearchSpace, SloSpec};
 use halo::mapping::MappingKind;
 use halo::model::LlmConfig;
 use halo::obs::{self, SelfProfile};
@@ -141,10 +141,17 @@ USAGE:
                 [--model llama2-7b|qwen3-8b] [--mix chat|summarization|generation|interactive]
                 [--requests N] [--seed S] [--slots N] [--link board|pcie|eth|wan]
                 [--rate R | --rate-scale X] [--tenants N] [--samples N] [--restarts N] [--steps N]
-                [--objectives csv] [--ttft-slo MS] [--slo-pct P] [--smoke] [--out DIR] [--json]
+                [--threads N] [--fidelity full|halving] [--objectives csv]
+                [--ttft-slo MS] [--slo-pct P] [--smoke] [--out DIR] [--json]
                   --space      candidate space preset (default sched; see dse::space presets)
                   --strategy   grid enumerates everything; random/hillclimb sample big spaces
                                (--samples, --restarts/--steps; seeded by --seed)
+                  --threads    evaluation worker threads (default 1); results are
+                               bit-identical at any thread count
+                  --fidelity   `halving` screens candidates on short trace prefixes
+                               (successive halving, eta=2 from requests/8) and re-scores
+                               survivors at full fidelity; reported metrics always come
+                               from full replays (default full)
                   --objectives comma list of ttft-p50,ttft-p99,e2e-p50,e2e-p99,throughput,
                                decode-tput,evictions,cost,slo,tenant-ttft,
                                energy-per-token,edp,peak-power
@@ -1464,6 +1471,15 @@ fn cmd_dse(f: &HashMap<String, String>) -> Result<()> {
     if cfg.rate_scale <= 0.0 {
         bail!("--rate-scale must be positive");
     }
+    cfg.threads = flag_usize(f, "threads", 1);
+    if cfg.threads == 0 {
+        bail!("--threads must be at least 1");
+    }
+    cfg.fidelity = match f.get("fidelity").map(String::as_str) {
+        None | Some("full") => Fidelity::Full,
+        Some("halving") | Some("sh") => Fidelity::halving(),
+        Some(other) => bail!("unknown fidelity {other} (full|halving)"),
+    };
     if let Some(objs) = f.get("objectives") {
         let parsed: Option<Vec<Objective>> =
             objs.split(',').map(|s| Objective::by_name(s.trim())).collect();
@@ -1523,6 +1539,9 @@ fn cmd_dse(f: &HashMap<String, String>) -> Result<()> {
             ("seed", Json::Num(cfg.seed as f64)),
             ("slots", Json::Num(cfg.slots as f64)),
             ("tenants", Json::Num(cfg.tenants as f64)),
+            // threads is deliberately absent: the snapshot is identical
+            // at any --threads N, and CI diffs it to prove exactly that
+            ("fidelity", Json::Str(cfg.fidelity.name().to_string())),
         ]);
         println!("{}", obs::dse_snapshot(&res, cfg_json));
         return Ok(());
@@ -1551,6 +1570,16 @@ fn cmd_dse(f: &HashMap<String, String>) -> Result<()> {
         p.count("dse_memo_hits"),
         p.count("invalid_candidates")
     );
+    if p.count("sh_pool") > 0 {
+        println!(
+            "halving  : {} pooled -> {} pruned on trace prefixes ({} rung evals), \
+             {} survivors re-scored at full fidelity\n",
+            p.count("sh_pool"),
+            p.count("sh_pruned"),
+            p.count("sh_rung_evals"),
+            p.count("sh_pool") - p.count("sh_pruned")
+        );
+    }
     let table = report::dse::frontier_table(
         &res,
         "dse_frontier",

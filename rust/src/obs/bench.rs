@@ -36,6 +36,9 @@ pub struct BenchPoint {
     pub graph_walks: u64,
     /// Workload-defined size (requests replayed, points evaluated, ...).
     pub items: u64,
+    /// Evaluation worker threads the workload ran with (1 unless the
+    /// workload exercises the parallel DSE path).
+    pub threads: usize,
 }
 
 /// Wall-time delta of one workload against a stored baseline.
@@ -65,7 +68,15 @@ fn run_point(
     walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean = walls.iter().sum::<f64>() / walls.len() as f64;
     let p50 = walls[walls.len() / 2];
-    BenchPoint { name, iters, wall_s_mean: mean, wall_s_p50: p50, graph_walks: walks, items }
+    BenchPoint {
+        name,
+        iters,
+        wall_s_mean: mean,
+        wall_s_p50: p50,
+        graph_walks: walks,
+        items,
+        threads: 1,
+    }
 }
 
 /// Run the pinned suite. `smoke` trims request counts and iterations so
@@ -125,6 +136,29 @@ pub fn run_pinned(smoke: bool) -> Vec<BenchPoint> {
         (res.profile.count("graph_walks"), res.evaluated.len() as u64)
     });
 
+    // Parallel DSE over the power-space grid (96 points, 11 axes): the
+    // same seeded exhaustive search at one and at four evaluation
+    // threads. Results are bit-identical by construction (pinned by
+    // test), so the pair of rows measures the parallel speedup itself —
+    // the `threads` and `wall_per_item_s` fields in the artifact are
+    // the perf trajectory of the worker pool.
+    let power_req = if smoke { 24 } else { 96 };
+    let mut run_power = |name: &'static str, threads: usize| {
+        let mut p = run_point(name, iters, || {
+            let space = SearchSpace::preset("power").unwrap();
+            let mut cfg = DseConfig::new(llm.clone(), Mix::Interactive);
+            cfg.requests = power_req;
+            cfg.rate = Some(16.0);
+            cfg.threads = threads;
+            let res = explore(&space, &mut Exhaustive, &cfg);
+            (res.profile.count("graph_walks"), res.evaluated.len() as u64)
+        });
+        p.threads = threads;
+        p
+    };
+    let power_t1 = run_power("dse_power_grid_t1", 1);
+    let power_t4 = run_power("dse_power_grid_t4", 4);
+
     // Streamed serving at scale: a bursty generator feeds Fleet::serve
     // directly (no materialized trace) under a small retention cap, so
     // this point exercises both the traffic engine and the bounded-memory
@@ -150,7 +184,7 @@ pub fn run_pinned(smoke: bool) -> Vec<BenchPoint> {
         (fleet.cost_walks(), r.requests as u64)
     });
 
-    vec![unified, disagg, oracle, dse, stream]
+    vec![unified, disagg, oracle, dse, power_t1, power_t4, stream]
 }
 
 /// Peak resident set size of this process, bytes (`VmHWM` from
@@ -174,6 +208,8 @@ pub fn bench_json(points: &[BenchPoint], smoke: bool) -> Json {
                 ("wall_s_p50", Json::Num(p.wall_s_p50)),
                 ("graph_walks", Json::Num(p.graph_walks as f64)),
                 ("items", Json::Num(p.items as f64)),
+                ("threads", Json::Num(p.threads as f64)),
+                ("wall_per_item_s", Json::Num(p.wall_s_p50 / p.items.max(1) as f64)),
             ])
         })
         .collect();
@@ -232,6 +268,7 @@ mod tests {
                     wall_s_p50: p50,
                     graph_walks: 5,
                     items: 2,
+                    threads: 1,
                 }],
                 true,
             )

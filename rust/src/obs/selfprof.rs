@@ -34,6 +34,24 @@ impl SelfProfile {
         *self.counts.entry(key).or_insert(0) += n;
     }
 
+    /// Accumulate an externally measured wall time under `key` without
+    /// touching the counter — the shape batched work needs, where one
+    /// timed region covers many counted items (bump the counter
+    /// separately with [`add`](Self::add)).
+    pub fn add_wall(&mut self, key: &'static str, secs: f64) {
+        *self.wall.entry(key).or_insert(0.0) += secs;
+    }
+
+    /// Fold another profile into this one (both wall times and counts).
+    pub fn absorb(&mut self, other: &SelfProfile) {
+        for (k, v) in &other.wall {
+            *self.wall.entry(k).or_insert(0.0) += v;
+        }
+        for (k, n) in &other.counts {
+            *self.counts.entry(k).or_insert(0) += n;
+        }
+    }
+
     pub fn wall_s(&self, key: &str) -> f64 {
         self.wall.get(key).copied().unwrap_or(0.0)
     }
@@ -71,5 +89,29 @@ mod tests {
         assert_eq!(p.wall_s("missing"), 0.0);
         let j = p.to_json();
         assert!(j.path(&["counts", "walks"]).is_some());
+    }
+
+    #[test]
+    fn add_wall_accumulates_without_counting() {
+        let mut p = SelfProfile::new();
+        p.add_wall("batch", 0.25);
+        p.add_wall("batch", 0.5);
+        assert_eq!(p.wall_s("batch"), 0.75);
+        assert_eq!(p.count("batch"), 0, "wall-only accumulation never bumps the counter");
+    }
+
+    #[test]
+    fn absorb_merges_both_maps() {
+        let mut a = SelfProfile::new();
+        a.add("walks", 2);
+        a.add_wall("work", 1.0);
+        let mut b = SelfProfile::new();
+        b.add("walks", 3);
+        b.add("hits", 1);
+        b.add_wall("work", 0.5);
+        a.absorb(&b);
+        assert_eq!(a.count("walks"), 5);
+        assert_eq!(a.count("hits"), 1);
+        assert_eq!(a.wall_s("work"), 1.5);
     }
 }

@@ -40,6 +40,7 @@
 //! instead of decoding) and [`DeviceJob::DecodeOnly`] (continue a sequence
 //! whose prefill ran on another device).
 
+use std::cell::Cell;
 use std::collections::VecDeque;
 
 use super::queueing::{ServedRequest, TraceRequest};
@@ -327,9 +328,20 @@ pub struct Device {
     kv_per_token: u64,
     cost: CostModel,
     queue: VecDeque<(DeviceJob, ReqTag)>,
+    /// Cached minimum `ready` over the queued jobs (`None` = stale;
+    /// rebuilt on the next read). Pushes fold into a fresh cache
+    /// in-place — a push can only lower the min — while removals mark
+    /// it stale. `Cell` keeps [`next_action_time`](Self::next_action_time)
+    /// a `&self` read; debug builds assert every cached read against a
+    /// fresh scan.
+    q_min_ready: Cell<Option<f64>>,
     /// Prompts mid-chunked-prefill (always empty under serialized prefill).
     prefilling: Vec<PrefillingJob>,
     active: Vec<Option<ActiveSeq>>,
+    /// Occupied decode slots, maintained at every slot write so the hot
+    /// paths never re-scan `active` (asserted against a fresh scan at
+    /// each cycle start in debug builds).
+    n_active: usize,
     now: f64,
     /// Completed requests that finished decoding on this device.
     pub served: Vec<ServedRequest>,
@@ -392,8 +404,10 @@ impl Device {
             kv_per_token: llm.kv_bytes_per_token(),
             cost: CostModel::new(llm, hw, mapping),
             queue: VecDeque::new(),
+            q_min_ready: Cell::new(Some(f64::INFINITY)),
             prefilling: Vec::new(),
             active: vec![None; slots],
+            n_active: 0,
             now: 0.0,
             served: Vec::new(),
             decode_steps: 0,
@@ -519,7 +533,41 @@ impl Device {
     }
 
     pub fn active_count(&self) -> usize {
-        self.active.iter().flatten().count()
+        self.n_active
+    }
+
+    /// Minimum `ready` across queued jobs (`INFINITY` when empty),
+    /// served from the dirty-min cache; a stale cache is rebuilt with
+    /// one scan.
+    fn queue_min_ready(&self) -> f64 {
+        match self.q_min_ready.get() {
+            Some(m) => {
+                debug_assert_eq!(
+                    m.to_bits(),
+                    self.scan_queue_min().to_bits(),
+                    "stale queue min-ready cache"
+                );
+                m
+            }
+            None => {
+                let m = self.scan_queue_min();
+                self.q_min_ready.set(Some(m));
+                m
+            }
+        }
+    }
+
+    fn scan_queue_min(&self) -> f64 {
+        self.queue.iter().map(|(j, _)| j.ready()).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Queue insert that keeps a fresh min-ready cache fresh (a push can
+    /// only lower the min).
+    fn enqueue(&mut self, job: DeviceJob, tag: ReqTag) {
+        if let Some(m) = self.q_min_ready.get() {
+            self.q_min_ready.set(Some(m.min(job.ready())));
+        }
+        self.queue.push_back((job, tag));
     }
 
     /// KV bytes resident right now: active decode contexts plus the
@@ -625,11 +673,10 @@ impl Device {
     /// anything is active or ready, else when the first queued job becomes
     /// ready. `None` when fully idle.
     pub fn next_action_time(&self) -> Option<f64> {
-        if self.active_count() > 0 || !self.prefilling.is_empty() {
+        if self.n_active > 0 || !self.prefilling.is_empty() {
             return Some(self.now);
         }
-        let min_ready =
-            self.queue.iter().map(|(j, _)| j.ready()).fold(f64::INFINITY, f64::min);
+        let min_ready = self.queue_min_ready();
         if min_ready.is_finite() {
             Some(self.now.max(min_ready))
         } else {
@@ -652,7 +699,7 @@ impl Device {
     /// [`ServedRequest`] wherever the request finishes.
     pub fn push_tagged(&mut self, job: DeviceJob, tag: ReqTag) {
         self.record_event(EventKind::Queued, job.ready(), job.arrival());
-        self.queue.push_back((job, tag));
+        self.enqueue(job, tag);
     }
 
     /// Index of the next job to admit under the configured policy, or
@@ -696,7 +743,7 @@ impl Device {
     /// requests larger than the budget).
     fn kv_admission_blocked(&self, tokens: usize) -> bool {
         let Some(cap) = self.sched.kv_capacity else { return false };
-        if self.active_count() == 0 && self.prefilling.is_empty() {
+        if self.n_active == 0 && self.prefilling.is_empty() {
             return false;
         }
         self.kv_committed_bytes() + tokens as u64 * self.kv_per_token > cap
@@ -708,12 +755,16 @@ impl Device {
     /// then run one batched decode step over the active slots. Returns
     /// any prefill handoffs completed this cycle.
     pub fn step_cycle(&mut self) -> Vec<PrefillDone> {
+        debug_assert_eq!(
+            self.n_active,
+            self.active.iter().flatten().count(),
+            "active-slot counter out of sync"
+        );
         let mut handoffs = Vec::new();
         // idle-advance: nothing running and nothing ready yet -> jump to
         // the first queued job's ready time
-        if self.active_count() == 0 && self.prefilling.is_empty() && !self.queue.is_empty() {
-            let min_ready =
-                self.queue.iter().map(|(j, _)| j.ready()).fold(f64::INFINITY, f64::min);
+        if self.n_active == 0 && self.prefilling.is_empty() && !self.queue.is_empty() {
+            let min_ready = self.queue_min_ready();
             self.now = self.now.max(min_ready);
         }
         // admissions against the cycle-start clock (jobs becoming ready
@@ -746,6 +797,7 @@ impl Device {
                     break;
                 }
                 let (job, tag) = self.queue.remove(idx).unwrap();
+                self.q_min_ready.set(None);
                 match job {
                     DeviceJob::Full { arrival, ready, l_in, l_out } => {
                         let c = self.cost.prefill(l_in);
@@ -763,10 +815,12 @@ impl Device {
                             remaining: l_out.saturating_sub(1),
                             tag,
                         });
+                        self.n_active += 1;
                     }
                     DeviceJob::DecodeOnly { arrival, first_token_at, ctx, remaining, .. } => {
                         self.active[slot] =
                             Some(ActiveSeq { arrival, first_token_at, ctx, remaining, tag });
+                        self.n_active += 1;
                     }
                     DeviceJob::Resume { arrival, ready, first_token_at, ctx, remaining } => {
                         // recompute the evicted KV prefix, then resume
@@ -780,11 +834,13 @@ impl Device {
                         self.record_span(SpanKind::Recompute, start, p, arrival, 1);
                         self.active[slot] =
                             Some(ActiveSeq { arrival, first_token_at, ctx, remaining, tag });
+                        self.n_active += 1;
                     }
                     DeviceJob::PrefillOnly { .. } => unreachable!(),
                 }
             } else {
                 let (job, tag) = self.queue.remove(idx).unwrap();
+                self.q_min_ready.set(None);
                 match job {
                     DeviceJob::PrefillOnly { arrival, ready, l_in, l_out, decode_dev } => {
                         let c = self.cost.prefill(l_in);
@@ -841,6 +897,7 @@ impl Device {
                 usize::MAX // unused
             };
             let (job, tag) = self.queue.remove(idx).unwrap();
+            self.q_min_ready.set(None);
             match job {
                 DeviceJob::Full { arrival, l_in, l_out, .. } => {
                     self.prefilling.push(PrefillingJob {
@@ -863,6 +920,7 @@ impl Device {
                 DeviceJob::DecodeOnly { arrival, first_token_at, ctx, remaining, .. } => {
                     self.active[slot] =
                         Some(ActiveSeq { arrival, first_token_at, ctx, remaining, tag });
+                    self.n_active += 1;
                 }
                 DeviceJob::Resume { arrival, first_token_at, ctx, remaining, .. } => {
                     self.prefilling.push(PrefillingJob {
@@ -910,6 +968,7 @@ impl Device {
                             remaining: l_out.saturating_sub(1),
                             tag: job.tag,
                         });
+                        self.n_active += 1;
                     }
                     PrefillKind::Handoff { decode_dev, l_out } => {
                         self.prefills += 1;
@@ -930,6 +989,7 @@ impl Device {
                             remaining,
                             tag: job.tag,
                         });
+                        self.n_active += 1;
                     }
                 }
             } else {
@@ -965,19 +1025,18 @@ impl Device {
                 .map(|(i, _)| i)
                 .unwrap();
             let s = self.active[slot].take().unwrap();
+            self.n_active -= 1;
             self.evictions += 1;
             self.recompute_tokens += s.ctx as u64;
             self.record_event(EventKind::Evicted, self.now, s.arrival);
-            self.queue.push_back((
-                DeviceJob::Resume {
-                    arrival: s.arrival,
-                    ready: self.now,
-                    first_token_at: s.first_token_at,
-                    ctx: s.ctx,
-                    remaining: s.remaining,
-                },
-                s.tag,
-            ));
+            let resume = DeviceJob::Resume {
+                arrival: s.arrival,
+                ready: self.now,
+                first_token_at: s.first_token_at,
+                ctx: s.ctx,
+                remaining: s.remaining,
+            };
+            self.enqueue(resume, s.tag);
         }
     }
 
@@ -1023,6 +1082,7 @@ impl Device {
                         tokens: s.tag.tokens,
                     });
                     *slot = None;
+                    self.n_active -= 1;
                 } else {
                     s.remaining -= 1;
                 }

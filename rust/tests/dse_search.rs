@@ -6,8 +6,8 @@
 
 use halo::cluster::{Mix, Policy};
 use halo::dse::{
-    dominates, explore, DseConfig, DseResult, Exhaustive, Objective, RandomSearch, SearchSpace,
-    SloSpec,
+    dominates, explore, DseConfig, DseResult, Exhaustive, Fidelity, Objective, RandomSearch,
+    SearchSpace, SloSpec,
 };
 use halo::model::LlmConfig;
 
@@ -155,6 +155,86 @@ fn slo_autotune_selects_chunked_prefill_where_serialized_misses() {
     assert!(serialized_tuned.metrics.slo_ttft > cfg.slo.unwrap().ttft);
     // all candidates cost the same here, so attainment drove the choice
     assert_eq!(picked.metrics.cost, serialized_tuned.metrics.cost);
+}
+
+#[test]
+fn four_threads_fingerprint_bit_identically_to_one() {
+    // the parallel worker pool is purely a wall-clock knob: the whole
+    // result — metrics, scores, frontier, SLO choice, work counters —
+    // must be bit-identical at any --threads N, for the grid and for a
+    // seeded stochastic strategy alike
+    let space = SearchSpace::paper_point()
+        .with_policies(vec![Policy::LeastLoaded])
+        .with_devices(vec![1, 2])
+        .with_chunks(vec![0, 256, 512]);
+    let mut cfg = cfg_with(32, 19);
+    cfg.rate = Some(10.0);
+    cfg.slo = Some(SloSpec::median(10.0));
+    let t1 = explore(&space, &mut Exhaustive, &cfg);
+    cfg.threads = 4;
+    let t4 = explore(&space, &mut Exhaustive, &cfg);
+    assert_eq!(fingerprint(&t1), fingerprint(&t4), "grid: threads must not change results");
+    assert_eq!(t1.slo_choice, t4.slo_choice);
+    for key in ["candidate_evals", "dse_memo_hits", "invalid_candidates", "graph_walks"] {
+        assert_eq!(t1.profile.count(key), t4.profile.count(key), "{key}");
+    }
+
+    let big = SearchSpace::preset("power").expect("power preset");
+    let mut cfg = cfg_with(24, 5);
+    cfg.rate = Some(12.0);
+    let mut r1 = RandomSearch { samples: 8, seed: cfg.seed };
+    let a = explore(&big, &mut r1, &cfg);
+    cfg.threads = 4;
+    let mut r4 = RandomSearch { samples: 8, seed: cfg.seed };
+    let b = explore(&big, &mut r4, &cfg);
+    assert_eq!(fingerprint(&a), fingerprint(&b), "random: threads must not change results");
+}
+
+#[test]
+fn halving_matches_the_exhaustive_slo_choice_with_fewer_full_replays() {
+    // four fleet sizes, four distinct costs: the SLO auto-tune answer is
+    // the cheapest config meeting the target. Successive halving must
+    // reach the same pick while replaying the full trace for strictly
+    // fewer candidates (here: only the survivor).
+    let space = SearchSpace::paper_point()
+        .with_policies(vec![Policy::LeastLoaded])
+        .with_devices(vec![1, 2, 3, 4]);
+    let mut cfg = cfg_with(96, 29);
+    cfg.rate = Some(12.0);
+
+    // probe without an SLO to calibrate one every candidate meets at any
+    // trace prefix (TTFT never grows when the trace shrinks under a
+    // fixed rate, so 4x the worst full-trace median is safely generous)
+    let probe = explore(&space, &mut Exhaustive, &cfg);
+    assert_eq!(probe.evaluated.len(), 4);
+    let worst = probe.evaluated.iter().map(|e| e.metrics.slo_ttft).fold(0.0_f64, f64::max);
+    assert!(worst.is_finite() && worst > 0.0);
+    cfg.slo = Some(SloSpec::median(4.0 * worst));
+
+    let ex = explore(&space, &mut Exhaustive, &cfg);
+    let ex_pick = ex.slo_choice.expect("a generous SLO is always met");
+
+    cfg.fidelity = Fidelity::halving();
+    let sh = explore(&space, &mut Exhaustive, &cfg);
+    let sh_pick = sh.slo_choice.expect("halving must still surface an SLO pick");
+    assert_eq!(
+        sh.evaluated[sh_pick].candidate.label(),
+        ex.evaluated[ex_pick].candidate.label(),
+        "halving must reach the exhaustive SLO choice"
+    );
+
+    // >= 3x fewer full-fidelity replays, and nothing silently dropped
+    let (full_sh, full_ex) =
+        (sh.profile.count("candidate_evals"), ex.profile.count("candidate_evals"));
+    assert!(
+        full_sh * 3 <= full_ex,
+        "halving must cut full replays >= 3x: {full_sh} vs {full_ex}"
+    );
+    assert_eq!(
+        sh.evaluated.len() as u64 + sh.profile.count("sh_pruned"),
+        sh.profile.count("sh_pool"),
+        "pool = survivors + pruned"
+    );
 }
 
 #[test]
